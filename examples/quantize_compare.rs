@@ -1,0 +1,58 @@
+//! Method shoot-out on one teacher: every baseline the paper compares
+//! (a Table 1 row-slice), plus storage/cost diagnostics the tables
+//! don't show.
+//!
+//!     cargo run --release --example quantize_compare [teacher] [windows]
+
+use db_llm::data::TokenStream;
+use db_llm::eval::ppl::perplexity;
+use db_llm::eval::tables::{make_student, Method, TableOpts};
+use db_llm::runtime::{Runtime, Session};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tag = args.first().cloned().unwrap_or_else(|| "M".to_string());
+    let windows: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+
+    let mut rt = Runtime::open("artifacts")?;
+    let opts = TableOpts { windows, dad_batches: 48, ..Default::default() };
+    let wiki = TokenStream::load("artifacts/corpus_wiki_eval.tok")?;
+    let web = TokenStream::load("artifacts/corpus_web_eval.tok")?;
+
+    println!("teacher {tag}: method comparison ({windows} windows)");
+    println!(
+        "{:<18}{:>10}{:>10}{:>12}{:>14}",
+        "method", "wiki", "web", "bits/w", "t_quant(s)"
+    );
+    for method in Method::main_grid() {
+        let t0 = std::time::Instant::now();
+        let student = make_student(&mut rt, &tag, method, &opts, None)?;
+        let quant_secs = t0.elapsed().as_secs_f64();
+        let session = Session::new(&rt, &student.weights)?;
+        let p_wiki = perplexity(&mut rt, &session, &wiki, windows)?;
+        let p_web = perplexity(&mut rt, &session, &web, windows)?;
+        let bits = if method == Method::Fp16 {
+            "16".to_string()
+        } else if !student.fdb_layers.is_empty() {
+            let eff: f64 = student
+                .fdb_layers
+                .values()
+                .map(|l| db_llm::codec::effective_bits(l).total)
+                .sum::<f64>()
+                / student.fdb_layers.len() as f64;
+            format!("{eff:.2}*")
+        } else {
+            "-".to_string()
+        };
+        println!(
+            "{:<18}{:>10.2}{:>10.2}{:>12}{:>14.1}",
+            method.label(),
+            p_wiki,
+            p_web,
+            bits,
+            quant_secs
+        );
+    }
+    println!("(* = measured effective bits after entropy coding)");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: load a teacher, quantize it to dual-binary 2-bit with
+//! FDB, and compare perplexity against the full-precision model.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` (build-time python ran once; everything
+//! here is pure rust + the AOT XLA executables).
+
+use db_llm::data::TokenStream;
+use db_llm::eval::ppl::perplexity;
+use db_llm::eval::tables::{make_student, Method, TableOpts};
+use db_llm::runtime::{session::load_teacher, Runtime, Session};
+
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::open("artifacts")?;
+    let opts = TableOpts { windows: 64, dad_batches: 32, ..Default::default() };
+
+    // 1. the full-precision teacher
+    let teacher = load_teacher(&rt, "M")?;
+    println!(
+        "teacher M: {} params",
+        db_llm::util::eng(teacher.config.n_params() as f64)
+    );
+    let fp_session = Session::new(&rt, &teacher)?;
+    let stream = TokenStream::load("artifacts/corpus_wiki_eval.tok")?;
+    let fp_ppl = perplexity(&mut rt, &fp_session, &stream, opts.windows)?;
+    println!("FP16 perplexity (wiki): {fp_ppl:.2}");
+
+    // 2. DB-LLM: FDB split + scale fit + DAD fine-tune (all data-free)
+    let student = make_student(&mut rt, "M", Method::DbLlm, &opts, None)?;
+    let (s1, s2, avg) = db_llm::eval::QuantPipeline::fdb_sparsity(&student.fdb_layers);
+    println!(
+        "FDB planes: sparsity b1 {:.1}%  b2 {:.1}%  avg {:.1}%",
+        s1 * 100.0,
+        s2 * 100.0,
+        avg * 100.0
+    );
+    if let Some((first, last)) = student.dad_trend {
+        println!("DAD distillation loss: {first:.4} -> {last:.4}");
+    }
+
+    // 3. evaluate the 2-bit student through the same AOT executable
+    let q_session = Session::new(&rt, &student.weights)?;
+    let q_ppl = perplexity(&mut rt, &q_session, &stream, opts.windows)?;
+    println!("DB-LLM W2 perplexity (wiki): {q_ppl:.2}");
+    println!(
+        "degradation: {:.1}% (2-bit weights, {:.2} effective bits/weight)",
+        100.0 * (q_ppl / fp_ppl - 1.0),
+        student
+            .fdb_layers
+            .values()
+            .map(|l| db_llm::codec::effective_bits(l).total)
+            .sum::<f64>()
+            / student.fdb_layers.len() as f64
+    );
+    Ok(())
+}

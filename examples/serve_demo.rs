@@ -1,0 +1,83 @@
+//! Serving demo: boots the TCP server with a DB-LLM-quantized engine,
+//! drives it with concurrent synthetic clients, and prints the
+//! latency/throughput metrics — the coordinator story end to end.
+//!
+//!     cargo run --release --example serve_demo
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use db_llm::coordinator::batcher::BatchPolicy;
+use db_llm::coordinator::metrics::Metrics;
+use db_llm::coordinator::serve::{serve, Engine};
+use db_llm::eval::tables::{make_student, Method, TableOpts};
+use db_llm::runtime::{Runtime, Session};
+
+fn main() -> anyhow::Result<()> {
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+
+    // serve on an ephemeral port; the engine builds inside the worker
+    // thread (PJRT handles are not Send)
+    let addr = serve(
+        || {
+            let mut rt = Runtime::open("artifacts")?;
+            let opts = TableOpts { dad_batches: 16, ..Default::default() };
+            let student = make_student(&mut rt, "S", Method::DbLlmNoDad, &opts, None)?;
+            let vocab = rt.manifest.vocab();
+            let session = Session::new(&rt, &student.weights)?;
+            eprintln!("engine: DB-LLM-quantized teacher S pinned on device");
+            Ok((rt, Engine::new(session, vocab, 7)))
+        },
+        "127.0.0.1:0",
+        BatchPolicy::default(),
+        metrics.clone(),
+        running.clone(),
+    )?;
+    println!("server on {addr}");
+
+    // concurrent synthetic clients
+    let n_clients = 8;
+    let reqs_per_client = 4;
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr;
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<usize>> {
+            // server may still be compiling the engine: retry connect
+            let mut stream = loop {
+                match TcpStream::connect(addr) {
+                    Ok(s) => break s,
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+                }
+            };
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut lens = Vec::new();
+            for r in 0..reqs_per_client {
+                let prompt: Vec<String> =
+                    (0..6).map(|i| ((7 * c + 3 * r + i) % 512).to_string()).collect();
+                writeln!(
+                    stream,
+                    "{{\"prompt\": [{}], \"max_tokens\": 8, \"temperature\": 0.8}}",
+                    prompt.join(",")
+                )?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                let j = db_llm::util::Json::parse(line.trim())?;
+                lens.push(j.usize_list("tokens")?.len());
+            }
+            Ok(lens)
+        }));
+    }
+    let mut total_tokens = 0usize;
+    for h in handles {
+        let lens = h.join().expect("client thread")?;
+        assert!(lens.iter().all(|&l| l == 8), "short generation: {lens:?}");
+        total_tokens += lens.iter().sum::<usize>();
+    }
+    println!("{n_clients} clients x {reqs_per_client} requests -> {total_tokens} tokens");
+    println!("metrics: {}", metrics.snapshot());
+    running.store(false, std::sync::atomic::Ordering::Relaxed);
+    Ok(())
+}

@@ -1,0 +1,76 @@
+"""§Perf L2: XLA cost analysis of the lowered modules.
+
+Re-lowers the exported functions (same code path as aot.py) and prints
+FLOPs / bytes-accessed / output size per executable plus the analytic
+expectation, so EXPERIMENTS.md §Perf can compare.  Build-time tool.
+
+    cd python && python -m compile.analyze [--sizes S,XL]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .configs import LOGITS_BATCH, MODEL_SIZES, NLL_BATCH, SEQ_LEN
+
+
+def analyze(name: str, fn, specs) -> None:
+    compiled = jax.jit(fn).lower(*specs).compile()
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+    except Exception as e:  # pragma: no cover - backend-dependent
+        print(f"{name}: cost analysis unavailable ({e})")
+        return
+    flops = cost.get("flops", float("nan"))
+    bytes_ = cost.get("bytes accessed", float("nan"))
+    print(f"{name:<16} flops {flops/1e9:8.3f}G   bytes {bytes_/1e6:9.1f}M   "
+          f"arithmetic intensity {flops/max(bytes_,1):6.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="S,XL")
+    args = ap.parse_args()
+
+    for size in args.sizes.split(","):
+        cfg = MODEL_SIZES[size]
+        names = M.param_names(cfg)
+        spec = lambda shape, dt=jnp.float32: jax.ShapeDtypeStruct(shape, dt)
+
+        def pshape(n):
+            if n == "tok_emb":
+                return (cfg.vocab, cfg.d_model)
+            if n == "head":
+                return (cfg.d_model, cfg.vocab)
+            if n.endswith("norm"):
+                return (cfg.d_model,)
+            return M.linear_shape(cfg, n)
+
+        def fwd_nll(*xs):
+            params = dict(zip(names, xs[:-1]))
+            return (M.nll(params, xs[-1], cfg),)
+
+        specs = [spec(pshape(n)) for n in names]
+        specs.append(spec((NLL_BATCH, SEQ_LEN + 1), jnp.int32))
+        # analytic expectation: 2*params*tokens (linears+emb+head) + attn
+        toks = NLL_BATCH * SEQ_LEN
+        analytic = 2 * cfg.n_params() * toks + cfg.n_layers * 4 * SEQ_LEN * toks * cfg.d_model
+        print(f"== size {size} ({cfg.n_params()/1e6:.2f}M params) ==")
+        print(f"analytic fwd_nll ≈ {analytic/1e9:.3f} GFLOP")
+        analyze(f"fwd_nll_{size}", fwd_nll, specs)
+
+        def fwd_logits(*xs):
+            params = dict(zip(names, xs[:-1]))
+            return (M.forward(params, xs[-1], cfg),)
+
+        specs_l = [spec(pshape(n)) for n in names]
+        specs_l.append(spec((LOGITS_BATCH, SEQ_LEN), jnp.int32))
+        analyze(f"fwd_logits_{size}", fwd_logits, specs_l)
+
+
+if __name__ == "__main__":
+    main()

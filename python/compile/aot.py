@@ -1,0 +1,322 @@
+"""AOT build: train teachers, quantize nothing, lower everything.
+
+`python -m compile.aot --out-dir ../artifacts` produces every artifact
+the rust layer consumes (DESIGN.md §4):
+
+  corpus_{wiki,web}_eval.tok      eval token streams (u16 LE)
+  teacher_{tag}.dbw               teacher weights + config header
+  calib_{tag}.tok                 data-free calibration tokens (sampled
+                                  from the teacher itself, LLM-QAT style)
+  fwd_logits_{size}.hlo.txt       (params…, tokens[B4,T]) -> (logits,)
+  fwd_nll_{size}.hlo.txt          (params…, tokens[B8,T+1]) -> (nll,)
+  fwd_fdb_nll_{size}.hlo.txt      (frozen…, quads…, tokens) -> (nll,)
+                                  — linears run the Pallas FDB kernel
+  dad_step_{size}.hlo.txt         (alphas…, planes…, frozen…, tokens,
+                                  teacher_logits, γ, λ)
+                                  -> (total, ce, dad, grads…)
+  fdb_kernel.hlo.txt              standalone Layer-1 kernel (benching)
+  manifest.json                   shapes, orders, seeds, metrics, hashes
+
+HLO TEXT is the interchange format — jax >= 0.5 serialized protos carry
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Python runs ONCE; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as M
+from . import quant as Q
+from . import train as T
+from .configs import (
+    CORPORA,
+    DAD_GAMMA,
+    DAD_LAMBDA,
+    GROUP_SIZE,
+    LOGITS_BATCH,
+    MODEL_SIZES,
+    NLL_BATCH,
+    SEQ_LEN,
+    TEACHERS,
+    VOCAB_SIZE,
+)
+from .dbw import save_dbw
+from .kernels.fdb import DEFAULT_BM, DEFAULT_BN, fdb_matmul
+
+CALIB_SEQS = 512  # sequences of SEQ_LEN tokens in the data-free calib set
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def write(path: str, text: str, log) -> dict:
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    log(f"  wrote {path} ({len(text) / 1e6:.2f} MB, sha256:{digest})")
+    return {"file": os.path.basename(path), "bytes": len(text), "sha256_16": digest}
+
+
+# --------------------------------------------------------------------------
+# per-size HLO exports
+# --------------------------------------------------------------------------
+
+def export_fwd_logits(cfg, out_dir, log):
+    names = M.param_names(cfg)
+
+    def fn(*args):
+        params = dict(zip(names, args[:-1]))
+        return (M.forward(params, args[-1], cfg),)
+
+    specs = [spec(MShape(cfg, n)) for n in names]
+    specs.append(spec((LOGITS_BATCH, SEQ_LEN), jnp.int32))
+    lowered = jax.jit(fn).lower(*specs)
+    meta = write(f"{out_dir}/fwd_logits_{cfg.name}.hlo.txt", to_hlo_text(lowered), log)
+    meta.update(params=names, tokens_shape=[LOGITS_BATCH, SEQ_LEN],
+                outputs=["logits"])
+    return meta
+
+
+def export_fwd_nll(cfg, out_dir, log):
+    names = M.param_names(cfg)
+
+    def fn(*args):
+        params = dict(zip(names, args[:-1]))
+        return (M.nll(params, args[-1], cfg),)
+
+    specs = [spec(MShape(cfg, n)) for n in names]
+    specs.append(spec((NLL_BATCH, SEQ_LEN + 1), jnp.int32))
+    lowered = jax.jit(fn).lower(*specs)
+    meta = write(f"{out_dir}/fwd_nll_{cfg.name}.hlo.txt", to_hlo_text(lowered), log)
+    meta.update(params=names, tokens_shape=[NLL_BATCH, SEQ_LEN + 1],
+                outputs=["nll"])
+    return meta
+
+
+def export_fwd_fdb_nll(cfg, out_dir, log):
+    frozen_names, quad_names = M.fdb_param_names(cfg)
+
+    def fn(*args):
+        nf = len(frozen_names)
+        nq = len(quad_names)
+        frozen = dict(zip(frozen_names, args[:nf]))
+        quads = dict(zip(quad_names, args[nf : nf + nq]))
+        return (M.fdb_nll(frozen, quads, args[-1], cfg, use_pallas=True),)
+
+    specs = [spec(MShape(cfg, n)) for n in frozen_names]
+    specs += [spec(quad_shape(cfg, n)) for n in quad_names]
+    specs.append(spec((NLL_BATCH, SEQ_LEN + 1), jnp.int32))
+    lowered = jax.jit(fn).lower(*specs)
+    meta = write(f"{out_dir}/fwd_fdb_nll_{cfg.name}.hlo.txt", to_hlo_text(lowered), log)
+    meta.update(frozen=frozen_names, quads=quad_names,
+                tokens_shape=[NLL_BATCH, SEQ_LEN + 1], outputs=["nll"])
+    return meta
+
+
+def export_dad_step(cfg, out_dir, log):
+    frozen_names, quad_names = M.fdb_param_names(cfg)
+    alpha_names = [n for n in quad_names if n.endswith((".a1", ".a2"))]
+    plane_names = [n for n in quad_names if n.endswith((".b1", ".b2"))]
+
+    def fn(*args):
+        na, npl, nf = len(alpha_names), len(plane_names), len(frozen_names)
+        alphas = dict(zip(alpha_names, args[:na]))
+        planes = dict(zip(plane_names, args[na : na + npl]))
+        frozen = dict(zip(frozen_names, args[na + npl : na + npl + nf]))
+        tokens, teacher_logits, gamma, lam = args[na + npl + nf :]
+        (total, ce, dad), grads = M.dad_step(
+            alphas, planes, frozen, tokens, teacher_logits, cfg, gamma, lam
+        )
+        return (total, ce, dad) + tuple(grads[n] for n in alpha_names)
+
+    specs = [spec(quad_shape(cfg, n)) for n in alpha_names]
+    specs += [spec(quad_shape(cfg, n)) for n in plane_names]
+    specs += [spec(MShape(cfg, n)) for n in frozen_names]
+    specs.append(spec((LOGITS_BATCH, SEQ_LEN), jnp.int32))
+    specs.append(spec((LOGITS_BATCH, SEQ_LEN, cfg.vocab)))
+    specs.append(spec(()))  # gamma
+    specs.append(spec(()))  # lambda
+    lowered = jax.jit(fn).lower(*specs)
+    meta = write(f"{out_dir}/dad_step_{cfg.name}.hlo.txt", to_hlo_text(lowered), log)
+    meta.update(
+        alphas=alpha_names, planes=plane_names, frozen=frozen_names,
+        tokens_shape=[LOGITS_BATCH, SEQ_LEN],
+        teacher_logits_shape=[LOGITS_BATCH, SEQ_LEN, cfg.vocab],
+        outputs=["total", "ce", "dad"] + [f"grad:{n}" for n in alpha_names],
+    )
+    return meta
+
+
+def export_fdb_kernel(out_dir, log, m=256, k=256, n=256):
+    """Standalone Layer-1 kernel export (runtime smoke + criterion bench)."""
+
+    def fn(x, w1, w2, a1, a2):
+        return (fdb_matmul(x, w1, w2, a1, a2, group=GROUP_SIZE,
+                           bm=DEFAULT_BM, bn=DEFAULT_BN),)
+
+    g = k // GROUP_SIZE
+    specs = [spec((m, k)), spec((k, n)), spec((k, n)), spec((g, n)), spec((g, n))]
+    lowered = jax.jit(fn).lower(*specs)
+    meta = write(f"{out_dir}/fdb_kernel.hlo.txt", to_hlo_text(lowered), log)
+    meta.update(m=m, k=k, n=n, group=GROUP_SIZE, outputs=["y"])
+    return meta
+
+
+def MShape(cfg, name):
+    """Shape of a full-precision parameter."""
+    if name == "tok_emb":
+        return (cfg.vocab, cfg.d_model)
+    if name == "head":
+        return (cfg.d_model, cfg.vocab)
+    if name.endswith("norm"):
+        return (cfg.d_model,)
+    return M.linear_shape(cfg, name)
+
+
+def quad_shape(cfg, name):
+    """Shape of an FDB quad tensor (<lin>.{b1,b2,a1,a2})."""
+    base, kind = name.rsplit(".", 1)
+    din, dout = M.linear_shape(cfg, base)
+    if kind in ("b1", "b2"):
+        return (din, dout)
+    return (din // GROUP_SIZE, dout)
+
+
+# --------------------------------------------------------------------------
+# main build
+# --------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny training run (CI smoke), marked in manifest")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    t_start = time.time()
+    log = lambda s: print(s, flush=True)
+
+    manifest = {
+        "group_size": GROUP_SIZE,
+        "vocab": VOCAB_SIZE,
+        "seq_len": SEQ_LEN,
+        "logits_batch": LOGITS_BATCH,
+        "nll_batch": NLL_BATCH,
+        "dad": {"gamma": DAD_GAMMA, "lambda": DAD_LAMBDA},
+        "fast": bool(args.fast),
+        "corpora": {},
+        "sizes": {k: v.to_dict() for k, v in MODEL_SIZES.items()},
+        "teachers": {},
+        "executables": {},
+    }
+
+    # ---- corpora ---------------------------------------------------------
+    log("== corpora ==")
+    streams = {}
+    for name, ccfg in CORPORA.items():
+        n_train = ccfg.train_tokens if not args.fast else 1 << 17
+        streams[name] = data_mod.sample_stream(ccfg, n_train)
+        ev = data_mod.sample_stream(ccfg, ccfg.eval_tokens, seed_offset=99)
+        data_mod.save_tokens(f"{out}/corpus_{name}_eval.tok", ev)
+        floor = data_mod.markov_entropy_bits(ccfg)
+        manifest["corpora"][name] = {
+            **ccfg.to_dict(),
+            "eval_file": f"corpus_{name}_eval.tok",
+            "entropy_floor_bits": floor,
+            "ppl_floor": 2.0 ** floor,
+        }
+        log(f"  {name}: floor ppl {2.0 ** floor:.2f}, "
+            f"train {len(streams[name])} eval {len(ev)} tokens")
+
+    # ---- teachers --------------------------------------------------------
+    for tspec in TEACHERS:
+        cfg = tspec.config
+        tr = tspec.train
+        if args.fast:
+            tr = type(tr)(steps=30, batch=8, seed=tr.seed, wiki_frac=tr.wiki_frac)
+            tspec = type(tspec)(tspec.tag, tspec.size, tr)
+        log(f"== teacher {tspec.tag} ({cfg.name}, {cfg.n_params()/1e6:.2f}M params, "
+            f"{tr.steps} steps) ==")
+        params, history = T.train_teacher(tspec, streams, log=log)
+        ppl = {name: T.eval_ppl(params, cfg, s) for name, s in streams.items()}
+        log(f"  eval ppl: " + " ".join(f"{k}={v:.2f}" for k, v in ppl.items()))
+
+        tensors = {n: np.asarray(params[n]) for n in M.param_names(cfg)}
+        save_dbw(
+            f"{out}/teacher_{tspec.tag}.dbw",
+            {"tag": tspec.tag, "size": cfg.name, **cfg.to_dict()},
+            tensors,
+        )
+
+        # data-free calibration set: sampled from the teacher itself
+        key = jax.random.PRNGKey(tr.seed + 9999)
+        chunks = []
+        bsz = 64
+        for c in range(CALIB_SEQS // bsz):
+            key, k1, k2 = jax.random.split(key, 3)
+            starts = jax.random.randint(k1, (bsz,), 0, cfg.vocab)
+            toks = M.sample(params, starts, k2, cfg, SEQ_LEN, temperature=1.0)
+            chunks.append(np.asarray(toks, dtype=np.uint16))
+        calib = np.concatenate(chunks).reshape(-1)
+        data_mod.save_tokens(f"{out}/calib_{tspec.tag}.tok", calib)
+
+        # quick sanity: measured sparsity of the FDB init (paper: >60%)
+        _, planes, _ = Q.fdb_quantize_model(params, cfg)
+        sp = Q.sparsity_report(planes)
+        log(f"  FDB init sparsity: b1 {sp['b1_mean']:.3f} b2 {sp['b2_mean']:.3f} "
+            f"overall {sp['overall']:.3f}")
+
+        manifest["teachers"][tspec.tag] = {
+            "size": cfg.name,
+            "dbw": f"teacher_{tspec.tag}.dbw",
+            "calib": f"calib_{tspec.tag}.tok",
+            "calib_seqs": CALIB_SEQS,
+            "train": {"steps": tr.steps, "batch": tr.batch, "lr": tr.lr,
+                      "seed": tr.seed, "wiki_frac": tr.wiki_frac},
+            "history": history,
+            "eval_ppl": ppl,
+            "fdb_init_sparsity": sp,
+        }
+
+    # ---- HLO exports (one set per architecture size) ----------------------
+    for size, cfg in MODEL_SIZES.items():
+        log(f"== lowering {size} ==")
+        manifest["executables"][f"fwd_logits_{size}"] = export_fwd_logits(cfg, out, log)
+        manifest["executables"][f"fwd_nll_{size}"] = export_fwd_nll(cfg, out, log)
+        manifest["executables"][f"fwd_fdb_nll_{size}"] = export_fwd_fdb_nll(cfg, out, log)
+        manifest["executables"][f"dad_step_{size}"] = export_dad_step(cfg, out, log)
+
+    log("== lowering standalone fdb kernel ==")
+    manifest["executables"]["fdb_kernel"] = export_fdb_kernel(out, log)
+
+    manifest["build_seconds"] = round(time.time() - t_start, 1)
+    with open(f"{out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"== done in {manifest['build_seconds']}s ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Model/corpus/artifact configuration shared across the compile path.
+
+These configs are the single source of truth for the build-time (python)
+half of the system.  `aot.py` serializes everything the rust layer needs
+into ``artifacts/manifest.json`` so the two layers never share python.
+
+Substitution note (DESIGN.md §2): the paper evaluates LLaMA-1
+{7B,13B,30B,65B} and LLaMA-2 {7B,13B,70B}.  On this testbed (1 CPU core)
+we substitute a four-point size ladder S/M/L/XL of LLaMA-style
+decoder-only transformers, trained at build time, plus a second "v2"
+family (same architectures, different seed + corpus mixture) standing in
+for LLaMA-2.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+# Per-group quantization granularity.  The paper's headline setting is
+# W2A16 with group size 64 — we keep 64 exactly (all linear in-dims below
+# are multiples of 64).
+GROUP_SIZE = 64
+
+# Vocabulary: BPE-like long-tail vocab (Zipfian unigram) — small enough
+# for CPU softmax, large enough that head/tail prediction statistics
+# (Fig. 6) are meaningful.
+VOCAB_SIZE = 512
+
+# Fixed AOT shapes (HLO is shape-specialized).
+SEQ_LEN = 64          # model context for all exported executables
+LOGITS_BATCH = 4      # fwd_logits / dad_step batch (paper fine-tunes at 2)
+NLL_BATCH = 8         # fwd_nll (perplexity) batch
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """LLaMA-style decoder-only transformer hyper-parameters."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int = VOCAB_SIZE
+    seq_len: int = SEQ_LEN
+    rope_theta: float = 10000.0
+    rmsnorm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Exact parameter count (untied embeddings)."""
+        per_layer = (
+            4 * self.d_model * self.d_model     # wq wk wv wo
+            + 3 * self.d_model * self.d_ff      # gate up down
+            + 2 * self.d_model                  # two rmsnorm gains
+        )
+        return (
+            self.vocab * self.d_model           # tok_emb
+            + self.n_layers * per_layer
+            + self.d_model                      # final norm
+            + self.d_model * self.vocab         # lm head
+        )
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["n_params"] = self.n_params()
+        return d
+
+
+# The size ladder.  Every linear in-dimension (d_model and d_ff) is a
+# multiple of GROUP_SIZE so group quantization tiles exactly.
+MODEL_SIZES = {
+    "S": ModelConfig("S", d_model=64, n_layers=2, n_heads=4, d_ff=192),
+    "M": ModelConfig("M", d_model=128, n_layers=3, n_heads=4, d_ff=320),
+    "L": ModelConfig("L", d_model=192, n_layers=5, n_heads=6, d_ff=512),
+    "XL": ModelConfig("XL", d_model=256, n_layers=6, n_heads=8, d_ff=704),
+}
+
+
+@dataclass(frozen=True)
+class CorpusConfig:
+    """Synthetic Zipf-Markov corpus parameters (DESIGN.md §2)."""
+
+    name: str
+    seed: int
+    zipf_s: float            # unigram long-tail exponent
+    bigram_mix: float        # weight on the sparse bigram component
+    n_succ: int = 6          # preferred successors per token
+    vocab: int = VOCAB_SIZE
+    train_tokens: int = 1 << 21   # ~2.1M
+    eval_tokens: int = 1 << 16    # 65k
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+CORPORA = {
+    # WikiText2 stand-in: stronger structure, steeper long tail.
+    "wiki": CorpusConfig("wiki", seed=1001, zipf_s=1.08, bigram_mix=0.62),
+    # C4 stand-in: broader, noisier.
+    "web": CorpusConfig("web", seed=2002, zipf_s=1.00, bigram_mix=0.50),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Teacher pre-training schedule (build-time only)."""
+
+    steps: int
+    batch: int = 16
+    lr: float = 3e-3
+    warmup: int = 40
+    weight_decay: float = 0.01
+    clip: float = 1.0
+    seed: int = 0
+    # fraction of batches drawn from "wiki" (rest from "web")
+    wiki_frac: float = 0.7
+
+
+@dataclass(frozen=True)
+class TeacherSpec:
+    """One build-time teacher: architecture + training recipe."""
+
+    tag: str                  # artifact tag, e.g. "S" or "S2"
+    size: str                 # key into MODEL_SIZES
+    train: TrainConfig = field(default_factory=lambda: TrainConfig(steps=400))
+
+    @property
+    def config(self) -> ModelConfig:
+        return MODEL_SIZES[self.size]
+
+
+# v1 family (stands in for LLaMA-1 {7,13,30,65}B) trains mostly on wiki;
+# v2 family (stands in for LLaMA-2 {7,13,70}B) uses a different seed and a
+# different corpus mixture — enough to produce genuinely distinct weight
+# statistics, mirroring the distinct LLaMA-2 pre-training run.
+TEACHERS = [
+    TeacherSpec("S", "S", TrainConfig(steps=500, seed=11)),
+    TeacherSpec("M", "M", TrainConfig(steps=420, seed=12)),
+    TeacherSpec("L", "L", TrainConfig(steps=340, seed=13)),
+    TeacherSpec("XL", "XL", TrainConfig(steps=280, seed=14)),
+    TeacherSpec("S2", "S", TrainConfig(steps=500, seed=21, wiki_frac=0.45)),
+    TeacherSpec("M2", "M", TrainConfig(steps=420, seed=22, wiki_frac=0.45)),
+    TeacherSpec("L2", "L", TrainConfig(steps=340, seed=23, wiki_frac=0.45)),
+]
+
+TEACHER_BY_TAG = {t.tag: t for t in TEACHERS}
+
+# DAD hyper-parameters (paper §4.3): gamma = lambda = 0.1.
+DAD_GAMMA = 0.1
+DAD_LAMBDA = 0.1

@@ -1,0 +1,105 @@
+"""Synthetic Zipf-Markov corpora (WikiText2 / C4 stand-ins).
+
+The generator produces a token stream whose unigram marginal is Zipfian
+(BPE-style long tail, the property Fig. 6 of the paper depends on) and
+whose bigram structure is sparse-but-strong (each token prefers a small
+successor set), so a small transformer can reduce perplexity far below
+the unigram entropy — giving quantization methods a real dynamic range
+to separate on.
+
+Streams are serialized as little-endian u16 (`.tok` files); the rust
+layer (`rust/src/data`) reads the identical format.
+"""
+
+import numpy as np
+
+from .configs import CorpusConfig
+
+
+def _zipf_probs(vocab: int, s: float) -> np.ndarray:
+    """Zipf unigram over token ids; id 0 is the head of the distribution."""
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks ** (-s)
+    return p / p.sum()
+
+
+def transition_matrix(cfg: CorpusConfig) -> np.ndarray:
+    """Dense [vocab, vocab] next-token distribution.
+
+    p(next | cur) = mix * bigram_pref(cur) + (1 - mix) * zipf_unigram
+    where bigram_pref(cur) puts geometric-decay mass on `n_succ`
+    pseudo-random (seeded) successors of cur.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    uni = _zipf_probs(cfg.vocab, cfg.zipf_s)
+    trans = np.tile(uni * (1.0 - cfg.bigram_mix), (cfg.vocab, 1))
+    # geometric decay over the successor set, normalized
+    w = 0.5 ** np.arange(cfg.n_succ)
+    w = w / w.sum()
+    for t in range(cfg.vocab):
+        succ = rng.choice(cfg.vocab, size=cfg.n_succ, replace=False, p=uni)
+        np.add.at(trans[t], succ, cfg.bigram_mix * w)
+    # rows already sum to 1 by construction; renormalize for fp safety
+    trans /= trans.sum(axis=1, keepdims=True)
+    return trans.astype(np.float64)
+
+
+def sample_stream(cfg: CorpusConfig, n_tokens: int, seed_offset: int = 0) -> np.ndarray:
+    """Sample a token stream of length `n_tokens` as u16.
+
+    Vectorized across 256 parallel Markov chains (inverse-CDF sampling),
+    then concatenated — sequence boundaries land mid-stream, which is
+    fine: training/eval windows are drawn uniformly anyway.
+    """
+    rng = np.random.default_rng(cfg.seed + 7919 * (seed_offset + 1))
+    trans = transition_matrix(cfg)
+    cum = np.cumsum(trans, axis=1)
+    cum[:, -1] = 1.0  # exact upper edge
+
+    chains = 256
+    steps = -(-n_tokens // chains)  # ceil
+    uni = _zipf_probs(cfg.vocab, cfg.zipf_s)
+    cur = rng.choice(cfg.vocab, size=chains, p=uni)
+    out = np.empty((steps, chains), dtype=np.uint16)
+    for i in range(steps):
+        r = rng.random(chains)
+        # next[c] = first j with cum[cur[c], j] > r[c]
+        rows = cum[cur]
+        nxt = (rows < r[:, None]).sum(axis=1)
+        out[i] = nxt
+        cur = nxt
+    return out.T.reshape(-1)[:n_tokens].astype(np.uint16)
+
+
+def markov_entropy_bits(cfg: CorpusConfig) -> float:
+    """Exact conditional entropy H(X_{t+1} | X_t) in bits.
+
+    This is the per-token information floor — the best achievable PPL is
+    2**H.  Recorded in the manifest so EXPERIMENTS.md can report how close
+    each teacher gets to the floor.
+    """
+    trans = transition_matrix(cfg)
+    # stationary distribution via power iteration
+    pi = _zipf_probs(cfg.vocab, cfg.zipf_s)
+    for _ in range(200):
+        pi = pi @ trans
+    pi /= pi.sum()
+    h_rows = -(trans * np.log2(np.maximum(trans, 1e-300))).sum(axis=1)
+    return float((pi * h_rows).sum())
+
+
+def save_tokens(path: str, tokens: np.ndarray) -> None:
+    assert tokens.dtype == np.uint16
+    tokens.astype("<u2").tofile(path)
+
+
+def load_tokens(path: str) -> np.ndarray:
+    return np.fromfile(path, dtype="<u2")
+
+
+def batch_iterator(stream: np.ndarray, batch: int, seq_plus_one: int, rng: np.random.Generator):
+    """Yield [batch, seq_plus_one] windows sampled uniformly from `stream`."""
+    n = len(stream) - seq_plus_one - 1
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        yield np.stack([stream[s : s + seq_plus_one] for s in starts]).astype(np.int32)

@@ -1,0 +1,68 @@
+"""`.dbw` — the weight-blob interchange format between python and rust.
+
+Layout (all little-endian):
+
+    magic   : 4 bytes  b"DBW1"
+    jsonlen : u32      length of the UTF-8 JSON header
+    header  : jsonlen bytes — {"config": {...}, "tensors": [
+                  {"name": str, "dtype": "f32", "shape": [..],
+                   "offset": int, "nbytes": int}, ...]}
+    payload : concatenated row-major tensor bytes, 64-byte aligned each
+
+The rust reader lives in `rust/src/model/store.rs`; both sides are
+round-trip tested against each other through the artifacts.
+"""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"DBW1"
+ALIGN = 64
+
+
+def save_dbw(path: str, config: dict, tensors: "dict[str, np.ndarray]") -> None:
+    """Write tensors (name -> f32 ndarray) with a JSON config header."""
+    entries = []
+    payload = bytearray()
+    for name, arr in tensors.items():
+        shape = list(np.shape(arr))  # before ascontiguousarray (0-d -> 1-d)
+        arr = np.ascontiguousarray(arr, dtype="<f4")
+        pad = (-len(payload)) % ALIGN
+        payload.extend(b"\0" * pad)
+        entries.append(
+            {
+                "name": name,
+                "dtype": "f32",
+                "shape": shape,
+                "offset": len(payload),
+                "nbytes": arr.nbytes,
+            }
+        )
+        payload.extend(arr.tobytes())
+    header = json.dumps({"config": config, "tensors": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        f.write(bytes(payload))
+
+
+def load_dbw(path: str) -> "tuple[dict, dict[str, np.ndarray]]":
+    """Read back (config, {name: f32 ndarray})."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    if blob[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {blob[:4]!r}")
+    (jsonlen,) = struct.unpack_from("<I", blob, 4)
+    header = json.loads(blob[8 : 8 + jsonlen].decode())
+    base = 8 + jsonlen
+    tensors = {}
+    for e in header["tensors"]:
+        if e["dtype"] != "f32":
+            raise ValueError(f"unsupported dtype {e['dtype']}")
+        start = base + e["offset"]
+        arr = np.frombuffer(blob, dtype="<f4", count=e["nbytes"] // 4, offset=start)
+        tensors[e["name"]] = arr.reshape(e["shape"]).copy()
+    return header["config"], tensors

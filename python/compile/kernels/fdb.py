@@ -1,0 +1,142 @@
+"""Layer-1 Pallas kernel: the FDB dual-binary grouped matmul (Eq. 8).
+
+    y[m,n] = Σ_g  α₁[g,n] · (x[m,Kg] @ w₁ᵇ[Kg,n])
+           + Σ_g  α₂[g,n] · (x[m,Kg] @ w₂ᵇ[Kg,n])
+
+Tiling (DESIGN.md §Hardware-Adaptation): the grid iterates (M/bm, N/bn,
+K/bk) with bk == GROUP_SIZE so each k-step consumes exactly one scale
+group; the output block (i, j) is revisited across k and accumulates in
+place — the Pallas expression of a K-blocked GEMM with fused per-group
+scale combine.  On TPU the two binary planes live in VMEM as 0/1 tiles
+feeding the MXU; on this testbed the kernel runs under interpret=True
+(Mosaic custom-calls cannot execute on the CPU PJRT plugin) and its HLO
+lowers into the same artifact the rust runtime loads.
+
+VMEM budget per block (f32): bm·bk + 2·bk·bn + 2·bn + bm·bn floats.
+With the default (bm, bk, bn) = (64, 64, 128) that is 45 KiB — far under
+the 16 MiB VMEM of a TPUv4 core, leaving room for double-buffering
+(analyzed in EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes; bk must equal the quantization group size so one
+# k-step = one scale group.
+DEFAULT_BM = 64
+DEFAULT_BN = 128
+
+
+def _fdb_kernel(x_ref, w1_ref, w2_ref, a1_ref, a2_ref, o_ref):
+    """One (bm, bn) output block, one k-group step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    # Two binary-plane partial products; on MXU these are bf16 0/1 mask
+    # matmuls, here f32 for exactness under interpret mode.
+    p1 = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    p2 = jnp.dot(x, w2_ref[...], preferred_element_type=jnp.float32)
+    # Per-group scale combine fused into the accumulation.
+    o_ref[...] += p1 * a1_ref[0] + p2 * a2_ref[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group", "bm", "bn", "interpret")
+)
+def fdb_matmul(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w2: jnp.ndarray,
+    a1: jnp.ndarray,
+    a2: jnp.ndarray,
+    *,
+    group: int = 64,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """FDB grouped dual-binary matmul.
+
+    x  [M, K]       activations (fp)
+    w1 [K, N]       binary plane 1 as {0,1} f32
+    w2 [K, N]       binary plane 2 as {0,1} f32
+    a1 [K/group, N] plane-1 scales (α₁)
+    a2 [K/group, N] plane-2 scales (α₂)
+    -> [M, N]
+
+    Shapes must tile exactly: group | K, bm | M, bn | N.  The wrapper in
+    `fdb_matmul_any` pads arbitrary M.
+    """
+    m, kdim = x.shape
+    _, n = w1.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = group
+    assert kdim % bk == 0 and m % bm == 0 and n % bn == 0, (x.shape, w1.shape, bm, bn, bk)
+    grid = (m // bm, n // bn, kdim // bk)
+    return pl.pallas_call(
+        _fdb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w1, w2, a1, a2)
+
+
+def fdb_matmul_any(x, w1, w2, a1, a2, *, group: int = 64, interpret: bool = True):
+    """Rank-agnostic wrapper: flattens leading dims, pads M to a block.
+
+    Used by the L2 model so [B, T, d] activations flow straight through.
+    """
+    lead = x.shape[:-1]
+    kdim = x.shape[-1]
+    n = w1.shape[-1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+    # pick bm dividing padded m
+    bm = DEFAULT_BM if m >= DEFAULT_BM else m
+    pad = (-m) % bm
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, kdim), x2.dtype)], axis=0)
+    bn = DEFAULT_BN if n % DEFAULT_BN == 0 else n
+    y = fdb_matmul(x2, w1, w2, a1, a2, group=group, bm=bm, bn=bn, interpret=interpret)
+    if pad:
+        y = y[:m]
+    return y.reshape(*lead, n)
+
+
+def vmem_footprint_bytes(bm: int, bk: int, bn: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM bytes for one grid step (inputs + scales + acc).
+
+    Used by the §Perf analysis and by `python/tests/test_kernel.py` to
+    keep chosen block shapes inside budget.
+    """
+    floats = bm * bk + 2 * bk * bn + 2 * bn + bm * bn
+    return floats * dtype_bytes
+
+
+def mxu_utilization_estimate(bm: int, bk: int, bn: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes busy for one (bm,bk)x(bk,bn) pass.
+
+    The MXU processes mxu×mxu tiles; partial tiles waste lanes.  This is
+    the structural estimate DESIGN.md commits to for real-TPU perf (the
+    interpret-mode kernel gives no hardware timing signal).
+    """
+    import math
+
+    eff = lambda d: d / (math.ceil(d / mxu) * mxu)
+    return eff(bm) * eff(bk) * eff(bn)

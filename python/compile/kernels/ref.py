@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the Pallas kernels and the FDB arithmetic.
+
+Everything here is the *specification*: the Pallas kernel
+(`kernels/fdb.py`), the rust quantizer (`rust/src/quant/fdb.rs`) and the
+rust bit-serial matmul are all tested against these functions.
+
+Conventions: weights are [in, out] (activations right-multiply: y = x@W);
+quantization groups tile the *in* dimension with size `group`; per-group
+scales have shape [in/group, out].
+"""
+
+import jax.numpy as jnp
+
+
+def rtn2_group_quantize(w: jnp.ndarray, group: int):
+    """2-bit RTN proxy, per-(group, out-column), symmetric grid (Eq. 1-2).
+
+    Levels {-2,-1,0,1}·s with s = max|w| / 2 per group/column.
+    Returns (wq int8 in {-2..1}, s [in/group, out]).
+    """
+    din, dout = w.shape
+    assert din % group == 0, (din, group)
+    g = din // group
+    wg = w.reshape(g, group, dout)
+    s = jnp.max(jnp.abs(wg), axis=1) / 2.0  # [g, out]
+    s = jnp.maximum(s, 1e-8)
+    wq = jnp.clip(jnp.round(wg / s[:, None, :]), -2, 1).astype(jnp.int8)
+    return wq.reshape(din, dout), s
+
+
+def fdb_split(w: jnp.ndarray, s: jnp.ndarray, group: int):
+    """Split fp weights into dual {0,1} planes + scales (Eq. 4-7, Fig. 5).
+
+    With α₁ = 2s > 0 and α₂ = -s < 0 (Eq. 5) the dual-binary grid is
+    {α₂, 0, α₁+α₂, α₁} = {-s, 0, s, 2s} — Fig. 5's four levels.  The
+    proxy 2-bit scale s comes from `rtn2_group_quantize`; plane
+    assignment follows the level-center comparison of Eq. 6-7
+    (`step_split_ref`), which is exactly nearest-level rounding onto the
+    dual-binary grid.
+
+    Returns (b1, b2, a1, a2): b* {0,1} f32 [in,out], a* f32 [in/group,out].
+    """
+    a1 = 2.0 * s
+    a2 = -s
+    b1, b2 = step_split_ref(w, a1, a2, group)
+    return b1, b2, a1, a2
+
+
+def fdb_dequant(b1, b2, a1, a2, group: int):
+    """ŵ = α₁·w₁ᵇ + α₂·w₂ᵇ with per-(group, out-col) scales (Eq. 4)."""
+    a1e = jnp.repeat(a1, group, axis=0)
+    a2e = jnp.repeat(a2, group, axis=0)
+    return a1e * b1 + a2e * b2
+
+
+def fdb_matmul_ref(x, b1, b2, a1, a2, group: int):
+    """Reference for the Pallas kernel (Eq. 8).
+
+    y = Σ_g α₁[g]·(x_g @ b1_g) + α₂[g]·(x_g @ b2_g)
+
+    x [.., in], b* [in, out], a* [in/group, out] -> y [.., out].
+    Mathematically identical to x @ fdb_dequant(...), but expressed as the
+    dual binary-sparse matmul — the efficient form the kernel implements.
+    """
+    din, dout = b1.shape
+    g = din // group
+    xg = x.reshape(*x.shape[:-1], g, group)
+    b1g = b1.reshape(g, group, dout)
+    b2g = b2.reshape(g, group, dout)
+    p1 = jnp.einsum("...gk,gkn->...gn", xg, b1g)
+    p2 = jnp.einsum("...gk,gkn->...gn", xg, b2g)
+    return (p1 * a1 + p2 * a2).sum(axis=-2)
+
+
+def step_split_ref(w: jnp.ndarray, a1: jnp.ndarray, a2: jnp.ndarray, group: int):
+    """Re-derive binary planes from fp weights and current scales (Eq. 6-7).
+
+    After DAD moves the scales the level centers move, so plane
+    assignment is recomputed by comparing against the centers:
+
+        b1 = H(w - (α₁+α₂)/2)
+        b2 = H(-(w - α₁·b1 - α₂/2))
+
+    H = unit step (1 for x > 0 else 0).  Assumes α₁ > 0 > α₂ (Fig. 5).
+    """
+    a1e = jnp.repeat(a1, group, axis=0)
+    a2e = jnp.repeat(a2, group, axis=0)
+    b1 = (w - (a1e + a2e) / 2.0 > 0).astype(jnp.float32)
+    b2 = (-(w - a1e * b1 - a2e / 2.0) > 0).astype(jnp.float32)
+    return b1, b2

@@ -1,0 +1,361 @@
+"""Layer-2: the LLaMA-style decoder-only transformer in pure JAX.
+
+This module defines everything the AOT path lowers to HLO:
+
+* `forward`            — FP forward (teacher + dequantized students):
+                         weights are *function parameters*, so the same
+                         executable serves the teacher and any student
+                         whose weights rust dequantizes.
+* `nll`                — per-token negative log-likelihood (perplexity).
+* `fdb_forward`        — the FDB student: every linear runs the Layer-1
+                         Pallas dual-binary kernel (Eq. 8).
+* `dad_losses`/`dad_step` — Deviation-Aware Distillation (Eq. 9-11) with
+                         gradients w.r.t. the FDB scales only.
+* `sample`             — KV-cached ancestral sampler (data-free
+                         calibration set generation, LLM-QAT style).
+
+Parameters are a flat `{name: array}` dict; `param_names(cfg)` fixes the
+order used by every HLO export and recorded in the manifest, so the rust
+runtime can marshal positionally.
+
+Weight convention: linear weights are [in, out] (y = x @ W).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import GROUP_SIZE, ModelConfig
+from .kernels.fdb import fdb_matmul_any
+from .kernels.ref import fdb_dequant
+
+# The seven quantizable linears of each block, in canonical order.
+LINEAR_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def param_names(cfg: ModelConfig) -> "list[str]":
+    """Canonical flat parameter order (manifest + HLO argument order)."""
+    names = ["tok_emb"]
+    for i in range(cfg.n_layers):
+        names.append(f"layers.{i}.attn_norm")
+        names += [f"layers.{i}.{n}" for n in ("wq", "wk", "wv", "wo")]
+        names.append(f"layers.{i}.mlp_norm")
+        names += [f"layers.{i}.{n}" for n in ("w_gate", "w_up", "w_down")]
+    names += ["final_norm", "head"]
+    return names
+
+
+def linear_param_names(cfg: ModelConfig) -> "list[str]":
+    """The quantizable subset of `param_names` (order preserved)."""
+    return [
+        f"layers.{i}.{n}" for i in range(cfg.n_layers) for n in LINEAR_NAMES
+    ]
+
+
+def linear_shape(cfg: ModelConfig, name: str) -> "tuple[int, int]":
+    """[in, out] shape of a quantizable linear."""
+    d, f = cfg.d_model, cfg.d_ff
+    base = name.rsplit(".", 1)[-1]
+    return {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "w_gate": (d, f), "w_up": (d, f), "w_down": (f, d),
+    }[base]
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> "dict[str, jnp.ndarray]":
+    """Scaled-Gaussian init (GPT-2 style residual scaling)."""
+    params = {}
+    keys = iter(jax.random.split(key, 8 * cfg.n_layers + 8))
+    std = 0.02 + 0.02 * (64 / cfg.d_model) ** 0.5
+    resid_scale = 1.0 / (2.0 * cfg.n_layers) ** 0.5
+
+    def gauss(shape, scale=1.0):
+        return scale * std * jax.random.normal(next(keys), shape, jnp.float32)
+
+    params["tok_emb"] = gauss((cfg.vocab, cfg.d_model))
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        params[p + "attn_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params[p + "wq"] = gauss((cfg.d_model, cfg.d_model))
+        params[p + "wk"] = gauss((cfg.d_model, cfg.d_model))
+        params[p + "wv"] = gauss((cfg.d_model, cfg.d_model))
+        params[p + "wo"] = gauss((cfg.d_model, cfg.d_model), resid_scale)
+        params[p + "mlp_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params[p + "w_gate"] = gauss((cfg.d_model, cfg.d_ff))
+        params[p + "w_up"] = gauss((cfg.d_model, cfg.d_ff))
+        params[p + "w_down"] = gauss((cfg.d_ff, cfg.d_model), resid_scale)
+    params["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    params["head"] = gauss((cfg.d_model, cfg.vocab))
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float) -> jnp.ndarray:
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def rope_tables(cfg: ModelConfig, positions: jnp.ndarray):
+    """(cos, sin) tables [T, head_dim/2] for the given positions."""
+    hd = cfg.head_dim
+    inv = cfg.rope_theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = positions[:, None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x [B, T, H, hd] -> rotated (pairs (0,1),(2,3),…)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    ro = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return ro.reshape(x.shape)
+
+
+def _attention(q, k, v, cfg: ModelConfig):
+    """Causal SDPA. q,k,v [B, T, H, hd] -> [B, T, H*hd]."""
+    b, t, h, hd = q.shape
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return ctx.reshape(b, t, h * hd)
+
+
+def _block(x, p, prefix, cfg: ModelConfig, matmul):
+    """One transformer block; `matmul(name, x)` performs the linear."""
+    b, t, d = x.shape
+    h = rmsnorm(x, p[prefix + "attn_norm"], cfg.rmsnorm_eps)
+    q = matmul(prefix + "wq", h).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = matmul(prefix + "wk", h).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    v = matmul(prefix + "wv", h).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    cos, sin = rope_tables(cfg, jnp.arange(t))
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    ctx = _attention(q, k, v, cfg)
+    x = x + matmul(prefix + "wo", ctx)
+    h = rmsnorm(x, p[prefix + "mlp_norm"], cfg.rmsnorm_eps)
+    gate = jax.nn.silu(matmul(prefix + "w_gate", h))
+    up = matmul(prefix + "w_up", h)
+    x = x + matmul(prefix + "w_down", gate * up)
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig) -> jnp.ndarray:
+    """FP forward: tokens [B, T] int32 -> logits [B, T, vocab]."""
+    matmul = lambda name, x: x @ params[name]
+    x = params["tok_emb"][tokens]
+    for i in range(cfg.n_layers):
+        x = _block(x, params, f"layers.{i}.", cfg, matmul)
+    x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+    return x @ params["head"]
+
+
+def nll(params, tokens_p1, cfg: ModelConfig) -> jnp.ndarray:
+    """Per-token NLL: tokens_p1 [B, T+1] -> nll [B, T] (nats)."""
+    logits = forward(params, tokens_p1[:, :-1], cfg)
+    targets = tokens_p1[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+def collect_linear_inputs(params, tokens, cfg: ModelConfig):
+    """Forward that also returns each quantizable linear's input.
+
+    Returns (logits, {linear_name: [B, T, in]}).  Build-time only — the
+    rust GPTQ/AWQ calibration path uses its own native forward; this
+    exists for cross-validation tests between the two.
+    """
+    acts = {}
+
+    def matmul(name, x):
+        acts[name] = x
+        return x @ params[name]
+
+    x = params["tok_emb"][tokens]
+    for i in range(cfg.n_layers):
+        x = _block(x, params, f"layers.{i}.", cfg, matmul)
+    x = rmsnorm(x, params["final_norm"], cfg.rmsnorm_eps)
+    return x @ params["head"], acts
+
+
+# --------------------------------------------------------------------------
+# FDB student
+# --------------------------------------------------------------------------
+
+def fdb_param_names(cfg: ModelConfig):
+    """(frozen_names, quad_names): quad = 4 tensors per quantized linear.
+
+    quad order per linear: b1 [in,out], b2 [in,out], a1 [g,out], a2 [g,out].
+    """
+    lin = linear_param_names(cfg)
+    frozen = [n for n in param_names(cfg) if n not in set(lin)]
+    quads = []
+    for n in lin:
+        quads += [n + ".b1", n + ".b2", n + ".a1", n + ".a2"]
+    return frozen, quads
+
+
+def fdb_forward(frozen, quads, tokens, cfg: ModelConfig, *, use_pallas: bool):
+    """FDB forward. frozen/quads are {name: array} dicts.
+
+    use_pallas=True  -> every linear runs the Layer-1 kernel (Eq. 8);
+                        this is what `fwd_fdb_nll` exports.
+    use_pallas=False -> dequantize-then-matmul (mathematically identical,
+                        differentiable w.r.t. scales) — the DAD path.
+    """
+
+    def matmul(name, x):
+        if name in frozen:
+            return x @ frozen[name]
+        b1 = quads[name + ".b1"]
+        b2 = quads[name + ".b2"]
+        a1 = quads[name + ".a1"]
+        a2 = quads[name + ".a2"]
+        if use_pallas:
+            return fdb_matmul_any(x, b1, b2, a1, a2, group=GROUP_SIZE)
+        w_hat = fdb_dequant(b1, b2, a1, a2, GROUP_SIZE)
+        return x @ w_hat
+
+    p = dict(frozen)
+    x = frozen["tok_emb"][tokens]
+    for i in range(cfg.n_layers):
+        x = _block(x, p, f"layers.{i}.", cfg, matmul)
+    x = rmsnorm(x, frozen["final_norm"], cfg.rmsnorm_eps)
+    return x @ frozen["head"]
+
+
+def fdb_nll(frozen, quads, tokens_p1, cfg: ModelConfig, *, use_pallas: bool):
+    """Per-token NLL through the FDB student."""
+    logits = fdb_forward(frozen, quads, tokens_p1[:, :-1], cfg, use_pallas=use_pallas)
+    targets = tokens_p1[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+# --------------------------------------------------------------------------
+# Deviation-Aware Distillation (Eq. 9-11)
+# --------------------------------------------------------------------------
+
+def entropy(logits: jnp.ndarray) -> jnp.ndarray:
+    """H(P) per position, nats (Eq. 9)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def soft_ce(teacher_logits: jnp.ndarray, student_logits: jnp.ndarray) -> jnp.ndarray:
+    """ℓ_CE(Pᵗ, Pˢ) per position: -Σ pᵗ log pˢ (data-free soft targets)."""
+    pt = jax.nn.softmax(teacher_logits, axis=-1)
+    logps = jax.nn.log_softmax(student_logits, axis=-1)
+    return -jnp.sum(pt * logps, axis=-1)
+
+
+def dad_losses(student_logits, teacher_logits, gamma, lam):
+    """(total, ce_mean, dad_mean) per Eq. 10-11.
+
+    ℓ_DAD = H(Pᵗ)^γ · H(Pˢ)^(1-γ) · ℓ_CE(Pᵗ,Pˢ)   (per position)
+    ℓ_total = λ·mean(ℓ_DAD) + mean(ℓ_CE)
+    """
+    ht = entropy(teacher_logits)
+    hs = entropy(student_logits)
+    ce = soft_ce(teacher_logits, student_logits)
+    eps = 1e-6
+    dad = (ht + eps) ** gamma * (hs + eps) ** (1.0 - gamma) * ce
+    ce_mean = jnp.mean(ce)
+    dad_mean = jnp.mean(dad)
+    return lam * dad_mean + ce_mean, ce_mean, dad_mean
+
+
+def dad_step(alphas, planes, frozen, tokens, teacher_logits, cfg: ModelConfig,
+             gamma, lam):
+    """One DAD evaluation: ((total, ce, dad), grads-w.r.t.-alphas).
+
+    alphas: {"<lin>.a1"/".a2": [g,out]} — the only trainable leaves.
+    planes: {"<lin>.b1"/".b2": [in,out]} — frozen {0,1} planes.
+    The AOT export lowers exactly this (value_and_grad over `alphas`);
+    rust/src/coordinator/finetune.rs runs the AdamW loop around it.
+    gamma/lam are traced scalars so the γ-sweep (Table 4) reuses one
+    executable.
+    """
+
+    def loss_fn(alphas_):
+        quads = dict(planes)
+        quads.update(alphas_)
+        logits = fdb_forward(frozen, quads, tokens, cfg, use_pallas=False)
+        total, ce, dad = dad_losses(logits, teacher_logits, gamma, lam)
+        return total, (ce, dad)
+
+    (total, (ce, dad)), grads = jax.value_and_grad(loss_fn, has_aux=True)(alphas)
+    return (total, ce, dad), grads
+
+
+# --------------------------------------------------------------------------
+# sampling (data-free calibration generation)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "length", "temperature"))
+def sample(params, start_tokens, key, cfg: ModelConfig, length: int,
+           temperature: float = 1.0):
+    """Ancestral sampling with a KV cache.
+
+    start_tokens [B] int32 -> tokens [B, length] (first column =
+    start_tokens).  Used at build time to synthesize the data-free
+    calibration set from each teacher (LLM-QAT recipe) and by the
+    prediction-distribution studies (Fig. 6).
+    """
+    b = start_tokens.shape[0]
+    h, hd, nl = cfg.n_heads, cfg.head_dim, cfg.n_layers
+
+    def step_logits(p, tok, kcache, vcache, pos):
+        """One-token forward; caches are [nl, B, length, h, hd]."""
+        x = p["tok_emb"][tok][:, None, :]  # [B,1,d]
+        cos, sin = rope_tables(cfg, jnp.array([pos]))
+        kc_new = kcache
+        vc_new = vcache
+        for i in range(nl):
+            pre = f"layers.{i}."
+            hin = rmsnorm(x, p[pre + "attn_norm"], cfg.rmsnorm_eps)
+            q = (hin @ p[pre + "wq"]).reshape(b, 1, h, hd)
+            k = (hin @ p[pre + "wk"]).reshape(b, 1, h, hd)
+            v = (hin @ p[pre + "wv"]).reshape(b, 1, h, hd)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+            kc_new = jax.lax.dynamic_update_slice(kc_new, k[None], (i, 0, pos, 0, 0))
+            vc_new = jax.lax.dynamic_update_slice(vc_new, v[None], (i, 0, pos, 0, 0))
+            mask = (jnp.arange(length) <= pos)[None, None, None, :]
+            scores = jnp.einsum("bqhd,bkhd->bhqk", q, kc_new[i]) * hd ** -0.5
+            scores = jnp.where(mask, scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1)
+            ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, vc_new[i]).reshape(b, 1, h * hd)
+            x = x + ctx @ p[pre + "wo"]
+            hin = rmsnorm(x, p[pre + "mlp_norm"], cfg.rmsnorm_eps)
+            x = x + (jax.nn.silu(hin @ p[pre + "w_gate"]) * (hin @ p[pre + "w_up"])) @ p[pre + "w_down"]
+        x = rmsnorm(x, p["final_norm"], cfg.rmsnorm_eps)
+        return (x @ p["head"])[:, 0, :], kc_new, vc_new
+
+    kc0 = jnp.zeros((nl, b, length, h, hd), jnp.float32)
+    vc0 = jnp.zeros_like(kc0)
+
+    def body(carry, pos):
+        tok, kc, vc, key_ = carry
+        logits, kc, vc = step_logits(params, tok, kc, vc, pos)
+        key_, sub = jax.random.split(key_)
+        nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+        nxt = nxt.astype(jnp.int32)
+        return (nxt, kc, vc, key_), tok
+
+    (_, _, _, _), toks = jax.lax.scan(
+        body, (start_tokens.astype(jnp.int32), kc0, vc0, key), jnp.arange(length)
+    )
+    return jnp.transpose(toks, (1, 0))  # [B, length]

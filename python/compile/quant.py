@@ -1,0 +1,61 @@
+"""Python-side whole-model FDB construction (build-time / test oracle).
+
+The production quantizer lives in rust (`rust/src/quant/fdb.rs`); this
+mirror exists so (a) the AOT export has concrete example arguments with
+the exact shapes/dtypes, (b) python tests can check the rust pipeline's
+artifacts against an independent implementation, and (c) Fig. 3/4-style
+analyses can be cross-validated.
+"""
+
+import jax.numpy as jnp
+
+from .configs import GROUP_SIZE, ModelConfig
+from .kernels.ref import fdb_dequant, fdb_split, rtn2_group_quantize
+from .model import linear_param_names
+
+
+def fdb_quantize_model(params: dict, cfg: ModelConfig, group: int = GROUP_SIZE):
+    """Split every quantizable linear into FDB quads.
+
+    Returns (frozen, planes, alphas):
+      frozen: non-quantized params (embeddings, norms, head)
+      planes: {"<lin>.b1"/".b2": {0,1} f32 [in,out]}
+      alphas: {"<lin>.a1"/".a2": f32 [in/group, out]}
+    """
+    lin = set(linear_param_names(cfg))
+    frozen, planes, alphas = {}, {}, {}
+    for name, w in params.items():
+        if name not in lin:
+            frozen[name] = w
+            continue
+        _, s = rtn2_group_quantize(w, group)
+        b1, b2, a1, a2 = fdb_split(w, s, group)
+        planes[name + ".b1"] = b1
+        planes[name + ".b2"] = b2
+        alphas[name + ".a1"] = a1
+        alphas[name + ".a2"] = a2
+    return frozen, planes, alphas
+
+
+def fdb_dequant_model(frozen: dict, planes: dict, alphas: dict, cfg: ModelConfig,
+                      group: int = GROUP_SIZE):
+    """Reassemble a full fp param dict from FDB pieces (ŵ per Eq. 4)."""
+    params = dict(frozen)
+    for name in linear_param_names(cfg):
+        params[name] = fdb_dequant(
+            planes[name + ".b1"], planes[name + ".b2"],
+            alphas[name + ".a1"], alphas[name + ".a2"], group,
+        )
+    return params
+
+
+def sparsity_report(planes: dict) -> dict:
+    """Fraction of zeros per plane kind — the paper's >60% avg / >70% w₂ᵇ claim."""
+    s1 = [float(1.0 - jnp.mean(v)) for k, v in planes.items() if k.endswith(".b1")]
+    s2 = [float(1.0 - jnp.mean(v)) for k, v in planes.items() if k.endswith(".b2")]
+    n = max(len(s1), 1)
+    return {
+        "b1_mean": sum(s1) / n,
+        "b2_mean": sum(s2) / n,
+        "overall": (sum(s1) + sum(s2)) / (2 * n),
+    }

@@ -1,0 +1,119 @@
+"""Build-time teacher pre-training (AdamW + cosine schedule, pure JAX).
+
+Runs only inside `make artifacts`.  Teachers are seeded and fully
+deterministic; the resulting weights are the stand-ins for the LLaMA
+checkpoints (DESIGN.md §2).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .configs import SEQ_LEN, CorpusConfig, TeacherSpec
+from .model import forward, init_params
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    """One decoupled-weight-decay Adam step (Loshchilov & Hutter)."""
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - step - lr * wd * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def lr_schedule(step, base_lr, warmup, total):
+    warm = base_lr * (step + 1) / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def ce_loss(params, batch, cfg):
+    """batch [B, T+1] -> mean next-token CE (nats)."""
+    logits = forward(params, batch[:, :-1], cfg)
+    targets = batch[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_teacher(spec: TeacherSpec, streams: "dict[str, np.ndarray]", log=print):
+    """Train one teacher; returns (params, history list of (step, loss))."""
+    cfg = spec.config
+    tc = spec.train
+    key = jax.random.PRNGKey(tc.seed)
+    params = init_params(cfg, key)
+
+    opt = adamw_init(params)
+    loss_grad = jax.value_and_grad(ce_loss)
+
+    @jax.jit
+    def step_fn(params, opt, batch, lr):
+        loss, grads = loss_grad(params, batch, cfg)
+        grads, gn = clip_by_global_norm(grads, tc.clip)
+        params, opt = adamw_update(params, grads, opt, lr, wd=tc.weight_decay)
+        return params, opt, loss, gn
+
+    rng = np.random.default_rng(tc.seed + 555)
+    iters = {
+        name: data_mod.batch_iterator(stream, tc.batch, SEQ_LEN + 1, rng)
+        for name, stream in streams.items()
+    }
+    history = []
+    t0 = time.time()
+    for step in range(tc.steps):
+        src = "wiki" if rng.random() < tc.wiki_frac else "web"
+        batch = jnp.asarray(next(iters[src]))
+        lr = lr_schedule(step, tc.lr, tc.warmup, tc.steps)
+        params, opt, loss, gn = step_fn(params, opt, batch, lr)
+        if step % 50 == 0 or step == tc.steps - 1:
+            loss_f = float(loss)
+            history.append((step, loss_f))
+            log(
+                f"[train {spec.tag}] step {step:4d}/{tc.steps} "
+                f"loss {loss_f:.4f} ppl {np.exp(loss_f):8.2f} "
+                f"({time.time() - t0:.1f}s)"
+            )
+    return params, history
+
+
+def eval_ppl(params, cfg, stream: np.ndarray, n_windows: int = 64, seed: int = 0) -> float:
+    """Quick python-side perplexity (sanity metric recorded in manifest)."""
+    rng = np.random.default_rng(seed)
+    it = data_mod.batch_iterator(stream, 8, SEQ_LEN + 1, rng)
+
+    @jax.jit
+    def batch_nll(batch):
+        logits = forward(params, batch[:, :-1], cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, batch[:, 1:, None], axis=-1)[..., 0]
+
+    tot, cnt = 0.0, 0
+    for _ in range(n_windows // 8):
+        nll = np.asarray(batch_nll(jnp.asarray(next(it))))
+        tot += nll.sum()
+        cnt += nll.size
+    return float(np.exp(tot / cnt))

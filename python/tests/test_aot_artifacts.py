@@ -1,0 +1,93 @@
+"""Artifact contract tests: if `make artifacts` has run, the manifest
+and files must satisfy the python↔rust interchange contract.  Skipped
+cleanly when artifacts are absent (CI without the build step)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile.configs import GROUP_SIZE, MODEL_SIZES, SEQ_LEN, VOCAB_SIZE
+from compile.dbw import load_dbw
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_globals(manifest):
+    assert manifest["group_size"] == GROUP_SIZE
+    assert manifest["vocab"] == VOCAB_SIZE
+    assert manifest["seq_len"] == SEQ_LEN
+    assert manifest["dad"]["gamma"] == 0.1
+
+
+def test_every_executable_file_exists(manifest):
+    for key, meta in manifest["executables"].items():
+        path = os.path.join(ART, meta["file"])
+        assert os.path.exists(path), f"{key}: missing {meta['file']}"
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{key}: not HLO text"
+
+
+def test_param_order_matches_model(manifest):
+    for size, cfg in MODEL_SIZES.items():
+        meta = manifest["executables"][f"fwd_logits_{size}"]
+        assert meta["params"] == M.param_names(cfg)
+        frozen, quads = M.fdb_param_names(cfg)
+        fmeta = manifest["executables"][f"fwd_fdb_nll_{size}"]
+        assert fmeta["frozen"] == frozen
+        assert fmeta["quads"] == quads
+        dmeta = manifest["executables"][f"dad_step_{size}"]
+        assert dmeta["alphas"] == [n for n in quads if n.endswith((".a1", ".a2"))]
+
+
+def test_teacher_checkpoints_load_and_match_config(manifest):
+    for tag, tinfo in manifest["teachers"].items():
+        cfg_dict, tensors = load_dbw(os.path.join(ART, tinfo["dbw"]))
+        cfg = MODEL_SIZES[tinfo["size"]]
+        assert cfg_dict["d_model"] == cfg.d_model
+        assert set(tensors) == set(M.param_names(cfg))
+        assert tensors["tok_emb"].shape == (cfg.vocab, cfg.d_model)
+        # weights are trained, not init noise: rmsnorm gains moved off 1
+        gains = tensors["final_norm"]
+        assert np.abs(gains - 1.0).max() > 1e-3
+
+
+def test_calib_streams_valid(manifest):
+    for tag, tinfo in manifest["teachers"].items():
+        toks = D.load_tokens(os.path.join(ART, tinfo["calib"]))
+        assert len(toks) == tinfo["calib_seqs"] * SEQ_LEN
+        assert toks.max() < VOCAB_SIZE
+
+
+def test_eval_streams_match_config(manifest):
+    for name, cinfo in manifest["corpora"].items():
+        toks = D.load_tokens(os.path.join(ART, cinfo["eval_file"]))
+        assert len(toks) == cinfo["eval_tokens"]
+        assert toks.max() < VOCAB_SIZE
+        # long-tail marginal: head eighth dominates tail eighth
+        counts = np.bincount(toks, minlength=VOCAB_SIZE)
+        assert counts[: VOCAB_SIZE // 8].sum() > 3 * counts[-VOCAB_SIZE // 8 :].sum()
+
+
+def test_teacher_beats_unigram_baseline(manifest):
+    # recorded eval ppl must beat the unigram entropy of its corpus by a
+    # clear margin (the teachers learned the bigram structure)
+    for tag, tinfo in manifest["teachers"].items():
+        assert tinfo["eval_ppl"]["wiki"] < 40.0
+        floor = manifest["corpora"]["wiki"]["ppl_floor"]
+        assert tinfo["eval_ppl"]["wiki"] > floor * 0.95

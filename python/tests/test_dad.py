@@ -1,0 +1,106 @@
+"""Deviation-Aware Distillation (Eq. 9-11) semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import ModelConfig
+from compile import model as M
+from compile import quant as Q
+
+TINY = ModelConfig("tiny", d_model=64, n_layers=2, n_heads=4, d_ff=192, vocab=128)
+
+
+def rand_logits(seed, shape=(2, 8, 128), scale=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(scale * rng.standard_normal(shape), jnp.float32)
+
+
+def test_entropy_limits():
+    v = 128
+    uniform = jnp.zeros((1, 1, v))
+    assert float(M.entropy(uniform)[0, 0]) == pytest.approx(np.log(v), rel=1e-5)
+    peaked = jnp.zeros((1, 1, v)).at[0, 0, 0].set(1e4)
+    assert float(M.entropy(peaked)[0, 0]) == pytest.approx(0.0, abs=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_soft_ce_gibbs_inequality(seed):
+    """CE(t, s) >= H(t), equality iff s == t."""
+    t = rand_logits(seed)
+    s = rand_logits(seed + 1)
+    ce = np.asarray(M.soft_ce(t, s))
+    ht = np.asarray(M.entropy(t))
+    assert (ce >= ht - 1e-5).all()
+    ce_self = np.asarray(M.soft_ce(t, t))
+    np.testing.assert_allclose(ce_self, ht, rtol=1e-5, atol=1e-5)
+
+
+def test_dad_loss_zero_when_matched():
+    t = rand_logits(3)
+    total, ce, dad = M.dad_losses(t, t, 0.1, 0.1)
+    ht = float(np.mean(np.asarray(M.entropy(t))))
+    # matched student: CE collapses to teacher entropy, dad ~= H^{1+...}
+    assert float(ce) == pytest.approx(ht, rel=1e-4)
+    assert float(total) >= float(ce)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), gamma=st.floats(0.0, 1.0))
+def test_dad_nonnegative_and_gamma_interpolates(seed, gamma):
+    t = rand_logits(seed)
+    s = rand_logits(seed + 7)
+    total, ce, dad = M.dad_losses(s, t, gamma, 0.1)
+    assert float(dad) >= 0.0
+    assert float(ce) >= 0.0
+    assert float(total) == pytest.approx(0.1 * float(dad) + float(ce), rel=1e-5)
+
+
+def test_dad_upweights_ambiguous_samples():
+    """Positions where the teacher is uncertain must contribute more:
+    same CE, higher teacher entropy => higher DAD term (Eq. 10)."""
+    v = 128
+    # teacher A: confident; teacher B: ambiguous — same student mismatch
+    conf = jnp.zeros((1, 1, v)).at[0, 0, 0].set(8.0)
+    ambi = jnp.zeros((1, 1, v))  # uniform = max entropy
+    student = jnp.zeros((1, 1, v)).at[0, 0, 1].set(4.0)
+    _, ce_a, dad_a = M.dad_losses(student, conf, 0.1, 0.1)
+    _, ce_b, dad_b = M.dad_losses(student, ambi, 0.1, 0.1)
+    # normalize by the CE so we compare pure weighting
+    assert float(dad_b) / float(ce_b) > float(dad_a) / float(ce_a)
+
+
+def test_dad_step_grads_flow_only_to_alphas():
+    params = M.init_params(TINY, jax.random.PRNGKey(0))
+    frozen, planes, alphas = Q.fdb_quantize_model(params, TINY)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, TINY.vocab, (2, 8)), jnp.int32)
+    t_logits = M.forward(params, toks, TINY)
+    (total, ce, dad), grads = M.dad_step(
+        alphas, planes, frozen, toks, t_logits, TINY, 0.1, 0.1
+    )
+    assert set(grads.keys()) == set(alphas.keys())
+    assert all(g.shape == alphas[k].shape for k, g in grads.items())
+    assert float(total) > 0.0
+    gnorm = sum(float(jnp.sum(g * g)) for g in grads.values())
+    assert np.isfinite(gnorm) and gnorm > 0.0
+
+
+def test_dad_gradient_descent_reduces_loss():
+    """A few SGD steps on alphas must reduce the DAD total loss — the core
+    promise of the fine-tuning stage."""
+    params = M.init_params(TINY, jax.random.PRNGKey(1))
+    frozen, planes, alphas = Q.fdb_quantize_model(params, TINY)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, TINY.vocab, (2, 8)), jnp.int32)
+    t_logits = M.forward(params, toks, TINY)
+
+    (l0, _, _), grads = M.dad_step(alphas, planes, frozen, toks, t_logits, TINY, 0.1, 0.1)
+    lr = 1e-3
+    for _ in range(5):
+        alphas = {k: v - lr * grads[k] for k, v in alphas.items()}
+        (l1, _, _), grads = M.dad_step(alphas, planes, frozen, toks, t_logits, TINY, 0.1, 0.1)
+    assert float(l1) < float(l0)

@@ -1,0 +1,73 @@
+"""Synthetic corpus generator properties."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile.configs import CORPORA, VOCAB_SIZE, CorpusConfig
+
+SMALL = CorpusConfig("t", seed=42, zipf_s=1.05, bigram_mix=0.6, train_tokens=1 << 14)
+
+
+def test_transition_matrix_is_stochastic():
+    t = D.transition_matrix(SMALL)
+    assert t.shape == (VOCAB_SIZE, VOCAB_SIZE)
+    np.testing.assert_allclose(t.sum(axis=1), 1.0, rtol=1e-9)
+    assert (t >= 0).all()
+
+
+def test_stream_deterministic():
+    s1 = D.sample_stream(SMALL, 4096)
+    s2 = D.sample_stream(SMALL, 4096)
+    np.testing.assert_array_equal(s1, s2)
+    s3 = D.sample_stream(SMALL, 4096, seed_offset=1)
+    assert not np.array_equal(s1, s3)
+
+
+def test_stream_range_and_dtype():
+    s = D.sample_stream(SMALL, 1000)
+    assert s.dtype == np.uint16
+    assert len(s) == 1000
+    assert s.max() < VOCAB_SIZE
+
+
+def test_unigram_is_long_tailed():
+    """Head tokens (low ids) must dominate — the Zipf property Fig. 6 uses."""
+    s = D.sample_stream(SMALL, 1 << 16)
+    counts = np.bincount(s, minlength=VOCAB_SIZE)
+    head = counts[: VOCAB_SIZE // 8].sum()
+    tail = counts[-VOCAB_SIZE // 8 :].sum()
+    assert head > 4 * tail
+
+
+def test_entropy_floor_sane():
+    for cfg in CORPORA.values():
+        h = D.markov_entropy_bits(cfg)
+        assert 1.0 < h < np.log2(VOCAB_SIZE)
+        # structure must buy something real vs the uniform ceiling
+        assert 2.0 ** h < VOCAB_SIZE / 4
+
+
+def test_wiki_more_structured_than_web():
+    """'wiki' (higher bigram mix) must have a lower entropy floor than 'web'."""
+    assert D.markov_entropy_bits(CORPORA["wiki"]) < D.markov_entropy_bits(CORPORA["web"])
+
+
+def test_token_file_roundtrip(tmp_path):
+    s = D.sample_stream(SMALL, 2048)
+    p = str(tmp_path / "x.tok")
+    D.save_tokens(p, s)
+    np.testing.assert_array_equal(D.load_tokens(p), s)
+
+
+def test_batch_iterator_shapes():
+    s = D.sample_stream(SMALL, 8192)
+    rng = np.random.default_rng(0)
+    it = D.batch_iterator(s, 4, 65, rng)
+    b = next(it)
+    assert b.shape == (4, 65)
+    assert b.dtype == np.int32
+    # windows are contiguous slices of the stream
+    row = b[0]
+    pos = np.where((s[None, : len(s) - 65] == row[0]))[1]
+    assert any((s[p : p + 65] == row).all() for p in pos)

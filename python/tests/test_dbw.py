@@ -1,0 +1,66 @@
+"""`.dbw` weight-blob format roundtrip (python side)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.dbw import ALIGN, MAGIC, load_dbw, save_dbw
+
+
+def test_roundtrip_basic(tmp_path):
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b.c": np.zeros((7,), np.float32),
+        "scalar": np.asarray(3.5, np.float32).reshape(()),
+    }
+    p = str(tmp_path / "w.dbw")
+    save_dbw(p, {"k": 1, "s": "x"}, tensors)
+    cfg, back = load_dbw(p)
+    assert cfg == {"k": 1, "s": "x"}
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].shape == tensors[k].shape
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shapes=st.lists(
+        st.lists(st.integers(1, 9), min_size=0, max_size=3), min_size=1, max_size=6
+    ),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_property(shapes, seed):
+    import tempfile, os
+
+    rng = np.random.default_rng(seed)
+    tensors = {
+        f"t{i}": rng.standard_normal(shape).astype(np.float32)
+        for i, shape in enumerate(map(tuple, shapes))
+    }
+    tmpdir = tempfile.mkdtemp()
+    p = os.path.join(tmpdir, f"w{seed}.dbw")
+    save_dbw(p, {"n": len(tensors)}, tensors)
+    _, back = load_dbw(p)
+    for k, v in tensors.items():
+        np.testing.assert_array_equal(back[k], v)
+
+
+def test_alignment(tmp_path):
+    p = str(tmp_path / "w.dbw")
+    save_dbw(p, {}, {"a": np.ones((3,), np.float32), "b": np.ones((5,), np.float32)})
+    import json, struct
+
+    blob = open(p, "rb").read()
+    assert blob[:4] == MAGIC
+    (jl,) = struct.unpack_from("<I", blob, 4)
+    hdr = json.loads(blob[8 : 8 + jl])
+    for e in hdr["tensors"]:
+        assert e["offset"] % ALIGN == 0
+
+
+def test_bad_magic_raises(tmp_path):
+    p = str(tmp_path / "bad.dbw")
+    open(p, "wb").write(b"NOPE" + b"\0" * 16)
+    with pytest.raises(ValueError):
+        load_dbw(p)

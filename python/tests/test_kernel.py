@@ -1,0 +1,118 @@
+"""L1 kernel correctness: Pallas FDB matmul vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/scale magnitudes; every case asserts
+allclose against `kernels.ref.fdb_matmul_ref` — the CORE correctness
+signal for the Layer-1 contribution.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import GROUP_SIZE
+from compile.kernels.fdb import (
+    fdb_matmul,
+    fdb_matmul_any,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import fdb_dequant, fdb_matmul_ref
+
+
+def make_case(rng, m, k, n, scale):
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w1 = (rng.random((k, n)) > 0.55).astype(np.float32)
+    w2 = (rng.random((k, n)) > 0.72).astype(np.float32)
+    g = k // GROUP_SIZE
+    a1 = (scale * np.abs(rng.standard_normal((g, n)))).astype(np.float32)
+    a2 = (-0.5 * scale * np.abs(rng.standard_normal((g, n)))).astype(np.float32)
+    return x, w1, w2, a1, a2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m_blocks=st.integers(1, 3),
+    k_groups=st.integers(1, 4),
+    n_blocks=st.integers(1, 2),
+    scale=st.floats(1e-3, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_swept(m_blocks, k_groups, n_blocks, scale, seed):
+    """Property: kernel == oracle over swept block-aligned shapes/scales."""
+    rng = np.random.default_rng(seed)
+    m, k, n = 8 * m_blocks, GROUP_SIZE * k_groups, 128 * n_blocks
+    x, w1, w2, a1, a2 = make_case(rng, m, k, n, scale)
+    y = fdb_matmul(x, w1, w2, a1, a2, group=GROUP_SIZE, bm=8, bn=128)
+    ref = fdb_matmul_ref(x, w1, w2, a1, a2, GROUP_SIZE)
+    # f32 accumulation error grows with the scale and the K extent
+    atol = 2e-5 + 3e-6 * scale * np.sqrt(k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4, atol=atol)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn", [
+    (64, 64, 128, 64, 128),
+    (128, 256, 256, 64, 128),
+    (8, 128, 512, 8, 128),
+    (256, 192, 128, 64, 128),   # k = 3 groups
+])
+def test_kernel_matches_ref_shapes(m, k, n, bm, bn):
+    rng = np.random.default_rng(m * 7919 + k * 31 + n)
+    x, w1, w2, a1, a2 = make_case(rng, m, k, n, 1.0)
+    y = fdb_matmul(x, w1, w2, a1, a2, group=GROUP_SIZE, bm=bm, bn=bn)
+    ref = fdb_matmul_ref(x, w1, w2, a1, a2, GROUP_SIZE)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_equals_dequant_matmul():
+    """Eq. 8 == x @ (Eq. 4 dequant): the two FDB forms are identical."""
+    rng = np.random.default_rng(0)
+    x, w1, w2, a1, a2 = make_case(rng, 32, 128, 128, 1.0)
+    y = fdb_matmul(x, w1, w2, a1, a2, group=GROUP_SIZE, bm=32, bn=128)
+    w_hat = fdb_dequant(jnp.asarray(w1), jnp.asarray(w2), jnp.asarray(a1),
+                        jnp.asarray(a2), GROUP_SIZE)
+    np.testing.assert_allclose(np.asarray(y), x @ np.asarray(w_hat),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    lead=st.sampled_from([(5,), (2, 7), (3, 1, 4)]),
+    k_groups=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rank_agnostic_wrapper(lead, k_groups, seed):
+    """fdb_matmul_any handles arbitrary leading dims + non-block M."""
+    rng = np.random.default_rng(seed)
+    k, n = GROUP_SIZE * k_groups, 128
+    m = int(np.prod(lead))
+    x, w1, w2, a1, a2 = make_case(rng, m, k, n, 1.0)
+    x = x.reshape(*lead, k)
+    y = fdb_matmul_any(x, w1, w2, a1, a2, group=GROUP_SIZE)
+    ref = fdb_matmul_ref(jnp.asarray(x), w1, w2, a1, a2, GROUP_SIZE)
+    assert y.shape == (*lead, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_zero_scales_give_zero():
+    rng = np.random.default_rng(1)
+    x, w1, w2, a1, a2 = make_case(rng, 8, 64, 128, 1.0)
+    y = fdb_matmul(x, w1, w2, 0 * a1, 0 * a2, group=GROUP_SIZE, bm=8, bn=128)
+    assert np.abs(np.asarray(y)).max() == 0.0
+
+
+def test_default_blockspec_within_vmem_budget():
+    """The chosen default tiling must fit a TPU core's VMEM with headroom
+    for double-buffering (DESIGN.md §Perf)."""
+    from compile.kernels.fdb import DEFAULT_BM, DEFAULT_BN
+
+    bytes_per_step = vmem_footprint_bytes(DEFAULT_BM, GROUP_SIZE, DEFAULT_BN)
+    assert 2 * bytes_per_step < 16 * 1024 * 1024  # double-buffered < 16 MiB
+
+
+def test_mxu_utilization_estimator():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(64, 128, 128) == 0.5
+    # partial tiles waste lanes
+    assert mxu_utilization_estimate(130, 128, 128) < 0.6

@@ -1,0 +1,44 @@
+//! Entropy-codec benchmarks: Huffman/RLE throughput over packed FDB
+//! planes and the realized effective-bits measurement (§3.2's ≈1.88-bit
+//! claim machinery).
+
+use db_llm::codec::{self, huffman, rle};
+use db_llm::quant::FdbLinear;
+use db_llm::tensor::Matrix;
+use db_llm::util::bench::{black_box, Bench};
+use db_llm::util::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("codec");
+    let mut rng = Pcg32::seeded(3);
+
+    let w = Matrix::randn(704, 256, &mut rng, 1.0);
+    let fdb = FdbLinear::from_weights(&w, 64);
+    let bytes1 = fdb.b1.to_bytes();
+    let n = bytes1.len() as f64;
+
+    b.bench_with_work("huffman_encode_plane", Some(n), || {
+        black_box(huffman::encode(&bytes1));
+    });
+    let enc = huffman::encode(&bytes1);
+    b.bench_with_work("huffman_decode_plane", Some(n), || {
+        black_box(huffman::decode(&enc).unwrap());
+    });
+    b.bench_with_work("rle_encode_plane", Some(n), || {
+        black_box(rle::encode(&bytes1));
+    });
+    b.bench_with_work("effective_bits_layer", Some(n * 2.0), || {
+        black_box(codec::effective_bits(&fdb));
+    });
+    b.bench_with_work("pack_plane", Some((704 * 256) as f64), || {
+        black_box(db_llm::quant::packing::BitPlane::pack(&fdb.b1.unpack()));
+    });
+
+    // print the measured storage numbers alongside the throughput
+    let eb = codec::effective_bits(&fdb);
+    println!(
+        "\nmeasured: plane bits {:.3}, scale bits {:.3}, total {:.3} (shannon floor {:.3})",
+        eb.plane_bits, eb.scale_bits, eb.total, eb.shannon_floor
+    );
+    b.report();
+}

@@ -1,0 +1,43 @@
+//! Quantizer engine micro-benchmarks: cost of each method on a
+//! realistic layer shape (the XL teacher's largest linears) — the
+//! "cost of the compression process" axis the paper argues weight-only
+//! PTQ wins on.
+
+use db_llm::quant::{
+    awq::Awq, fdb::Fdb, gptq::Gptq, omniquant::OmniQuant, pbllm::PbLlm, rtn::Rtn, Calib,
+    Quantizer,
+};
+use db_llm::tensor::Matrix;
+use db_llm::util::bench::{black_box, Bench};
+use db_llm::util::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("quantizers");
+    let mut rng = Pcg32::seeded(2);
+    let (din, dout) = (256usize, 704usize); // XL w_gate/w_up shape
+    let w = Matrix::randn(din, dout, &mut rng, 0.04);
+    let calib = Calib::new(Matrix::randn(512, din, &mut rng, 1.0));
+    let weights = (din * dout) as f64;
+
+    let methods: Vec<(&str, Box<dyn Quantizer>)> = vec![
+        ("rtn_w2", Box::new(Rtn::new(2, 64))),
+        ("rtn_w3", Box::new(Rtn::new(3, 64))),
+        ("gptq_w2", Box::new(Gptq::new(2, 64))),
+        ("awq_w2", Box::new(Awq::new(2, 64))),
+        ("omniquant_w2", Box::new(OmniQuant::new(2, 64))),
+        ("pbllm", Box::new(PbLlm::new(64))),
+        ("fdb", Box::new(Fdb { group: 64 })),
+    ];
+    for (name, q) in &methods {
+        b.bench_with_work(&format!("{name}_{din}x{dout}"), Some(weights), || {
+            black_box(q.quantize(&w, &calib));
+        });
+    }
+
+    // GPTQ substrate: the Hessian Cholesky path
+    b.bench("hessian_inv_chol_256", || {
+        black_box(calib.hessian_inv_chol(0.01).unwrap());
+    });
+
+    b.report();
+}

@@ -1,0 +1,73 @@
+//! End-to-end table regeneration harness: one bench entry per paper
+//! table/figure (DESIGN.md §5).  Unlike the micro-benches this runs the
+//! real pipelines at reduced window counts and times them — `cargo
+//! bench --bench tables` regenerates every row the paper reports and
+//! prints the wall-clock budget of each.
+//!
+//! Control with env vars:
+//!   TABLES=1,3,6      subset (default: all of 1,2,3,4,5,6,7)
+//!   FIGURES=1,3,4,6,7 subset (default: all)
+//!   WINDOWS=48        ppl windows per cell
+//!   ZS_ITEMS=80       zero-shot items per suite
+
+use db_llm::eval::tables::{self, TableOpts};
+use db_llm::runtime::Runtime;
+
+fn env_list(name: &str, default: &[&str]) -> Vec<String> {
+    std::env::var(name)
+        .map(|v| v.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|_| default.iter().map(|s| s.to_string()).collect())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::open("artifacts")?;
+    let mut opts = TableOpts::default();
+    if let Ok(w) = std::env::var("WINDOWS") {
+        opts.windows = w.parse().unwrap_or(opts.windows);
+    } else {
+        opts.windows = 32;
+    }
+    if let Ok(z) = std::env::var("ZS_ITEMS") {
+        opts.zs_items = z.parse().unwrap_or(opts.zs_items);
+    } else {
+        opts.zs_items = 48;
+    }
+    opts.dad_batches = 24;
+
+    let tables_sel = env_list("TABLES", &["1", "2", "3", "4", "5", "6", "7"]);
+    let figures_sel = env_list("FIGURES", &["1", "3", "4", "6", "7"]);
+
+    let mut budget = Vec::new();
+    for id in &tables_sel {
+        let t0 = std::time::Instant::now();
+        match id.as_str() {
+            "1" => drop(tables::table_ppl(&mut rt, &opts, false)?),
+            "2" => drop(tables::table_ppl(&mut rt, &opts, true)?),
+            "3" => drop(tables::table3(&mut rt, &opts)?),
+            "4" => drop(tables::table4(&mut rt, &opts)?),
+            "5" => drop(tables::table_zeroshot(&mut rt, &opts, false)?),
+            "6" => drop(tables::table6(&mut rt, &opts)?),
+            "7" => drop(tables::table_zeroshot(&mut rt, &opts, true)?),
+            other => eprintln!("skipping unknown table {other}"),
+        }
+        budget.push((format!("table{id}"), t0.elapsed()));
+    }
+    for id in &figures_sel {
+        let t0 = std::time::Instant::now();
+        match id.as_str() {
+            "1" => drop(tables::figure1(&mut rt, &opts)?),
+            "3" => drop(tables::figure3(&mut rt, &opts)?),
+            "4" => drop(tables::figure4(&mut rt, &opts)?),
+            "6" => drop(tables::figure6(&mut rt, &opts)?),
+            "7" => drop(tables::figure7(&mut rt, &opts)?),
+            other => eprintln!("skipping unknown figure {other}"),
+        }
+        budget.push((format!("figure{id}"), t0.elapsed()));
+    }
+
+    println!("\n== regeneration wall-clock ==");
+    for (name, d) in budget {
+        println!("{name:<10} {:.1}s", d.as_secs_f64());
+    }
+    Ok(())
+}

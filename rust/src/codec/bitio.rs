@@ -1,0 +1,105 @@
+//! Bit-granular I/O used by the Huffman coder.
+
+/// MSB-first bit writer.
+#[derive(Default)]
+pub struct BitWriter {
+    out: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push_bit(&mut self, bit: bool) {
+        self.cur = (self.cur << 1) | bit as u8;
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.out.push(self.cur);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Write the low `len` bits of `code`, MSB first.
+    pub fn push_code(&mut self, code: u32, len: u8) {
+        for i in (0..len).rev() {
+            self.push_bit((code >> i) & 1 == 1);
+        }
+    }
+
+    /// Flush, padding the tail with zeros; returns (bytes, bit_len).
+    pub fn finish(mut self) -> (Vec<u8>, usize) {
+        let bit_len = self.out.len() * 8 + self.nbits as usize;
+        if self.nbits > 0 {
+            self.cur <<= 8 - self.nbits;
+            self.out.push(self.cur);
+        }
+        (self.out, bit_len)
+    }
+}
+
+/// MSB-first bit reader.
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize, // bit position
+    len: usize, // total bits available
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8], bit_len: usize) -> Self {
+        BitReader { data, pos: 0, len: bit_len.min(data.len() * 8) }
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        if self.pos >= self.len {
+            return None;
+        }
+        let byte = self.data[self.pos / 8];
+        let bit = (byte >> (7 - self.pos % 8)) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.len - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Pcg32};
+
+    #[test]
+    fn roundtrip_bits() {
+        prop::check(20, |rng: &mut Pcg32| {
+            let n = rng.range(1, 200);
+            let bits: Vec<bool> = (0..n).map(|_| rng.below(2) == 1).collect();
+            let mut w = BitWriter::new();
+            for &b in &bits {
+                w.push_bit(b);
+            }
+            let (bytes, len) = w.finish();
+            assert_eq!(len, n);
+            let mut r = BitReader::new(&bytes, len);
+            for &b in &bits {
+                assert_eq!(r.read_bit(), Some(b));
+            }
+            assert_eq!(r.read_bit(), None);
+        });
+    }
+
+    #[test]
+    fn push_code_msb_first() {
+        let mut w = BitWriter::new();
+        w.push_code(0b101, 3);
+        let (bytes, len) = w.finish();
+        assert_eq!(len, 3);
+        assert_eq!(bytes, vec![0b1010_0000]);
+    }
+}

@@ -1,0 +1,228 @@
+//! Canonical Huffman coding over byte symbols (Huffman 1952; length
+//! construction per Van Leeuwen 1976's two-queue method).
+//!
+//! Container format:
+//!   u32 LE  original length (bytes)
+//!   u32 LE  payload bit length
+//!   256 × u8  code lengths (canonical codes are rebuilt from lengths)
+//!   payload bits (MSB-first)
+
+use super::bitio::{BitReader, BitWriter};
+
+// Compact header: u32 orig len, u32 payload bits, u16 symbol count,
+// then (symbol, len) pairs for present symbols only.
+const HEADER_FIXED: usize = 4 + 4 + 2;
+/// Cap code length so the canonical rebuild fits u32 codes comfortably.
+const MAX_LEN: u8 = 31;
+
+/// Build optimal code lengths with the two-queue method over sorted leaf
+/// weights — O(n log n) in the sort, O(n) in the merge (Van Leeuwen).
+fn code_lengths(freqs: &[u64; 256]) -> [u8; 256] {
+    let symbols: Vec<usize> = (0..256).filter(|&s| freqs[s] > 0).collect();
+    let mut lens = [0u8; 256];
+    match symbols.len() {
+        0 => return lens,
+        1 => {
+            lens[symbols[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+
+    // node = (weight, id); ids < 256 are leaves, >= 256 internal
+    let mut leaves: Vec<(u64, usize)> = symbols.iter().map(|&s| (freqs[s], s)).collect();
+    leaves.sort();
+    let mut merged: std::collections::VecDeque<(u64, usize)> = Default::default();
+    let mut leaf_q: std::collections::VecDeque<(u64, usize)> = leaves.into_iter().collect();
+    let mut parent = vec![usize::MAX; 512 + 256];
+    let mut next_id = 256;
+
+    let pop_min = |leaf_q: &mut std::collections::VecDeque<(u64, usize)>,
+                       merged: &mut std::collections::VecDeque<(u64, usize)>| {
+        match (leaf_q.front(), merged.front()) {
+            (Some(a), Some(b)) => {
+                if a.0 <= b.0 {
+                    leaf_q.pop_front().unwrap()
+                } else {
+                    merged.pop_front().unwrap()
+                }
+            }
+            (Some(_), None) => leaf_q.pop_front().unwrap(),
+            (None, Some(_)) => merged.pop_front().unwrap(),
+            (None, None) => unreachable!(),
+        }
+    };
+
+    while leaf_q.len() + merged.len() > 1 {
+        let a = pop_min(&mut leaf_q, &mut merged);
+        let b = pop_min(&mut leaf_q, &mut merged);
+        parent[a.1] = next_id;
+        parent[b.1] = next_id;
+        merged.push_back((a.0 + b.0, next_id));
+        next_id += 1;
+    }
+
+    for &s in &symbols {
+        let mut d = 0u8;
+        let mut n = s;
+        while parent[n] != usize::MAX {
+            n = parent[n];
+            d += 1;
+        }
+        lens[s] = d.min(MAX_LEN);
+    }
+    lens
+}
+
+/// Canonical codes from lengths: shorter codes first, ties by symbol.
+fn canonical_codes(lens: &[u8; 256]) -> [(u32, u8); 256] {
+    let mut order: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
+    order.sort_by_key(|&s| (lens[s], s));
+    let mut codes = [(0u32, 0u8); 256];
+    let mut code = 0u32;
+    let mut prev_len = 0u8;
+    for &s in &order {
+        code <<= lens[s] - prev_len;
+        codes[s] = (code, lens[s]);
+        code += 1;
+        prev_len = lens[s];
+    }
+    codes
+}
+
+/// Encode `data`; output includes the self-describing header.
+pub fn encode(data: &[u8]) -> Vec<u8> {
+    let mut freqs = [0u64; 256];
+    for &b in data {
+        freqs[b as usize] += 1;
+    }
+    let lens = code_lengths(&freqs);
+    let codes = canonical_codes(&lens);
+    let mut w = BitWriter::new();
+    for &b in data {
+        let (c, l) = codes[b as usize];
+        w.push_code(c, l);
+    }
+    let (payload, bit_len) = w.finish();
+
+    let present: Vec<u8> = (0u16..256).filter(|&s| lens[s as usize] > 0).map(|s| s as u8).collect();
+    let mut out = Vec::with_capacity(HEADER_FIXED + 2 * present.len() + payload.len());
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(bit_len as u32).to_le_bytes());
+    out.extend_from_slice(&(present.len() as u16).to_le_bytes());
+    for s in present {
+        out.push(s);
+        out.push(lens[s as usize]);
+    }
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode an `encode` container.
+pub fn decode(blob: &[u8]) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(blob.len() >= HEADER_FIXED, "huffman blob too short");
+    let n = u32::from_le_bytes(blob[0..4].try_into()?) as usize;
+    let bit_len = u32::from_le_bytes(blob[4..8].try_into()?) as usize;
+    let n_sym = u16::from_le_bytes(blob[8..10].try_into()?) as usize;
+    anyhow::ensure!(blob.len() >= HEADER_FIXED + 2 * n_sym, "huffman header truncated");
+    let mut lens = [0u8; 256];
+    for i in 0..n_sym {
+        let sym = blob[HEADER_FIXED + 2 * i];
+        lens[sym as usize] = blob[HEADER_FIXED + 2 * i + 1];
+    }
+    let header = HEADER_FIXED + 2 * n_sym;
+    let codes = canonical_codes(&lens);
+
+    // decoding table: sorted (len, code) -> symbol via linear scan per bit
+    // (canonical property: track the running code value per length)
+    let mut by_len: Vec<Vec<(u32, u8)>> = vec![Vec::new(); (MAX_LEN + 1) as usize];
+    for s in 0..256usize {
+        let (c, l) = codes[s];
+        if l > 0 {
+            by_len[l as usize].push((c, s as u8));
+        }
+    }
+    for v in &mut by_len {
+        v.sort();
+    }
+
+    let mut r = BitReader::new(&blob[header..], bit_len);
+    let mut out = Vec::with_capacity(n);
+    let mut code = 0u32;
+    let mut len = 0u8;
+    while out.len() < n {
+        let bit = r
+            .read_bit()
+            .ok_or_else(|| anyhow::anyhow!("huffman payload truncated"))?;
+        code = (code << 1) | bit as u32;
+        len += 1;
+        anyhow::ensure!(len <= MAX_LEN, "code length overflow");
+        if let Ok(i) = by_len[len as usize].binary_search_by_key(&code, |&(c, _)| c) {
+            out.push(by_len[len as usize][i].1);
+            code = 0;
+            len = 0;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::byte_entropy;
+    use crate::util::{prop, Pcg32};
+
+    #[test]
+    fn roundtrip_property() {
+        prop::check(25, |rng: &mut Pcg32| {
+            let n = rng.range(0, 3000);
+            // skewed alphabet to exercise variable lengths
+            let alpha = rng.range(1, 5) as u32;
+            let data: Vec<u8> = (0..n)
+                .map(|_| {
+                    let r = rng.f32();
+                    (r.powi(alpha as i32) * 255.0) as u8
+                })
+                .collect();
+            let enc = encode(&data);
+            let dec = decode(&enc).unwrap();
+            assert_eq!(dec, data);
+        });
+    }
+
+    #[test]
+    fn compresses_skewed_within_one_bit_of_entropy() {
+        // Huffman optimality: avg code length < H + 1 (Shannon bound)
+        let mut rng = Pcg32::seeded(81);
+        let data: Vec<u8> = (0..20_000)
+            .map(|_| if rng.f32() < 0.9 { 0u8 } else { rng.next_u32() as u8 })
+            .collect();
+        let enc = encode(&data);
+        let payload_bits = (enc.len() - HEADER_FIXED) as f64 * 8.0; // header upper bound ok
+        let h = byte_entropy(&data);
+        let avg = payload_bits / data.len() as f64;
+        assert!(avg < h + 1.0 + 0.1, "avg {avg:.3} vs H {h:.3}");
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        let data = vec![42u8; 500];
+        let enc = encode(&data);
+        assert_eq!(decode(&enc).unwrap(), data);
+        // 1 bit per symbol + compact header
+        assert!(enc.len() <= HEADER_FIXED + 2 + 500 / 8 + 2);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let enc = encode(&[]);
+        assert_eq!(decode(&enc).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let enc = encode(b"hello world hello world");
+        assert!(decode(&enc[..enc.len() - 2]).is_err());
+        assert!(decode(&enc[..10]).is_err());
+    }
+}

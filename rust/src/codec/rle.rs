@@ -1,0 +1,97 @@
+//! Byte run-length preprocessing.  Sparse planes serialize to byte
+//! streams dominated by 0x00 runs; RLE turns those into short (marker,
+//! len) pairs that the Huffman stage then squeezes further.
+//!
+//! Format: any byte b != 0x00 encodes itself; 0x00 is followed by a
+//! varint-style run length (1..=255 per chunk, chained).
+
+/// Encode.  Worst case (no zero runs) adds nothing; all-zeros shrinks
+/// ~128x before Huffman.
+pub fn encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 4 + 16);
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == 0 {
+            let mut run = 0usize;
+            while i + run < data.len() && data[i + run] == 0 {
+                run += 1;
+            }
+            i += run;
+            while run > 0 {
+                let chunk = run.min(255);
+                out.push(0u8);
+                out.push(chunk as u8);
+                run -= chunk;
+            }
+        } else {
+            out.push(data[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Decode an `encode` stream.
+pub fn decode(data: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == 0 {
+            anyhow::ensure!(i + 1 < data.len(), "rle: dangling zero marker");
+            let run = data[i + 1] as usize;
+            anyhow::ensure!(run > 0, "rle: zero-length run");
+            out.extend(std::iter::repeat(0u8).take(run));
+            i += 2;
+        } else {
+            out.push(data[i]);
+            i += 1;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Pcg32};
+
+    #[test]
+    fn roundtrip_property() {
+        prop::check(25, |rng: &mut Pcg32| {
+            let n = rng.range(0, 2000);
+            let density = rng.f32();
+            let data: Vec<u8> = (0..n)
+                .map(|_| if rng.f32() < density { rng.next_u32() as u8 } else { 0 })
+                .collect();
+            let enc = encode(&data);
+            assert_eq!(decode(&enc).unwrap(), data);
+        });
+    }
+
+    #[test]
+    fn shrinks_zero_runs() {
+        let data = vec![0u8; 10_000];
+        let enc = encode(&data);
+        assert!(enc.len() <= 2 * (10_000 / 255 + 1));
+    }
+
+    #[test]
+    fn long_runs_chain() {
+        let data = vec![0u8; 300];
+        let enc = encode(&data);
+        assert_eq!(enc, vec![0, 255, 0, 45]);
+        assert_eq!(decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn no_expansion_without_zeros() {
+        let data: Vec<u8> = (1..=255).cycle().take(1000).collect();
+        assert_eq!(encode(&data).len(), data.len());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(decode(&[0]).is_err());
+        assert!(decode(&[0, 0]).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Continuous batcher: groups incoming requests into fixed-capacity
+//! batches under a linger deadline — the standard dynamic-batching
+//! policy of LLM serving stacks (vLLM/Orca style), sized here to the
+//! AOT executables' fixed batch dimension.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// hard cap = the executable's batch dimension
+    pub max_batch: usize,
+    /// wait at most this long to fill a batch
+    pub linger: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 4, linger: Duration::from_millis(20) }
+    }
+}
+
+/// Pull the next batch from `rx`.  Blocks for the first item, then
+/// lingers up to the deadline collecting more, never exceeding
+/// `max_batch`.  Returns None when the channel is closed and drained.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.linger;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_respect_capacity() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, linger: Duration::from_millis(5) };
+        let b1 = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b1, vec![0, 1, 2, 3]);
+        let b2 = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b2.len(), 4);
+    }
+
+    #[test]
+    fn partial_batch_after_linger() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let policy = BatchPolicy { max_batch: 8, linger: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![1, 2]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn none_when_closed() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn drains_before_close() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let b = next_batch(&rx, &BatchPolicy::default()).unwrap();
+        assert_eq!(b, vec![7]);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_within_linger() {
+        let (tx, rx) = channel();
+        tx.send(0).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(3));
+            tx.send(1).unwrap();
+        });
+        let policy = BatchPolicy { max_batch: 4, linger: Duration::from_millis(50) };
+        let b = next_batch(&rx, &policy).unwrap();
+        handle.join().unwrap();
+        assert_eq!(b, vec![0, 1]);
+    }
+}

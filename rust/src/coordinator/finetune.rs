@@ -1,0 +1,333 @@
+//! Deviation-Aware Distillation fine-tuning (paper §3.3, §4.3).
+//!
+//! The python layer exported `dad_step_<size>`: one XLA call computing
+//! ℓ_total (Eq. 11) and ∂ℓ/∂α for every FDB scale.  This module owns
+//! everything around that call:
+//!   * the data-free calibration batches (teacher-generated tokens),
+//!   * teacher logits (one `fwd_logits` call per batch, precomputed),
+//!   * the AdamW optimizer over the α tensors (paper: lr 1e-5, 1 epoch,
+//!     batch 2 — we keep the recipe, scaled to the small testbed),
+//!   * optional plane re-splitting (Eq. 6-7) after the scales move.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::TokenStream;
+use crate::model::Weights;
+use crate::quant::FdbLinear;
+use crate::runtime::{lit_f32, lit_i32, Runtime, Session};
+
+/// Fine-tuning hyper-parameters (defaults follow the paper §4.3; lr is
+/// raised from 1e-5 because our α tensors are ~10⁴× smaller than
+/// LLaMA's — documented in DESIGN.md §2).
+#[derive(Clone, Debug)]
+pub struct DadConfig {
+    pub gamma: f64,
+    pub lambda: f64,
+    pub lr: f64,
+    pub epochs: usize,
+    pub max_batches: usize,
+    /// re-derive planes from the fp weights after fine-tuning (Eq. 6-7)
+    pub resplit: bool,
+    pub log_every: usize,
+}
+
+impl Default for DadConfig {
+    fn default() -> Self {
+        DadConfig {
+            gamma: 0.1,
+            lambda: 0.1,
+            lr: 1e-3,
+            epochs: 1,
+            max_batches: 64,
+            resplit: true,
+            log_every: 16,
+        }
+    }
+}
+
+/// AdamW state over the flat α vector.
+struct AdamW {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: i32,
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    wd: f32,
+}
+
+impl AdamW {
+    fn new(n: usize, lr: f32) -> Self {
+        AdamW { m: vec![0.0; n], v: vec![0.0; n], t: 0, lr, b1: 0.9, b2: 0.999, eps: 1e-8, wd: 0.0 }
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        self.t += 1;
+        let bc1 = 1.0 - self.b1.powi(self.t);
+        let bc2 = 1.0 - self.b2.powi(self.t);
+        for i in 0..params.len() {
+            self.m[i] = self.b1 * self.m[i] + (1.0 - self.b1) * grads[i];
+            self.v[i] = self.b2 * self.v[i] + (1.0 - self.b2) * grads[i] * grads[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= self.lr * (mhat / (vhat.sqrt() + self.eps) + self.wd * params[i]);
+        }
+    }
+}
+
+/// One recorded step.
+#[derive(Clone, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub total: f64,
+    pub ce: f64,
+    pub dad: f64,
+}
+
+/// The DAD fine-tuning driver for one FDB-quantized model.
+pub struct DadTrainer {
+    pub config: DadConfig,
+    pub size: String,
+    alpha_names: Vec<String>,
+    plane_names: Vec<String>,
+    frozen_names: Vec<String>,
+    /// flat α storage, in `alpha_names` order (each entry [g*out])
+    alphas: BTreeMap<String, (Vec<f32>, Vec<i64>)>,
+    pub history: Vec<StepLog>,
+}
+
+impl DadTrainer {
+    /// Build from the quantized FDB layers + the teacher weights.
+    pub fn new(
+        rt: &Runtime,
+        size: &str,
+        fdb_layers: &BTreeMap<String, FdbLinear>,
+        config: DadConfig,
+    ) -> Result<DadTrainer> {
+        let key = format!("dad_step_{size}");
+        let (alpha_names, plane_names, frozen_names) = rt.manifest.dad_step_order(&key)?;
+        let mut alphas = BTreeMap::new();
+        for name in &alpha_names {
+            let (lin, kind) = name.rsplit_once('.').context("bad alpha name")?;
+            let layer = fdb_layers
+                .get(lin)
+                .with_context(|| format!("missing FDB layer {lin}"))?;
+            let a = if kind == "a1" { &layer.a1 } else { &layer.a2 };
+            alphas.insert(
+                name.clone(),
+                (a.data.clone(), vec![a.rows as i64, a.cols as i64]),
+            );
+        }
+        Ok(DadTrainer {
+            config,
+            size: size.to_string(),
+            alpha_names,
+            plane_names,
+            frozen_names,
+            alphas,
+            history: Vec::new(),
+        })
+    }
+
+    /// Run the fine-tuning loop.
+    ///
+    /// `teacher` is the pinned FP session (for teacher logits), `calib`
+    /// the data-free token stream, `fdb_layers` supply the frozen planes,
+    /// `teacher_weights` the frozen non-quantized parameters.
+    pub fn train(
+        &mut self,
+        rt: &mut Runtime,
+        teacher: &Session,
+        teacher_weights: &Weights,
+        fdb_layers: &BTreeMap<String, FdbLinear>,
+        calib: &TokenStream,
+        mut log: impl FnMut(&StepLog),
+    ) -> Result<()> {
+        let key = format!("dad_step_{}", self.size);
+        let (b, t) = (teacher.logits_batch, teacher.seq_len);
+        let vocab = teacher.vocab;
+
+        // ---- assemble the constant literals (planes + frozen) ----------
+        let mut plane_lits = Vec::new();
+        for name in &self.plane_names {
+            let (lin, kind) = name.rsplit_once('.').unwrap();
+            let layer = &fdb_layers[lin];
+            let plane = if kind == "b1" { &layer.b1 } else { &layer.b2 };
+            let m = plane.unpack();
+            plane_lits.push(lit_f32(&m.data, &[m.rows as i64, m.cols as i64])?);
+        }
+        let mut frozen_lits = Vec::new();
+        for name in &self.frozen_names {
+            if let Some(m) = teacher_weights.mats.get(name) {
+                frozen_lits.push(lit_f32(&m.data, &[m.rows as i64, m.cols as i64])?);
+            } else {
+                let v = &teacher_weights.vecs[name];
+                frozen_lits.push(lit_f32(v, &[v.len() as i64])?);
+            }
+        }
+        let gamma_lit = lit_f32(&[self.config.gamma as f32], &[])?;
+        let lambda_lit = lit_f32(&[self.config.lambda as f32], &[])?;
+
+        // ---- batches + teacher logits (precomputed once) ---------------
+        let windows: Vec<Vec<u32>> = calib.windows(t).map(|w| w.to_vec()).collect();
+        let n_batches = (windows.len() / b).min(self.config.max_batches);
+        ensure!(n_batches > 0, "calibration stream too short");
+        let mut batches = Vec::with_capacity(n_batches);
+        for i in 0..n_batches {
+            let toks: Vec<i32> = windows[i * b..(i + 1) * b]
+                .iter()
+                .flat_map(|w| w.iter().map(|&x| x as i32))
+                .collect();
+            let t_logits = teacher.logits(rt, &toks)?;
+            batches.push((toks, t_logits));
+        }
+
+        // ---- optimizer over the concatenated α vector -------------------
+        let total_len: usize = self.alphas.values().map(|(d, _)| d.len()).sum();
+        let mut opt = AdamW::new(total_len, self.config.lr as f32);
+
+        let mut step = 0usize;
+        for _epoch in 0..self.config.epochs {
+            for (toks, t_logits) in &batches {
+                // build args: alphas, planes, frozen, tokens, logits, γ, λ
+                let mut args: Vec<xla::Literal> = Vec::new();
+                for name in &self.alpha_names {
+                    let (d, dims) = &self.alphas[name];
+                    args.push(lit_f32(d, dims)?);
+                }
+                args.extend(plane_lits.iter().map(clone_lit));
+                args.extend(frozen_lits.iter().map(clone_lit));
+                args.push(lit_i32(toks, &[b as i64, t as i64])?);
+                args.push(lit_f32(t_logits, &[b as i64, t as i64, vocab as i64])?);
+                args.push(clone_lit(&gamma_lit));
+                args.push(clone_lit(&lambda_lit));
+
+                let out = rt.run(&key, &args)?;
+                ensure!(
+                    out.len() == 3 + self.alpha_names.len(),
+                    "dad_step arity: got {}",
+                    out.len()
+                );
+                let total = out[0].to_vec::<f32>()?[0] as f64;
+                let ce = out[1].to_vec::<f32>()?[0] as f64;
+                let dad = out[2].to_vec::<f32>()?[0] as f64;
+
+                // flatten grads and step
+                let mut flat_g = Vec::with_capacity(total_len);
+                for (i, _name) in self.alpha_names.iter().enumerate() {
+                    flat_g.extend(out[3 + i].to_vec::<f32>()?);
+                }
+                let mut flat_p = Vec::with_capacity(total_len);
+                for name in &self.alpha_names {
+                    flat_p.extend_from_slice(&self.alphas[name].0);
+                }
+                opt.step(&mut flat_p, &flat_g);
+                let mut off = 0;
+                for name in &self.alpha_names {
+                    let entry = self.alphas.get_mut(name).unwrap();
+                    let n = entry.0.len();
+                    entry.0.copy_from_slice(&flat_p[off..off + n]);
+                    off += n;
+                }
+
+                let rec = StepLog { step, total, ce, dad };
+                if step % self.config.log_every == 0 {
+                    log(&rec);
+                }
+                self.history.push(rec);
+                step += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write the fine-tuned scales back into the FDB layers (optionally
+    /// re-splitting planes around the new level centers, Eq. 6-7).
+    pub fn apply(
+        &self,
+        fdb_layers: &mut BTreeMap<String, FdbLinear>,
+        original_weights: &Weights,
+    ) {
+        let mut by_layer: BTreeMap<String, (Option<Vec<f32>>, Option<Vec<f32>>)> = BTreeMap::new();
+        for name in &self.alpha_names {
+            let (lin, kind) = name.rsplit_once('.').unwrap();
+            let e = by_layer.entry(lin.to_string()).or_default();
+            if kind == "a1" {
+                e.0 = Some(self.alphas[name].0.clone());
+            } else {
+                e.1 = Some(self.alphas[name].0.clone());
+            }
+        }
+        for (lin, (a1, a2)) in by_layer {
+            let layer = fdb_layers.get_mut(&lin).unwrap();
+            let (g, o) = (layer.a1.rows, layer.a1.cols);
+            let a1 = crate::tensor::Matrix::from_vec(g, o, a1.unwrap());
+            let a2 = crate::tensor::Matrix::from_vec(g, o, a2.unwrap());
+            if self.config.resplit {
+                layer.resplit(original_weights.mat(&lin), a1, a2);
+            } else {
+                layer.a1 = a1;
+                layer.a2 = a2;
+            }
+        }
+    }
+
+    /// Final loss trend: (first, last) recorded totals.
+    pub fn loss_trend(&self) -> Option<(f64, f64)> {
+        Some((self.history.first()?.total, self.history.last()?.total))
+    }
+}
+
+/// xla::Literal lacks Clone; shallow-copy via serialize round trip is
+/// wasteful, so rebuild from raw parts.
+fn clone_lit(l: &xla::Literal) -> xla::Literal {
+    // Literal supports to_vec + shape; rebuild accordingly.
+    let shape = l.array_shape().expect("literal shape");
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match l.ty().expect("ty") {
+        xla::ElementType::F32 => {
+            let v = l.to_vec::<f32>().expect("f32 vec");
+            if dims.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(&v).reshape(&dims).expect("reshape")
+            }
+        }
+        xla::ElementType::S32 => {
+            let v = l.to_vec::<i32>().expect("i32 vec");
+            xla::Literal::vec1(&v).reshape(&dims).expect("reshape")
+        }
+        t => panic!("clone_lit: unsupported {t:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adamw_reduces_quadratic() {
+        // sanity: AdamW on f(x) = ||x - c||² converges toward c
+        let c = [0.3f32, -0.7, 1.1];
+        let mut x = vec![0.0f32; 3];
+        let mut opt = AdamW::new(3, 0.05);
+        for _ in 0..500 {
+            let g: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| 2.0 * (xi - ci)).collect();
+            opt.step(&mut x, &g);
+        }
+        for (xi, ci) in x.iter().zip(&c) {
+            assert!((xi - ci).abs() < 0.05, "{xi} vs {ci}");
+        }
+    }
+
+    #[test]
+    fn default_config_matches_paper_gamma_lambda() {
+        let c = DadConfig::default();
+        assert!((c.gamma - 0.1).abs() < 1e-12);
+        assert!((c.lambda - 0.1).abs() < 1e-12);
+        assert_eq!(c.epochs, 1);
+    }
+}

@@ -1,0 +1,116 @@
+//! Serving metrics: counters + log-bucketed latency histogram with
+//! p50/p95/p99 estimation, printable as a one-line snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 40;
+
+/// Thread-safe metrics registry.
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub tokens_out: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_occupancy_sum: AtomicU64,
+    /// log₂-bucketed latencies, bucket i = [2^i, 2^(i+1)) microseconds
+    lat_buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            tokens_out: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_occupancy_sum: AtomicU64::new(0),
+            lat_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.lat_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, occupancy: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_occupancy_sum.fetch_add(occupancy as u64, Ordering::Relaxed);
+    }
+
+    /// Approximate latency percentile (upper bucket edge, microseconds).
+    pub fn latency_percentile(&self, p: f64) -> u64 {
+        let counts: Vec<u64> = self.lat_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_occupancy_sum.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn snapshot(&self) -> String {
+        format!(
+            "req={} resp={} tokens={} batches={} occ={:.2} p50={}us p95={}us p99={}us",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.tokens_out.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_occupancy(),
+            self.latency_percentile(0.50),
+            self.latency_percentile(0.95),
+            self.latency_percentile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_monotonic() {
+        let m = Metrics::default();
+        for us in [100u64, 200, 400, 800, 1600, 3200] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        let p50 = m.latency_percentile(0.5);
+        let p99 = m.latency_percentile(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 128 && p99 <= 8192, "{p50} {p99}");
+    }
+
+    #[test]
+    fn occupancy_mean() {
+        let m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(2);
+        assert!((m.mean_batch_occupancy() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_percentile(0.99), 0);
+        assert!(m.snapshot().contains("req=0"));
+    }
+}

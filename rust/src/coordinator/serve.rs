@@ -1,0 +1,315 @@
+//! Serving stack: a TCP line-protocol server in front of a generation
+//! engine that drives the AOT `fwd_logits` executable.
+//!
+//! Topology (std threads; rust owns the event loop — python is never on
+//! this path):
+//!
+//!   client ──TCP──▶ connection thread ──mpsc──▶ batcher/worker thread
+//!                                                 │ fwd_logits (XLA)
+//!   client ◀──TCP── response channel ◀────────────┘
+//!
+//! Protocol: one JSON object per line.
+//!   request:  {"prompt": [int, ...], "max_tokens": int, "temperature"?: float}
+//!   response: {"tokens": [int, ...], "latency_us": int}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Runtime, Session};
+use crate::util::{Json, Pcg32};
+
+use super::batcher::{next_batch, BatchPolicy};
+use super::metrics::Metrics;
+
+/// An in-flight request.
+pub struct Request {
+    pub prompt: Vec<u32>,
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub reply: Sender<Response>,
+    pub arrived: Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub tokens: Vec<u32>,
+    pub latency_us: u64,
+}
+
+/// Generation engine over a pinned session.
+pub struct Engine {
+    pub session: Session,
+    pub vocab: usize,
+    rng: Pcg32,
+}
+
+impl Engine {
+    pub fn new(session: Session, vocab: usize, seed: u64) -> Engine {
+        Engine { session, vocab, rng: Pcg32::seeded(seed) }
+    }
+
+    /// Decode a batch of prompts (greedy if temperature == 0).
+    ///
+    /// The AOT executable has a fixed [B, T] shape: the context is a
+    /// sliding window over the last T tokens; each step runs one full
+    /// forward and reads the logits at each row's current last position.
+    pub fn generate(
+        &mut self,
+        rt: &mut Runtime,
+        prompts: &[Vec<u32>],
+        max_new: usize,
+        temperature: f32,
+    ) -> Result<Vec<Vec<u32>>> {
+        let b = self.session.logits_batch;
+        let t = self.session.seq_len;
+        anyhow::ensure!(prompts.len() <= b, "batch too large");
+        let mut seqs: Vec<Vec<u32>> = prompts.to_vec();
+        for s in &mut seqs {
+            anyhow::ensure!(!s.is_empty(), "empty prompt");
+            s.truncate(t);
+        }
+        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
+
+        for _ in 0..max_new {
+            // pack the sliding windows (right-padded with last token)
+            let mut toks = vec![0i32; b * t];
+            let mut pos = vec![0usize; prompts.len()];
+            for (r, s) in seqs.iter().enumerate() {
+                let start = s.len().saturating_sub(t);
+                let window = &s[start..];
+                for (i, &tok) in window.iter().enumerate() {
+                    toks[r * t + i] = tok as i32;
+                }
+                for i in window.len()..t {
+                    toks[r * t + i] = *window.last().unwrap() as i32;
+                }
+                pos[r] = window.len() - 1;
+            }
+            let logits = self.session.logits(rt, &toks)?;
+            for r in 0..prompts.len() {
+                let off = (r * t + pos[r]) * self.vocab;
+                let row = &logits[off..off + self.vocab];
+                let next = if temperature <= 0.0 {
+                    argmax(row)
+                } else {
+                    sample(row, temperature, &mut self.rng)
+                };
+                seqs[r].push(next as u32);
+                outputs[r].push(next as u32);
+            }
+        }
+        Ok(outputs)
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+fn sample(row: &[f32], temperature: f32, rng: &mut Pcg32) -> usize {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let w: Vec<f64> = row.iter().map(|&v| (((v - mx) / temperature) as f64).exp()).collect();
+    rng.categorical(&w)
+}
+
+/// The worker loop: batch → generate → reply.
+pub fn worker_loop(
+    mut rt: Runtime,
+    mut engine: Engine,
+    rx: Receiver<Request>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+) {
+    while running.load(Ordering::Relaxed) {
+        let Some(batch) = next_batch(&rx, &policy) else { break };
+        metrics.record_batch(batch.len());
+        let prompts: Vec<Vec<u32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+        let max_new = batch.iter().map(|r| r.max_tokens).max().unwrap_or(1);
+        let temperature = batch[0].temperature;
+        match engine.generate(&mut rt, &prompts, max_new, temperature) {
+            Ok(outs) => {
+                for (req, mut out) in batch.into_iter().zip(outs) {
+                    out.truncate(req.max_tokens);
+                    let latency = req.arrived.elapsed();
+                    metrics.record_latency(latency);
+                    metrics.responses.fetch_add(1, Ordering::Relaxed);
+                    metrics.tokens_out.fetch_add(out.len() as u64, Ordering::Relaxed);
+                    let _ = req.reply.send(Response {
+                        tokens: out,
+                        latency_us: latency.as_micros() as u64,
+                    });
+                }
+            }
+            Err(e) => {
+                eprintln!("worker error: {e:#}");
+            }
+        }
+    }
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<(Vec<u32>, usize, f32)> {
+    let j = Json::parse(line).context("bad request json")?;
+    let prompt: Vec<u32> = j
+        .get("prompt")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_usize().map(|u| u as u32))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let max_tokens = j.get("max_tokens")?.as_usize()?;
+    let temperature = j.opt("temperature").map(|t| t.as_f64().unwrap_or(0.0)).unwrap_or(0.0) as f32;
+    Ok((prompt, max_tokens, temperature))
+}
+
+/// Render one response line.
+pub fn render_response(resp: &Response) -> String {
+    let toks = Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect());
+    Json::obj(vec![
+        ("tokens", toks),
+        ("latency_us", Json::num(resp.latency_us as f64)),
+    ])
+    .to_string()
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>) {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line) {
+            Ok((prompt, max_tokens, temperature)) => {
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+                let (reply_tx, reply_rx) = channel();
+                if tx
+                    .send(Request {
+                        prompt,
+                        max_tokens,
+                        temperature,
+                        reply: reply_tx,
+                        arrived: Instant::now(),
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+                match reply_rx.recv() {
+                    Ok(resp) => {
+                        let _ = writeln!(writer, "{}", render_response(&resp));
+                    }
+                    Err(_) => break,
+                }
+            }
+            Err(e) => {
+                let _ = writeln!(writer, "{{\"error\": \"{e}\"}}");
+            }
+        }
+    }
+    let _ = peer;
+}
+
+/// Run the server until `running` is cleared.  Binds `addr`, spawns one
+/// thread per connection; the worker thread *constructs* the XLA
+/// runtime via `factory` (PJRT handles are not `Send`, so they must be
+/// born on the thread that uses them).
+pub fn serve(
+    factory: impl FnOnce() -> Result<(Runtime, Engine)> + Send + 'static,
+    addr: &str,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let (tx, rx) = channel::<Request>();
+
+    let m2 = metrics.clone();
+    let r2 = running.clone();
+    std::thread::spawn(move || match factory() {
+        Ok((rt, engine)) => worker_loop(rt, engine, rx, policy, m2, r2),
+        Err(e) => eprintln!("engine init failed: {e:#}"),
+    });
+
+    let m3 = metrics;
+    let r3 = running;
+    std::thread::spawn(move || {
+        while r3.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let tx = tx.clone();
+                    let m = m3.clone();
+                    std::thread::spawn(move || handle_conn(stream, tx, m));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(local)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_roundtrip() {
+        let (p, m, t) = parse_request(r#"{"prompt": [1, 2, 3], "max_tokens": 8}"#).unwrap();
+        assert_eq!(p, vec![1, 2, 3]);
+        assert_eq!(m, 8);
+        assert_eq!(t, 0.0);
+        let (_, _, t2) =
+            parse_request(r#"{"prompt": [1], "max_tokens": 1, "temperature": 0.7}"#).unwrap();
+        assert!((t2 - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"prompt": [], "max_tokens": 4}"#).is_err());
+        assert!(parse_request(r#"{"max_tokens": 4}"#).is_err());
+    }
+
+    #[test]
+    fn render_response_shape() {
+        let r = Response { tokens: vec![4, 5], latency_us: 123 };
+        let s = render_response(&r);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.usize_list("tokens").unwrap(), vec![4, 5]);
+        assert_eq!(j.get("latency_us").unwrap().as_usize().unwrap(), 123);
+    }
+
+    #[test]
+    fn argmax_and_sample() {
+        let mut row = vec![0.0f32; 16];
+        row[7] = 5.0;
+        assert_eq!(argmax(&row), 7);
+        let mut rng = Pcg32::seeded(1);
+        // low temperature concentrates on the argmax
+        let mut hits = 0;
+        for _ in 0..50 {
+            if sample(&row, 0.05, &mut rng) == 7 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 48, "{hits}");
+    }
+}

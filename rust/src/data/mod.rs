@@ -1,0 +1,10 @@
+//! Data substrate: token-stream I/O (shared `.tok` format with the
+//! python layer), evaluation windows, and the synthetic zero-shot
+//! multiple-choice suites standing in for PIQA/ARC/HellaSwag/WinoGrande
+//! (DESIGN.md §2 substitution table).
+
+pub mod tasks;
+pub mod tokens;
+
+pub use tasks::{TaskSuite, ZeroShotTask};
+pub use tokens::TokenStream;

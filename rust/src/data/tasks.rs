@@ -1,0 +1,208 @@
+//! Synthetic zero-shot multiple-choice suites (Table 5 / Table 7
+//! substitution for PIQA, ARC-e, ARC-c, HellaSwag, WinoGrande).
+//!
+//! Construction: a context window is cut from the evaluation stream;
+//! the *true* continuation is the stream's actual next `cont_len`
+//! tokens, distractors are continuations lifted from other positions.
+//! The model scores each (context ‖ choice) by length-normalized
+//! log-likelihood of the choice span — exactly the lm-eval-harness
+//! protocol used by the paper's zero-shot numbers.
+//!
+//! Difficulty knobs mirror the real suites: more choices and similar
+//! distractor contexts (matched prefix token) make ARC-c-like tasks
+//! harder than PIQA-like ones.
+
+use super::TokenStream;
+use crate::util::Pcg32;
+
+/// One multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct ZeroShotTask {
+    pub context: Vec<u32>,
+    /// choices[answer] is the true continuation
+    pub choices: Vec<Vec<u32>>,
+    pub answer: usize,
+}
+
+/// A named suite with generation parameters.
+#[derive(Clone, Debug)]
+pub struct TaskSuite {
+    pub name: String,
+    pub context_len: usize,
+    pub cont_len: usize,
+    pub n_choices: usize,
+    /// if true, distractors must share the same preceding token —
+    /// locally plausible, globally wrong (the "challenge" variant)
+    pub hard_negatives: bool,
+    pub n_items: usize,
+    pub seed: u64,
+}
+
+impl TaskSuite {
+    /// The five suites standing in for the paper's benchmarks.  The
+    /// (context, continuation, choices) profile of each mirrors its
+    /// counterpart: binary-choice physical ordering (PIQA/WinoGrande),
+    /// 4-way easy/challenge (ARC-e/ARC-c), long endings (HellaSwag).
+    pub fn standard(total_len: usize) -> Vec<TaskSuite> {
+        // context + continuation == total_len (the NLL executable width)
+        let ctx = |c: usize| total_len - c;
+        vec![
+            TaskSuite { name: "sPIQA".into(), context_len: ctx(6), cont_len: 6, n_choices: 2, hard_negatives: false, n_items: 200, seed: 101 },
+            TaskSuite { name: "sARC-e".into(), context_len: ctx(4), cont_len: 4, n_choices: 4, hard_negatives: false, n_items: 200, seed: 102 },
+            TaskSuite { name: "sARC-c".into(), context_len: ctx(4), cont_len: 4, n_choices: 4, hard_negatives: true, n_items: 200, seed: 103 },
+            TaskSuite { name: "sHellaSwag".into(), context_len: ctx(12), cont_len: 12, n_choices: 4, hard_negatives: false, n_items: 200, seed: 104 },
+            TaskSuite { name: "sWinoGrande".into(), context_len: ctx(2), cont_len: 2, n_choices: 2, hard_negatives: true, n_items: 200, seed: 105 },
+        ]
+    }
+
+    /// Generate the items from an evaluation stream.
+    pub fn generate(&self, stream: &TokenStream) -> Vec<ZeroShotTask> {
+        let mut rng = Pcg32::seeded(self.seed);
+        let need = self.context_len + self.cont_len;
+        let hi = stream.tokens.len() - need - 1;
+        // index continuations by preceding token for hard negatives
+        let mut by_prev: Vec<Vec<usize>> = vec![Vec::new(); 65536];
+        if self.hard_negatives {
+            for i in self.context_len..stream.tokens.len() - self.cont_len {
+                by_prev[stream.tokens[i - 1] as usize].push(i);
+            }
+        }
+
+        let mut items = Vec::with_capacity(self.n_items);
+        while items.len() < self.n_items {
+            let s = rng.range(0, hi);
+            let context = stream.tokens[s..s + self.context_len].to_vec();
+            let true_start = s + self.context_len;
+            let truth = stream.tokens[true_start..true_start + self.cont_len].to_vec();
+            let prev = stream.tokens[true_start - 1] as usize;
+
+            let mut choices = vec![truth.clone()];
+            let mut guard = 0;
+            while choices.len() < self.n_choices {
+                guard += 1;
+                if guard > 1000 {
+                    break;
+                }
+                let cand_start = if self.hard_negatives && !by_prev[prev].is_empty() {
+                    by_prev[prev][rng.range(0, by_prev[prev].len())]
+                } else {
+                    rng.range(self.context_len, stream.tokens.len() - self.cont_len)
+                };
+                if cand_start == true_start {
+                    continue;
+                }
+                let cand = stream.tokens[cand_start..cand_start + self.cont_len].to_vec();
+                if cand == truth || choices.contains(&cand) {
+                    continue;
+                }
+                choices.push(cand);
+            }
+            if choices.len() < self.n_choices {
+                continue;
+            }
+            // shuffle answer position
+            let answer = rng.range(0, self.n_choices);
+            choices.swap(0, answer);
+            items.push(ZeroShotTask { context, choices, answer });
+        }
+        items
+    }
+}
+
+impl ZeroShotTask {
+    /// Token sequence for choice `i`: context ‖ choice.
+    pub fn sequence(&self, i: usize) -> Vec<u32> {
+        let mut s = self.context.clone();
+        s.extend_from_slice(&self.choices[i]);
+        s
+    }
+
+    pub fn cont_len(&self) -> usize {
+        self.choices[0].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream() -> TokenStream {
+        // structured stream: token depends on position so continuations
+        // from different positions differ
+        let mut rng = Pcg32::seeded(7);
+        TokenStream {
+            tokens: (0..20_000).map(|i| ((i * 7 + rng.range(0, 3)) % 512) as u32).collect(),
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let s = stream();
+        let suite = &TaskSuite::standard(65)[0];
+        let a = suite.generate(&s);
+        let b = suite.generate(&s);
+        assert_eq!(a.len(), suite.n_items);
+        assert_eq!(a[0].context, b[0].context);
+        assert_eq!(a[0].answer, b[0].answer);
+    }
+
+    #[test]
+    fn true_choice_is_stream_continuation() {
+        let s = stream();
+        let suite = &TaskSuite::standard(65)[1];
+        for item in suite.generate(&s).iter().take(20) {
+            // the true continuation must occur right after the context
+            // somewhere in the stream
+            let truth = &item.choices[item.answer];
+            let ctx_last = *item.context.last().unwrap();
+            let found = s
+                .tokens
+                .windows(1 + truth.len())
+                .any(|w| w[0] == ctx_last && &w[1..] == truth.as_slice());
+            assert!(found);
+        }
+    }
+
+    #[test]
+    fn all_sequences_same_length() {
+        let s = stream();
+        for suite in TaskSuite::standard(65) {
+            let items = suite.generate(&s);
+            for item in items.iter().take(10) {
+                for i in 0..item.choices.len() {
+                    assert_eq!(item.sequence(i).len(), 65);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn choices_distinct_and_answer_valid() {
+        let s = stream();
+        let suite = &TaskSuite::standard(65)[2];
+        for item in suite.generate(&s).iter().take(30) {
+            assert!(item.answer < item.choices.len());
+            for i in 0..item.choices.len() {
+                for j in i + 1..item.choices.len() {
+                    assert_ne!(item.choices[i], item.choices[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hard_negative_shares_prev_token_context() {
+        let s = stream();
+        let suite = TaskSuite {
+            name: "h".into(),
+            context_len: 20,
+            cont_len: 4,
+            n_choices: 2,
+            hard_negatives: true,
+            n_items: 30,
+            seed: 9,
+        };
+        let items = suite.generate(&s);
+        assert_eq!(items.len(), 30);
+    }
+}

@@ -1,0 +1,125 @@
+//! `.tok` token streams (little-endian u16) + evaluation windows.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::Pcg32;
+
+/// A loaded token stream.
+#[derive(Clone)]
+pub struct TokenStream {
+    pub tokens: Vec<u32>,
+}
+
+impl TokenStream {
+    pub fn load(path: impl AsRef<Path>) -> Result<TokenStream> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        ensure!(bytes.len() % 2 == 0, "odd byte count in token file");
+        let tokens = bytes
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]) as u32)
+            .collect();
+        Ok(TokenStream { tokens })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.tokens.len() * 2);
+        for &t in &self.tokens {
+            bytes.extend_from_slice(&(t as u16).to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Sequential non-overlapping windows of `len` tokens (perplexity
+    /// evaluation order — deterministic, covers the stream).
+    pub fn windows(&self, len: usize) -> impl Iterator<Item = &[u32]> {
+        self.tokens.chunks_exact(len)
+    }
+
+    /// `n` windows sampled uniformly (seeded).
+    pub fn sample_windows(&self, n: usize, len: usize, seed: u64) -> Vec<Vec<u32>> {
+        let mut rng = Pcg32::seeded(seed);
+        let hi = self.tokens.len().saturating_sub(len + 1);
+        (0..n)
+            .map(|_| {
+                let s = rng.range(0, hi.max(1));
+                self.tokens[s..s + len].to_vec()
+            })
+            .collect()
+    }
+
+    /// Unigram frequency histogram (Fig. 6 substrate).
+    pub fn unigram(&self, vocab: usize) -> Vec<u64> {
+        let mut counts = vec![0u64; vocab];
+        for &t in &self.tokens {
+            counts[t as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dbllm_tok_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = TokenStream { tokens: vec![0, 1, 511, 65535, 7] };
+        let p = tmp("x.tok");
+        s.save(&p).unwrap();
+        let back = TokenStream::load(&p).unwrap();
+        assert_eq!(back.tokens, s.tokens);
+    }
+
+    #[test]
+    fn windows_cover_stream() {
+        let s = TokenStream { tokens: (0..100).collect() };
+        let w: Vec<&[u32]> = s.windows(30).collect();
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[0][0], 0);
+        assert_eq!(w[2][29], 89);
+    }
+
+    #[test]
+    fn sample_windows_deterministic() {
+        let s = TokenStream { tokens: (0..1000).map(|i| i % 512).collect() };
+        let a = s.sample_windows(5, 64, 42);
+        let b = s.sample_windows(5, 64, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+        assert!(a.iter().all(|w| w.len() == 64));
+    }
+
+    #[test]
+    fn unigram_counts() {
+        let s = TokenStream { tokens: vec![1, 1, 2, 5] };
+        let u = s.unigram(8);
+        assert_eq!(u[1], 2);
+        assert_eq!(u[5], 1);
+        assert_eq!(u.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn rejects_odd_file() {
+        let p = tmp("odd.tok");
+        std::fs::write(&p, [1u8, 2, 3]).unwrap();
+        assert!(TokenStream::load(&p).is_err());
+    }
+}

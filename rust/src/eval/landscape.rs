@@ -1,0 +1,205 @@
+//! Loss-landscape study (Fig. 4): perturb the *trainable quantization
+//! parameters* (the scales) of one linear layer along two fixed random
+//! directions and measure output MSE against the full-precision layer
+//! on calibration activations — the standard loss-landscape protocol
+//! (filter-normalized random directions), applied equally to the three
+//! formats the paper compares:
+//!
+//!   * binarization: θ = α (per-group),   ŵ = α·sign(w)
+//!   * 2-bit:        θ = s (per-group),   ŵ = s·round(w/s).clamp(-2,1)
+//!   * FDB:          θ = (α₁, α₂),        planes re-derived per Eq. 6-7
+//!
+//! Summary statistics: the minimum loss and `sublevel_fraction(θ)` —
+//! the Fig. 4(d) juxtaposition (how much of the perturbation range each
+//! format keeps below a shared absolute loss).
+
+use crate::quant::{fdb::FdbLinear, rtn::proxy_scales, rtn::Rtn, Calib};
+use crate::tensor::Matrix;
+use crate::util::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct Landscape {
+    pub method: String,
+    /// grid of perturbation magnitudes per axis (relative, e.g. ±0.5)
+    pub axis: Vec<f64>,
+    /// loss[i][j] at (axis[i] along direction u, axis[j] along v)
+    pub loss: Vec<Vec<f64>>,
+    pub min_loss: f64,
+    /// fraction of grid within 2x of this surface's own minimum
+    pub flatness: f64,
+}
+
+impl Landscape {
+    /// Fraction of the grid at or below an *absolute* loss threshold —
+    /// the Fig. 4(d) juxtaposition statistic, comparable across methods.
+    pub fn sublevel_fraction(&self, threshold: f64) -> f64 {
+        let total = self.loss.iter().flatten().count() as f64;
+        let within = self.loss.iter().flatten().filter(|&&l| l <= threshold).count() as f64;
+        within / total
+    }
+}
+
+fn summary(method: &str, axis: Vec<f64>, loss: Vec<Vec<f64>>) -> Landscape {
+    let min_loss = loss.iter().flatten().cloned().fold(f64::INFINITY, f64::min);
+    let total = loss.iter().flatten().count() as f64;
+    let within =
+        loss.iter().flatten().filter(|&&l| l <= 2.0 * min_loss + 1e-12).count() as f64;
+    Landscape { method: method.into(), axis, loss, min_loss, flatness: within / total }
+}
+
+/// Default symmetric perturbation grid (relative magnitudes).
+pub fn default_axis(steps: usize) -> Vec<f64> {
+    (0..steps)
+        .map(|i| -0.6 + 1.2 * i as f64 / (steps - 1) as f64)
+        .collect()
+}
+
+/// Two filter-normalized random directions of the same shape as `theta`:
+/// perturbed = θ ⊙ (1 + ε₁·u + ε₂·v).
+fn directions(rows: usize, cols: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = Pcg32::seeded(seed);
+    (Matrix::randn(rows, cols, &mut rng, 1.0), Matrix::randn(rows, cols, &mut rng, 1.0))
+}
+
+fn perturb(theta: &Matrix, u: &Matrix, v: &Matrix, e1: f64, e2: f64) -> Matrix {
+    let mut out = theta.clone();
+    for i in 0..out.data.len() {
+        out.data[i] *= 1.0 + (e1 as f32) * u.data[i] + (e2 as f32) * v.data[i];
+    }
+    out
+}
+
+/// Binarization surface: ŵ = α'·sign(w), α perturbed per group.
+pub fn binary_landscape(w: &Matrix, calib: &Calib, axis: &[f64]) -> Landscape {
+    let (_, alpha) = Rtn::new(1, 64).quantize_with_scales(w);
+    let (u, v) = directions(alpha.rows, alpha.cols, 4001);
+    let loss = grid(axis, |e1, e2| {
+        let a = perturb(&alpha, &u, &v, e1, e2);
+        let mut w_hat = Matrix::zeros(w.rows, w.cols);
+        for c in 0..w.cols {
+            for r in 0..w.rows {
+                let s = a.at(r / 64, c);
+                *w_hat.at_mut(r, c) = if w.at(r, c) >= 0.0 { s } else { -s };
+            }
+        }
+        calib.output_mse(w, &w_hat)
+    });
+    summary("binarization", axis.to_vec(), loss)
+}
+
+/// 2-bit surface: grid scale perturbed, weights re-rounded.
+pub fn int2_landscape(w: &Matrix, calib: &Calib, axis: &[f64]) -> Landscape {
+    let (_, scales) = Rtn::new(2, 64).quantize_with_scales(w);
+    let (u, v) = directions(scales.rows, scales.cols, 4002);
+    let loss = grid(axis, |e1, e2| {
+        let s = perturb(&scales, &u, &v, e1, e2);
+        let mut w_hat = Matrix::zeros(w.rows, w.cols);
+        for c in 0..w.cols {
+            for r in 0..w.rows {
+                let sc = s.at(r / 64, c).max(1e-8);
+                let q = (w.at(r, c) / sc).round().clamp(-2.0, 1.0);
+                *w_hat.at_mut(r, c) = q * sc;
+            }
+        }
+        calib.output_mse(w, &w_hat)
+    });
+    summary("2-bit", axis.to_vec(), loss)
+}
+
+/// FDB surface: (α₁, α₂) perturbed along a *shared* pair of directions
+/// (the same per-group noise hits both scales, keeping the axes
+/// comparable with the 1-parameter formats), planes re-derived per
+/// Eq. 6-7 at every grid point — the paper's flexibility mechanism.
+pub fn fdb_landscape(w: &Matrix, calib: &Calib, axis: &[f64]) -> Landscape {
+    let s = proxy_scales(w, 64);
+    let a1_0 = s.scale(2.0);
+    let a2_0 = s.scale(-1.0);
+    let (u, v) = directions(s.rows, s.cols, 4003);
+    let loss = grid(axis, |e1, e2| {
+        let a1 = perturb(&a1_0, &u, &v, e1, e2);
+        let a2 = perturb(&a2_0, &u, &v, e1, e2);
+        let f = FdbLinear::from_scales(w, &a1, &a2, 64);
+        calib.output_mse(w, &f.dequant())
+    });
+    summary("FDB", axis.to_vec(), loss)
+}
+
+fn grid(axis: &[f64], mut f: impl FnMut(f64, f64) -> f64) -> Vec<Vec<f64>> {
+    axis.iter().map(|&e1| axis.iter().map(|&e2| f(e1, e2)).collect()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Matrix, Calib) {
+        let mut rng = Pcg32::seeded(91);
+        let w = Matrix::randn(128, 64, &mut rng, 1.0);
+        let x = Matrix::randn(96, 128, &mut rng, 1.0);
+        (w, Calib::new(x))
+    }
+
+    #[test]
+    fn fig4_shape_fdb_lower_and_at_least_as_flat() {
+        let (w, calib) = setup();
+        let axis = default_axis(9);
+        let bin = binary_landscape(&w, &calib, &axis);
+        let fdb = fdb_landscape(&w, &calib, &axis);
+        let int2 = int2_landscape(&w, &calib, &axis);
+        // Fig. 4 ordering: FDB min ≈ 2-bit min << binary min
+        assert!(fdb.min_loss < bin.min_loss, "{} vs {}", fdb.min_loss, bin.min_loss);
+        assert!(fdb.min_loss <= int2.min_loss * 1.1);
+        // Fig. 4(d): at a shared absolute threshold FDB keeps the loss
+        // low over at least as much of the range as the other formats
+        let theta = 1.5 * int2.min_loss.max(fdb.min_loss);
+        assert!(
+            fdb.sublevel_fraction(theta) + 1e-9 >= int2.sublevel_fraction(theta),
+            "fdb {} int2 {}",
+            fdb.sublevel_fraction(theta),
+            int2.sublevel_fraction(theta)
+        );
+        assert!(fdb.sublevel_fraction(theta) >= bin.sublevel_fraction(theta));
+    }
+
+    #[test]
+    fn landscape_dims() {
+        let (w, calib) = setup();
+        let axis = default_axis(5);
+        let l = fdb_landscape(&w, &calib, &axis);
+        assert_eq!(l.loss.len(), 5);
+        assert!(l.loss.iter().all(|r| r.len() == 5));
+        assert!(l.min_loss.is_finite());
+        assert!((0.0..=1.0).contains(&l.flatness));
+    }
+
+    #[test]
+    fn min_near_zero_perturbation_for_fdb() {
+        // the init scales are near-optimal: the surface minimum should be
+        // close to the loss at (0, 0)
+        let (w, calib) = setup();
+        let axis = default_axis(9);
+        let l = fdb_landscape(&w, &calib, &axis);
+        let mid = axis.iter().position(|&a| a.abs() < 1e-9).unwrap();
+        let at_zero = l.loss[mid][mid];
+        assert!(at_zero <= 2.5 * l.min_loss, "zero {} min {}", at_zero, l.min_loss);
+    }
+
+    #[test]
+    fn loss_grows_away_from_center() {
+        let (w, calib) = setup();
+        let axis = default_axis(9);
+        for l in [
+            binary_landscape(&w, &calib, &axis),
+            int2_landscape(&w, &calib, &axis),
+            fdb_landscape(&w, &calib, &axis),
+        ] {
+            let mid = axis.len() / 2;
+            let center = l.loss[mid][mid];
+            let corner = l.loss[0][0]
+                .min(l.loss[0][axis.len() - 1])
+                .min(l.loss[axis.len() - 1][0])
+                .min(l.loss[axis.len() - 1][axis.len() - 1]);
+            assert!(corner >= center * 0.9, "{}: corner {corner} center {center}", l.method);
+        }
+    }
+}

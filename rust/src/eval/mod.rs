@@ -1,0 +1,12 @@
+//! Evaluation harness: perplexity, zero-shot suites, prediction
+//! statistics (Fig. 6/7), loss landscapes (Fig. 4) and the quantization
+//! pipeline that ties quantizers + calibration + the runtime together.
+
+pub mod landscape;
+pub mod pipeline;
+pub mod ppl;
+pub mod tables;
+pub mod predstats;
+pub mod zeroshot;
+
+pub use pipeline::QuantPipeline;

@@ -1,0 +1,186 @@
+//! The quantization pipeline: calibration activations (native forward
+//! over the data-free calib tokens) → per-linear quantization → a
+//! dequantized `Weights` ready for the runtime, plus the packed FDB
+//! layers when the method is DB-LLM.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::data::TokenStream;
+use crate::model::{native::Forward, Weights};
+use crate::quant::{Calib, FdbLinear, Quantizer};
+
+/// Quantize a whole model with one method.
+pub struct QuantPipeline {
+    /// rows of activation sample per linear (subsampled)
+    pub calib_rows: usize,
+    /// number of calibration sequences to run (cost knob)
+    pub calib_seqs: usize,
+    pub seq_len: usize,
+}
+
+/// Result of quantizing a model.
+pub struct QuantizedModel {
+    pub weights: Weights,
+    pub method: String,
+    pub bits_per_weight: f64,
+    /// present when the method produces FDB layers
+    pub fdb_layers: BTreeMap<String, FdbLinear>,
+    /// mean weight MSE across linears (diagnostics)
+    pub mean_weight_mse: f64,
+}
+
+impl QuantPipeline {
+    pub fn new(seq_len: usize) -> Self {
+        QuantPipeline { calib_rows: 1024, calib_seqs: 16, seq_len }
+    }
+
+    /// Collect per-linear activation samples by running the native
+    /// forward over calibration sequences.
+    pub fn collect_calib(
+        &self,
+        weights: &Weights,
+        calib: &TokenStream,
+    ) -> BTreeMap<String, Calib> {
+        let mut fwd = Forward::collecting(weights);
+        for (i, win) in calib.windows(self.seq_len).enumerate() {
+            if i >= self.calib_seqs {
+                break;
+            }
+            let _ = fwd.run(win);
+        }
+        fwd.take_activations()
+            .into_iter()
+            .map(|(name, x)| (name, Calib::new(x).subsample(self.calib_rows)))
+            .collect()
+    }
+
+    /// Quantize every linear of `weights` with `method`.
+    pub fn quantize(
+        &self,
+        weights: &Weights,
+        method: &dyn Quantizer,
+        calib: &BTreeMap<String, Calib>,
+    ) -> Result<QuantizedModel> {
+        let mut fdb_layers = BTreeMap::new();
+        let mut bits = 0.0f64;
+        let mut mse = 0.0f64;
+        let mut n = 0usize;
+        let empty = Calib::empty(0);
+        let quantized = weights.map_linears(|name, w| {
+            let c = calib.get(name).unwrap_or(&empty);
+            let q = method.quantize(w, c);
+            bits += q.bits_per_weight;
+            mse += q.w_hat.mse(w);
+            n += 1;
+            if let Some(fdb) = q.fdb {
+                fdb_layers.insert(name.to_string(), fdb);
+            }
+            q.w_hat
+        });
+        Ok(QuantizedModel {
+            weights: quantized,
+            method: method.name(),
+            bits_per_weight: bits / n as f64,
+            fdb_layers,
+            mean_weight_mse: mse / n as f64,
+        })
+    }
+
+    /// Measured mean sparsity across all FDB layers (Table 6 input).
+    pub fn fdb_sparsity(layers: &BTreeMap<String, FdbLinear>) -> (f64, f64, f64) {
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        let n = layers.len().max(1) as f64;
+        for l in layers.values() {
+            s1 += l.b1.sparsity();
+            s2 += l.b2.sparsity();
+        }
+        (s1 / n, s2 / n, 0.5 * (s1 + s2) / n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::quant::{fdb::Fdb, gptq::Gptq, rtn::Rtn};
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 192,
+            vocab: 64,
+            seq_len: 16,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    fn stream() -> TokenStream {
+        TokenStream { tokens: (0..4000).map(|i| (i * 13 + 7) % 64).collect() }
+    }
+
+    #[test]
+    fn calib_covers_all_linears() {
+        let cfg = tiny();
+        let w = Weights::synthetic(&cfg, 1);
+        let p = QuantPipeline::new(cfg.seq_len);
+        let calib = p.collect_calib(&w, &stream());
+        assert_eq!(calib.len(), cfg.linear_names().len());
+        for name in cfg.linear_names() {
+            let c = &calib[&name];
+            assert!(c.x.rows > 0);
+            assert_eq!(c.x.cols, cfg.linear_shape(&name).0);
+        }
+    }
+
+    #[test]
+    fn rtn_pipeline_produces_quantized_weights() {
+        let cfg = tiny();
+        let w = Weights::synthetic(&cfg, 2);
+        let p = QuantPipeline::new(cfg.seq_len);
+        let calib = p.collect_calib(&w, &stream());
+        let qm = p.quantize(&w, &Rtn::new(2, 64), &calib).unwrap();
+        assert!(qm.mean_weight_mse > 0.0);
+        assert!((qm.bits_per_weight - 2.25).abs() < 1e-9);
+        assert!(qm.fdb_layers.is_empty());
+        // non-linear params untouched
+        assert_eq!(qm.weights.mat("tok_emb").data, w.mat("tok_emb").data);
+    }
+
+    #[test]
+    fn fdb_pipeline_packs_all_linears() {
+        let cfg = tiny();
+        let w = Weights::synthetic(&cfg, 3);
+        let p = QuantPipeline::new(cfg.seq_len);
+        let calib = BTreeMap::new();
+        let qm = p.quantize(&w, &Fdb { group: 64 }, &calib).unwrap();
+        assert_eq!(qm.fdb_layers.len(), cfg.linear_names().len());
+        let (s1, s2, avg) = QuantPipeline::fdb_sparsity(&qm.fdb_layers);
+        assert!(avg > 0.4 && s1 > 0.0 && s2 > 0.0);
+    }
+
+    #[test]
+    fn gptq_pipeline_not_worse_than_rtn_on_ppl_proxy() {
+        let cfg = tiny();
+        let w = Weights::synthetic(&cfg, 4);
+        let p = QuantPipeline::new(cfg.seq_len);
+        let calib = p.collect_calib(&w, &stream());
+        let qg = p.quantize(&w, &Gptq::new(2, 64), &calib).unwrap();
+        let qr = p.quantize(&w, &Rtn::new(2, 64), &calib).unwrap();
+        // compare summed layer output MSE on the calib set
+        let mut mg = 0.0;
+        let mut mr = 0.0;
+        for name in cfg.linear_names() {
+            let c = &calib[&name];
+            mg += c.output_mse(w.mat(&name), qg.weights.mat(&name));
+            mr += c.output_mse(w.mat(&name), qr.weights.mat(&name));
+        }
+        assert!(mg <= mr * 1.05, "gptq {mg:.4e} rtn {mr:.4e}");
+    }
+}

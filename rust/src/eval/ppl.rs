@@ -1,0 +1,110 @@
+//! Perplexity evaluation through the AOT `fwd_nll` executables.
+//!
+//! PPL = exp(mean per-token NLL) over sequential windows of the eval
+//! stream — the WikiText2/C4 protocol of Tables 1/2/7, on the synthetic
+//! stand-in corpora.
+
+use anyhow::Result;
+
+use crate::data::TokenStream;
+use crate::runtime::{session::pack_batch, Runtime, Session};
+
+/// Evaluate perplexity of a pinned session over `stream`.
+///
+/// `max_windows` bounds cost (0 = all full windows).  Windows are
+/// consecutive `seq_len+1`-token slices; the same slices are used for
+/// every method so comparisons are paired.
+pub fn perplexity(
+    rt: &mut Runtime,
+    session: &Session,
+    stream: &TokenStream,
+    max_windows: usize,
+) -> Result<f64> {
+    let width = session.seq_len + 1;
+    let batch = session.nll_batch;
+    let windows: Vec<Vec<u32>> = stream.windows(width).map(|w| w.to_vec()).collect();
+    let n = if max_windows == 0 { windows.len() } else { windows.len().min(max_windows) };
+    anyhow::ensure!(n > 0, "stream too short for one window");
+
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0usize;
+    let mut i = 0;
+    while i < n {
+        let chunk = &windows[i..(i + batch).min(n)];
+        let used = chunk.len();
+        let packed = pack_batch(chunk, batch, width)?;
+        let nll = session.nll(rt, &packed)?;
+        // only count the real (non-padded) rows
+        let per_row = session.seq_len;
+        for r in 0..used {
+            for v in &nll[r * per_row..(r + 1) * per_row] {
+                total_nll += *v as f64;
+            }
+            total_tok += per_row;
+        }
+        i += used;
+    }
+    Ok((total_nll / total_tok as f64).exp())
+}
+
+/// Perplexity via the native CPU forward (cross-check + calibration-free
+/// paths); slower, used by tests and the landscape study.
+pub fn perplexity_native(
+    weights: &crate::model::Weights,
+    stream: &TokenStream,
+    max_windows: usize,
+) -> f64 {
+    let width = weights.config.seq_len + 1;
+    let mut fwd = crate::model::native::Forward::new(weights);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (i, w) in stream.windows(width).enumerate() {
+        if max_windows > 0 && i >= max_windows {
+            break;
+        }
+        for nll in fwd.nll(w) {
+            total += nll;
+            count += 1;
+        }
+    }
+    (total / count.max(1) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Weights};
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 192,
+            vocab: 64,
+            seq_len: 16,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn native_ppl_near_vocab_for_random_weights() {
+        // an untrained model is ~uniform -> PPL ~ vocab
+        let w = Weights::synthetic(&tiny(), 1);
+        let stream = TokenStream { tokens: (0..2000).map(|i| (i * 17 + 3) % 64).collect() };
+        let ppl = perplexity_native(&w, &stream, 8);
+        assert!((30.0..110.0).contains(&ppl), "ppl {ppl}");
+    }
+
+    #[test]
+    fn native_ppl_detects_structure() {
+        // constant stream -> a model can't be worse than uniform, and
+        // perplexity must be finite/positive
+        let w = Weights::synthetic(&tiny(), 2);
+        let stream = TokenStream { tokens: vec![5; 600] };
+        let ppl = perplexity_native(&w, &stream, 4);
+        assert!(ppl > 0.0 && ppl.is_finite());
+    }
+}

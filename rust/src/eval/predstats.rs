@@ -1,0 +1,224 @@
+//! Prediction-distribution statistics — Fig. 6 (head-class bias of
+//! low-bit models under random generation) and Fig. 7 (prediction
+//! entropy vs task loss correlation).
+
+use anyhow::Result;
+
+use crate::runtime::{Runtime, Session};
+use crate::util::Pcg32;
+
+/// Fig. 6: sample continuations from the model and histogram the
+/// predicted tokens.  `steps` rounds of batch generation; greedy-free
+/// ancestral sampling with the given temperature.
+pub fn prediction_histogram(
+    rt: &mut Runtime,
+    session: &Session,
+    vocab: usize,
+    steps: usize,
+    seed: u64,
+) -> Result<Vec<u64>> {
+    let mut rng = Pcg32::seeded(seed);
+    let (b, t) = (session.logits_batch, session.seq_len);
+    let mut hist = vec![0u64; vocab];
+    for _ in 0..steps {
+        // random prompt prefix, model predicts every next position; we
+        // sample from the categorical at each position (paper: "gathered
+        // through random generation")
+        let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(vocab as u32) as i32).collect();
+        let logits = session.logits(rt, &tokens)?;
+        for pos in 0..b * t {
+            let row = &logits[pos * vocab..(pos + 1) * vocab];
+            let tok = sample_categorical(row, &mut rng);
+            hist[tok] += 1;
+        }
+    }
+    Ok(hist)
+}
+
+fn sample_categorical(logits: &[f32], rng: &mut Pcg32) -> usize {
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let weights: Vec<f64> = logits.iter().map(|&v| ((v - mx) as f64).exp()).collect();
+    rng.categorical(&weights)
+}
+
+/// Head/tail mass ratio relative to a reference histogram — the Fig. 6
+/// "1.6× more likely to predict head classes" statistic.  `frac` is the
+/// head/tail fraction of the vocab (paper uses the BPE band structure;
+/// we use the top/bottom eighth).
+pub fn head_tail_ratio(hist: &[u64], reference: &[u64], frac: f64) -> f64 {
+    let v = hist.len();
+    let k = ((v as f64 * frac) as usize).max(1);
+    let h: f64 = hist.iter().take(k).sum::<u64>() as f64;
+    let t: f64 = hist.iter().skip(v - k).sum::<u64>() as f64;
+    let hr: f64 = reference.iter().take(k).sum::<u64>() as f64;
+    let tr: f64 = reference.iter().skip(v - k).sum::<u64>() as f64;
+    let model_ratio = h / t.max(1.0);
+    let ref_ratio = hr / tr.max(1.0);
+    model_ratio / ref_ratio.max(1e-9)
+}
+
+/// Total-variation distance between two normalized histograms.
+pub fn tv_distance(a: &[u64], b: &[u64]) -> f64 {
+    let sa: f64 = a.iter().sum::<u64>() as f64;
+    let sb: f64 = b.iter().sum::<u64>() as f64;
+    0.5 * a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as f64 / sa - y as f64 / sb).abs())
+        .sum::<f64>()
+}
+
+/// Fig. 7: per-position (teacher entropy, student entropy, CE loss)
+/// triples over evaluation windows.
+pub struct EntropyLossPoints {
+    pub teacher_entropy: Vec<f64>,
+    pub student_entropy: Vec<f64>,
+    pub loss: Vec<f64>,
+}
+
+pub fn entropy_vs_loss(
+    rt: &mut Runtime,
+    teacher: &Session,
+    student: &Session,
+    windows: &[Vec<u32>],
+    vocab: usize,
+) -> Result<EntropyLossPoints> {
+    let (b, t) = (teacher.logits_batch, teacher.seq_len);
+    let mut points = EntropyLossPoints {
+        teacher_entropy: Vec::new(),
+        student_entropy: Vec::new(),
+        loss: Vec::new(),
+    };
+    for chunk in windows.chunks(b) {
+        if chunk.len() < b {
+            break;
+        }
+        // windows carry t+1 tokens: inputs + next-token targets
+        let inputs: Vec<i32> = chunk.iter().flat_map(|w| w[..t].iter().map(|&x| x as i32)).collect();
+        let lt = teacher.logits(rt, &inputs)?;
+        let ls = student.logits(rt, &inputs)?;
+        for (row, w) in chunk.iter().enumerate() {
+            for pos in 0..t {
+                let off = (row * t + pos) * vocab;
+                let tr = &lt[off..off + vocab];
+                let sr = &ls[off..off + vocab];
+                points.teacher_entropy.push(entropy(tr));
+                points.student_entropy.push(entropy(sr));
+                points.loss.push(ce_loss(sr, w[pos + 1] as usize));
+            }
+        }
+    }
+    Ok(points)
+}
+
+pub fn entropy(logits: &[f32]) -> f64 {
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)) as f64;
+    let mut z = 0.0f64;
+    for &v in logits {
+        z += ((v as f64) - mx).exp();
+    }
+    let lnz = z.ln();
+    let mut h = 0.0f64;
+    for &v in logits {
+        let lp = (v as f64) - mx - lnz;
+        h -= lp.exp() * lp;
+    }
+    h
+}
+
+pub fn ce_loss(logits: &[f32], target: usize) -> f64 {
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)) as f64;
+    let z: f64 = logits.iter().map(|&v| ((v as f64) - mx).exp()).sum();
+    mx + z.ln() - logits[target] as f64
+}
+
+/// Pearson correlation (the Fig. 7 summary statistic).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    sxy / (sxx.sqrt() * syy.sqrt()).max(1e-12)
+}
+
+/// Binned means of `y` ordered by `x` (for the Fig. 7 curve rendering).
+pub fn binned_means(x: &[f64], y: &[f64], bins: usize) -> Vec<(f64, f64)> {
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap());
+    let per = (x.len() / bins).max(1);
+    idx.chunks(per)
+        .map(|c| {
+            let mx = c.iter().map(|&i| x[i]).sum::<f64>() / c.len() as f64;
+            let my = c.iter().map(|&i| y[i]).sum::<f64>() / c.len() as f64;
+            (mx, my)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_of_uniform_and_peaked() {
+        let v = 64;
+        let uniform = vec![0.0f32; v];
+        assert!((entropy(&uniform) - (v as f64).ln()).abs() < 1e-9);
+        let mut peaked = vec![0.0f32; v];
+        peaked[3] = 1e4;
+        assert!(entropy(&peaked) < 1e-3);
+    }
+
+    #[test]
+    fn pearson_known() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = vec![2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = vec![8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn head_tail_ratio_detects_bias() {
+        let v = 64;
+        let reference: Vec<u64> = (0..v).map(|i| 1000 / (i as u64 + 1) + 1).collect();
+        // model that over-predicts the head
+        let biased: Vec<u64> = (0..v).map(|i| 2000 / (i as u64 + 1) / (i as u64 / 8 + 1) + 1).collect();
+        let r = head_tail_ratio(&biased, &reference, 0.125);
+        assert!(r > 1.0, "ratio {r}");
+        // identical histograms -> ratio 1
+        let r1 = head_tail_ratio(&reference, &reference, 0.125);
+        assert!((r1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tv_distance_bounds() {
+        let a = vec![10u64, 0, 0];
+        let b = vec![0u64, 10, 0];
+        assert!((tv_distance(&a, &b) - 1.0).abs() < 1e-12);
+        assert_eq!(tv_distance(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn ce_loss_matches_entropy_for_uniform() {
+        let logits = vec![0.0f32; 32];
+        assert!((ce_loss(&logits, 5) - (32f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn binned_means_sorted() {
+        let x = vec![3.0, 1.0, 2.0, 4.0];
+        let y = vec![30.0, 10.0, 20.0, 40.0];
+        let b = binned_means(&x, &y, 2);
+        assert_eq!(b.len(), 2);
+        assert!((b[0].1 - 15.0).abs() < 1e-12);
+        assert!((b[1].1 - 35.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,710 @@
+//! Table/figure drivers: each function regenerates one table or figure
+//! of the paper (DESIGN.md §5 experiment index) and prints the same
+//! rows/series the paper reports, plus a JSON record under `results/`.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{Context, Result};
+
+use crate::codec;
+use crate::coordinator::{DadConfig, DadTrainer};
+use crate::data::{TaskSuite, TokenStream};
+use crate::model::{flops, ModelConfig, Weights};
+use crate::quant::{
+    awq::Awq, fdb::Fdb, gptq::Gptq, omniquant::OmniQuant, pbllm::PbLlm, rtn::Rtn, Calib,
+    FdbLinear, Quantizer,
+};
+use crate::runtime::{session::load_teacher, Runtime, Session};
+use crate::util::Json;
+
+use super::landscape;
+use super::pipeline::QuantPipeline;
+use super::ppl::perplexity;
+use super::predstats;
+use super::zeroshot;
+
+/// Cost/selection knobs shared by all drivers.
+#[derive(Clone, Debug)]
+pub struct TableOpts {
+    /// PPL windows per (model, corpus); 0 = full stream
+    pub windows: usize,
+    /// DAD fine-tuning batches
+    pub dad_batches: usize,
+    /// restrict to these teacher tags (empty = driver default)
+    pub teachers: Vec<String>,
+    /// where JSON records go
+    pub out_dir: PathBuf,
+    /// zero-shot items per suite (0 = suite default)
+    pub zs_items: usize,
+    /// override the calibration token stream (diagnostics)
+    pub calib_override: Option<PathBuf>,
+    /// override the quantization group size (stress ablation; DAD
+    /// fine-tuning requires the manifest group, so it is skipped when
+    /// this differs)
+    pub group_override: Option<usize>,
+}
+
+impl Default for TableOpts {
+    fn default() -> Self {
+        TableOpts {
+            windows: 96,
+            dad_batches: 48,
+            teachers: vec![],
+            out_dir: PathBuf::from("results"),
+            zs_items: 120,
+            calib_override: None,
+            group_override: None,
+        }
+    }
+}
+
+/// The method grid of Tables 1/2/5/7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Fp16,
+    RtnW2,
+    RtnW3,
+    AwqW2,
+    AwqW3,
+    GptqW2,
+    OmniW2,
+    PbLlm,
+    DbLlm,
+    /// ablation: FDB init without DAD fine-tuning
+    DbLlmNoDad,
+    /// ablation: raw 2-bit RTN proxy (no FDB, no DAD)
+    DbLlmNoDadNoFdb,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Fp16 => "FP16",
+            Method::RtnW2 => "RTN W2",
+            Method::RtnW3 => "RTN W3",
+            Method::AwqW2 => "AWQ W2",
+            Method::AwqW3 => "AWQ W3",
+            Method::GptqW2 => "GPTQ W2",
+            Method::OmniW2 => "OmniQuant W2",
+            Method::PbLlm => "PB-LLM W2*",
+            Method::DbLlm => "DB-LLM W2",
+            Method::DbLlmNoDad => "DB-LLM -DAD",
+            Method::DbLlmNoDadNoFdb => "DB-LLM -DAD -FDB",
+        }
+    }
+
+    pub fn main_grid() -> Vec<Method> {
+        vec![
+            Method::Fp16,
+            Method::RtnW2,
+            Method::RtnW3,
+            Method::AwqW2,
+            Method::AwqW3,
+            Method::GptqW2,
+            Method::OmniW2,
+            Method::PbLlm,
+            Method::DbLlm,
+        ]
+    }
+}
+
+/// One evaluated (teacher, method) student: dequantized weights plus
+/// the FDB layers when applicable.
+pub struct Student {
+    pub weights: Weights,
+    pub fdb_layers: BTreeMap<String, FdbLinear>,
+    pub dad_trend: Option<(f64, f64)>,
+}
+
+/// Quantize (and for DB-LLM, DAD-fine-tune) one teacher with one method.
+pub fn make_student(
+    rt: &mut Runtime,
+    teacher_tag: &str,
+    method: Method,
+    opts: &TableOpts,
+    dad_overrides: Option<DadConfig>,
+) -> Result<Student> {
+    let weights = load_teacher(rt, teacher_tag)?;
+    if method == Method::Fp16 {
+        return Ok(Student { weights, fdb_layers: BTreeMap::new(), dad_trend: None });
+    }
+    let info = rt.manifest.teacher(teacher_tag)?;
+    let calib_path = opts
+        .calib_override
+        .clone()
+        .unwrap_or_else(|| rt.artifacts_dir.join(&info.calib));
+    let calib_stream = TokenStream::load(&calib_path)?;
+    let pipeline = QuantPipeline::new(rt.manifest.seq_len());
+    // activation collection runs the native forward over 16 sequences —
+    // cache it per (teacher, calib) across the many methods of a table
+    static CALIB_CACHE: OnceLock<Mutex<BTreeMap<String, Arc<BTreeMap<String, Calib>>>>> =
+        OnceLock::new();
+    let cache_key = format!("{teacher_tag}:{}", calib_path.display());
+    let calib = {
+        let cache = CALIB_CACHE.get_or_init(Default::default);
+        let hit = cache.lock().unwrap().get(&cache_key).cloned();
+        match hit {
+            Some(c) => c,
+            None => {
+                let c = Arc::new(pipeline.collect_calib(&weights, &calib_stream));
+                cache.lock().unwrap().insert(cache_key, c.clone());
+                c
+            }
+        }
+    };
+    let group = opts.group_override.unwrap_or_else(|| rt.manifest.group_size());
+
+    let quantizer: Box<dyn Quantizer> = match method {
+        Method::RtnW2 | Method::DbLlmNoDadNoFdb => Box::new(Rtn::new(2, group)),
+        Method::RtnW3 => Box::new(Rtn::new(3, group)),
+        Method::AwqW2 => Box::new(Awq::new(2, group)),
+        Method::AwqW3 => Box::new(Awq::new(3, group)),
+        Method::GptqW2 => Box::new(Gptq::new(2, group)),
+        Method::OmniW2 => Box::new(OmniQuant::new(2, group)),
+        Method::PbLlm => Box::new(PbLlm::new(group)),
+        Method::DbLlm | Method::DbLlmNoDad => Box::new(Fdb { group }),
+        Method::Fp16 => unreachable!(),
+    };
+    let qm = pipeline.quantize(&weights, quantizer.as_ref(), &calib)?;
+    let mut fdb_layers = qm.fdb_layers;
+    let mut student_weights = qm.weights;
+    let mut dad_trend = None;
+
+    if (method == Method::DbLlm || method == Method::DbLlmNoDad)
+        && group == rt.manifest.group_size()
+    {
+        // DAD fine-tuning (paper §3.3): teacher session supplies logits.
+        // The "-DAD" ablation keeps the distillation fine-tune but drops
+        // the deviation-aware reweighting (λ = 0, pure soft CE) — matching
+        // Table 3's reading where removing FDB (not DAD) removes the
+        // fine-tuning procedure itself.
+        let teacher_session = Session::new(rt, &weights)?;
+        let mut cfg = dad_overrides.unwrap_or_default();
+        if method == Method::DbLlmNoDad {
+            cfg.lambda = 0.0;
+        }
+        cfg.max_batches = cfg.max_batches.min(opts.dad_batches.max(1));
+        let mut trainer = DadTrainer::new(rt, &weights.config.name, &fdb_layers, cfg)?;
+        trainer.train(rt, &teacher_session, &weights, &fdb_layers, &calib_stream, |s| {
+            eprintln!(
+                "  [dad {teacher_tag}] step {:3} total {:.4} ce {:.4} dad {:.4}",
+                s.step, s.total, s.ce, s.dad
+            );
+        })?;
+        trainer.apply(&mut fdb_layers, &weights);
+        dad_trend = trainer.loss_trend();
+        // rebuild dequantized weights from the fine-tuned layers
+        student_weights = weights.map_linears(|name, _| fdb_layers[name].dequant());
+    }
+
+    Ok(Student { weights: student_weights, fdb_layers, dad_trend })
+}
+
+fn eval_ppl_for(
+    rt: &mut Runtime,
+    student: &Student,
+    streams: &BTreeMap<String, TokenStream>,
+    windows: usize,
+) -> Result<BTreeMap<String, f64>> {
+    let session = Session::new(rt, &student.weights)?;
+    let mut out = BTreeMap::new();
+    for (name, stream) in streams {
+        out.insert(name.clone(), perplexity(rt, &session, stream, windows)?);
+    }
+    Ok(out)
+}
+
+fn load_streams(rt: &Runtime) -> Result<BTreeMap<String, TokenStream>> {
+    let mut streams = BTreeMap::new();
+    for name in rt.manifest.corpus_names()? {
+        let f = rt.manifest.corpus_eval_file(&name)?;
+        streams.insert(name.clone(), TokenStream::load(rt.artifacts_dir.join(f))?);
+    }
+    Ok(streams)
+}
+
+fn save_json(opts: &TableOpts, name: &str, j: &Json) -> Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let p = opts.out_dir.join(format!("{name}.json"));
+    std::fs::write(&p, j.to_string()).with_context(|| format!("writing {p:?}"))?;
+    eprintln!("  saved {p:?}");
+    Ok(())
+}
+
+// ------------------------------------------------------------------------
+// Tables 1 & 2 — perplexity grids
+// ------------------------------------------------------------------------
+
+/// Table 1 (v1 family over both corpora) / Table 2 (v2 family, wiki).
+pub fn table_ppl(rt: &mut Runtime, opts: &TableOpts, v2: bool) -> Result<Json> {
+    let default_teachers: Vec<String> = if v2 {
+        vec!["S2".into(), "M2".into(), "L2".into()]
+    } else {
+        vec!["S".into(), "M".into(), "L".into(), "XL".into()]
+    };
+    let teachers = if opts.teachers.is_empty() { default_teachers } else { opts.teachers.clone() };
+    let streams = load_streams(rt)?;
+    let corpora: Vec<String> =
+        if v2 { vec!["wiki".into()] } else { streams.keys().cloned().collect() };
+
+    let title = if v2 { "Table 2 (LLaMA-2 stand-in: v2 teacher family)" } else { "Table 1 (LLaMA-1 stand-in: v1 teacher family)" };
+    println!("\n== {title} ==");
+    print!("{:<18}", "method");
+    for t in &teachers {
+        for c in &corpora {
+            print!("{:>12}", format!("{t}/{c}"));
+        }
+    }
+    println!();
+
+    let mut rows = Vec::new();
+    for method in Method::main_grid() {
+        print!("{:<18}", method.label());
+        let mut row = vec![("method".to_string(), Json::str(method.label()))];
+        for tag in &teachers {
+            let student = make_student(rt, tag, method, opts, None)?;
+            let ppls = eval_ppl_for(rt, &student, &streams, opts.windows)?;
+            for c in &corpora {
+                print!("{:>12.2}", ppls[c]);
+                row.push((format!("{tag}/{c}"), Json::num(ppls[c])));
+            }
+            use std::io::Write;
+            std::io::stdout().flush().ok();
+        }
+        println!();
+        rows.push(Json::Obj(row.into_iter().map(|(k, v)| (k, v)).collect()));
+    }
+    let j = Json::obj(vec![
+        ("table", Json::str(if v2 { "2" } else { "1" })),
+        ("windows", Json::num(opts.windows as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    save_json(opts, if v2 { "table2" } else { "table1" }, &j)?;
+    Ok(j)
+}
+
+// ------------------------------------------------------------------------
+// Table 3 — component ablation
+// ------------------------------------------------------------------------
+
+pub fn table3(rt: &mut Runtime, opts: &TableOpts) -> Result<Json> {
+    let tag = opts.teachers.first().cloned().unwrap_or_else(|| "M".to_string());
+    let streams = load_streams(rt)?;
+    println!("\n== Table 3 (component ablation, teacher {tag}) ==");
+    println!("{:<20}{:>10}{:>10}{:>10}", "variant", "wiki", "web", "avg");
+    let mut rows = Vec::new();
+    for (label, method) in [
+        ("W16A16", Method::Fp16),
+        ("Ours (FDB+DAD)", Method::DbLlm),
+        ("- DAD", Method::DbLlmNoDad),
+        ("- DAD - FDB", Method::DbLlmNoDadNoFdb),
+    ] {
+        let student = make_student(rt, &tag, method, opts, None)?;
+        let ppls = eval_ppl_for(rt, &student, &streams, opts.windows)?;
+        let avg = (ppls["wiki"] + ppls["web"]) / 2.0;
+        println!("{:<20}{:>10.2}{:>10.2}{:>10.2}", label, ppls["wiki"], ppls["web"], avg);
+        rows.push(Json::obj(vec![
+            ("variant", Json::str(label)),
+            ("wiki", Json::num(ppls["wiki"])),
+            ("web", Json::num(ppls["web"])),
+            ("avg", Json::num(avg)),
+        ]));
+    }
+    let j = Json::obj(vec![("table", Json::str("3")), ("teacher", Json::str(tag)), ("rows", Json::Arr(rows))]);
+    save_json(opts, "table3", &j)?;
+    Ok(j)
+}
+
+// ------------------------------------------------------------------------
+// Table 4 — γ sweep
+// ------------------------------------------------------------------------
+
+pub fn table4(rt: &mut Runtime, opts: &TableOpts) -> Result<Json> {
+    let tag = opts.teachers.first().cloned().unwrap_or_else(|| "M".to_string());
+    let streams = load_streams(rt)?;
+    let gammas = [0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0];
+    println!("\n== Table 4 (γ ablation, teacher {tag}, wiki PPL) ==");
+    print!("{:<10}", "gamma");
+    for g in gammas {
+        print!("{g:>9.1}");
+    }
+    println!();
+    print!("{:<10}", "ppl");
+    let mut rows = Vec::new();
+    for g in gammas {
+        let cfg = DadConfig { gamma: g, ..DadConfig::default() };
+        let student = make_student(rt, &tag, Method::DbLlm, opts, Some(cfg))?;
+        let ppls = eval_ppl_for(rt, &student, &streams, opts.windows)?;
+        print!("{:>9.3}", ppls["wiki"]);
+        use std::io::Write;
+        std::io::stdout().flush().ok();
+        rows.push(Json::obj(vec![("gamma", Json::num(g)), ("wiki", Json::num(ppls["wiki"]))]));
+    }
+    println!();
+    let j = Json::obj(vec![("table", Json::str("4")), ("teacher", Json::str(tag)), ("rows", Json::Arr(rows))]);
+    save_json(opts, "table4", &j)?;
+    Ok(j)
+}
+
+// ------------------------------------------------------------------------
+// Tables 5 & 7 — zero-shot accuracy
+// ------------------------------------------------------------------------
+
+pub fn table_zeroshot(rt: &mut Runtime, opts: &TableOpts, v2: bool) -> Result<Json> {
+    let default_teachers: Vec<String> = if v2 {
+        vec!["S2".into(), "M2".into(), "L2".into()]
+    } else {
+        vec!["S".into(), "M".into(), "L".into(), "XL".into()]
+    };
+    let teachers = if opts.teachers.is_empty() { default_teachers } else { opts.teachers.clone() };
+    let streams = load_streams(rt)?;
+    let stream = &streams["wiki"];
+    let width = rt.manifest.seq_len() + 1;
+    let mut suites = TaskSuite::standard(width);
+    if opts.zs_items > 0 {
+        for s in &mut suites {
+            s.n_items = opts.zs_items;
+        }
+    }
+    let methods = [Method::Fp16, Method::GptqW2, Method::AwqW2, Method::OmniW2, Method::PbLlm, Method::DbLlm];
+
+    let title = if v2 { "Table 7 (zero-shot, v2 family)" } else { "Table 5 (zero-shot, v1 family)" };
+    println!("\n== {title} ==");
+    let mut rows = Vec::new();
+    for tag in &teachers {
+        println!("-- teacher {tag} --");
+        print!("{:<18}", "method");
+        for s in &suites {
+            print!("{:>12}", s.name);
+        }
+        println!("{:>9}", "avg");
+        for method in methods {
+            let student = make_student(rt, tag, method, opts, None)?;
+            let session = Session::new(rt, &student.weights)?;
+            print!("{:<18}", method.label());
+            let mut accs = Vec::new();
+            let mut row = vec![
+                ("teacher".to_string(), Json::str(tag.clone())),
+                ("method".to_string(), Json::str(method.label())),
+            ];
+            for suite in &suites {
+                let acc = zeroshot::accuracy(rt, &session, suite, stream)?;
+                print!("{:>11.1}%", acc * 100.0);
+                row.push((suite.name.clone(), Json::num(acc)));
+                accs.push(acc);
+                use std::io::Write;
+                std::io::stdout().flush().ok();
+            }
+            let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+            println!("{:>8.1}%", avg * 100.0);
+            row.push(("avg".to_string(), Json::num(avg)));
+            rows.push(Json::Obj(row.into_iter().collect()));
+        }
+    }
+    let j = Json::obj(vec![
+        ("table", Json::str(if v2 { "7" } else { "5" })),
+        ("rows", Json::Arr(rows)),
+    ]);
+    save_json(opts, if v2 { "table7" } else { "table5" }, &j)?;
+    Ok(j)
+}
+
+// ------------------------------------------------------------------------
+// Table 6 — size / sparsity / FLOPs
+// ------------------------------------------------------------------------
+
+pub fn table6(rt: &mut Runtime, opts: &TableOpts) -> Result<Json> {
+    // measured sparsities from our largest teacher's FDB layers
+    let tag = opts.teachers.first().cloned().unwrap_or_else(|| "XL".to_string());
+    let student = make_student(rt, &tag, Method::DbLlmNoDad, opts, None)?;
+    let (s1, s2, _avg) = QuantPipeline::fdb_sparsity(&student.fdb_layers);
+    // measured 2-bit sparsity (fraction of zero levels in the RTN grid)
+    let weights = load_teacher(rt, &tag)?;
+    let mut zeros = 0usize;
+    let mut total = 0usize;
+    let group = opts.group_override.unwrap_or_else(|| rt.manifest.group_size());
+    for name in weights.config.linear_names() {
+        let (q, _) = Rtn::new(2, group).quantize_with_scales(weights.mat(&name));
+        zeros += q.data.iter().filter(|&&v| v == 0.0).count();
+        total += q.data.len();
+    }
+    let s2bit = zeros as f64 / total as f64;
+    // measured effective bits after entropy coding (paper: ~1.88)
+    let mut eff_bits = 0.0;
+    for layer in student.fdb_layers.values() {
+        eff_bits += codec::effective_bits(layer).total;
+    }
+    eff_bits /= student.fdb_layers.len() as f64;
+
+    println!("\n== Table 6 (size / sparsity / FLOPs) ==");
+    for (label, cfg) in [
+        ("paper's LLaMA-1-7B config", ModelConfig::llama1_7b()),
+        ("our XL teacher config", weights.config.clone()),
+    ] {
+        println!("-- {label}, 32-token sentence --");
+        println!("{:<22}{:>12}{:>10}{:>12}", "method", "size", "sparsity", "FLOPs");
+        let schemes = [
+            flops::Scheme::Fp16,
+            flops::Scheme::Uniform { bits: 3.0, sparsity: 0.0 },
+            flops::Scheme::Uniform { bits: 2.0, sparsity: s2bit },
+            flops::Scheme::Binary,
+            flops::Scheme::Fdb { sparsity_b1: s1, sparsity_b2: s2, effective_bits: eff_bits },
+        ];
+        for s in &schemes {
+            let r = flops::report(&cfg, 32.0, s);
+            println!(
+                "{:<22}{:>12}{:>10}{:>12}",
+                r.method,
+                format!("{}B", crate::util::eng(r.model_size_bytes)),
+                r.sparsity.map_or("-".to_string(), |v| format!("{:.1}%", v * 100.0)),
+                crate::util::eng(r.flops),
+            );
+        }
+    }
+    println!(
+        "measured: b1 sparsity {:.1}%, b2 sparsity {:.1}%, coded bits/weight {:.3}",
+        s1 * 100.0,
+        s2 * 100.0,
+        eff_bits
+    );
+    let j = Json::obj(vec![
+        ("table", Json::str("6")),
+        ("sparsity_b1", Json::num(s1)),
+        ("sparsity_b2", Json::num(s2)),
+        ("sparsity_2bit", Json::num(s2bit)),
+        ("effective_bits", Json::num(eff_bits)),
+    ]);
+    save_json(opts, "table6", &j)?;
+    Ok(j)
+}
+
+// ------------------------------------------------------------------------
+// Figures
+// ------------------------------------------------------------------------
+
+/// Fig. 1: PPL vs model size — FP16, DB-LLM W2, AWQ W3.
+pub fn figure1(rt: &mut Runtime, opts: &TableOpts) -> Result<Json> {
+    let teachers = ["S", "M", "L", "XL"];
+    let streams = load_streams(rt)?;
+    println!("\n== Figure 1 (wiki PPL vs model size) ==");
+    println!("{:<10}{:>12}{:>14}{:>14}{:>14}", "teacher", "params", "FP16", "DB-LLM W2", "AWQ W3");
+    let mut rows = Vec::new();
+    for tag in teachers {
+        let cfg_size = rt.manifest.size_config(&rt.manifest.teacher(tag)?.size)?;
+        let mut vals = BTreeMap::new();
+        for method in [Method::Fp16, Method::DbLlm, Method::AwqW3] {
+            let student = make_student(rt, tag, method, opts, None)?;
+            let ppls = eval_ppl_for(rt, &student, &streams, opts.windows)?;
+            vals.insert(method.label().to_string(), ppls["wiki"]);
+        }
+        println!(
+            "{:<10}{:>12}{:>14.2}{:>14.2}{:>14.2}",
+            tag,
+            crate::util::eng(cfg_size.n_params() as f64),
+            vals["FP16"],
+            vals["DB-LLM W2"],
+            vals["AWQ W3"]
+        );
+        rows.push(Json::obj(vec![
+            ("teacher", Json::str(tag)),
+            ("params", Json::num(cfg_size.n_params() as f64)),
+            ("fp16", Json::num(vals["FP16"])),
+            ("dbllm_w2", Json::num(vals["DB-LLM W2"])),
+            ("awq_w3", Json::num(vals["AWQ W3"])),
+        ]));
+    }
+    let j = Json::obj(vec![("figure", Json::str("1")), ("rows", Json::Arr(rows))]);
+    save_json(opts, "figure1", &j)?;
+    Ok(j)
+}
+
+/// Fig. 3: grid-searched optimal levels of the first output projection.
+pub fn figure3(rt: &mut Runtime, opts: &TableOpts) -> Result<Json> {
+    use crate::quant::grid::{search, Format};
+    let tag = opts.teachers.first().cloned().unwrap_or_else(|| "M".to_string());
+    let weights = load_teacher(rt, &tag)?;
+    let w = weights.mat("layers.0.wo");
+    println!("\n== Figure 3 (optimal levels, first o_proj of teacher {tag}) ==");
+    let mut rows = Vec::new();
+    let mut spans = BTreeMap::new();
+    for (fmt, name) in [(Format::Binary, "binarization"), (Format::Int2, "2-bit"), (Format::Fdb, "FDB")] {
+        let res = search(&w.data, fmt, 60);
+        println!(
+            "{:<14} levels {:?}  span {:.4}  mse {:.6}",
+            name,
+            res.levels.iter().map(|l| (l * 1e4).round() / 1e4).collect::<Vec<_>>(),
+            res.span,
+            res.mse
+        );
+        spans.insert(name.to_string(), res.span as f64);
+        rows.push(Json::obj(vec![
+            ("format", Json::str(name)),
+            ("levels", Json::Arr(res.levels.iter().map(|&l| Json::num(l as f64)).collect())),
+            ("span", Json::num(res.span as f64)),
+            ("mse", Json::num(res.mse)),
+        ]));
+    }
+    println!(
+        "span ratio binary/2-bit = {:.3} (paper: binarization span < half of 2-bit)",
+        spans["binarization"] / spans["2-bit"]
+    );
+    let j = Json::obj(vec![("figure", Json::str("3")), ("rows", Json::Arr(rows))]);
+    save_json(opts, "figure3", &j)?;
+    Ok(j)
+}
+
+/// Fig. 4: loss landscapes over scale perturbations.
+pub fn figure4(rt: &mut Runtime, opts: &TableOpts) -> Result<Json> {
+    let tag = opts.teachers.first().cloned().unwrap_or_else(|| "M".to_string());
+    let weights = load_teacher(rt, &tag)?;
+    let info = rt.manifest.teacher(&tag)?;
+    let calib_stream = TokenStream::load(rt.artifacts_dir.join(&info.calib))?;
+    let pipeline = QuantPipeline::new(rt.manifest.seq_len());
+    let calibs = pipeline.collect_calib(&weights, &calib_stream);
+    let name = "layers.0.wo";
+    let w = weights.mat(name);
+    let calib = &calibs[name];
+    let axis = landscape::default_axis(13);
+
+    println!("\n== Figure 4 (loss landscape over scale perturbations, {name}) ==");
+    let surfaces = [
+        landscape::binary_landscape(w, calib, &axis),
+        landscape::int2_landscape(w, calib, &axis),
+        landscape::fdb_landscape(w, calib, &axis),
+    ];
+    let theta = 1.5 * surfaces[1].min_loss.max(surfaces[2].min_loss);
+    println!("{:<14}{:>12}{:>12}{:>16}", "format", "min loss", "flatness", "sublevel@1.5x2b");
+    let mut rows = Vec::new();
+    for l in &surfaces {
+        println!(
+            "{:<14}{:>12.6}{:>12.3}{:>16.3}",
+            l.method,
+            l.min_loss,
+            l.flatness,
+            l.sublevel_fraction(theta)
+        );
+        rows.push(Json::obj(vec![
+            ("format", Json::str(l.method.clone())),
+            ("min_loss", Json::num(l.min_loss)),
+            ("flatness", Json::num(l.flatness)),
+            ("sublevel", Json::num(l.sublevel_fraction(theta))),
+            (
+                "surface",
+                Json::Arr(
+                    l.loss
+                        .iter()
+                        .map(|row| Json::Arr(row.iter().map(|&v| Json::num(v)).collect()))
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    let j = Json::obj(vec![("figure", Json::str("4")), ("rows", Json::Arr(rows))]);
+    save_json(opts, "figure4", &j)?;
+    Ok(j)
+}
+
+/// Fig. 6: prediction-frequency histograms, FP vs 2-bit.
+pub fn figure6(rt: &mut Runtime, opts: &TableOpts) -> Result<Json> {
+    let tag = opts.teachers.first().cloned().unwrap_or_else(|| "M".to_string());
+    let vocab = rt.manifest.vocab();
+    let streams = load_streams(rt)?;
+    let corpus_hist = streams["wiki"].unigram(vocab);
+
+    let fp = make_student(rt, &tag, Method::Fp16, opts, None)?;
+    let q2 = make_student(rt, &tag, Method::RtnW2, opts, None)?;
+    let fp_sess = Session::new(rt, &fp.weights)?;
+    let fp_hist = predstats::prediction_histogram(rt, &fp_sess, vocab, 8, 606)?;
+    let q2_sess = Session::new(rt, &q2.weights)?;
+    let q2_hist = predstats::prediction_histogram(rt, &q2_sess, vocab, 8, 606)?;
+
+    let r_fp = predstats::head_tail_ratio(&fp_hist, &corpus_hist, 0.125);
+    let r_q2 = predstats::head_tail_ratio(&q2_hist, &corpus_hist, 0.125);
+    let tv_fp = predstats::tv_distance(&fp_hist, &corpus_hist);
+    let tv_q2 = predstats::tv_distance(&q2_hist, &corpus_hist);
+    println!("\n== Figure 6 (prediction distributions under random generation, teacher {tag}) ==");
+    println!("{:<12}{:>18}{:>16}", "model", "head/tail vs ref", "TV vs corpus");
+    println!("{:<12}{:>18.3}{:>16.3}", "FP16", r_fp, tv_fp);
+    println!("{:<12}{:>18.3}{:>16.3}", "2-bit", r_q2, tv_q2);
+    println!("(paper: low-bit model ~1.6x more head-biased than FP)");
+    let j = Json::obj(vec![
+        ("figure", Json::str("6")),
+        ("head_tail_fp", Json::num(r_fp)),
+        ("head_tail_2bit", Json::num(r_q2)),
+        ("tv_fp", Json::num(tv_fp)),
+        ("tv_2bit", Json::num(tv_q2)),
+        ("hist_fp", Json::Arr(fp_hist.iter().map(|&v| Json::num(v as f64)).collect())),
+        ("hist_2bit", Json::Arr(q2_hist.iter().map(|&v| Json::num(v as f64)).collect())),
+    ]);
+    save_json(opts, "figure6", &j)?;
+    Ok(j)
+}
+
+/// Fig. 7: prediction entropy vs task loss.
+pub fn figure7(rt: &mut Runtime, opts: &TableOpts) -> Result<Json> {
+    let tag = opts.teachers.first().cloned().unwrap_or_else(|| "M".to_string());
+    let vocab = rt.manifest.vocab();
+    let streams = load_streams(rt)?;
+    let t = rt.manifest.seq_len();
+    let windows = streams["wiki"].sample_windows(32, t + 1, 707);
+
+    let fp = make_student(rt, &tag, Method::Fp16, opts, None)?;
+    let q2 = make_student(rt, &tag, Method::DbLlmNoDad, opts, None)?;
+    let fp_sess = Session::new(rt, &fp.weights)?;
+    let q2_sess = Session::new(rt, &q2.weights)?;
+    let pts = predstats::entropy_vs_loss(rt, &fp_sess, &q2_sess, &windows, vocab)?;
+
+    let r_teacher = predstats::pearson(&pts.teacher_entropy, &pts.loss);
+    let r_student = predstats::pearson(&pts.student_entropy, &pts.loss);
+    println!("\n== Figure 7 (entropy vs task loss, teacher {tag}) ==");
+    println!("pearson(teacher entropy, loss) = {r_teacher:.3}");
+    println!("pearson(student entropy, loss) = {r_student:.3}");
+    let curve_t = predstats::binned_means(&pts.teacher_entropy, &pts.loss, 10);
+    let curve_s = predstats::binned_means(&pts.student_entropy, &pts.loss, 10);
+    println!("{:>12}{:>12}   {:>12}{:>12}", "H(teacher)", "loss", "H(student)", "loss");
+    for i in 0..curve_t.len().min(curve_s.len()) {
+        println!(
+            "{:>12.3}{:>12.3}   {:>12.3}{:>12.3}",
+            curve_t[i].0, curve_t[i].1, curve_s[i].0, curve_s[i].1
+        );
+    }
+    let j = Json::obj(vec![
+        ("figure", Json::str("7")),
+        ("pearson_teacher", Json::num(r_teacher)),
+        ("pearson_student", Json::num(r_student)),
+        (
+            "curve_teacher",
+            Json::Arr(curve_t.iter().map(|&(x, y)| Json::Arr(vec![Json::num(x), Json::num(y)])).collect()),
+        ),
+        (
+            "curve_student",
+            Json::Arr(curve_s.iter().map(|&(x, y)| Json::Arr(vec![Json::num(x), Json::num(y)])).collect()),
+        ),
+    ]);
+    save_json(opts, "figure7", &j)?;
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_grid_covers_paper_methods() {
+        let grid = Method::main_grid();
+        assert!(grid.contains(&Method::DbLlm));
+        assert!(grid.contains(&Method::OmniW2));
+        assert!(grid.contains(&Method::PbLlm));
+        assert_eq!(grid.len(), 9);
+    }
+
+    #[test]
+    fn labels_unique() {
+        let mut labels: Vec<&str> = Method::main_grid().iter().map(|m| m.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 9);
+    }
+}

@@ -1,0 +1,133 @@
+//! Zero-shot multiple-choice evaluation (Tables 5 / 7).
+//!
+//! Protocol: each choice is scored by the length-normalized
+//! log-likelihood of its continuation span given the context; argmax
+//! wins (lm-eval-harness convention the paper's numbers use).
+
+use anyhow::Result;
+
+use crate::data::{TaskSuite, TokenStream, ZeroShotTask};
+use crate::runtime::{session::pack_batch, Runtime, Session};
+
+/// Accuracy of a session on one suite.
+pub fn accuracy(
+    rt: &mut Runtime,
+    session: &Session,
+    suite: &TaskSuite,
+    stream: &TokenStream,
+) -> Result<f64> {
+    let items = suite.generate(stream);
+    let width = session.seq_len + 1;
+    let per_row = session.seq_len;
+    let batch = session.nll_batch;
+
+    // flatten all (item, choice) sequences, score in batches
+    let mut seqs: Vec<Vec<u32>> = Vec::new();
+    for item in &items {
+        for i in 0..item.choices.len() {
+            let s = item.sequence(i);
+            anyhow::ensure!(s.len() == width, "task width {} != {width}", s.len());
+            seqs.push(s);
+        }
+    }
+    let mut scores = vec![0.0f64; seqs.len()];
+    let mut i = 0;
+    while i < seqs.len() {
+        let chunk = &seqs[i..(i + batch).min(seqs.len())];
+        let packed = pack_batch(chunk, batch, width)?;
+        let nll = session.nll(rt, &packed)?;
+        for (r, _) in chunk.iter().enumerate() {
+            // continuation span = last cont_len positions
+            let cont = suite.cont_len;
+            let row = &nll[r * per_row..(r + 1) * per_row];
+            let s: f64 = row[per_row - cont..].iter().map(|&v| v as f64).sum();
+            scores[i + r] = -s / cont as f64; // normalized log-likelihood
+        }
+        i += chunk.len();
+    }
+
+    let mut correct = 0usize;
+    let mut k = 0usize;
+    for item in &items {
+        let n = item.choices.len();
+        let best = (0..n)
+            .max_by(|&a, &b| scores[k + a].partial_cmp(&scores[k + b]).unwrap())
+            .unwrap();
+        if best == item.answer {
+            correct += 1;
+        }
+        k += n;
+    }
+    Ok(correct as f64 / items.len() as f64)
+}
+
+/// Native-forward scoring (slow path, used by tests).
+pub fn accuracy_native(
+    weights: &crate::model::Weights,
+    suite: &TaskSuite,
+    stream: &TokenStream,
+    max_items: usize,
+) -> f64 {
+    let items: Vec<ZeroShotTask> = suite
+        .generate(stream)
+        .into_iter()
+        .take(if max_items == 0 { usize::MAX } else { max_items })
+        .collect();
+    let mut fwd = crate::model::native::Forward::new(weights);
+    let mut correct = 0usize;
+    for item in &items {
+        let cont = item.cont_len();
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for i in 0..item.choices.len() {
+            let seq = item.sequence(i);
+            let nll = fwd.nll(&seq);
+            let score: f64 = -nll[nll.len() - cont..].iter().sum::<f64>() / cont as f64;
+            if score > best.0 {
+                best = (score, i);
+            }
+        }
+        if best.1 == item.answer {
+            correct += 1;
+        }
+    }
+    correct as f64 / items.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Weights};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn random_model_near_chance() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 192,
+            vocab: 64,
+            seq_len: 32,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        };
+        let w = Weights::synthetic(&cfg, 1);
+        let mut rng = Pcg32::seeded(3);
+        let stream = TokenStream {
+            tokens: (0..30_000).map(|_| rng.below(64)).collect(),
+        };
+        let suite = TaskSuite {
+            name: "t4".into(),
+            context_len: 20,
+            cont_len: 4,
+            n_choices: 4,
+            hard_negatives: false,
+            n_items: 60,
+            seed: 5,
+        };
+        let acc = accuracy_native(&w, &suite, &stream, 60);
+        // 4 choices -> chance 0.25; a random model must sit near it
+        assert!((0.05..0.55).contains(&acc), "acc {acc}");
+    }
+}

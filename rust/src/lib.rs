@@ -1,0 +1,18 @@
+//! DB-LLM: Accurate Dual-Binarization for Efficient LLMs (ACL 2024
+//! Findings) — a rust + JAX + Pallas reproduction.
+//!
+//! Three layers (see DESIGN.md): the Pallas FDB kernel and the JAX model
+//! are AOT-lowered to HLO at build time (python, never on the request
+//! path); this crate is the system — quantization engine, entropy codec,
+//! PJRT runtime, serving/fine-tuning coordinator and the evaluation
+//! harness that regenerates every table and figure of the paper.
+
+pub mod codec;
+pub mod coordinator;
+pub mod eval;
+pub mod data;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

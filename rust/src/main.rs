@@ -1,0 +1,335 @@
+//! db-llm — the Layer-3 CLI.
+//!
+//! Subcommands:
+//!   info                         manifest / teacher / corpus summary
+//!   quantize  --teacher S --method dbllm [--out w.dbw]
+//!   eval      --teacher S --method dbllm [--windows N]
+//!   table     --id 1|2|3|4|5|6|7 [--windows N] [--teachers S,M]
+//!   figure    --id 1|3|4|6|7
+//!   serve     --teacher S [--method dbllm] [--addr 127.0.0.1:7878]
+//!   client    --addr 127.0.0.1:7878 --prompt 1,2,3 --max-tokens 8
+//!
+//! Argument parsing is hand-rolled (offline build, no clap); every flag
+//! is `--name value`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use db_llm::coordinator::batcher::BatchPolicy;
+use db_llm::coordinator::metrics::Metrics;
+use db_llm::coordinator::serve::{serve, Engine};
+use db_llm::data::TokenStream;
+use db_llm::eval::ppl::perplexity;
+use db_llm::eval::tables::{self, Method, TableOpts};
+use db_llm::runtime::{Runtime, Session};
+
+fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn method_from_str(s: &str) -> Result<Method> {
+    Ok(match s.to_lowercase().as_str() {
+        "fp16" | "fp" => Method::Fp16,
+        "rtn2" | "rtn-w2" | "rtn" => Method::RtnW2,
+        "rtn3" | "rtn-w3" => Method::RtnW3,
+        "awq2" | "awq" => Method::AwqW2,
+        "awq3" => Method::AwqW3,
+        "gptq" | "gptq2" => Method::GptqW2,
+        "omniquant" | "omni" => Method::OmniW2,
+        "pbllm" | "pb-llm" => Method::PbLlm,
+        "dbllm" | "db-llm" | "fdb" => Method::DbLlm,
+        "dbllm-nodad" => Method::DbLlmNoDad,
+        other => bail!("unknown method {other}"),
+    })
+}
+
+fn dad_from_flags(flags: &BTreeMap<String, String>) -> Option<db_llm::coordinator::DadConfig> {
+    let mut cfg = db_llm::coordinator::DadConfig::default();
+    let mut touched = false;
+    if let Some(v) = flags.get("dad-lr") {
+        cfg.lr = v.parse().unwrap_or(cfg.lr);
+        touched = true;
+    }
+    if let Some(v) = flags.get("dad-epochs") {
+        cfg.epochs = v.parse().unwrap_or(cfg.epochs);
+        touched = true;
+    }
+    if let Some(v) = flags.get("dad-resplit") {
+        cfg.resplit = v != "false";
+        touched = true;
+    }
+    if let Some(v) = flags.get("dad-gamma") {
+        cfg.gamma = v.parse().unwrap_or(cfg.gamma);
+        touched = true;
+    }
+    touched.then_some(cfg)
+}
+
+fn opts_from_flags(flags: &BTreeMap<String, String>) -> TableOpts {
+    let mut opts = TableOpts::default();
+    if let Some(w) = flags.get("windows") {
+        opts.windows = w.parse().unwrap_or(opts.windows);
+    }
+    if let Some(d) = flags.get("dad-batches") {
+        opts.dad_batches = d.parse().unwrap_or(opts.dad_batches);
+    }
+    if let Some(t) = flags.get("teachers") {
+        opts.teachers = t.split(',').map(str::to_string).collect();
+    }
+    if let Some(z) = flags.get("zs-items") {
+        opts.zs_items = z.parse().unwrap_or(opts.zs_items);
+    }
+    if let Some(o) = flags.get("out-dir") {
+        opts.out_dir = o.into();
+    }
+    if let Some(c) = flags.get("calib") {
+        opts.calib_override = Some(c.into());
+    }
+    if let Some(g) = flags.get("group") {
+        opts.group_override = g.parse().ok();
+    }
+    opts
+}
+
+fn artifacts_dir(flags: &BTreeMap<String, String>) -> String {
+    flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".to_string())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().cloned() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..]);
+
+    match cmd.as_str() {
+        "info" => cmd_info(&flags),
+        "quantize" => cmd_quantize(&flags),
+        "eval" => cmd_eval(&flags),
+        "table" => cmd_table(&flags),
+        "figure" => cmd_figure(&flags),
+        "serve" => cmd_serve(&flags),
+        "client" => cmd_client(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other} (try `db-llm help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "db-llm — DB-LLM (ACL 2024) reproduction CLI\n\
+         \n\
+         commands:\n\
+           info                              artifacts summary\n\
+           quantize --teacher S --method M   quantize + report stats\n\
+           eval     --teacher S --method M   perplexity on both corpora\n\
+           table    --id N                   regenerate paper table N (1-7)\n\
+           figure   --id N                   regenerate paper figure N (1,3,4,6,7)\n\
+           serve    --teacher S [--method M] [--addr A] TCP serving demo\n\
+           client   --addr A --prompt 1,2,3 --max-tokens 8\n\
+         \n\
+         common flags: --artifacts DIR --windows N --dad-batches N\n\
+                       --teachers S,M,L --zs-items N --out-dir results\n\
+         methods: fp16 rtn2 rtn3 gptq awq2 awq3 omniquant pbllm dbllm"
+    );
+}
+
+fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
+    let rt = Runtime::open(artifacts_dir(flags))?;
+    let m = &rt.manifest;
+    println!("artifacts: {:?}", rt.artifacts_dir);
+    println!("group_size={} vocab={} seq_len={}", m.group_size(), m.vocab(), m.seq_len());
+    println!("\nsizes:");
+    for s in m.sizes()? {
+        let c = m.size_config(&s)?;
+        println!(
+            "  {s:<4} d={} L={} h={} ff={} params={}",
+            c.d_model,
+            c.n_layers,
+            c.n_heads,
+            c.d_ff,
+            db_llm::util::eng(c.n_params() as f64)
+        );
+    }
+    println!("\nteachers:");
+    for tag in m.teacher_tags()? {
+        let t = m.teacher(&tag)?;
+        println!(
+            "  {tag:<4} size={} ppl(wiki)={:.2} ppl(web)={:.2}",
+            t.size, t.eval_ppl_wiki, t.eval_ppl_web
+        );
+    }
+    println!("\ncorpora:");
+    for c in m.corpus_names()? {
+        println!("  {c:<5} ppl floor={:.2}", m.corpus_ppl_floor(&c)?);
+    }
+    Ok(())
+}
+
+fn cmd_quantize(flags: &BTreeMap<String, String>) -> Result<()> {
+    let mut rt = Runtime::open(artifacts_dir(flags))?;
+    let teacher = flags.get("teacher").context("--teacher required")?.clone();
+    let method = method_from_str(flags.get("method").context("--method required")?)?;
+    let opts = opts_from_flags(flags);
+    let t0 = std::time::Instant::now();
+    let student = tables::make_student(&mut rt, &teacher, method, &opts, dad_from_flags(flags))?;
+    println!(
+        "quantized {teacher} with {} in {:.1}s",
+        method.label(),
+        t0.elapsed().as_secs_f64()
+    );
+    if !student.fdb_layers.is_empty() {
+        let (s1, s2, avg) = db_llm::eval::QuantPipeline::fdb_sparsity(&student.fdb_layers);
+        println!(
+            "FDB sparsity: b1 {:.1}% b2 {:.1}% avg {:.1}%",
+            s1 * 100.0,
+            s2 * 100.0,
+            avg * 100.0
+        );
+        let mut eff = 0.0;
+        for l in student.fdb_layers.values() {
+            eff += db_llm::codec::effective_bits(l).total;
+        }
+        println!(
+            "effective bits/weight after coding: {:.3}",
+            eff / student.fdb_layers.len() as f64
+        );
+    }
+    if let Some((first, last)) = student.dad_trend {
+        println!("DAD loss: {first:.4} -> {last:.4}");
+    }
+    if let Some(out) = flags.get("out") {
+        let mut tensors = std::collections::BTreeMap::new();
+        for (name, m) in &student.weights.mats {
+            tensors.insert(name.clone(), (vec![m.rows, m.cols], m.data.clone()));
+        }
+        for (name, v) in &student.weights.vecs {
+            tensors.insert(name.clone(), (vec![v.len()], v.clone()));
+        }
+        let dbw = db_llm::model::Dbw {
+            config: db_llm::util::Json::obj(vec![
+                ("teacher", db_llm::util::Json::str(teacher.clone())),
+                ("method", db_llm::util::Json::str(method.label())),
+            ]),
+            tensors,
+        };
+        dbw.save(out)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(flags: &BTreeMap<String, String>) -> Result<()> {
+    let mut rt = Runtime::open(artifacts_dir(flags))?;
+    let teacher = flags.get("teacher").context("--teacher required")?.clone();
+    let method = method_from_str(flags.get("method").context("--method required")?)?;
+    let opts = opts_from_flags(flags);
+    let student = tables::make_student(&mut rt, &teacher, method, &opts, dad_from_flags(flags))?;
+    let session = Session::new(&rt, &student.weights)?;
+    for name in rt.manifest.corpus_names()? {
+        let f = rt.manifest.corpus_eval_file(&name)?;
+        let stream = TokenStream::load(rt.artifacts_dir.join(f))?;
+        let ppl = perplexity(&mut rt, &session, &stream, opts.windows)?;
+        println!("{teacher} {} {name}: ppl {ppl:.3}", method.label());
+    }
+    Ok(())
+}
+
+fn cmd_table(flags: &BTreeMap<String, String>) -> Result<()> {
+    let mut rt = Runtime::open(artifacts_dir(flags))?;
+    let opts = opts_from_flags(flags);
+    let id = flags.get("id").context("--id required (1-7)")?.as_str();
+    match id {
+        "1" => tables::table_ppl(&mut rt, &opts, false).map(drop),
+        "2" => tables::table_ppl(&mut rt, &opts, true).map(drop),
+        "3" => tables::table3(&mut rt, &opts).map(drop),
+        "4" => tables::table4(&mut rt, &opts).map(drop),
+        "5" => tables::table_zeroshot(&mut rt, &opts, false).map(drop),
+        "6" => tables::table6(&mut rt, &opts).map(drop),
+        "7" => tables::table_zeroshot(&mut rt, &opts, true).map(drop),
+        other => bail!("unknown table {other}"),
+    }
+}
+
+fn cmd_figure(flags: &BTreeMap<String, String>) -> Result<()> {
+    let mut rt = Runtime::open(artifacts_dir(flags))?;
+    let opts = opts_from_flags(flags);
+    let id = flags.get("id").context("--id required (1,3,4,6,7)")?.as_str();
+    match id {
+        "1" => tables::figure1(&mut rt, &opts).map(drop),
+        "3" => tables::figure3(&mut rt, &opts).map(drop),
+        "4" => tables::figure4(&mut rt, &opts).map(drop),
+        "6" => tables::figure6(&mut rt, &opts).map(drop),
+        "7" => tables::figure7(&mut rt, &opts).map(drop),
+        other => bail!("unknown figure {other} (2 and 5 are method illustrations)"),
+    }
+}
+
+fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
+    let dir = artifacts_dir(flags);
+    let teacher = flags.get("teacher").context("--teacher required")?.clone();
+    let method = method_from_str(flags.get("method").map(String::as_str).unwrap_or("fp16"))?;
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
+    let opts = opts_from_flags(flags);
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+
+    let m2 = metrics.clone();
+    let local = serve(
+        move || {
+            let mut rt = Runtime::open(dir)?;
+            let student = tables::make_student(&mut rt, &teacher, method, &opts, None)?;
+            let vocab = rt.manifest.vocab();
+            let session = Session::new(&rt, &student.weights)?;
+            eprintln!("engine ready ({} weights pinned)", session.n_weight_buffers());
+            Ok((rt, Engine::new(session, vocab, 42)))
+        },
+        &addr,
+        BatchPolicy::default(),
+        m2,
+        running.clone(),
+    )?;
+    println!("serving on {local} — protocol: one JSON per line");
+    println!("  {{\"prompt\": [1,2,3], \"max_tokens\": 8}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        println!("[metrics] {}", metrics.snapshot());
+    }
+}
+
+fn cmd_client(flags: &BTreeMap<String, String>) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
+    let prompt = flags.get("prompt").context("--prompt 1,2,3 required")?;
+    let max_tokens: usize = flags.get("max-tokens").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let mut stream = std::net::TcpStream::connect(&addr)?;
+    let req = format!("{{\"prompt\": [{prompt}], \"max_tokens\": {max_tokens}}}");
+    writeln!(stream, "{req}")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    println!("{}", line.trim());
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! Model hyper-parameters — parsed from `artifacts/manifest.json` (the
+//! python layer is the single source of truth; this struct only mirrors
+//! it) plus the published LLaMA configs used by the Table 6 regeneration.
+
+use anyhow::Result;
+
+use crate::util::Json;
+
+/// LLaMA-style decoder-only transformer hyper-parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub rope_theta: f64,
+    pub rmsnorm_eps: f64,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Exact parameter count (untied embeddings) — must equal the python
+    /// side's `ModelConfig.n_params()`.
+    pub fn n_params(&self) -> usize {
+        let per_layer =
+            4 * self.d_model * self.d_model + 3 * self.d_model * self.d_ff + 2 * self.d_model;
+        self.vocab * self.d_model
+            + self.n_layers * per_layer
+            + self.d_model
+            + self.d_model * self.vocab
+    }
+
+    /// Parse from a manifest `sizes.<key>` object.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModelConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            rope_theta: j.get("rope_theta")?.as_f64()?,
+            rmsnorm_eps: j.get("rmsnorm_eps")?.as_f64()?,
+        })
+    }
+
+    /// The published LLaMA-1-7B configuration — used to regenerate the
+    /// paper's own Table 6 numbers from the analytic model.
+    pub fn llama1_7b() -> Self {
+        ModelConfig {
+            name: "LLaMA-1-7B".into(),
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            d_ff: 11008,
+            vocab: 32000,
+            seq_len: 2048,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    /// The seven quantizable linear names per layer, canonical order
+    /// (mirrors `python/compile/model.py::LINEAR_NAMES`).
+    pub const LINEAR_NAMES: [&'static str; 7] =
+        ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+    /// Full flat parameter order (mirrors python `param_names`).
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["tok_emb".to_string()];
+        for i in 0..self.n_layers {
+            names.push(format!("layers.{i}.attn_norm"));
+            for n in ["wq", "wk", "wv", "wo"] {
+                names.push(format!("layers.{i}.{n}"));
+            }
+            names.push(format!("layers.{i}.mlp_norm"));
+            for n in ["w_gate", "w_up", "w_down"] {
+                names.push(format!("layers.{i}.{n}"));
+            }
+        }
+        names.push("final_norm".into());
+        names.push("head".into());
+        names
+    }
+
+    /// Quantizable subset, order preserved.
+    pub fn linear_names(&self) -> Vec<String> {
+        (0..self.n_layers)
+            .flat_map(|i| Self::LINEAR_NAMES.iter().map(move |n| format!("layers.{i}.{n}")))
+            .collect()
+    }
+
+    /// `[in, out]` shape of a linear by name.
+    pub fn linear_shape(&self, name: &str) -> (usize, usize) {
+        let base = name.rsplit('.').next().unwrap();
+        let (d, f) = (self.d_model, self.d_ff);
+        match base {
+            "wq" | "wk" | "wv" | "wo" => (d, d),
+            "w_gate" | "w_up" => (d, f),
+            "w_down" => (f, d),
+            _ => panic!("not a linear: {name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 192,
+            vocab: 512,
+            seq_len: 64,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn param_names_order_matches_python_convention() {
+        let names = tiny().param_names();
+        assert_eq!(names[0], "tok_emb");
+        assert_eq!(names[1], "layers.0.attn_norm");
+        assert_eq!(names[2], "layers.0.wq");
+        assert_eq!(names[6], "layers.0.mlp_norm");
+        assert_eq!(names[7], "layers.0.w_gate");
+        assert_eq!(names[names.len() - 2], "final_norm");
+        assert_eq!(names[names.len() - 1], "head");
+        assert_eq!(names.len(), 1 + 2 * 9 + 2);
+    }
+
+    #[test]
+    fn n_params_formula() {
+        let c = tiny();
+        // emb 512*64*2 + 2*(4*64*64 + 3*64*192 + 2*64) + 64
+        let expect = 512 * 64 + 2 * (4 * 64 * 64 + 3 * 64 * 192 + 2 * 64) + 64 + 64 * 512;
+        assert_eq!(c.n_params(), expect);
+    }
+
+    #[test]
+    fn llama7b_param_count_close_to_published() {
+        let c = ModelConfig::llama1_7b();
+        let p = c.n_params() as f64;
+        // published: ~6.74B
+        assert!((6.4e9..7.1e9).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn linear_shapes() {
+        let c = tiny();
+        assert_eq!(c.linear_shape("layers.0.wq"), (64, 64));
+        assert_eq!(c.linear_shape("layers.1.w_up"), (64, 192));
+        assert_eq!(c.linear_shape("layers.1.w_down"), (192, 64));
+        assert_eq!(c.linear_names().len(), 14);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"name":"S","d_model":64,"n_layers":2,"n_heads":4,"d_ff":192,
+                "vocab":512,"seq_len":64,"rope_theta":10000.0,"rmsnorm_eps":1e-5,
+                "head_dim":16,"n_params":0}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c.d_model, 64);
+        assert_eq!(c.head_dim(), 16);
+    }
+}

@@ -1,0 +1,201 @@
+//! Analytic model-size / sparsity / FLOPs accounting — the machinery
+//! behind Table 6 ("Model size, sparsity, and computational complexity
+//! of LLaMA-1-7B … where the model processes a 32-token sentence").
+//!
+//! Conventions match the binarization literature the paper cites (Liu
+//! et al. 2018 count bit-ops as a fixed fraction of fp ops): a dense
+//! fp16 matmul of a length-T sequence through a `[in, out]` linear
+//! costs 2·T·in·out FLOPs; a k-bit weight matmul costs the dense FLOPs
+//! scaled by k/16 (narrow multiplies) and further discounted by the
+//! weight sparsity (zero weights are skipped).  Attention score/value
+//! matmuls, the lm head and norms stay fp16 for every scheme.
+//!
+//! This convention regenerates the paper's own Table 6 numbers from the
+//! LLaMA-1-7B config: 423.4G (fp16) / 88.2G (3-bit) / 37.3G (2-bit at
+//! 48.3% sparsity) / 36.4G (binary) / 29.8G (FDB at 62.8% sparsity) —
+//! asserted in the tests below.
+
+use super::ModelConfig;
+
+/// Compression scheme being accounted.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Scheme {
+    /// fp16 dense baseline
+    Fp16,
+    /// k-bit uniform quantization with a given weight sparsity level
+    /// (fraction of zero weights in the dequantized grid)
+    Uniform { bits: f64, sparsity: f64 },
+    /// 1-bit binarization (levels ±α — no zeros by construction)
+    Binary,
+    /// FDB dual-binary with measured plane sparsities
+    Fdb { sparsity_b1: f64, sparsity_b2: f64, effective_bits: f64 },
+}
+
+/// Table-6 style report row.
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    pub method: String,
+    pub model_size_bytes: f64,
+    pub sparsity: Option<f64>,
+    pub flops: f64,
+}
+
+/// Total linear (quantizable) weights of the model.
+pub fn linear_params(cfg: &ModelConfig) -> f64 {
+    cfg.linear_names()
+        .iter()
+        .map(|n| {
+            let (i, o) = cfg.linear_shape(n);
+            (i * o) as f64
+        })
+        .sum()
+}
+
+/// Non-quantized parameters (embeddings + head + norms) kept fp16.
+pub fn other_params(cfg: &ModelConfig) -> f64 {
+    cfg.n_params() as f64 - linear_params(cfg)
+}
+
+/// Model size in bytes for a scheme (scales/zero-points included via the
+/// effective bits; non-linear params at fp16).
+pub fn model_size_bytes(cfg: &ModelConfig, bits_per_weight: f64) -> f64 {
+    linear_params(cfg) * bits_per_weight / 8.0 + other_params(cfg) * 2.0
+}
+
+/// FLOPs for processing a `t`-token sentence (single forward).
+///
+/// Linear layers dominate; attention score/value matmuls (2·2·T²·d per
+/// layer) and the lm head are counted at full precision for every
+/// scheme, matching the paper's accounting where only weight-matmul
+/// cost shrinks.
+pub fn forward_flops(cfg: &ModelConfig, t: f64, scheme: &Scheme) -> f64 {
+    let lin = 2.0 * t * linear_params(cfg);
+    let attn = cfg.n_layers as f64 * 2.0 * 2.0 * t * t * cfg.d_model as f64;
+    let head = 2.0 * t * (cfg.d_model * cfg.vocab) as f64;
+    let emb_norms = t * (cfg.n_layers as f64 * 2.0 + 1.0) * 4.0 * cfg.d_model as f64;
+    let fixed = attn + head + emb_norms;
+    let lin_cost = match scheme {
+        Scheme::Fp16 => lin,
+        // k-bit lanes cost k/16 of an fp16 lane; zero weights skipped
+        Scheme::Uniform { bits, sparsity } => lin * (bits / 16.0) * (1.0 - sparsity),
+        // ±α binary: 1-bit lanes, no zeros by construction
+        Scheme::Binary => lin * (1.0 / 16.0),
+        // FDB: two 1-bit planes, each contributing only its live lanes
+        Scheme::Fdb { sparsity_b1, sparsity_b2, .. } => {
+            let live = (1.0 - sparsity_b1) + (1.0 - sparsity_b2);
+            lin * (1.0 / 16.0) * live
+        }
+    };
+    lin_cost + fixed
+}
+
+/// Assemble a Table-6 row.
+pub fn report(cfg: &ModelConfig, t: f64, scheme: &Scheme) -> CostReport {
+    let (method, bits, sparsity) = match scheme {
+        Scheme::Fp16 => ("FP-16".to_string(), 16.0, None),
+        Scheme::Uniform { bits, sparsity } => {
+            (format!("{}-bit quantization", bits.round() as u32), *bits + 0.25, Some(*sparsity))
+        }
+        Scheme::Binary => ("binarization".to_string(), 1.0 + 0.25, Some(0.0)),
+        Scheme::Fdb { sparsity_b1, sparsity_b2, effective_bits } => (
+            "Ours (DB-LLM)".to_string(),
+            *effective_bits,
+            Some(0.5 * (sparsity_b1 + sparsity_b2)),
+        ),
+    };
+    CostReport {
+        method,
+        model_size_bytes: model_size_bytes(cfg, bits),
+        sparsity,
+        flops: forward_flops(cfg, t, scheme),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama7b_fp16_size_matches_paper() {
+        // paper Table 6: FP-16 = 12.6 GB
+        let cfg = ModelConfig::llama1_7b();
+        let b = model_size_bytes(&cfg, 16.0);
+        assert!((12.0e9..13.5e9).contains(&b), "{b}");
+    }
+
+    #[test]
+    fn llama7b_fp16_flops_matches_paper() {
+        // paper Table 6: 423.4 GFLOPs for a 32-token sentence
+        let cfg = ModelConfig::llama1_7b();
+        let f = forward_flops(&cfg, 32.0, &Scheme::Fp16);
+        assert!(
+            (400.0e9..450.0e9).contains(&f),
+            "{} GFLOPs vs paper 423.4",
+            f / 1e9
+        );
+    }
+
+    #[test]
+    fn llama7b_quant_flops_regenerate_table6() {
+        // the whole Table 6 FLOPs column, within 15%
+        let cfg = ModelConfig::llama1_7b();
+        let rows = [
+            (forward_flops(&cfg, 32.0, &Scheme::Uniform { bits: 3.0, sparsity: 0.0 }), 88.2e9),
+            (forward_flops(&cfg, 32.0, &Scheme::Uniform { bits: 2.0, sparsity: 0.483 }), 37.3e9),
+            (forward_flops(&cfg, 32.0, &Scheme::Binary), 36.4e9),
+            (
+                forward_flops(
+                    &cfg,
+                    32.0,
+                    &Scheme::Fdb { sparsity_b1: 0.743, sparsity_b2: 0.513, effective_bits: 1.88 },
+                ),
+                29.8e9,
+            ),
+        ];
+        for (got, paper) in rows {
+            let rel = (got - paper).abs() / paper;
+            assert!(rel < 0.15, "{:.1}G vs paper {:.1}G", got / 1e9, paper / 1e9);
+        }
+    }
+
+    #[test]
+    fn llama7b_quant_sizes_match_paper() {
+        // paper: 3-bit 2.8G, 2-bit 2.2G, binarization 1.4G, ours 2.3G
+        let cfg = ModelConfig::llama1_7b();
+        let s3 = model_size_bytes(&cfg, 3.25);
+        let s2 = model_size_bytes(&cfg, 2.25);
+        let s1 = model_size_bytes(&cfg, 1.25);
+        assert!((2.5e9..3.2e9).contains(&s3), "3bit {s3}");
+        assert!((1.9e9..2.5e9).contains(&s2), "2bit {s2}");
+        assert!((1.1e9..1.7e9).contains(&s1), "bin {s1}");
+    }
+
+    #[test]
+    fn fdb_flops_reduction_vs_2bit_matches_paper_shape() {
+        // paper: 2-bit 37.3G -> ours 29.8G (~20% lower) at the measured
+        // sparsities (48.3% for 2-bit, 62.8% overall for FDB)
+        let cfg = ModelConfig::llama1_7b();
+        let f2 = forward_flops(&cfg, 32.0, &Scheme::Uniform { bits: 2.0, sparsity: 0.483 });
+        let ffdb = forward_flops(
+            &cfg,
+            32.0,
+            &Scheme::Fdb { sparsity_b1: 0.74, sparsity_b2: 0.51, effective_bits: 1.88 },
+        );
+        let reduction = 1.0 - ffdb / f2;
+        assert!(
+            (0.05..0.45).contains(&reduction),
+            "reduction {reduction} (f2 {f2:.3e}, fdb {ffdb:.3e})"
+        );
+        // and FDB beats the FP baseline by >10x (paper: 14.2x)
+        let fp = forward_flops(&cfg, 32.0, &Scheme::Fp16);
+        assert!(fp / ffdb > 10.0, "speedup {}", fp / ffdb);
+    }
+
+    #[test]
+    fn report_rows_have_labels() {
+        let cfg = ModelConfig::llama1_7b();
+        let r = report(&cfg, 32.0, &Scheme::Binary);
+        assert_eq!(r.method, "binarization");
+        assert_eq!(r.sparsity, Some(0.0));
+    }
+}

@@ -1,0 +1,15 @@
+//! Model substrate: configs (mirroring `python/compile/configs.py`),
+//! the `.dbw` weight store, the canonical parameter naming/ordering
+//! shared with the AOT exports, a native CPU forward (calibration +
+//! runtime cross-checks) and the analytic size/sparsity/FLOPs
+//! accounting behind Table 6.
+
+pub mod config;
+pub mod flops;
+pub mod native;
+pub mod store;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use store::Dbw;
+pub use weights::Weights;

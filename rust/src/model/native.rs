@@ -1,0 +1,322 @@
+//! Native CPU forward pass — a from-scratch implementation of the same
+//! LLaMA-style architecture the JAX layer defines.
+//!
+//! Purposes:
+//! 1. **Calibration**: GPTQ/AWQ/OmniQuant/PB-LLM need each linear's
+//!    input activations; this forward records them without any HLO
+//!    round-trip.
+//! 2. **Cross-check**: integration tests assert this forward and the
+//!    AOT `fwd_logits` executable agree to fp tolerance — validating
+//!    both the runtime marshalling and this substrate at once.
+//!
+//! Shapes: activations are `Matrix[[T, d]]` per sequence (batch = loop).
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Matrix;
+
+use super::Weights;
+
+/// Forward output: logits `[T, vocab]` and (optionally) per-linear
+/// inputs concatenated over positions.
+pub struct Forward<'w> {
+    pub weights: &'w Weights,
+    /// when set, every linear's input rows are appended here
+    pub collect: Option<BTreeMap<String, Vec<Matrix>>>,
+}
+
+impl<'w> Forward<'w> {
+    pub fn new(weights: &'w Weights) -> Self {
+        Forward { weights, collect: None }
+    }
+
+    pub fn collecting(weights: &'w Weights) -> Self {
+        Forward { weights, collect: Some(BTreeMap::new()) }
+    }
+
+    fn linear(&mut self, name: &str, x: &Matrix) -> Matrix {
+        if let Some(c) = &mut self.collect {
+            c.entry(name.to_string()).or_default().push(x.clone());
+        }
+        x.matmul(self.weights.mat(name))
+    }
+
+    /// Run one sequence of token ids; returns logits `[T, vocab]`.
+    pub fn run(&mut self, tokens: &[u32]) -> Matrix {
+        let cfg = self.weights.config.clone();
+        let t = tokens.len();
+        let d = cfg.d_model;
+
+        // embed
+        let emb = self.weights.mat("tok_emb");
+        let mut x = Matrix::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(emb.row(tok as usize));
+        }
+
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let (cos, sin) = rope_tables(t, hd, cfg.rope_theta);
+
+        for l in 0..cfg.n_layers {
+            let pre = format!("layers.{l}.");
+            // attention
+            let hn = rmsnorm(&x, self.weights.vec(&format!("{pre}attn_norm")), cfg.rmsnorm_eps);
+            let mut q = self.linear(&format!("{pre}wq"), &hn);
+            let mut k = self.linear(&format!("{pre}wk"), &hn);
+            let v = self.linear(&format!("{pre}wv"), &hn);
+            apply_rope(&mut q, h, hd, &cos, &sin);
+            apply_rope(&mut k, h, hd, &cos, &sin);
+            let ctx = causal_attention(&q, &k, &v, h, hd);
+            let proj = self.linear(&format!("{pre}wo"), &ctx);
+            x = x.add(&proj);
+            // mlp
+            let hn = rmsnorm(&x, self.weights.vec(&format!("{pre}mlp_norm")), cfg.rmsnorm_eps);
+            let gate = self.linear(&format!("{pre}w_gate"), &hn);
+            let up = self.linear(&format!("{pre}w_up"), &hn);
+            let mut act = Matrix::zeros(t, cfg.d_ff);
+            for i in 0..t * cfg.d_ff {
+                act.data[i] = silu(gate.data[i]) * up.data[i];
+            }
+            let down = self.linear(&format!("{pre}w_down"), &act);
+            x = x.add(&down);
+        }
+
+        let xn = rmsnorm(&x, self.weights.vec("final_norm"), cfg.rmsnorm_eps);
+        xn.matmul(self.weights.mat("head"))
+    }
+
+    /// Per-token NLL (nats) of `tokens[1..]` under the model.
+    pub fn nll(&mut self, tokens: &[u32]) -> Vec<f64> {
+        let logits = self.run(&tokens[..tokens.len() - 1]);
+        (0..logits.rows)
+            .map(|i| {
+                let row = logits.row(i);
+                let lse = log_sum_exp(row);
+                lse - row[tokens[i + 1] as usize] as f64
+            })
+            .collect()
+    }
+
+    /// Take the collected activations as Calib-ready matrices
+    /// `[rows, in]` per linear.
+    pub fn take_activations(&mut self) -> BTreeMap<String, Matrix> {
+        let collected = self.collect.take().unwrap_or_default();
+        collected
+            .into_iter()
+            .map(|(name, chunks)| {
+                let cols = chunks[0].cols;
+                let rows: usize = chunks.iter().map(|c| c.rows).sum();
+                let mut m = Matrix::zeros(rows, cols);
+                let mut r0 = 0;
+                for ch in chunks {
+                    m.data[r0 * cols..(r0 + ch.rows) * cols].copy_from_slice(&ch.data);
+                    r0 += ch.rows;
+                }
+                (name, m)
+            })
+            .collect()
+    }
+}
+
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+pub fn rmsnorm(x: &Matrix, gain: &[f32], eps: f64) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms: f64 =
+            row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.cols as f64;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for (c, &v) in row.iter().enumerate() {
+            out.data[r * x.cols + c] = (v as f64 * inv) as f32 * gain[c];
+        }
+    }
+    out
+}
+
+/// (cos, sin) tables `[T, hd/2]`, matching the python `rope_tables`.
+pub fn rope_tables(t: usize, hd: usize, theta: f64) -> (Matrix, Matrix) {
+    let half = hd / 2;
+    let mut cos = Matrix::zeros(t, half);
+    let mut sin = Matrix::zeros(t, half);
+    for pos in 0..t {
+        for i in 0..half {
+            let inv = theta.powf(-((2 * i) as f64) / hd as f64);
+            let ang = pos as f64 * inv;
+            *cos.at_mut(pos, i) = ang.cos() as f32;
+            *sin.at_mut(pos, i) = ang.sin() as f32;
+        }
+    }
+    (cos, sin)
+}
+
+/// In-place RoPE on `[T, h*hd]` (pairs (0,1),(2,3),… within each head).
+pub fn apply_rope(x: &mut Matrix, h: usize, hd: usize, cos: &Matrix, sin: &Matrix) {
+    let half = hd / 2;
+    for t in 0..x.rows {
+        for head in 0..h {
+            let base = head * hd;
+            for i in 0..half {
+                let (c, s) = (cos.at(t, i), sin.at(t, i));
+                let a = x.at(t, base + 2 * i);
+                let b = x.at(t, base + 2 * i + 1);
+                *x.at_mut(t, base + 2 * i) = a * c - b * s;
+                *x.at_mut(t, base + 2 * i + 1) = a * s + b * c;
+            }
+        }
+    }
+}
+
+/// Causal softmax attention; q,k,v `[T, h*hd]` -> ctx `[T, h*hd]`.
+pub fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, h: usize, hd: usize) -> Matrix {
+    let t = q.rows;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut ctx = Matrix::zeros(t, h * hd);
+    let mut scores = vec![0.0f64; t];
+    for head in 0..h {
+        let base = head * hd;
+        for qi in 0..t {
+            // scores over keys 0..=qi
+            let qrow = &q.row(qi)[base..base + hd];
+            let mut mx = f64::NEG_INFINITY;
+            for ki in 0..=qi {
+                let krow = &k.row(ki)[base..base + hd];
+                let dot: f64 = qrow
+                    .iter()
+                    .zip(krow)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                scores[ki] = dot * scale;
+                mx = mx.max(scores[ki]);
+            }
+            let mut denom = 0.0f64;
+            for s in scores.iter_mut().take(qi + 1) {
+                *s = (*s - mx).exp();
+                denom += *s;
+            }
+            let out = &mut ctx.row_mut(qi)[base..base + hd];
+            for ki in 0..=qi {
+                let wgt = (scores[ki] / denom) as f32;
+                let vrow = &v.row(ki)[base..base + hd];
+                for (o, &vv) in out.iter_mut().zip(vrow) {
+                    *o += wgt * vv;
+                }
+            }
+        }
+    }
+    ctx
+}
+
+pub fn log_sum_exp(row: &[f32]) -> f64 {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)) as f64;
+    let s: f64 = row.iter().map(|&v| ((v as f64) - mx).exp()).sum();
+    mx + s.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 192,
+            vocab: 128,
+            seq_len: 32,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn forward_shape_and_finite() {
+        let w = Weights::synthetic(&tiny(), 1);
+        let logits = Forward::new(&w).run(&[1, 2, 3, 4, 5]);
+        assert_eq!((logits.rows, logits.cols), (5, 128));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        let w = Weights::synthetic(&tiny(), 2);
+        let l1 = Forward::new(&w).run(&[1, 2, 3, 4, 5, 6]);
+        let l2 = Forward::new(&w).run(&[1, 2, 3, 9, 9, 9]);
+        for c in 0..128 {
+            assert!((l1.at(0, c) - l2.at(0, c)).abs() < 1e-5);
+            assert!((l1.at(2, c) - l2.at(2, c)).abs() < 1e-5);
+        }
+        let diff: f32 = (0..128).map(|c| (l1.at(3, c) - l2.at(3, c)).abs()).sum();
+        assert!(diff > 1e-3);
+    }
+
+    #[test]
+    fn nll_matches_logits() {
+        let w = Weights::synthetic(&tiny(), 3);
+        let toks = [5u32, 7, 11, 13, 17];
+        let nll = Forward::new(&w).nll(&toks);
+        assert_eq!(nll.len(), 4);
+        let logits = Forward::new(&w).run(&toks[..4]);
+        for (i, &expect) in nll.iter().enumerate() {
+            let row = logits.row(i);
+            let got = log_sum_exp(row) - row[toks[i + 1] as usize] as f64;
+            assert!((got - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn activations_collected_for_all_linears() {
+        let cfg = tiny();
+        let w = Weights::synthetic(&cfg, 4);
+        let mut f = Forward::collecting(&w);
+        let _ = f.run(&[1, 2, 3, 4]);
+        let _ = f.run(&[5, 6, 7]);
+        let acts = f.take_activations();
+        assert_eq!(acts.len(), cfg.linear_names().len());
+        let a = &acts["layers.0.wq"];
+        assert_eq!((a.rows, a.cols), (7, 64)); // 4 + 3 positions
+        let d = &acts["layers.1.w_down"];
+        assert_eq!((d.rows, d.cols), (7, 192));
+    }
+
+    #[test]
+    fn rope_identity_at_pos0_and_norm_preserving() {
+        let (cos, sin) = rope_tables(4, 16, 10000.0);
+        let mut rng = crate::util::Pcg32::seeded(5);
+        let mut x = Matrix::randn(4, 64, &mut rng, 1.0);
+        let orig = x.clone();
+        apply_rope(&mut x, 4, 16, &cos, &sin);
+        for c in 0..64 {
+            assert!((x.at(0, c) - orig.at(0, c)).abs() < 1e-6);
+        }
+        for t in 0..4 {
+            let n1: f64 = orig.row(t).iter().map(|&v| (v as f64).powi(2)).sum();
+            let n2: f64 = x.row(t).iter().map(|&v| (v as f64).powi(2)).sum();
+            assert!((n1 - n2).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        // with v = one-hot rows, outputs must be within the simplex hull
+        let t = 5;
+        let (h, hd) = (1, 4);
+        let mut rng = crate::util::Pcg32::seeded(6);
+        let q = Matrix::randn(t, hd, &mut rng, 1.0);
+        let k = Matrix::randn(t, hd, &mut rng, 1.0);
+        let v = Matrix::from_fn(t, hd, |r, c| if c == r % hd { 1.0 } else { 0.0 });
+        let ctx = causal_attention(&q, &k, &v, h, hd);
+        for r in 0..t {
+            let sum: f32 = ctx.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "row {r} sum {sum}");
+            assert!(ctx.row(r).iter().all(|&x| (-1e-6..=1.0 + 1e-6).contains(&x)));
+        }
+        // first row attends only to itself
+        assert!((ctx.at(0, 0) - 1.0).abs() < 1e-6);
+    }
+}

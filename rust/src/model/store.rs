@@ -1,0 +1,168 @@
+//! `.dbw` weight-blob reader/writer — the binary interchange format the
+//! python layer emits (see `python/compile/dbw.py` for the layout spec).
+//!
+//! ```text
+//! magic   : 4 bytes  b"DBW1"
+//! jsonlen : u32 LE
+//! header  : JSON {"config": {...}, "tensors": [{name, dtype,
+//!           shape, offset, nbytes}, ...]}
+//! payload : 64-byte-aligned row-major f32 tensors
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tensor::Matrix;
+use crate::util::Json;
+
+const MAGIC: &[u8; 4] = b"DBW1";
+const ALIGN: usize = 64;
+
+/// A loaded `.dbw` file: config JSON + named tensors.
+pub struct Dbw {
+    pub config: Json,
+    /// name -> (shape, row-major data)
+    pub tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl Dbw {
+    pub fn load(path: impl AsRef<Path>) -> Result<Dbw> {
+        let blob = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        ensure!(blob.len() >= 8, "dbw too short");
+        ensure!(&blob[..4] == MAGIC, "bad magic {:?}", &blob[..4]);
+        let jsonlen = u32::from_le_bytes(blob[4..8].try_into()?) as usize;
+        ensure!(blob.len() >= 8 + jsonlen, "truncated header");
+        let header = Json::parse(std::str::from_utf8(&blob[8..8 + jsonlen])?)?;
+        let base = 8 + jsonlen;
+
+        let mut tensors = BTreeMap::new();
+        for e in header.get("tensors")?.as_arr()? {
+            let name = e.get("name")?.as_str()?.to_string();
+            let dtype = e.get("dtype")?.as_str()?;
+            if dtype != "f32" {
+                bail!("unsupported dtype {dtype} for {name}");
+            }
+            let shape = e.usize_list("shape")?;
+            let offset = e.get("offset")?.as_usize()?;
+            let nbytes = e.get("nbytes")?.as_usize()?;
+            let start = base + offset;
+            ensure!(start + nbytes <= blob.len(), "tensor {name} out of bounds");
+            let n = nbytes / 4;
+            ensure!(
+                n == shape.iter().product::<usize>().max(1),
+                "tensor {name}: shape/byte mismatch"
+            );
+            let mut data = vec![0.0f32; n];
+            for (i, chunk) in blob[start..start + nbytes].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            tensors.insert(name, (shape, data));
+        }
+        Ok(Dbw { config: header.get("config")?.clone(), tensors })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut payload: Vec<u8> = Vec::new();
+        let mut entries = Vec::new();
+        for (name, (shape, data)) in &self.tensors {
+            let pad = (ALIGN - payload.len() % ALIGN) % ALIGN;
+            payload.extend(std::iter::repeat(0u8).take(pad));
+            let offset = payload.len();
+            for v in data {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            entries.push(Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("dtype", Json::str("f32")),
+                ("shape", Json::Arr(shape.iter().map(|&s| Json::num(s as f64)).collect())),
+                ("offset", Json::num(offset as f64)),
+                ("nbytes", Json::num((data.len() * 4) as f64)),
+            ]));
+        }
+        let header = Json::obj(vec![
+            ("config", self.config.clone()),
+            ("tensors", Json::Arr(entries)),
+        ])
+        .to_string();
+
+        let mut f = std::fs::File::create(path.as_ref())?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        f.write_all(&payload)?;
+        Ok(())
+    }
+
+    /// Fetch a 2-D tensor as a Matrix.
+    pub fn matrix(&self, name: &str) -> Result<Matrix> {
+        let (shape, data) = self
+            .tensors
+            .get(name)
+            .with_context(|| format!("missing tensor {name}"))?;
+        ensure!(shape.len() == 2, "{name} is not 2-D: {shape:?}");
+        Ok(Matrix::from_vec(shape[0], shape[1], data.clone()))
+    }
+
+    /// Fetch a 1-D tensor.
+    pub fn vector(&self, name: &str) -> Result<Vec<f32>> {
+        let (shape, data) = self
+            .tensors
+            .get(name)
+            .with_context(|| format!("missing tensor {name}"))?;
+        ensure!(shape.len() == 1, "{name} is not 1-D: {shape:?}");
+        Ok(data.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dbllm_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut tensors = BTreeMap::new();
+        tensors.insert("a".to_string(), (vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        tensors.insert("b.v".to_string(), (vec![4], vec![0.5; 4]));
+        let dbw = Dbw {
+            config: Json::obj(vec![("tag", Json::str("t")), ("n", Json::num(2.0))]),
+            tensors,
+        };
+        let p = tmp("roundtrip.dbw");
+        dbw.save(&p).unwrap();
+        let back = Dbw::load(&p).unwrap();
+        assert_eq!(back.config.get("tag").unwrap().as_str().unwrap(), "t");
+        let m = back.matrix("a").unwrap();
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert_eq!(m.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(back.vector("b.v").unwrap(), vec![0.5; 4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad.dbw");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(Dbw::load(&p).is_err());
+    }
+
+    #[test]
+    fn matrix_rejects_1d() {
+        let mut tensors = BTreeMap::new();
+        tensors.insert("v".to_string(), (vec![4], vec![0.0; 4]));
+        let dbw = Dbw { config: Json::Null, tensors };
+        let p = tmp("dim.dbw");
+        dbw.save(&p).unwrap();
+        let back = Dbw::load(&p).unwrap();
+        assert!(back.matrix("v").is_err());
+        assert!(back.vector("v").is_ok());
+    }
+}

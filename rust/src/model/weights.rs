@@ -1,0 +1,184 @@
+//! In-memory parameter set for one model: embeddings/norms/head plus the
+//! quantizable linears, with helpers to swap quantized linears in and to
+//! marshal the flat, manifest-ordered parameter list the AOT
+//! executables expect.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Matrix;
+use crate::util::Pcg32;
+
+use super::{Dbw, ModelConfig};
+
+/// All parameters of one model, keyed by canonical name.
+#[derive(Clone)]
+pub struct Weights {
+    pub config: ModelConfig,
+    /// 2-D params ([in, out] linears + tok_emb [V,d] + head [d,V]).
+    pub mats: BTreeMap<String, Matrix>,
+    /// 1-D params (rmsnorm gains).
+    pub vecs: BTreeMap<String, Vec<f32>>,
+}
+
+impl Weights {
+    /// Load a teacher checkpoint written by the python layer.
+    pub fn from_dbw(dbw: &Dbw, config: ModelConfig) -> Result<Weights> {
+        let mut mats = BTreeMap::new();
+        let mut vecs = BTreeMap::new();
+        for name in config.param_names() {
+            let (shape, _) = dbw
+                .tensors
+                .get(&name)
+                .with_context(|| format!("checkpoint missing {name}"))?;
+            if shape.len() == 2 {
+                mats.insert(name.clone(), dbw.matrix(&name)?);
+            } else {
+                vecs.insert(name.clone(), dbw.vector(&name)?);
+            }
+        }
+        Ok(Weights { config, mats, vecs })
+    }
+
+    pub fn mat(&self, name: &str) -> &Matrix {
+        &self.mats[name]
+    }
+
+    pub fn vec(&self, name: &str) -> &[f32] {
+        &self.vecs[name]
+    }
+
+    /// Replace one linear's weights (after quantization).
+    pub fn set_linear(&mut self, name: &str, w: Matrix) {
+        let old = self.mats.get(name).expect("unknown linear");
+        assert_eq!((old.rows, old.cols), (w.rows, w.cols), "{name} shape change");
+        self.mats.insert(name.to_string(), w);
+    }
+
+    /// Clone with every quantizable linear replaced via `f(name, w)`.
+    pub fn map_linears(&self, mut f: impl FnMut(&str, &Matrix) -> Matrix) -> Weights {
+        let mut out = self.clone();
+        for name in self.config.linear_names() {
+            let w = f(&name, &self.mats[&name]);
+            out.set_linear(&name, w);
+        }
+        out
+    }
+
+    /// Flat (data, dims) list in `param_names` order — exactly the
+    /// positional arguments of `fwd_logits_*` / `fwd_nll_*`.
+    pub fn flat_params(&self) -> Vec<(Vec<f32>, Vec<i64>)> {
+        self.config
+            .param_names()
+            .iter()
+            .map(|name| {
+                if let Some(m) = self.mats.get(name) {
+                    (m.data.clone(), vec![m.rows as i64, m.cols as i64])
+                } else {
+                    let v = &self.vecs[name];
+                    (v.clone(), vec![v.len() as i64])
+                }
+            })
+            .collect()
+    }
+
+    /// Gaussian-initialized weights (tests + benches; teachers come from
+    /// `.dbw` checkpoints).
+    pub fn synthetic(config: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = Pcg32::seeded(seed);
+        let mut mats = BTreeMap::new();
+        let mut vecs = BTreeMap::new();
+        mats.insert(
+            "tok_emb".into(),
+            Matrix::randn(config.vocab, config.d_model, &mut rng, 0.05),
+        );
+        mats.insert(
+            "head".into(),
+            Matrix::randn(config.d_model, config.vocab, &mut rng, 0.05),
+        );
+        vecs.insert("final_norm".into(), vec![1.0; config.d_model]);
+        for i in 0..config.n_layers {
+            vecs.insert(format!("layers.{i}.attn_norm"), vec![1.0; config.d_model]);
+            vecs.insert(format!("layers.{i}.mlp_norm"), vec![1.0; config.d_model]);
+        }
+        for name in config.linear_names() {
+            let (din, dout) = config.linear_shape(&name);
+            mats.insert(name, Matrix::randn(din, dout, &mut rng, 0.05));
+        }
+        Weights { config: config.clone(), mats, vecs }
+    }
+
+    /// Mean/std of all linear weights (weight-distribution sanity stats).
+    pub fn linear_stats(&self) -> (f64, f64) {
+        let mut n = 0usize;
+        let mut mean = 0.0f64;
+        for name in self.config.linear_names() {
+            let m = &self.mats[&name];
+            mean += m.data.iter().map(|&x| x as f64).sum::<f64>();
+            n += m.data.len();
+        }
+        mean /= n as f64;
+        let mut var = 0.0f64;
+        for name in self.config.linear_names() {
+            for &x in &self.mats[&name].data {
+                var += (x as f64 - mean).powi(2);
+            }
+        }
+        (mean, (var / n as f64).sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic(config: &ModelConfig, seed: u64) -> Weights {
+        Weights::synthetic(config, seed)
+    }
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 192,
+            vocab: 128,
+            seq_len: 32,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn flat_params_order_and_shapes() {
+        let cfg = tiny();
+        let w = synthetic(&cfg, 1);
+        let flat = w.flat_params();
+        let names = cfg.param_names();
+        assert_eq!(flat.len(), names.len());
+        assert_eq!(flat[0].1, vec![128, 64]); // tok_emb
+        assert_eq!(flat[1].1, vec![64]); // attn_norm
+        assert_eq!(flat.last().unwrap().1, vec![64, 128]); // head
+    }
+
+    #[test]
+    fn map_linears_touches_only_linears() {
+        let cfg = tiny();
+        let w = synthetic(&cfg, 2);
+        let zeroed = w.map_linears(|_, m| Matrix::zeros(m.rows, m.cols));
+        for name in cfg.linear_names() {
+            assert!(zeroed.mat(&name).data.iter().all(|&v| v == 0.0));
+        }
+        assert_eq!(zeroed.mat("tok_emb").data, w.mat("tok_emb").data);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape change")]
+    fn set_linear_rejects_shape_change() {
+        let cfg = tiny();
+        let mut w = synthetic(&cfg, 3);
+        w.set_linear("layers.0.wq", Matrix::zeros(2, 2));
+    }
+}

@@ -1,0 +1,180 @@
+//! AWQ (Lin et al., 2023): activation-aware weight quantization.
+//!
+//! Salient weight channels (identified by mean activation magnitude) are
+//! protected by a per-in-channel equivalent scaling  w' = w·s,
+//! x' = x/s with s = (mean|x|)^β, β grid-searched to minimize the layer
+//! output MSE on the calibration sample; a per-group max-clip search
+//! then shrinks the quantization grid.  Matches the published method's
+//! two searches (scale + clip) for the weight-only setting.
+
+use super::rtn::Rtn;
+use super::{scale_overhead_bits, Calib, Quantized, Quantizer};
+use crate::tensor::Matrix;
+
+pub struct Awq {
+    pub bits: u32,
+    pub group: usize,
+    /// β grid resolution (reference uses 20 points on [0,1]).
+    pub beta_steps: usize,
+    /// clip-search grid (fractions of max kept).
+    pub clip_grid: Vec<f32>,
+}
+
+impl Awq {
+    pub fn new(bits: u32, group: usize) -> Self {
+        Awq {
+            bits,
+            group,
+            beta_steps: 10,
+            clip_grid: vec![1.0, 0.95, 0.9, 0.85, 0.8, 0.7],
+        }
+    }
+
+    /// Quantize `w` with per-channel scaling `s` applied then undone.
+    fn quantize_scaled(&self, w: &Matrix, s: &[f32], clip: f32) -> Matrix {
+        let mut scaled = w.clone();
+        for r in 0..w.rows {
+            let f = s[r];
+            for v in scaled.row_mut(r) {
+                *v *= f;
+            }
+        }
+        let w_hat_scaled = rtn_clip(&scaled, self.bits, self.group, clip);
+        let mut out = w_hat_scaled;
+        for r in 0..w.rows {
+            let f = s[r];
+            for v in out.row_mut(r) {
+                *v /= f;
+            }
+        }
+        out
+    }
+}
+
+/// RTN with the group max shrunk by `clip` before the grid is built.
+fn rtn_clip(w: &Matrix, bits: u32, group: usize, clip: f32) -> Matrix {
+    if clip >= 1.0 {
+        return Rtn::new(bits, group).quantize_with_scales(w).0;
+    }
+    let qmax = (1 << (bits - 1)) as f32 - 1.0;
+    let qmin = -((1 << (bits - 1)) as f32);
+    let mut out = Matrix::zeros(w.rows, w.cols);
+    for c in 0..w.cols {
+        for g in 0..w.rows / group {
+            let range = g * group..(g + 1) * group;
+            let mut mx = 0.0f32;
+            for r in range.clone() {
+                mx = mx.max(w.at(r, c).abs());
+            }
+            let s = (clip * mx / (1 << (bits - 1)) as f32).max(1e-8);
+            for r in range {
+                *out.at_mut(r, c) = (w.at(r, c) / s).round().clamp(qmin, qmax) * s;
+            }
+        }
+    }
+    out
+}
+
+impl Quantizer for Awq {
+    fn name(&self) -> String {
+        format!("AWQ-W{}", self.bits)
+    }
+
+    fn quantize(&self, w: &Matrix, calib: &Calib) -> Quantized {
+        let bits = self.bits as f64 + scale_overhead_bits(self.group);
+        if calib.is_empty() {
+            let w_hat = Rtn::new(self.bits, self.group).quantize_with_scales(w).0;
+            return Quantized { w_hat, bits_per_weight: bits, method: self.name(), fdb: None };
+        }
+        // the β/clip search only needs a small activation sample; the
+        // full calib set would make the 60-point grid quadratic in cost
+        let search = calib.subsample(128);
+        let chan = calib.chan_abs_mean();
+        // normalize so the geometric mean of s is ~1 (keeps scales sane)
+        let mean: f32 = chan.iter().map(|c| c.max(1e-6)).sum::<f32>() / chan.len() as f32;
+
+        let mut best: Option<(f64, Matrix)> = None;
+        for bi in 0..=self.beta_steps {
+            let beta = bi as f32 / self.beta_steps as f32;
+            let s: Vec<f32> = chan
+                .iter()
+                .map(|&c| (c.max(1e-6) / mean).powf(beta).clamp(1e-4, 1e4))
+                .collect();
+            for &clip in &self.clip_grid {
+                let w_hat = self.quantize_scaled(w, &s, clip);
+                let mse = search.output_mse(w, &w_hat);
+                if best.as_ref().map_or(true, |(b, _)| mse < *b) {
+                    best = Some((mse, w_hat));
+                }
+            }
+        }
+        Quantized {
+            w_hat: best.unwrap().1,
+            bits_per_weight: bits,
+            method: self.name(),
+            fdb: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Pcg32};
+
+    #[test]
+    fn awq_beats_rtn_with_skewed_activations() {
+        // AWQ's advantage appears when some in-channels carry much larger
+        // activations — exactly the salient-channel story of the paper.
+        prop::check(6, |rng| {
+            let din = 128;
+            let dout = 16;
+            let w = Matrix::randn(din, dout, rng, 1.0);
+            let mut x = Matrix::randn(192, din, rng, 1.0);
+            // make 8 channels hot
+            for r in 0..x.rows {
+                for c in 0..8 {
+                    *x.at_mut(r, c) *= 16.0;
+                }
+            }
+            let calib = Calib::new(x);
+            let a = Awq::new(2, 64).quantize(&w, &calib);
+            let r2 = Rtn::new(2, 64).quantize(&w, &calib);
+            let mse_a = calib.output_mse(&w, &a.w_hat);
+            let mse_r = calib.output_mse(&w, &r2.w_hat);
+            assert!(mse_a <= mse_r * 1.001, "awq {mse_a:.4e} rtn {mse_r:.4e}");
+        });
+    }
+
+    #[test]
+    fn beta_zero_clip_one_included() {
+        // the search space must contain plain RTN, so AWQ can never be
+        // (meaningfully) worse than RTN on the calibration loss
+        let mut rng = Pcg32::seeded(31);
+        let w = Matrix::randn(64, 8, &mut rng, 1.0);
+        let calib = Calib::new(Matrix::randn(64, 64, &mut rng, 1.0));
+        let a = Awq::new(2, 64).quantize(&w, &calib);
+        let r = Rtn::new(2, 64).quantize(&w, &calib);
+        assert!(
+            calib.output_mse(&w, &a.w_hat) <= calib.output_mse(&w, &r.w_hat) + 1e-9
+        );
+    }
+
+    #[test]
+    fn awq_empty_calib_is_rtn() {
+        let mut rng = Pcg32::seeded(32);
+        let w = Matrix::randn(64, 8, &mut rng, 1.0);
+        let a = Awq::new(2, 64).quantize(&w, &Calib::empty(64));
+        let r = Rtn::new(2, 64).quantize(&w, &Calib::empty(64));
+        assert_eq!(a.w_hat.data, r.w_hat.data);
+    }
+
+    #[test]
+    fn rtn_clip_shrinks_grid() {
+        let mut rng = Pcg32::seeded(33);
+        let w = Matrix::randn(64, 4, &mut rng, 1.0);
+        let clipped = rtn_clip(&w, 2, 64, 0.5);
+        let full = rtn_clip(&w, 2, 64, 1.0);
+        assert!(clipped.abs_max() <= full.abs_max());
+    }
+}

@@ -1,0 +1,142 @@
+//! Calibration context: a sample of a layer's input activations plus the
+//! derived statistics the optimization-based quantizers need (Hessian for
+//! GPTQ, per-channel magnitudes for AWQ/PB-LLM, output-MSE probes for
+//! AWQ/OmniQuant search loops).
+
+use crate::tensor::{linalg, Matrix};
+
+/// Activation sample for one linear layer: `x` is `[n_samples, in]`.
+pub struct Calib {
+    pub x: Matrix,
+}
+
+impl Calib {
+    pub fn new(x: Matrix) -> Self {
+        Calib { x }
+    }
+
+    /// Data-free placeholder (RTN and friends don't look at activations).
+    pub fn empty(din: usize) -> Self {
+        Calib { x: Matrix::zeros(0, din) }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.rows == 0
+    }
+
+    pub fn din(&self) -> usize {
+        self.x.cols
+    }
+
+    /// GPTQ Hessian H = 2·XᵀX, `[in, in]`.
+    pub fn hessian(&self) -> Matrix {
+        let xt = self.x.t();
+        xt.matmul(&self.x).scale(2.0)
+    }
+
+    /// Dampened upper Cholesky factor of H⁻¹ (GPTQ's walk order).
+    pub fn hessian_inv_chol(&self, lambda: f64) -> anyhow::Result<Matrix> {
+        let mut h = self.hessian();
+        linalg::dampen(&mut h, lambda);
+        linalg::cholesky_inverse_upper(&h)
+    }
+
+    /// Per-in-channel mean |x| (AWQ's activation-awareness signal).
+    pub fn chan_abs_mean(&self) -> Vec<f32> {
+        let n = self.x.rows.max(1) as f64;
+        let mut acc = vec![0.0f64; self.x.cols];
+        for r in 0..self.x.rows {
+            for (c, &v) in self.x.row(r).iter().enumerate() {
+                acc[c] += v.abs() as f64;
+            }
+        }
+        acc.into_iter().map(|a| (a / n) as f32).collect()
+    }
+
+    /// Mean squared error between `X·w_ref` and `X·w_hat` — the proxy
+    /// loss every output-aware search (AWQ, OmniQuant, Fig. 3/4 grids)
+    /// minimizes.
+    pub fn output_mse(&self, w_ref: &Matrix, w_hat: &Matrix) -> f64 {
+        if self.is_empty() {
+            // fall back to weight MSE when no activations are available
+            return w_ref.mse(w_hat);
+        }
+        let y_ref = self.x.matmul(w_ref);
+        let y_hat = self.x.matmul(w_hat);
+        y_ref.mse(&y_hat)
+    }
+
+    /// Subsample rows to at most `n` (deterministic stride) to bound the
+    /// cost of Hessian/search loops.
+    pub fn subsample(&self, n: usize) -> Calib {
+        if self.x.rows <= n {
+            return Calib { x: self.x.clone() };
+        }
+        let stride = self.x.rows as f64 / n as f64;
+        let mut m = Matrix::zeros(n, self.x.cols);
+        for i in 0..n {
+            let src = (i as f64 * stride) as usize;
+            m.row_mut(i).copy_from_slice(self.x.row(src));
+        }
+        Calib { x: m }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Pcg32};
+
+    #[test]
+    fn hessian_is_symmetric_psd() {
+        prop::check(10, |rng| {
+            let n = rng.range(4, 32);
+            let d = rng.range(2, 12);
+            let x = Matrix::randn(n, d, rng, 1.0);
+            let h = Calib::new(x).hessian();
+            for r in 0..d {
+                for c in 0..d {
+                    assert!((h.at(r, c) - h.at(c, r)).abs() < 1e-3);
+                }
+                assert!(h.at(r, r) >= -1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn output_mse_zero_for_identical() {
+        let mut rng = Pcg32::seeded(3);
+        let x = Matrix::randn(16, 8, &mut rng, 1.0);
+        let w = Matrix::randn(8, 4, &mut rng, 1.0);
+        let c = Calib::new(x);
+        assert_eq!(c.output_mse(&w, &w), 0.0);
+        let w2 = w.scale(1.1);
+        assert!(c.output_mse(&w, &w2) > 0.0);
+    }
+
+    #[test]
+    fn chan_abs_mean_known() {
+        let x = Matrix::from_vec(2, 2, vec![1.0, -2.0, 3.0, 2.0]);
+        let m = Calib::new(x).chan_abs_mean();
+        assert_eq!(m, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn subsample_bounds_rows() {
+        let mut rng = Pcg32::seeded(4);
+        let x = Matrix::randn(100, 4, &mut rng, 1.0);
+        let c = Calib::new(x).subsample(10);
+        assert_eq!(c.x.rows, 10);
+        let small = Calib::new(Matrix::randn(5, 4, &mut rng, 1.0)).subsample(10);
+        assert_eq!(small.x.rows, 5);
+    }
+
+    #[test]
+    fn empty_calib_falls_back_to_weight_mse() {
+        let mut rng = Pcg32::seeded(5);
+        let w = Matrix::randn(8, 4, &mut rng, 1.0);
+        let w2 = w.scale(0.9);
+        let c = Calib::empty(8);
+        assert!((c.output_mse(&w, &w2) - w.mse(&w2)).abs() < 1e-12);
+    }
+}

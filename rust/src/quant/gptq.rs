@@ -1,0 +1,182 @@
+//! GPTQ (Frantar et al., 2022): layer-wise optimal brain quantization
+//! with second-order error compensation.
+//!
+//! Faithful to the reference algorithm: Hessian H = 2XᵀX from the
+//! calibration activations, dampened, inverted via Cholesky; weights are
+//! quantized one *in-row* at a time in natural order, and the rounding
+//! error of row j is propagated into the not-yet-quantized rows through
+//! the upper Cholesky factor U of H⁻¹ (out-columns are independent and
+//! vectorized).  Group scales are (re)computed from the *updated*
+//! weights at each group boundary, exactly like `gptq`'s grouped mode.
+
+use super::{scale_overhead_bits, Calib, Quantized, Quantizer};
+use crate::tensor::Matrix;
+
+pub struct Gptq {
+    pub bits: u32,
+    pub group: usize,
+    /// Dampening fraction λ of mean diag (reference default 0.01).
+    pub damp: f64,
+}
+
+impl Gptq {
+    pub fn new(bits: u32, group: usize) -> Self {
+        Gptq { bits, group, damp: 0.01 }
+    }
+}
+
+impl Quantizer for Gptq {
+    fn name(&self) -> String {
+        format!("GPTQ-W{}", self.bits)
+    }
+
+    fn quantize(&self, w: &Matrix, calib: &Calib) -> Quantized {
+        let bits = self.bits as f64 + scale_overhead_bits(self.group);
+        // No calibration data -> degrade gracefully to RTN.
+        let u = if calib.is_empty() {
+            None
+        } else {
+            calib.hessian_inv_chol(self.damp).ok()
+        };
+        let w_hat = match u {
+            Some(u) => gptq_core(w, &u, self.bits, self.group),
+            None => super::rtn::Rtn::new(self.bits, self.group).quantize_with_scales(w).0,
+        };
+        Quantized { w_hat, bits_per_weight: bits, method: self.name(), fdb: None }
+    }
+}
+
+/// The OBQ loop.  `w` is `[in, out]`; `u` is the upper Cholesky factor of
+/// the dampened H⁻¹, `[in, in]`.
+fn gptq_core(w: &Matrix, u: &Matrix, bits: u32, group: usize) -> Matrix {
+    let (din, dout) = (w.rows, w.cols);
+    let qmax = if bits == 1 { 0.0 } else { (1 << (bits - 1)) as f32 - 1.0 };
+    let qmin = if bits == 1 { 0.0 } else { -((1 << (bits - 1)) as f32) };
+
+    let mut work = w.clone(); // updated in place by error propagation
+    let mut w_hat = Matrix::zeros(din, dout);
+    let mut scales = vec![0.0f32; dout]; // current group's scale per column
+
+    for r in 0..din {
+        // recompute scales at group boundaries from the *updated* weights
+        if r % group == 0 {
+            let end = (r + group).min(din);
+            for c in 0..dout {
+                if bits == 1 {
+                    let mut acc = 0.0f64;
+                    for rr in r..end {
+                        acc += work.at(rr, c).abs() as f64;
+                    }
+                    scales[c] = ((acc / (end - r) as f64) as f32).max(1e-8);
+                } else {
+                    let mut mx = 0.0f32;
+                    for rr in r..end {
+                        mx = mx.max(work.at(rr, c).abs());
+                    }
+                    scales[c] = (mx / (1 << (bits - 1)) as f32).max(1e-8);
+                }
+            }
+        }
+
+        let d = u.at(r, r).max(1e-10);
+        for c in 0..dout {
+            let v = work.at(r, c);
+            let q = if bits == 1 {
+                if v >= 0.0 {
+                    scales[c]
+                } else {
+                    -scales[c]
+                }
+            } else {
+                (v / scales[c]).round().clamp(qmin, qmax) * scales[c]
+            };
+            *w_hat.at_mut(r, c) = q;
+            // propagate the normalized error into the remaining rows
+            let err = (v - q) / d;
+            for rr in r + 1..din {
+                let urr = u.at(r, rr);
+                if urr != 0.0 {
+                    *work.at_mut(rr, c) -= err * urr;
+                }
+            }
+        }
+    }
+    w_hat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::Rtn;
+    use crate::util::{prop, Pcg32};
+
+    fn calib(rng: &mut Pcg32, n: usize, din: usize) -> Calib {
+        Calib::new(Matrix::randn(n, din, rng, 1.0))
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_output_mse() {
+        // the whole point of second-order compensation
+        prop::check(8, |rng| {
+            let din = 64 * rng.range(1, 3);
+            let dout = rng.range(4, 24);
+            let w = Matrix::randn(din, dout, rng, 1.0);
+            let c = calib(rng, 256, din);
+            let g = Gptq::new(2, 64).quantize(&w, &c);
+            let r = Rtn::new(2, 64).quantize(&w, &c);
+            let mse_g = c.output_mse(&w, &g.w_hat);
+            let mse_r = c.output_mse(&w, &r.w_hat);
+            assert!(
+                mse_g <= mse_r * 1.02 + 1e-9,
+                "gptq {mse_g:.5e} vs rtn {mse_r:.5e}"
+            );
+        });
+    }
+
+    #[test]
+    fn gptq_values_on_group_grid() {
+        let mut rng = Pcg32::seeded(21);
+        let w = Matrix::randn(128, 8, &mut rng, 1.0);
+        let c = calib(&mut rng, 128, 128);
+        let q = Gptq::new(2, 64).quantize(&w, &c);
+        // every output value must be an integer multiple of *some* scale
+        // <= the max level; verify per group by reconstructing the scale
+        for col in 0..8 {
+            for g in 0..2 {
+                let vals: Vec<f32> = (g * 64..(g + 1) * 64).map(|r| q.w_hat.at(r, col)).collect();
+                let s = vals
+                    .iter()
+                    .filter(|v| **v != 0.0)
+                    .map(|v| v.abs())
+                    .fold(f32::INFINITY, f32::min);
+                if !s.is_finite() {
+                    continue; // all-zero group
+                }
+                for v in vals {
+                    let q = v / s;
+                    assert!((q.round() - q).abs() < 1e-3, "{v} not multiple of {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_without_calib_equals_rtn() {
+        let mut rng = Pcg32::seeded(22);
+        let w = Matrix::randn(64, 8, &mut rng, 1.0);
+        let empty = Calib::empty(64);
+        let g = Gptq::new(2, 64).quantize(&w, &empty);
+        let r = Rtn::new(2, 64).quantize(&w, &empty);
+        assert_eq!(g.w_hat.data, r.w_hat.data);
+    }
+
+    #[test]
+    fn gptq_3bit_better_than_2bit() {
+        let mut rng = Pcg32::seeded(23);
+        let w = Matrix::randn(128, 16, &mut rng, 1.0);
+        let c = calib(&mut rng, 256, 128);
+        let e2 = c.output_mse(&w, &Gptq::new(2, 64).quantize(&w, &c).w_hat);
+        let e3 = c.output_mse(&w, &Gptq::new(3, 64).quantize(&w, &c).w_hat);
+        assert!(e3 < e2);
+    }
+}

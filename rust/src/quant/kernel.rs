@@ -1,0 +1,212 @@
+//! Optimized execution forms of the FDB layer (§Perf L3 iteration log —
+//! see EXPERIMENTS.md §Perf for the measured ladder):
+//!
+//!   v0  `FdbLinear::matvec`     — per-bit trailing_zeros walk (baseline)
+//!   v1  `bit_dot_bytes`         — byte-granular zero skipping
+//!   v2  `FdbExec` (this file)   — the packed planes are *decoded once
+//!       per layer load* into a CSC level stream (storage on disk stays
+//!       2 bits/weight; this is a runtime cache, like a dequant kernel's
+//!       shared-memory staging), and the matmul runs column-major with
+//!       the batch dimension innermost so every nonzero level touches
+//!       `m` contiguous activations — the CPU analogue of the paper's
+//!       "two binary matmuls feeding one accumulator".
+
+use super::fdb::FdbLinear;
+use super::packing::WORD_BITS;
+use crate::tensor::Matrix;
+
+/// Compiled FDB layer: combined-level CSC.
+pub struct FdbExec {
+    pub din: usize,
+    pub dout: usize,
+    /// column start offsets into (row_idx, val), length dout+1
+    col_ptr: Vec<u32>,
+    row_idx: Vec<u16>,
+    val: Vec<f32>,
+    /// fraction of weights with a non-zero level (work density)
+    pub level_density: f64,
+}
+
+impl FdbExec {
+    /// Decode the dual planes into the execution form.  Levels are
+    /// α₁·b1 + α₂·b2 per element; zeros (the majority, Table 6) are
+    /// dropped entirely.
+    pub fn compile(layer: &FdbLinear) -> FdbExec {
+        assert!(layer.din <= u16::MAX as usize + 1, "row index overflows u16");
+        let words_per_col = layer.din / WORD_BITS;
+        let mut col_ptr = Vec::with_capacity(layer.dout + 1);
+        let mut row_idx = Vec::new();
+        let mut val = Vec::new();
+        col_ptr.push(0u32);
+        for c in 0..layer.dout {
+            for wi in 0..words_per_col {
+                let w1 = layer.b1.words[c * words_per_col + wi];
+                let w2 = layer.b2.words[c * words_per_col + wi];
+                let mut any = w1 | w2;
+                let base = wi * WORD_BITS;
+                let sg = base / layer.group;
+                let (a1, a2) = (layer.a1.at(sg, c), layer.a2.at(sg, c));
+                while any != 0 {
+                    let k = any.trailing_zeros() as usize;
+                    let bit = 1u64 << k;
+                    let mut v = 0.0f32;
+                    if w1 & bit != 0 {
+                        v += a1;
+                    }
+                    if w2 & bit != 0 {
+                        v += a2;
+                    }
+                    if v != 0.0 {
+                        row_idx.push((base + k) as u16);
+                        val.push(v);
+                    }
+                    any &= any - 1;
+                }
+            }
+            col_ptr.push(row_idx.len() as u32);
+        }
+        let level_density = row_idx.len() as f64 / (layer.din * layer.dout) as f64;
+        FdbExec { din: layer.din, dout: layer.dout, col_ptr, row_idx, val, level_density }
+    }
+
+    /// y = x·Ŵ with x `[m, din]` row-major -> y `[m, dout]`.
+    ///
+    /// Internally transposes x so the batch is contiguous: each nonzero
+    /// level performs `m` sequential FMAs — auto-vectorizable.
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.din);
+        let m = x.rows;
+        // xt[k*m + r] = x[r, k]
+        let mut xt = vec![0.0f32; self.din * m];
+        for r in 0..m {
+            let row = x.row(r);
+            for k in 0..self.din {
+                xt[k * m + r] = row[k];
+            }
+        }
+        let mut yt = vec![0.0f32; self.dout * m];
+        for c in 0..self.dout {
+            let s = self.col_ptr[c] as usize;
+            let e = self.col_ptr[c + 1] as usize;
+            let acc = &mut yt[c * m..(c + 1) * m];
+            for i in s..e {
+                let k = self.row_idx[i] as usize;
+                let v = self.val[i];
+                let src = &xt[k * m..k * m + m];
+                for (a, &xv) in acc.iter_mut().zip(src) {
+                    *a += v * xv;
+                }
+            }
+        }
+        // transpose back
+        let mut y = Matrix::zeros(m, self.dout);
+        for c in 0..self.dout {
+            for r in 0..m {
+                y.data[r * self.dout + c] = yt[c * m + r];
+            }
+        }
+        y
+    }
+
+    /// Single-vector product (decode-cached v2 path).
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.din);
+        for c in 0..self.dout {
+            let s = self.col_ptr[c] as usize;
+            let e = self.col_ptr[c + 1] as usize;
+            let mut acc = 0.0f32;
+            for i in s..e {
+                acc += self.val[i] * x[self.row_idx[i] as usize];
+            }
+            y[c] = acc;
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+}
+
+/// v1 inner kernel: byte-granular skip before the bit walk — zero bytes
+/// of the mask cost one branch instead of up to 8 dependent pops.
+#[inline]
+pub fn bit_dot_bytes(word: u64, xs: &[f32]) -> f32 {
+    debug_assert_eq!(xs.len(), WORD_BITS);
+    let mut acc = 0.0f32;
+    let mut w = word;
+    while w != 0 {
+        let byte_i = (w.trailing_zeros() / 8) as usize;
+        let mut m = ((word >> (8 * byte_i)) & 0xff) as u8;
+        let base = 8 * byte_i;
+        while m != 0 {
+            let k = m.trailing_zeros() as usize;
+            acc += xs[base + k];
+            m &= m - 1;
+        }
+        w &= !(0xffu64 << (8 * byte_i));
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fdb::bit_dot;
+    use crate::util::{prop, Pcg32};
+
+    #[test]
+    fn bit_dot_bytes_matches_bit_dot() {
+        prop::check(30, |rng| {
+            let xs: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+            let word = rng.next_u64() & rng.next_u64(); // ~25% density
+            let a = bit_dot(word, &xs);
+            let b = bit_dot_bytes(word, &xs);
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        });
+    }
+
+    #[test]
+    fn exec_matches_reference_matmul() {
+        prop::check(12, |rng| {
+            let din = 64 * rng.range(1, 5);
+            let dout = rng.range(1, 48);
+            let w = Matrix::randn(din, dout, rng, 1.0);
+            let layer = FdbLinear::from_weights(&w, 64);
+            let exec = FdbExec::compile(&layer);
+            let x = Matrix::randn(rng.range(1, 9), din, rng, 1.0);
+            let y_exec = exec.matmul(&x);
+            let y_ref = x.matmul(&layer.dequant());
+            for (a, b) in y_exec.data.iter().zip(&y_ref.data) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn exec_matvec_matches_matmul() {
+        let mut rng = Pcg32::seeded(77);
+        let w = Matrix::randn(128, 32, &mut rng, 1.0);
+        let layer = FdbLinear::from_weights(&w, 64);
+        let exec = FdbExec::compile(&layer);
+        let x = Matrix::randn(1, 128, &mut rng, 1.0);
+        let mut y = vec![0.0f32; 32];
+        exec.matvec(x.row(0), &mut y);
+        let y2 = exec.matmul(&x);
+        for (a, b) in y.iter().zip(&y2.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn exec_density_matches_level_sparsity() {
+        let mut rng = Pcg32::seeded(78);
+        let w = Matrix::randn(512, 64, &mut rng, 1.0);
+        let layer = FdbLinear::from_weights(&w, 64);
+        let exec = FdbExec::compile(&layer);
+        // nnz fraction == fraction of non-zero dequant levels
+        let wh = layer.dequant();
+        let nz = wh.data.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(exec.nnz(), nz);
+        assert!((exec.level_density - nz as f64 / wh.data.len() as f64).abs() < 1e-12);
+    }
+}

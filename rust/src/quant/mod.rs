@@ -1,0 +1,86 @@
+//! The quantization engine: the paper's FDB contribution plus every
+//! baseline it compares against (RTN, GPTQ, AWQ, OmniQuant-style LWC,
+//! PB-LLM), all sharing one per-group grid convention.
+//!
+//! Conventions (identical to the python layer):
+//! * linear weights are `[in, out]` matrices (`y = x @ W`),
+//! * quantization groups tile the *in* dimension (`group_size` = 64 by
+//!   default, the paper's W2A16 g64 headline setting),
+//! * per-group scales have shape `[in/group, out]`.
+
+pub mod awq;
+pub mod calib;
+pub mod fdb;
+pub mod gptq;
+pub mod kernel;
+pub mod grid;
+pub mod omniquant;
+pub mod packing;
+pub mod pbllm;
+pub mod rtn;
+
+use crate::tensor::Matrix;
+
+pub use calib::Calib;
+pub use fdb::FdbLinear;
+
+/// Default group size (paper: W2A16 with group 64).
+pub const GROUP_SIZE: usize = 64;
+
+/// Result of quantizing one linear layer.
+pub struct Quantized {
+    /// Dequantized weights (what the XLA forward consumes).
+    pub w_hat: Matrix,
+    /// Nominal storage bits per weight (scales amortized over the group).
+    pub bits_per_weight: f64,
+    /// Method label for reporting.
+    pub method: String,
+    /// The packed dual-binary form (FDB only) — feeds the bit-serial
+    /// runtime path and the codec.
+    pub fdb: Option<FdbLinear>,
+}
+
+/// A weight-only quantization method.
+pub trait Quantizer {
+    fn name(&self) -> String;
+    /// Quantize one `[in, out]` linear. `calib` carries this layer's
+    /// activation sample (may be empty for data-free methods like RTN).
+    fn quantize(&self, w: &Matrix, calib: &Calib) -> Quantized;
+}
+
+/// Per-group scale storage overhead in bits/weight (one f16 scale per
+/// `group` weights — matches how GPTQ/AWQ/OmniQuant report group-wise
+/// quantization cost).
+pub fn scale_overhead_bits(group: usize) -> f64 {
+    16.0 / group as f64
+}
+
+/// Split a `[in, out]` matrix view into (group index, rows-range) pairs.
+pub fn group_ranges(din: usize, group: usize) -> Vec<(usize, std::ops::Range<usize>)> {
+    assert!(din % group == 0, "group {group} must divide in-dim {din}");
+    (0..din / group).map(|g| (g, g * group..(g + 1) * group)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_ranges_tile_exactly() {
+        let r = group_ranges(192, 64);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[0].1, 0..64);
+        assert_eq!(r[2].1, 128..192);
+    }
+
+    #[test]
+    #[should_panic]
+    fn group_ranges_reject_misaligned() {
+        group_ranges(100, 64);
+    }
+
+    #[test]
+    fn scale_overhead() {
+        assert!((scale_overhead_bits(64) - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,146 @@
+//! Bit-plane packing: one {0,1} plane of a `[in, out]` linear packed as
+//! u64 words.  With the default group size of 64, **one group of one
+//! output column is exactly one u64 word** — the unit the bit-serial
+//! matmul (`fdb::FdbLinear::matvec`) and the codec consume.
+//!
+//! Layout: word(col, g) = words[col * g_count + g]; bit k of the word is
+//! row `g * 64 + k`.  Column-major so a column's group-words are
+//! contiguous in the matvec inner loop.
+
+use crate::tensor::Matrix;
+
+pub const WORD_BITS: usize = 64;
+
+/// A packed binary plane.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitPlane {
+    pub din: usize,
+    pub dout: usize,
+    pub words: Vec<u64>,
+}
+
+impl BitPlane {
+    pub fn g_count(&self) -> usize {
+        self.din / WORD_BITS
+    }
+
+    /// Pack a {0,1} f32 matrix (values must be exactly 0.0 or 1.0).
+    pub fn pack(m: &Matrix) -> Self {
+        assert!(
+            m.rows % WORD_BITS == 0,
+            "in-dim {} must be a multiple of {WORD_BITS}",
+            m.rows
+        );
+        let g_count = m.rows / WORD_BITS;
+        let mut words = vec![0u64; m.cols * g_count];
+        for r in 0..m.rows {
+            let (g, bit) = (r / WORD_BITS, r % WORD_BITS);
+            for c in 0..m.cols {
+                let v = m.at(r, c);
+                debug_assert!(v == 0.0 || v == 1.0, "non-binary value {v}");
+                if v == 1.0 {
+                    words[c * g_count + g] |= 1u64 << bit;
+                }
+            }
+        }
+        BitPlane { din: m.rows, dout: m.cols, words }
+    }
+
+    /// Unpack to a {0,1} f32 matrix.
+    pub fn unpack(&self) -> Matrix {
+        let g_count = self.g_count();
+        let mut m = Matrix::zeros(self.din, self.dout);
+        for c in 0..self.dout {
+            for g in 0..g_count {
+                let mut w = self.words[c * g_count + g];
+                while w != 0 {
+                    let bit = w.trailing_zeros() as usize;
+                    *m.at_mut(g * WORD_BITS + bit, c) = 1.0;
+                    w &= w - 1;
+                }
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn word(&self, col: usize, g: usize) -> u64 {
+        self.words[col * self.g_count() + g]
+    }
+
+    /// Number of set bits (ones) in the whole plane.
+    pub fn ones(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Fraction of zeros — the sparsity the paper's Table 6 reports.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.ones() as f64 / (self.din * self.dout) as f64
+    }
+
+    /// Raw little-endian bytes (codec input).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.words.len() * 8);
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Pcg32};
+
+    fn random_plane(rng: &mut Pcg32, din: usize, dout: usize, density: f32) -> Matrix {
+        Matrix::from_fn(din, dout, |_, _| if rng.f32() < density { 1.0 } else { 0.0 })
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        prop::check(25, |rng| {
+            let din = 64 * rng.range(1, 5);
+            let dout = rng.range(1, 40);
+            let density = rng.f32();
+            let m = random_plane(rng, din, dout, density);
+            let p = BitPlane::pack(&m);
+            assert_eq!(p.unpack(), m);
+        });
+    }
+
+    #[test]
+    fn ones_counts_match_matrix() {
+        prop::check(15, |rng| {
+            let m = random_plane(rng, 128, 17, 0.3);
+            let p = BitPlane::pack(&m);
+            let expected: u64 = m.data.iter().map(|&v| v as u64).sum();
+            assert_eq!(p.ones(), expected);
+            assert!((p.sparsity() - m.zero_fraction()).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn word_layout_is_column_major_groups() {
+        // set exactly row 65 (g=1, bit=1) of column 2
+        let mut m = Matrix::zeros(128, 3);
+        *m.at_mut(65, 2) = 1.0;
+        let p = BitPlane::pack(&m);
+        assert_eq!(p.word(2, 1), 1u64 << 1);
+        assert_eq!(p.word(2, 0), 0);
+        assert_eq!(p.word(0, 1), 0);
+    }
+
+    #[test]
+    fn to_bytes_length() {
+        let m = Matrix::zeros(64, 5);
+        let p = BitPlane::pack(&m);
+        assert_eq!(p.to_bytes().len(), 5 * 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pack_rejects_misaligned() {
+        BitPlane::pack(&Matrix::zeros(63, 4));
+    }
+}

@@ -1,0 +1,180 @@
+//! Round-to-nearest (RTN) uniform quantization — the baseline every
+//! table starts from, and the proxy initializer FDB splits (Eq. 1-2).
+//!
+//! Per-(group, out-column) symmetric grids:
+//!   k = 1: XNOR-style binarization {-α, +α}, α = mean|w|  (Table 6 row)
+//!   k ≥ 2: levels {-2^(k-1), …, 2^(k-1)-1}·s, s = max|w| / 2^(k-1).
+
+use super::{group_ranges, scale_overhead_bits, Calib, Quantized, Quantizer};
+use crate::tensor::Matrix;
+
+/// k-bit RTN with per-group scales.
+pub struct Rtn {
+    pub bits: u32,
+    pub group: usize,
+}
+
+impl Rtn {
+    pub fn new(bits: u32, group: usize) -> Self {
+        assert!(bits >= 1 && bits <= 8);
+        Rtn { bits, group }
+    }
+
+    /// Quantize one group of one column; returns (scale, levels written).
+    fn quantize_group(&self, w: &Matrix, range: std::ops::Range<usize>, col: usize) -> f32 {
+        if self.bits == 1 {
+            // binarization: α = mean|w| minimizes L2 for sign codes
+            let mut acc = 0.0f64;
+            for r in range.clone() {
+                acc += w.at(r, col).abs() as f64;
+            }
+            (acc / range.len() as f64) as f32
+        } else {
+            let mut mx = 0.0f32;
+            for r in range.clone() {
+                mx = mx.max(w.at(r, col).abs());
+            }
+            (mx / (1 << (self.bits - 1)) as f32).max(1e-8)
+        }
+    }
+
+    #[inline]
+    fn quantize_value(&self, v: f32, s: f32) -> f32 {
+        if self.bits == 1 {
+            if v >= 0.0 {
+                s
+            } else {
+                -s
+            }
+        } else {
+            let qmax = (1 << (self.bits - 1)) as f32 - 1.0;
+            let qmin = -((1 << (self.bits - 1)) as f32);
+            let q = (v / s).round().clamp(qmin, qmax);
+            q * s
+        }
+    }
+
+    /// Dequantized matrix + per-group scales `[g, out]`.
+    pub fn quantize_with_scales(&self, w: &Matrix) -> (Matrix, Matrix) {
+        let groups = group_ranges(w.rows, self.group);
+        let mut w_hat = Matrix::zeros(w.rows, w.cols);
+        let mut scales = Matrix::zeros(groups.len(), w.cols);
+        for c in 0..w.cols {
+            for (g, range) in &groups {
+                let s = self.quantize_group(w, range.clone(), c);
+                *scales.at_mut(*g, c) = s;
+                for r in range.clone() {
+                    *w_hat.at_mut(r, c) = self.quantize_value(w.at(r, c), s);
+                }
+            }
+        }
+        (w_hat, scales)
+    }
+}
+
+impl Quantizer for Rtn {
+    fn name(&self) -> String {
+        format!("RTN-W{}", self.bits)
+    }
+
+    fn quantize(&self, w: &Matrix, _calib: &Calib) -> Quantized {
+        let (w_hat, _) = self.quantize_with_scales(w);
+        Quantized {
+            w_hat,
+            bits_per_weight: self.bits as f64 + scale_overhead_bits(self.group),
+            method: self.name(),
+            fdb: None,
+        }
+    }
+}
+
+/// The 2-bit proxy scale FDB initializes from: s = max|w| / 2 per group.
+pub fn proxy_scales(w: &Matrix, group: usize) -> Matrix {
+    let groups = group_ranges(w.rows, group);
+    let mut scales = Matrix::zeros(groups.len(), w.cols);
+    for c in 0..w.cols {
+        for (g, range) in &groups {
+            let mut mx = 0.0f32;
+            for r in range.clone() {
+                mx = mx.max(w.at(r, c).abs());
+            }
+            *scales.at_mut(*g, c) = (mx / 2.0).max(1e-8);
+        }
+    }
+    scales
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Pcg32};
+
+    #[test]
+    fn rtn_error_bounded_by_scale() {
+        prop::check(20, |rng| {
+            let bits = rng.range(2, 5) as u32;
+            let w = Matrix::randn(128, rng.range(1, 20), rng, 2.0);
+            let rtn = Rtn::new(bits, 64);
+            let (w_hat, scales) = rtn.quantize_with_scales(&w);
+            for c in 0..w.cols {
+                for r in 0..w.rows {
+                    let s = scales.at(r / 64, c);
+                    let err = (w.at(r, c) - w_hat.at(r, c)).abs();
+                    // grid covers [-max,max-s]: worst-case err is s (top clip)
+                    assert!(err <= s * 1.0001 + 1e-6, "err {err} > s {s}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rtn_values_on_grid() {
+        let mut rng = Pcg32::seeded(7);
+        let w = Matrix::randn(64, 8, &mut rng, 1.0);
+        let rtn = Rtn::new(2, 64);
+        let (w_hat, scales) = rtn.quantize_with_scales(&w);
+        for c in 0..8 {
+            let s = scales.at(0, c);
+            for r in 0..64 {
+                let q = w_hat.at(r, c) / s;
+                assert!((q.round() - q).abs() < 1e-4);
+                assert!((-2.0..=1.0).contains(&q.round()));
+            }
+        }
+    }
+
+    #[test]
+    fn binarization_uses_sign_and_mean() {
+        let w = Matrix::from_vec(
+            64,
+            1,
+            (0..64).map(|i| if i % 2 == 0 { 2.0 } else { -4.0 }).collect(),
+        );
+        let rtn = Rtn::new(1, 64);
+        let (w_hat, scales) = rtn.quantize_with_scales(&w);
+        let alpha = scales.at(0, 0);
+        assert!((alpha - 3.0).abs() < 1e-5);
+        for r in 0..64 {
+            let expect = if r % 2 == 0 { alpha } else { -alpha };
+            assert_eq!(w_hat.at(r, 0), expect);
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Pcg32::seeded(8);
+        let w = Matrix::randn(256, 16, &mut rng, 1.5);
+        let c = Calib::empty(256);
+        let e2 = Rtn::new(2, 64).quantize(&w, &c).w_hat.mse(&w);
+        let e3 = Rtn::new(3, 64).quantize(&w, &c).w_hat.mse(&w);
+        let e4 = Rtn::new(4, 64).quantize(&w, &c).w_hat.mse(&w);
+        assert!(e3 < e2);
+        assert!(e4 < e3);
+    }
+
+    #[test]
+    fn bits_per_weight_accounting() {
+        let q = Rtn::new(2, 64).quantize(&Matrix::zeros(64, 4), &Calib::empty(64));
+        assert!((q.bits_per_weight - 2.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,205 @@
+//! Typed view over `artifacts/manifest.json` — the contract between the
+//! python compile path and this runtime.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::Json;
+
+pub struct Manifest {
+    pub json: Json,
+}
+
+/// Metadata for one teacher checkpoint.
+#[derive(Clone, Debug)]
+pub struct TeacherInfo {
+    pub tag: String,
+    pub size: String,
+    pub dbw: String,
+    pub calib: String,
+    pub calib_seqs: usize,
+    pub eval_ppl_wiki: f64,
+    pub eval_ppl_web: f64,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?} (run `make artifacts`)", path.as_ref()))?;
+        Ok(Manifest { json: Json::parse(&text)? })
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.json.get("group_size").and_then(|j| j.as_usize()).unwrap_or(64)
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.json.get("vocab").and_then(|j| j.as_usize()).unwrap_or(512)
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.json.get("seq_len").and_then(|j| j.as_usize()).unwrap_or(64)
+    }
+
+    pub fn logits_batch(&self) -> usize {
+        self.json.get("logits_batch").and_then(|j| j.as_usize()).unwrap_or(4)
+    }
+
+    pub fn nll_batch(&self) -> usize {
+        self.json.get("nll_batch").and_then(|j| j.as_usize()).unwrap_or(8)
+    }
+
+    pub fn dad_gamma(&self) -> f64 {
+        self.json
+            .get("dad")
+            .and_then(|d| d.get("gamma"))
+            .and_then(|g| g.as_f64())
+            .unwrap_or(0.1)
+    }
+
+    pub fn dad_lambda(&self) -> f64 {
+        self.json
+            .get("dad")
+            .and_then(|d| d.get("lambda"))
+            .and_then(|g| g.as_f64())
+            .unwrap_or(0.1)
+    }
+
+    /// Model config for an architecture size key ("S".."XL").
+    pub fn size_config(&self, size: &str) -> Result<ModelConfig> {
+        ModelConfig::from_json(self.json.get("sizes")?.get(size)?)
+    }
+
+    /// All size keys, ascending by parameter count.
+    pub fn sizes(&self) -> Result<Vec<String>> {
+        let obj = self.json.get("sizes")?.as_obj()?;
+        let mut v: Vec<(usize, String)> = obj
+            .iter()
+            .map(|(k, j)| {
+                let p = j.get("n_params").and_then(|n| n.as_usize()).unwrap_or(0);
+                (p, k.clone())
+            })
+            .collect();
+        v.sort();
+        Ok(v.into_iter().map(|(_, k)| k).collect())
+    }
+
+    /// Teacher tags in manifest order (v1 family then v2).
+    pub fn teacher_tags(&self) -> Result<Vec<String>> {
+        Ok(self.json.get("teachers")?.as_obj()?.keys().cloned().collect())
+    }
+
+    pub fn teacher(&self, tag: &str) -> Result<TeacherInfo> {
+        let t = self.json.get("teachers")?.get(tag)?;
+        let ppl = t.get("eval_ppl")?;
+        Ok(TeacherInfo {
+            tag: tag.to_string(),
+            size: t.get("size")?.as_str()?.to_string(),
+            dbw: t.get("dbw")?.as_str()?.to_string(),
+            calib: t.get("calib")?.as_str()?.to_string(),
+            calib_seqs: t.get("calib_seqs")?.as_usize()?,
+            eval_ppl_wiki: ppl.get("wiki")?.as_f64()?,
+            eval_ppl_web: ppl.get("web")?.as_f64()?,
+        })
+    }
+
+    /// HLO file for an executable key.
+    pub fn executable_file(&self, key: &str) -> Result<String> {
+        Ok(self
+            .json
+            .get("executables")?
+            .get(key)?
+            .get("file")?
+            .as_str()?
+            .to_string())
+    }
+
+    /// Ordered HLO parameter names of a fwd executable.
+    pub fn executable_params(&self, key: &str) -> Result<Vec<String>> {
+        self.json.get("executables")?.get(key)?.str_list("params")
+    }
+
+    /// Ordered names for a dad_step executable: (alphas, planes, frozen).
+    pub fn dad_step_order(&self, key: &str) -> Result<(Vec<String>, Vec<String>, Vec<String>)> {
+        let e = self.json.get("executables")?.get(key)?;
+        Ok((e.str_list("alphas")?, e.str_list("planes")?, e.str_list("frozen")?))
+    }
+
+    /// Ordered names for fwd_fdb executables: (frozen, quads).
+    pub fn fdb_order(&self, key: &str) -> Result<(Vec<String>, Vec<String>)> {
+        let e = self.json.get("executables")?.get(key)?;
+        Ok((e.str_list("frozen")?, e.str_list("quads")?))
+    }
+
+    /// Corpus eval-stream file name.
+    pub fn corpus_eval_file(&self, name: &str) -> Result<String> {
+        Ok(self
+            .json
+            .get("corpora")?
+            .get(name)?
+            .get("eval_file")?
+            .as_str()?
+            .to_string())
+    }
+
+    pub fn corpus_names(&self) -> Result<Vec<String>> {
+        Ok(self.json.get("corpora")?.as_obj()?.keys().cloned().collect())
+    }
+
+    pub fn corpus_ppl_floor(&self, name: &str) -> Result<f64> {
+        self.json.get("corpora")?.get(name)?.get("ppl_floor")?.as_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dbllm_manifest_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("m{}.json", content.len()));
+        std::fs::write(&p, content).unwrap();
+        p
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let p = write_tmp(
+            r#"{"group_size": 64, "vocab": 512, "seq_len": 64,
+                "logits_batch": 4, "nll_batch": 8,
+                "dad": {"gamma": 0.1, "lambda": 0.1},
+                "sizes": {"S": {"name":"S","d_model":64,"n_layers":2,
+                  "n_heads":4,"d_ff":192,"vocab":512,"seq_len":64,
+                  "rope_theta":10000.0,"rmsnorm_eps":1e-5}},
+                "teachers": {"S": {"size":"S","dbw":"teacher_S.dbw",
+                  "calib":"calib_S.tok","calib_seqs":512,
+                  "eval_ppl":{"wiki":21.0,"web":45.0}}},
+                "executables": {"fwd_nll_S": {"file":"fwd_nll_S.hlo.txt",
+                  "params":["tok_emb","head"]}},
+                "corpora": {"wiki": {"eval_file":"corpus_wiki_eval.tok",
+                  "ppl_floor": 19.2}}}"#,
+        );
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.group_size(), 64);
+        assert_eq!(m.sizes().unwrap(), vec!["S"]);
+        let t = m.teacher("S").unwrap();
+        assert_eq!(t.dbw, "teacher_S.dbw");
+        assert!((t.eval_ppl_wiki - 21.0).abs() < 1e-12);
+        assert_eq!(m.executable_file("fwd_nll_S").unwrap(), "fwd_nll_S.hlo.txt");
+        assert_eq!(m.executable_params("fwd_nll_S").unwrap(), vec!["tok_emb", "head"]);
+        assert!((m.corpus_ppl_floor("wiki").unwrap() - 19.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_keys_error() {
+        let p = write_tmp(r#"{"sizes": {}}"#);
+        let m = Manifest::load(&p).unwrap();
+        assert!(m.teacher("S").is_err());
+        assert!(m.executable_file("nope").is_err());
+        // defaults still work
+        assert_eq!(m.group_size(), 64);
+    }
+}

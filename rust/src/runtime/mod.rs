@@ -1,0 +1,95 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts the python
+//! layer produced and executes them on the CPU PJRT client.
+//!
+//! HLO TEXT is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md and
+//! DESIGN.md §3).
+//!
+//! The `Runtime` owns one `PjRtClient` plus a compiled-executable cache;
+//! `Session` pins a model's weights as device buffers so the hot loop
+//! only uploads the per-call inputs (tokens / teacher logits).
+
+pub mod manifest;
+pub mod session;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use manifest::Manifest;
+pub use session::Session;
+
+/// Handle to the PJRT client + executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifacts_dir: dir, manifest, executables: HashMap::new() })
+    }
+
+    /// Load + compile (cached) an executable by manifest key, e.g.
+    /// `fwd_nll_S`.
+    pub fn executable(&mut self, key: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(key) {
+            let file = self.manifest.executable_file(key)?;
+            let path = self.artifacts_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))?;
+            self.executables.insert(key.to_string(), exe);
+        }
+        Ok(&self.executables[key])
+    }
+
+    /// Execute with literal inputs; decomposes the 1-tuple/tuple output.
+    pub fn run(&mut self, key: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(key)?;
+        let result = exe.execute::<xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Upload a literal to the device (for `Session` weight pinning).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+}
+
+/// Build an f32 literal of the given dims.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape mismatch");
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal (token ids).
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Extract an f32 vec from a literal.
+pub fn lit_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,119 @@
+//! A `Session` pins one model's weights on the PJRT device and exposes
+//! the two forward entry points (`logits`, `nll`).  Only the per-call
+//! tokens are uploaded in the hot loop — weight re-transfer was the
+//! dominant cost of the naive literal path (see EXPERIMENTS.md §Perf).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::model::Weights;
+
+use super::Runtime;
+
+/// Device-resident weights + the executables that consume them.
+pub struct Session {
+    pub size: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub logits_batch: usize,
+    pub nll_batch: usize,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl Session {
+    /// Upload `weights` (teacher or dequantized student) once.
+    pub fn new(rt: &Runtime, weights: &Weights) -> Result<Session> {
+        let size = weights.config.name.clone();
+        let mut weight_bufs = Vec::new();
+        for (data, dims) in weights.flat_params() {
+            let dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+            weight_bufs.push(rt.client.buffer_from_host_buffer::<f32>(&data, &dims, None)?);
+        }
+        Ok(Session {
+            size,
+            vocab: weights.config.vocab,
+            seq_len: rt.manifest.seq_len(),
+            logits_batch: rt.manifest.logits_batch(),
+            nll_batch: rt.manifest.nll_batch(),
+            weight_bufs,
+        })
+    }
+
+    fn run_with_tokens(
+        &self,
+        rt: &mut Runtime,
+        key: &str,
+        tokens: &[i32],
+        dims: &[usize],
+    ) -> Result<Vec<f32>> {
+        let tok_buf = rt.client.buffer_from_host_buffer::<i32>(tokens, dims, None)?;
+        let exe = rt.executable(key)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        let out = exe.execute_b(&args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        ensure!(parts.len() == 1, "expected 1-tuple from {key}");
+        Ok(parts[0].to_vec::<f32>()?)
+    }
+
+    /// `tokens` is `[logits_batch, seq_len]` row-major; returns logits
+    /// `[logits_batch, seq_len, vocab]` flattened.
+    pub fn logits(&self, rt: &mut Runtime, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (b, t) = (self.logits_batch, self.seq_len);
+        ensure!(tokens.len() == b * t, "logits expects [{b},{t}] tokens");
+        self.run_with_tokens(rt, &format!("fwd_logits_{}", self.size), tokens, &[b, t])
+    }
+
+    /// `tokens` is `[nll_batch, seq_len+1]`; returns per-token NLL
+    /// (nats) `[nll_batch, seq_len]` flattened.
+    pub fn nll(&self, rt: &mut Runtime, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (b, t) = (self.nll_batch, self.seq_len + 1);
+        ensure!(tokens.len() == b * t, "nll expects [{b},{t}] tokens");
+        self.run_with_tokens(rt, &format!("fwd_nll_{}", self.size), tokens, &[b, t])
+    }
+
+    /// Number of pinned weight buffers (diagnostics).
+    pub fn n_weight_buffers(&self) -> usize {
+        self.weight_bufs.len()
+    }
+}
+
+/// Pack a batch of token windows into the flat i32 layout `Session`
+/// expects, padding with repeats of the last window if short.
+pub fn pack_batch(windows: &[Vec<u32>], batch: usize, width: usize) -> Result<Vec<i32>> {
+    ensure!(!windows.is_empty(), "empty batch");
+    let mut out = Vec::with_capacity(batch * width);
+    for i in 0..batch {
+        let w = windows.get(i).unwrap_or_else(|| windows.last().unwrap());
+        ensure!(w.len() == width, "window width {} != {width}", w.len());
+        out.extend(w.iter().map(|&t| t as i32));
+    }
+    Ok(out)
+}
+
+/// Convenience: read back the teacher weights named in the manifest.
+pub fn load_teacher(rt: &Runtime, tag: &str) -> Result<Weights> {
+    let info = rt.manifest.teacher(tag)?;
+    let cfg = rt.manifest.size_config(&info.size)?;
+    let dbw = crate::model::Dbw::load(rt.artifacts_dir.join(&info.dbw))
+        .with_context(|| format!("loading teacher {tag}"))?;
+    Weights::from_dbw(&dbw, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_batch_pads_with_last() {
+        let w = vec![vec![1u32, 2], vec![3, 4]];
+        let packed = pack_batch(&w, 4, 2).unwrap();
+        assert_eq!(packed, vec![1, 2, 3, 4, 3, 4, 3, 4]);
+    }
+
+    #[test]
+    fn pack_batch_rejects_bad_width() {
+        assert!(pack_batch(&[vec![1u32, 2, 3]], 1, 2).is_err());
+        assert!(pack_batch(&[], 1, 2).is_err());
+    }
+}

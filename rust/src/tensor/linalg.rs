@@ -1,0 +1,193 @@
+//! Dense linear algebra for the GPTQ path: Cholesky factorization,
+//! triangular solves, PSD inversion with dampening.
+
+use anyhow::{bail, Result};
+
+use super::Matrix;
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+/// Fails if A is not (numerically) positive definite.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    assert_eq!(a.rows, a.cols, "cholesky needs square");
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (sum {sum:.3e})");
+                }
+                *l.at_mut(i, j) = sum.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (sum / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l.at(i, k) as f64 * y[k] as f64;
+        }
+        y[i] = (sum / l.at(i, i) as f64) as f32;
+    }
+    y
+}
+
+/// Solve Lᵀ·x = y (backward substitution), L lower-triangular.
+pub fn solve_lower_t(l: &Matrix, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for k in i + 1..n {
+            sum -= l.at(k, i) as f64 * x[k] as f64;
+        }
+        x[i] = (sum / l.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// Inverse of a PSD matrix via Cholesky: A⁻¹ = L⁻ᵀ·L⁻¹.
+pub fn inverse_psd(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for c in 0..n {
+        e[c] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for r in 0..n {
+            *inv.at_mut(r, c) = x[r];
+        }
+        e[c] = 0.0;
+    }
+    Ok(inv)
+}
+
+/// Add `lambda * mean(diag)` dampening to the diagonal (GPTQ §3).
+pub fn dampen(a: &mut Matrix, lambda: f64) {
+    let n = a.rows;
+    let mean_diag: f64 = (0..n).map(|i| a.at(i, i) as f64).sum::<f64>() / n as f64;
+    let eps = (lambda * mean_diag).max(1e-10) as f32;
+    for i in 0..n {
+        *a.at_mut(i, i) += eps;
+    }
+}
+
+/// Upper-triangular Cholesky of the *inverse*: the exact factor GPTQ's
+/// error-compensation loop walks.  Returns U with A⁻¹ = Uᵀ·U? — GPTQ uses
+/// `Cholesky(H⁻¹, upper=True)`, i.e. A⁻¹ = UᵀU with U upper.  We compute
+/// L from A⁻¹ = L·Lᵀ and return U = Lᵀ.
+pub fn cholesky_inverse_upper(a: &Matrix) -> Result<Matrix> {
+    let inv = inverse_psd(a)?;
+    let l = cholesky(&inv)?;
+    Ok(l.t())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Pcg32};
+
+    fn random_spd(rng: &mut Pcg32, n: usize) -> Matrix {
+        let b = Matrix::randn(n, n, rng, 1.0);
+        let mut a = b.matmul_t(&b); // B·Bᵀ is PSD
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f32 * 0.1; // make strictly PD
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        prop::check(15, |rng| {
+            let n = rng.range(1, 24);
+            let a = random_spd(rng, n);
+            let l = cholesky(&a).unwrap();
+            let back = l.matmul_t(&l);
+            for (x, y) in a.data.iter().zip(&back.data) {
+                assert!((x - y).abs() < 1e-2 * a.abs_max().max(1.0), "{x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1, 3
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn inverse_psd_property() {
+        prop::check(15, |rng| {
+            let n = rng.range(1, 16);
+            let a = random_spd(rng, n);
+            let inv = inverse_psd(&a).unwrap();
+            let prod = a.matmul(&inv);
+            let eye = Matrix::eye(n);
+            for (x, y) in prod.data.iter().zip(&eye.data) {
+                assert!((x - y).abs() < 5e-3, "{x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Pcg32::seeded(9);
+        let a = random_spd(&mut rng, 8);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f32> = (0..8).map(|i| i as f32 + 1.0).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // check A·x = b
+        for i in 0..8 {
+            let mut acc = 0.0f64;
+            for j in 0..8 {
+                acc += a.at(i, j) as f64 * x[j] as f64;
+            }
+            assert!((acc - b[i] as f64).abs() < 1e-2, "row {i}: {acc} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn dampen_increases_diag() {
+        let mut rng = Pcg32::seeded(10);
+        let mut a = random_spd(&mut rng, 5);
+        let before: Vec<f32> = (0..5).map(|i| a.at(i, i)).collect();
+        dampen(&mut a, 0.01);
+        for i in 0..5 {
+            assert!(a.at(i, i) > before[i]);
+        }
+    }
+
+    #[test]
+    fn cholesky_inverse_upper_shape() {
+        let mut rng = Pcg32::seeded(11);
+        let a = random_spd(&mut rng, 6);
+        let u = cholesky_inverse_upper(&a).unwrap();
+        // upper-triangular: below-diagonal entries are 0
+        for r in 0..6 {
+            for c in 0..r {
+                assert_eq!(u.at(r, c), 0.0);
+            }
+        }
+        // UᵀU == A⁻¹
+        let inv = inverse_psd(&a).unwrap();
+        let back = u.t().matmul(&u);
+        for (x, y) in inv.data.iter().zip(&back.data) {
+            assert!((x - y).abs() < 5e-3);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense f32 tensor substrate: row-major matrices + the small amount of
+//! linear algebra the quantization engine needs (blocked matmul,
+//! Cholesky factorization/inversion for GPTQ's Hessian path, stats).
+//!
+//! This is deliberately minimal — the heavy model math runs inside the
+//! AOT-compiled XLA executables; this substrate exists for the
+//! quantizers, calibration statistics, and the native cross-check
+//! forward (`model::native`).
+
+pub mod linalg;
+pub mod matrix;
+
+pub use matrix::Matrix;

@@ -1,0 +1,159 @@
+//! Micro-benchmark harness (criterion replacement, offline build).
+//!
+//! Usage in a `harness = false` bench target:
+//! ```no_run
+//! use db_llm::util::bench::Bench;
+//! let mut b = Bench::new("fdb_matmul");
+//! b.bench("packed_256", || { /* work */ });
+//! b.report();
+//! ```
+//! Each case is warmed up, then timed over adaptively-chosen iteration
+//! counts until the total run budget is met; mean / p50 / p95 and
+//! throughput derived metrics are printed in a stable, parseable format.
+
+use std::time::{Duration, Instant};
+
+/// One measured case.
+pub struct Case {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    /// Optional work units per iteration (e.g. FLOPs) for throughput.
+    pub work_per_iter: Option<f64>,
+}
+
+impl Case {
+    fn stats(&self) -> (f64, f64, f64) {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        let p50 = s[s.len() / 2];
+        let idx95 = ((s.len() as f64 * 0.95) as usize).min(s.len() - 1);
+        let p95 = s[idx95];
+        (mean, p50, p95)
+    }
+}
+
+/// A named group of benchmark cases.
+pub struct Bench {
+    pub group: String,
+    pub cases: Vec<Case>,
+    /// Target wall-clock per case.
+    pub budget: Duration,
+    pub min_samples: usize,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Allow a fast mode for CI-style smoke runs.
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Bench {
+            group: group.to_string(),
+            cases: Vec::new(),
+            budget: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            min_samples: if quick { 3 } else { 10 },
+        }
+    }
+
+    /// Time `f`, auto-scaling iterations; returns mean ns/iter.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> f64 {
+        self.bench_with_work(name, None, f)
+    }
+
+    /// Like `bench` but records work units/iter for throughput reporting.
+    pub fn bench_with_work<F: FnMut()>(
+        &mut self,
+        name: &str,
+        work_per_iter: Option<f64>,
+        mut f: F,
+    ) -> f64 {
+        // warmup + estimate per-iter cost
+        let t0 = Instant::now();
+        f();
+        let per = t0.elapsed().as_nanos().max(1) as f64;
+        let iters_per_sample = ((1e7 / per).ceil() as usize).clamp(1, 10_000);
+
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_samples
+            || (start.elapsed() < self.budget && samples.len() < 200)
+        {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        let case = Case { name: name.to_string(), samples_ns: samples, work_per_iter };
+        let mean = case.stats().0;
+        self.cases.push(case);
+        mean
+    }
+
+    /// Print the report table.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<40} {:>12} {:>12} {:>12} {:>14}",
+            "case", "mean", "p50", "p95", "throughput"
+        );
+        for c in &self.cases {
+            let (mean, p50, p95) = c.stats();
+            let thr = match c.work_per_iter {
+                Some(w) => format!("{}/s", super::eng(w / (mean / 1e9))),
+                None => "-".to_string(),
+            };
+            println!(
+                "{:<40} {:>12} {:>12} {:>12} {:>14}",
+                c.name,
+                fmt_ns(mean),
+                fmt_ns(p50),
+                fmt_ns(p95),
+                thr
+            );
+        }
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        let mut acc = 0u64;
+        b.bench("noop", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.cases.len(), 1);
+        assert!(b.cases[0].samples_ns.len() >= 3);
+        b.report();
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(12.0), "12ns");
+        assert_eq!(fmt_ns(1.2e4), "12.000us");
+        assert_eq!(fmt_ns(2.5e9), "2.500s");
+    }
+}

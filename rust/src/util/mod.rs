@@ -1,0 +1,42 @@
+//! Small self-contained substrates that replace unavailable third-party
+//! crates (this build is fully offline): a PCG RNG (`rand`), a JSON
+//! parser/writer (`serde_json`), a micro-benchmark harness (`criterion`)
+//! and a property-testing helper (`proptest`).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Pcg32;
+
+/// Format a float with engineering suffixes (for table/metric printing).
+pub fn eng(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e12 {
+        format!("{:.1}T", v / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.1}G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.1}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.1}K", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eng_suffixes() {
+        assert_eq!(eng(423.4e9), "423.4G");
+        assert_eq!(eng(12.0), "12.0");
+        assert_eq!(eng(2_300.0), "2.3K");
+        assert_eq!(eng(29.8e9), "29.8G");
+        assert_eq!(eng(5.1e12), "5.1T");
+    }
+}

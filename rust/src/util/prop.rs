@@ -1,0 +1,79 @@
+//! Property-testing helper (proptest replacement, offline build).
+//!
+//! `check(seed_cases, |rng| { ... })` runs a closure over many seeded
+//! RNGs; on failure it reports the failing case index + seed so the case
+//! reproduces exactly.  Shrinking is traded for deterministic seeds —
+//! failures are directly re-runnable.
+
+use super::rng::Pcg32;
+
+/// Run `f` over `cases` deterministic seeds; panics with the failing seed.
+pub fn check<F: FnMut(&mut Pcg32)>(cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1);
+        let mut rng = Pcg32::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random dims helper: a shape whose product stays below `max_elems`.
+pub fn dims(rng: &mut Pcg32, max_dim: usize, max_elems: usize) -> (usize, usize) {
+    loop {
+        let r = rng.range(1, max_dim + 1);
+        let c = rng.range(1, max_dim + 1);
+        if r * c <= max_elems {
+            return (r, c);
+        }
+    }
+}
+
+/// A random f32 vector with occasionally-extreme magnitudes.
+pub fn vec_f32(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    let scale = match rng.below(4) {
+        0 => 1e-3,
+        1 => 1.0,
+        2 => 10.0,
+        _ => 1e3,
+    };
+    (0..n).map(|_| scale * rng.normal()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check(25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn check_reports_failure() {
+        check(10, |rng| {
+            let v = rng.below(5);
+            assert!(v < 4, "hit {v}");
+        });
+    }
+
+    #[test]
+    fn dims_bounded() {
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..100 {
+            let (r, c) = dims(&mut rng, 64, 512);
+            assert!(r * c <= 512 && r >= 1 && c >= 1);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Integration: the coordinator over real artifacts — DAD fine-tuning
+//! (XLA gradients + rust AdamW), the serving stack end to end over TCP,
+//! and generation determinism.  Requires `make artifacts`.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use db_llm::coordinator::batcher::BatchPolicy;
+use db_llm::coordinator::finetune::{DadConfig, DadTrainer};
+use db_llm::coordinator::metrics::Metrics;
+use db_llm::coordinator::serve::{serve, Engine};
+use db_llm::data::TokenStream;
+use db_llm::quant::{fdb::Fdb, Calib, Quantizer};
+use db_llm::runtime::{session::load_teacher, Runtime, Session};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn dad_training_reduces_distill_loss() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::open(artifacts_dir()).unwrap();
+    let weights = load_teacher(&rt, "S").unwrap();
+    let empty = Calib::empty(0);
+    let mut fdb_layers = BTreeMap::new();
+    let _ = weights.map_linears(|name, w| {
+        let q = Fdb { group: 64 }.quantize(w, &empty);
+        let fdb = q.fdb.unwrap();
+        fdb_layers.insert(name.to_string(), fdb);
+        q.w_hat
+    });
+    let teacher_session = Session::new(&rt, &weights).unwrap();
+    let calib = TokenStream::load(artifacts_dir().join("calib_S.tok")).unwrap();
+    let cfg = DadConfig { lr: 3e-4, epochs: 2, max_batches: 16, ..Default::default() };
+    let mut trainer = DadTrainer::new(&rt, "S", &fdb_layers, cfg).unwrap();
+    trainer
+        .train(&mut rt, &teacher_session, &weights, &fdb_layers, &calib, |_| {})
+        .unwrap();
+    // two epochs over the SAME 16 batches: epoch means are comparable
+    let n = trainer.history.len();
+    assert_eq!(n, 32, "expected 2 epochs x 16 batches");
+    let e1: f64 = trainer.history[..16].iter().map(|r| r.total).sum::<f64>() / 16.0;
+    let e2: f64 = trainer.history[16..].iter().map(|r| r.total).sum::<f64>() / 16.0;
+    assert!(e2 < e1, "DAD distill loss did not decrease: epoch1 {e1} -> epoch2 {e2}");
+    // applying the scales back keeps every layer on its (moved) grid
+    let mut layers = fdb_layers.clone();
+    trainer.apply(&mut layers, &weights);
+    for (name, l) in &layers {
+        assert!(l.sparsity() > 0.3, "{name} sparsity collapsed");
+    }
+}
+
+#[test]
+fn dad_gamma_sweep_is_finite_everywhere() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::open(artifacts_dir()).unwrap();
+    let weights = load_teacher(&rt, "S").unwrap();
+    let empty = Calib::empty(0);
+    let mut fdb_layers = BTreeMap::new();
+    let _ = weights.map_linears(|name, w| {
+        let q = Fdb { group: 64 }.quantize(w, &empty);
+        fdb_layers.insert(name.to_string(), q.fdb.unwrap());
+        q.w_hat
+    });
+    let teacher_session = Session::new(&rt, &weights).unwrap();
+    let calib = TokenStream::load(artifacts_dir().join("calib_S.tok")).unwrap();
+    for gamma in [0.0, 0.5, 1.0] {
+        let cfg = DadConfig { gamma, max_batches: 2, ..Default::default() };
+        let mut trainer = DadTrainer::new(&rt, "S", &fdb_layers, cfg).unwrap();
+        trainer
+            .train(&mut rt, &teacher_session, &weights, &fdb_layers, &calib, |_| {})
+            .unwrap();
+        for rec in &trainer.history {
+            assert!(rec.total.is_finite() && rec.dad.is_finite(), "gamma {gamma}");
+        }
+    }
+}
+
+#[test]
+fn tcp_serving_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+    let addr = serve(
+        || {
+            let rt = Runtime::open(artifacts_dir())?;
+            let weights = load_teacher(&rt, "S")?;
+            let vocab = rt.manifest.vocab();
+            let session = Session::new(&rt, &weights)?;
+            Ok((rt, Engine::new(session, vocab, 1)))
+        },
+        "127.0.0.1:0",
+        BatchPolicy::default(),
+        metrics.clone(),
+        running.clone(),
+    )
+    .unwrap();
+
+    let mut stream = loop {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
+        }
+    };
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // greedy generation is deterministic: same prompt -> same tokens
+    let mut responses = Vec::new();
+    for _ in 0..2 {
+        writeln!(stream, "{{\"prompt\": [5, 10, 15], \"max_tokens\": 6}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = db_llm::util::Json::parse(line.trim()).unwrap();
+        let toks = j.usize_list("tokens").unwrap();
+        assert_eq!(toks.len(), 6);
+        responses.push(toks);
+    }
+    assert_eq!(responses[0], responses[1], "greedy decode must be deterministic");
+
+    // malformed requests produce an error line, not a crash
+    writeln!(stream, "this is not json").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "got {line}");
+
+    // still serving after the bad request
+    writeln!(stream, "{{\"prompt\": [1], \"max_tokens\": 2}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("tokens"));
+
+    running.store(false, std::sync::atomic::Ordering::Relaxed);
+    assert!(metrics.responses.load(std::sync::atomic::Ordering::Relaxed) >= 3);
+}

@@ -1,0 +1,176 @@
+//! Integration: artifacts → PJRT runtime → evaluation, cross-checked
+//! against both the python layer's reported metrics (manifest) and the
+//! rust-native forward.  Requires `make artifacts`.
+
+use db_llm::data::TokenStream;
+use db_llm::eval::ppl;
+use db_llm::model::native::Forward;
+use db_llm::runtime::{session::load_teacher, Runtime, Session};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn skip_if_missing() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open runtime"))
+}
+
+#[test]
+fn manifest_teachers_and_executables_present() {
+    let Some(rt) = skip_if_missing() else { return };
+    let tags = rt.manifest.teacher_tags().unwrap();
+    assert!(tags.len() >= 4, "expected >=4 teachers, got {tags:?}");
+    for size in rt.manifest.sizes().unwrap() {
+        for kind in ["fwd_logits", "fwd_nll", "fwd_fdb_nll", "dad_step"] {
+            let f = rt.manifest.executable_file(&format!("{kind}_{size}")).unwrap();
+            assert!(artifacts_dir().join(&f).exists(), "missing {f}");
+        }
+    }
+}
+
+#[test]
+fn hlo_forward_matches_native_forward() {
+    let Some(mut rt) = skip_if_missing() else { return };
+    let weights = load_teacher(&rt, "S").unwrap();
+    let session = Session::new(&rt, &weights).unwrap();
+    let (b, t) = (session.logits_batch, session.seq_len);
+    let vocab = session.vocab;
+
+    // deterministic token batch
+    let tokens: Vec<i32> = (0..b * t).map(|i| ((i * 37 + 11) % vocab) as i32).collect();
+    let logits = session.logits(&mut rt, &tokens).unwrap();
+    assert_eq!(logits.len(), b * t * vocab);
+
+    // native forward on row 0
+    let row0: Vec<u32> = tokens[..t].iter().map(|&x| x as u32).collect();
+    let native = Forward::new(&weights).run(&row0);
+    let mut max_err = 0.0f32;
+    for pos in 0..t {
+        for v in 0..vocab {
+            let a = logits[(pos * vocab) + v];
+            let b_ = native.at(pos, v);
+            max_err = max_err.max((a - b_).abs());
+        }
+    }
+    assert!(max_err < 2e-2, "XLA vs native logits max err {max_err}");
+}
+
+#[test]
+fn teacher_ppl_matches_python_report() {
+    let Some(mut rt) = skip_if_missing() else { return };
+    let info = rt.manifest.teacher("S").unwrap();
+    let weights = load_teacher(&rt, "S").unwrap();
+    let session = Session::new(&rt, &weights).unwrap();
+    let stream = TokenStream::load(
+        artifacts_dir().join(rt.manifest.corpus_eval_file("wiki").unwrap()),
+    )
+    .unwrap();
+    let ppl = ppl::perplexity(&mut rt, &session, &stream, 64).unwrap();
+    // python evaluated on randomly-sampled windows; ours are sequential —
+    // agreement within 15% validates the whole marshalling path
+    let rel = (ppl - info.eval_ppl_wiki).abs() / info.eval_ppl_wiki;
+    assert!(rel < 0.15, "rust ppl {ppl:.2} vs python {:.2}", info.eval_ppl_wiki);
+}
+
+#[test]
+fn nll_executable_consistent_with_logits_executable() {
+    let Some(mut rt) = skip_if_missing() else { return };
+    let weights = load_teacher(&rt, "S").unwrap();
+    let session = Session::new(&rt, &weights).unwrap();
+    let t = session.seq_len;
+    let vocab = session.vocab;
+
+    let window: Vec<u32> = (0..t as u32 + 1).map(|i| (i * 13 + 5) % vocab as u32).collect();
+    // nll path
+    let packed: Vec<i32> = (0..session.nll_batch)
+        .flat_map(|_| window.iter().map(|&x| x as i32))
+        .collect();
+    let nll = session.nll(&mut rt, &packed).unwrap();
+    // logits path on the same inputs (first logits_batch rows)
+    let inputs: Vec<i32> = (0..session.logits_batch)
+        .flat_map(|_| window[..t].iter().map(|&x| x as i32))
+        .collect();
+    let logits = session.logits(&mut rt, &inputs).unwrap();
+    for pos in 0..t {
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)) as f64;
+        let z: f64 = row.iter().map(|&v| ((v as f64) - mx).exp()).sum();
+        let expect = mx + z.ln() - row[window[pos + 1] as usize] as f64;
+        let got = nll[pos] as f64;
+        assert!((got - expect).abs() < 5e-3, "pos {pos}: {got} vs {expect}");
+    }
+}
+
+#[test]
+fn fdb_executable_runs_and_matches_dequant_session() {
+    use db_llm::quant::{fdb::Fdb, Quantizer, Calib};
+    let Some(mut rt) = skip_if_missing() else { return };
+    let weights = load_teacher(&rt, "S").unwrap();
+
+    // quantize with FDB, build both paths
+    let key = "fwd_fdb_nll_S";
+    let (frozen_names, quad_names) = rt.manifest.fdb_order(key).unwrap();
+    let mut args: Vec<xla::Literal> = Vec::new();
+    let mut fdb_layers = std::collections::BTreeMap::new();
+    let empty = Calib::empty(0);
+    let dequant = weights.map_linears(|name, w| {
+        let q = Fdb { group: 64 }.quantize(w, &empty);
+        fdb_layers.insert(name.to_string(), q.fdb.unwrap());
+        q.w_hat
+    });
+    for name in &frozen_names {
+        if let Some(m) = weights.mats.get(name) {
+            args.push(db_llm::runtime::lit_f32(&m.data, &[m.rows as i64, m.cols as i64]).unwrap());
+        } else {
+            let v = &weights.vecs[name];
+            args.push(db_llm::runtime::lit_f32(v, &[v.len() as i64]).unwrap());
+        }
+    }
+    for name in &quad_names {
+        let (lin, kind) = name.rsplit_once('.').unwrap();
+        let layer = &fdb_layers[lin];
+        let lit = match kind {
+            "b1" => {
+                let m = layer.b1.unpack();
+                db_llm::runtime::lit_f32(&m.data, &[m.rows as i64, m.cols as i64]).unwrap()
+            }
+            "b2" => {
+                let m = layer.b2.unpack();
+                db_llm::runtime::lit_f32(&m.data, &[m.rows as i64, m.cols as i64]).unwrap()
+            }
+            "a1" => db_llm::runtime::lit_f32(
+                &layer.a1.data,
+                &[layer.a1.rows as i64, layer.a1.cols as i64],
+            )
+            .unwrap(),
+            _ => db_llm::runtime::lit_f32(
+                &layer.a2.data,
+                &[layer.a2.rows as i64, layer.a2.cols as i64],
+            )
+            .unwrap(),
+        };
+        args.push(lit);
+    }
+    let session = Session::new(&rt, &dequant).unwrap();
+    let (b, t) = (session.nll_batch, session.seq_len + 1);
+    let vocab = session.vocab;
+    let tokens: Vec<i32> = (0..b * t).map(|i| ((i * 29 + 3) % vocab) as i32).collect();
+    args.push(db_llm::runtime::lit_i32(&tokens, &[b as i64, t as i64]).unwrap());
+
+    // the Pallas-kernel path
+    let out = rt.run(key, &args).unwrap();
+    let nll_fdb = out[0].to_vec::<f32>().unwrap();
+    // the dequantized-weights path through the plain executable
+    let nll_deq = session.nll(&mut rt, &tokens).unwrap();
+    assert_eq!(nll_fdb.len(), nll_deq.len());
+    let mut max_err = 0.0f32;
+    for (a, b_) in nll_fdb.iter().zip(&nll_deq) {
+        max_err = max_err.max((a - b_).abs());
+    }
+    assert!(max_err < 5e-2, "pallas-FDB vs dequant nll max err {max_err}");
+}
