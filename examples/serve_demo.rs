@@ -1,6 +1,7 @@
-//! Serving demo: boots the TCP server with a DB-LLM-quantized engine,
-//! drives it with concurrent synthetic clients, and prints the
-//! latency/throughput metrics — the coordinator story end to end.
+//! Serving demo: boots the TCP server with a pool of DB-LLM-quantized
+//! engines, drives it with concurrent synthetic clients mixing
+//! per-request decode parameters, and prints the latency/throughput
+//! metrics — the coordinator story end to end.
 //!
 //!     cargo run --release --example serve_demo
 
@@ -18,9 +19,10 @@ use db_llm::runtime::{Runtime, Session};
 fn main() -> anyhow::Result<()> {
     let metrics = Arc::new(Metrics::default());
     let running = Arc::new(AtomicBool::new(true));
+    let workers = 2;
 
-    // serve on an ephemeral port; the engine builds inside the worker
-    // thread (PJRT handles are not Send)
+    // serve on an ephemeral port; each worker builds its own engine
+    // inside its thread (PJRT handles are not Send)
     let addr = serve(
         || {
             let mut rt = Runtime::open("artifacts")?;
@@ -33,19 +35,22 @@ fn main() -> anyhow::Result<()> {
         },
         "127.0.0.1:0",
         BatchPolicy::default(),
+        workers,
         metrics.clone(),
         running.clone(),
     )?;
-    println!("server on {addr}");
+    println!("server on {addr} ({workers} workers)");
 
-    // concurrent synthetic clients
+    // concurrent synthetic clients; every request carries its own
+    // max_tokens and temperature, so one batch can mix greedy short
+    // requests with sampled long ones
     let n_clients = 8;
     let reqs_per_client = 4;
     let mut handles = Vec::new();
     for c in 0..n_clients {
         let addr = addr;
-        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<usize>> {
-            // server may still be compiling the engine: retry connect
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<(usize, usize)>> {
+            // server may still be compiling the engines: retry connect
             let mut stream = loop {
                 match TcpStream::connect(addr) {
                     Ok(s) => break s,
@@ -57,15 +62,18 @@ fn main() -> anyhow::Result<()> {
             for r in 0..reqs_per_client {
                 let prompt: Vec<String> =
                     (0..6).map(|i| ((7 * c + 3 * r + i) % 512).to_string()).collect();
+                let max_tokens = 4 + (c + r) % 8; // mixed budgets per batch
+                let temperature = if c % 2 == 0 { 0.0 } else { 0.8 };
                 writeln!(
                     stream,
-                    "{{\"prompt\": [{}], \"max_tokens\": 8, \"temperature\": 0.8}}",
+                    "{{\"prompt\": [{}], \"max_tokens\": {max_tokens}, \
+                     \"temperature\": {temperature}}}",
                     prompt.join(",")
                 )?;
                 let mut line = String::new();
                 reader.read_line(&mut line)?;
                 let j = db_llm::util::Json::parse(line.trim())?;
-                lens.push(j.usize_list("tokens")?.len());
+                lens.push((j.usize_list("tokens")?.len(), max_tokens));
             }
             Ok(lens)
         }));
@@ -73,8 +81,11 @@ fn main() -> anyhow::Result<()> {
     let mut total_tokens = 0usize;
     for h in handles {
         let lens = h.join().expect("client thread")?;
-        assert!(lens.iter().all(|&l| l == 8), "short generation: {lens:?}");
-        total_tokens += lens.iter().sum::<usize>();
+        assert!(
+            lens.iter().all(|&(got, want)| got == want),
+            "wrong per-request lengths: {lens:?}"
+        );
+        total_tokens += lens.iter().map(|&(got, _)| got).sum::<usize>();
     }
     println!("{n_clients} clients x {reqs_per_client} requests -> {total_tokens} tokens");
     println!("metrics: {}", metrics.snapshot());

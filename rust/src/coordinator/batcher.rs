@@ -4,6 +4,7 @@
 //! AOT executables' fixed batch dimension.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -42,10 +43,24 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
     Some(batch)
 }
 
+/// Multi-consumer batch pull for a worker pool: `Receiver` is not
+/// `Sync`, so competing workers share it behind a mutex.  Exactly one
+/// worker holds the lock while it collects a batch (blocking for the
+/// first item, then lingering), releases it, and decodes — so batch
+/// collection and decoding pipeline across workers, and every queued
+/// item lands in exactly one batch.  Returns None once the channel is
+/// closed and drained (or the lock is poisoned); callers treat that as
+/// shutdown.
+pub fn next_batch_shared<T>(rx: &Mutex<Receiver<T>>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let guard = rx.lock().ok()?;
+    next_batch(&guard, policy)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
+    use std::sync::Arc;
 
     #[test]
     fn batches_respect_capacity() {
@@ -87,6 +102,35 @@ mod tests {
         let b = next_batch(&rx, &BatchPolicy::default()).unwrap();
         assert_eq!(b, vec![7]);
         assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn shared_receiver_partitions_items_exactly_once() {
+        let (tx, rx) = channel();
+        let rx = Arc::new(Mutex::new(rx));
+        let n_items = 64usize;
+        for i in 0..n_items {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 4, linger: Duration::from_millis(1) };
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let rx = rx.clone();
+            let policy = policy.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(batch) = next_batch_shared(&rx, &policy) {
+                    assert!(batch.len() <= policy.max_batch);
+                    got.extend(batch);
+                }
+                got
+            }));
+        }
+        let mut all: Vec<usize> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        // every item consumed exactly once across the pool
+        assert_eq!(all, (0..n_items).collect::<Vec<_>>());
     }
 
     #[test]

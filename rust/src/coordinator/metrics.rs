@@ -10,9 +10,17 @@ const BUCKETS: usize = 40;
 pub struct Metrics {
     pub requests: AtomicU64,
     pub responses: AtomicU64,
+    /// requests answered with an error line (worker-side failures)
+    pub errors: AtomicU64,
     pub tokens_out: AtomicU64,
     pub batches: AtomicU64,
     pub batch_occupancy_sum: AtomicU64,
+    /// gauge: requests enqueued but not yet pulled into a batch
+    /// (incremented by connection threads, decremented by workers)
+    pub queue_depth: AtomicU64,
+    /// forward steps *saved* by per-request early exit: the gap
+    /// between each batch's largest token budget and the steps run
+    pub early_exit_steps: AtomicU64,
     /// log₂-bucketed latencies, bucket i = [2^i, 2^(i+1)) microseconds
     lat_buckets: [AtomicU64; BUCKETS],
 }
@@ -22,9 +30,12 @@ impl Default for Metrics {
         Metrics {
             requests: AtomicU64::new(0),
             responses: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
             tokens_out: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_occupancy_sum: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            early_exit_steps: AtomicU64::new(0),
             lat_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -70,12 +81,16 @@ impl Metrics {
 
     pub fn snapshot(&self) -> String {
         format!(
-            "req={} resp={} tokens={} batches={} occ={:.2} p50={}us p95={}us p99={}us",
+            "req={} resp={} err={} tokens={} batches={} occ={:.2} queue={} saved_steps={} \
+             p50={}us p95={}us p99={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
             self.tokens_out.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_occupancy(),
+            self.queue_depth.load(Ordering::Relaxed),
+            self.early_exit_steps.load(Ordering::Relaxed),
             self.latency_percentile(0.50),
             self.latency_percentile(0.95),
             self.latency_percentile(0.99),
@@ -112,5 +127,20 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.latency_percentile(0.99), 0);
         assert!(m.snapshot().contains("req=0"));
+        assert!(m.snapshot().contains("queue=0"));
+        assert!(m.snapshot().contains("saved_steps=0"));
+    }
+
+    #[test]
+    fn queue_and_early_exit_counters_surface() {
+        let m = Metrics::default();
+        m.queue_depth.fetch_add(3, Ordering::Relaxed);
+        m.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        m.early_exit_steps.fetch_add(7, Ordering::Relaxed);
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!(s.contains("queue=2"), "{s}");
+        assert!(s.contains("saved_steps=7"), "{s}");
+        assert!(s.contains("err=1"), "{s}");
     }
 }

@@ -1,37 +1,78 @@
-//! Serving stack: a TCP line-protocol server in front of a generation
-//! engine that drives the AOT `fwd_logits` executable.
+//! Serving stack: a TCP line-protocol server in front of a pool of
+//! generation engines that drive the AOT `fwd_logits` executable.
 //!
 //! Topology (std threads; rust owns the event loop — python is never on
 //! this path):
 //!
-//!   client ──TCP──▶ connection thread ──mpsc──▶ batcher/worker thread
-//!                                                 │ fwd_logits (XLA)
-//!   client ◀──TCP── response channel ◀────────────┘
+//!   client ──TCP──▶ connection thread ──mpsc──▶ shared request queue
+//!                                                 │ (Mutex<Receiver>)
+//!                                   worker 0 ◀────┼────▶ worker N-1
+//!                                   │ fwd_logits (XLA, one engine each)
+//!   client ◀──TCP── response channel ◀┘
+//!
+//! Each worker owns its *own* `Runtime` + `Engine` (PJRT handles are
+//! not `Send`, so every engine is born on the thread that uses it) and
+//! competes for batches on the shared queue: one worker at a time holds
+//! the queue lock while it collects a batch, then releases it and
+//! decodes, so batch collection and decoding pipeline across workers.
+//!
+//! Decode state is **per request**: every row of a batch carries its
+//! own `max_tokens`, `temperature`, and optional `stop` token, is
+//! sampled with its own temperature, and finishes independently.  The
+//! step loop exits as soon as every row is done, so a batch of short
+//! requests never pays forwards up to the batch-wide maximum.
 //!
 //! Protocol: one JSON object per line.
-//!   request:  {"prompt": [int, ...], "max_tokens": int, "temperature"?: float}
+//!   request:  {"prompt": [int, ...], "max_tokens": int,
+//!              "temperature"?: float, "stop"?: int}
 //!   response: {"tokens": [int, ...], "latency_us": int}
+//!   error:    {"error": str, "latency_us": int}
+//!
+//! Errors are *per request*: a failed forward degrades every request of
+//! the batch to an error line, never a dropped connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{Runtime, Session};
+use crate::runtime::{session::pack_decode_windows, Runtime, Session};
 use crate::util::{Json, Pcg32};
 
-use super::batcher::{next_batch, BatchPolicy};
+use super::batcher::{next_batch_shared, BatchPolicy};
 use super::metrics::Metrics;
+
+/// Server-side ceiling on a single request's decode budget: without it
+/// one request could pin a worker in the step loop indefinitely (each
+/// step is a full XLA forward) and stall everything batched with it.
+pub const MAX_TOKENS_CAP: usize = 4096;
+
+/// Per-request decode parameters: each row of a batch decodes under its
+/// own budget and sampling settings.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecodeParams {
+    /// decode exactly this many tokens (unless `stop` fires earlier)
+    pub max_tokens: usize,
+    /// 0 (or negative) = greedy; otherwise softmax temperature
+    pub temperature: f32,
+    /// optional stop token: emitted, then the row is finished
+    pub stop: Option<u32>,
+}
+
+impl DecodeParams {
+    pub fn greedy(max_tokens: usize) -> DecodeParams {
+        DecodeParams { max_tokens, temperature: 0.0, stop: None }
+    }
+}
 
 /// An in-flight request.
 pub struct Request {
     pub prompt: Vec<u32>,
-    pub max_tokens: usize,
-    pub temperature: f32,
+    pub params: DecodeParams,
     pub reply: Sender<Response>,
     pub arrived: Instant,
 }
@@ -40,6 +81,32 @@ pub struct Request {
 pub struct Response {
     pub tokens: Vec<u32>,
     pub latency_us: u64,
+    /// Some(message) degrades this response to an error line.
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn ok(tokens: Vec<u32>, latency_us: u64) -> Response {
+        Response { tokens, latency_us, error: None }
+    }
+
+    pub fn err(message: impl Into<String>, latency_us: u64) -> Response {
+        Response { tokens: Vec::new(), latency_us, error: Some(message.into()) }
+    }
+}
+
+/// One decoded batch: per-row outputs plus the number of forward steps
+/// actually run (≤ the largest row budget when rows stop early).
+pub struct Generation {
+    pub outputs: Vec<Vec<u32>>,
+    pub steps: usize,
+}
+
+/// Anything that can decode a batch of per-request rows — the real
+/// XLA-backed engine, or a test double for driving `worker_loop`
+/// without artifacts.
+pub trait Generator {
+    fn generate(&mut self, prompts: &[Vec<u32>], params: &[DecodeParams]) -> Result<Generation>;
 }
 
 /// Generation engine over a pinned session.
@@ -54,112 +121,172 @@ impl Engine {
         Engine { session, vocab, rng: Pcg32::seeded(seed) }
     }
 
-    /// Decode a batch of prompts (greedy if temperature == 0).
+    /// Move this engine's sampler onto its own PCG stream.  The pool
+    /// builds every worker from one factory, so without this every
+    /// worker would sample byte-identical sequences.
+    pub fn fork_rng(&mut self, stream: u64) {
+        let state = self.rng.next_u64();
+        self.rng = Pcg32::new(state, stream);
+    }
+
+    /// Decode a batch of prompts, each row under its own
+    /// `DecodeParams` (greedy where temperature == 0).
     ///
     /// The AOT executable has a fixed [B, T] shape: the context is a
     /// sliding window over the last T tokens; each step runs one full
-    /// forward and reads the logits at each row's current last position.
+    /// forward and reads the logits at each row's current last
+    /// position.  Finished rows keep their slot (the shape is fixed)
+    /// but are no longer sampled; the loop ends when all rows are done.
     pub fn generate(
         &mut self,
         rt: &mut Runtime,
         prompts: &[Vec<u32>],
-        max_new: usize,
-        temperature: f32,
-    ) -> Result<Vec<Vec<u32>>> {
+        params: &[DecodeParams],
+    ) -> Result<Generation> {
         let b = self.session.logits_batch;
         let t = self.session.seq_len;
-        anyhow::ensure!(prompts.len() <= b, "batch too large");
-        let mut seqs: Vec<Vec<u32>> = prompts.to_vec();
-        for s in &mut seqs {
-            anyhow::ensure!(!s.is_empty(), "empty prompt");
-            s.truncate(t);
-        }
-        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
-
-        for _ in 0..max_new {
-            // pack the sliding windows (right-padded with last token)
-            let mut toks = vec![0i32; b * t];
-            let mut pos = vec![0usize; prompts.len()];
-            for (r, s) in seqs.iter().enumerate() {
-                let start = s.len().saturating_sub(t);
-                let window = &s[start..];
-                for (i, &tok) in window.iter().enumerate() {
-                    toks[r * t + i] = tok as i32;
-                }
-                for i in window.len()..t {
-                    toks[r * t + i] = *window.last().unwrap() as i32;
-                }
-                pos[r] = window.len() - 1;
-            }
-            let logits = self.session.logits(rt, &toks)?;
-            for r in 0..prompts.len() {
-                let off = (r * t + pos[r]) * self.vocab;
-                let row = &logits[off..off + self.vocab];
-                let next = if temperature <= 0.0 {
-                    argmax(row)
-                } else {
-                    sample(row, temperature, &mut self.rng)
-                };
-                seqs[r].push(next as u32);
-                outputs[r].push(next as u32);
-            }
-        }
-        Ok(outputs)
+        let vocab = self.vocab;
+        let session = &self.session;
+        decode_batch(|toks| session.logits(rt, toks), b, t, vocab, prompts, params, &mut self.rng)
     }
 }
 
+/// The decode loop over an abstract forward function `step` (tokens
+/// `[b, t]` row-major → logits `[b, t, vocab]` flattened).  Split out
+/// from `Engine` so per-request semantics are testable without XLA.
+pub fn decode_batch(
+    mut step: impl FnMut(&[i32]) -> Result<Vec<f32>>,
+    b: usize,
+    t: usize,
+    vocab: usize,
+    prompts: &[Vec<u32>],
+    params: &[DecodeParams],
+    rng: &mut Pcg32,
+) -> Result<Generation> {
+    let n = prompts.len();
+    anyhow::ensure!(n <= b, "batch too large: {n} > {b}");
+    anyhow::ensure!(params.len() == n, "params/prompts length mismatch");
+    let mut seqs: Vec<Vec<u32>> = prompts.to_vec();
+    for s in &mut seqs {
+        anyhow::ensure!(!s.is_empty(), "empty prompt");
+        // sliding-window model: keep the *last* t tokens (the most
+        // recent context), not the first t
+        if s.len() > t {
+            let cut = s.len() - t;
+            s.drain(..cut);
+        }
+    }
+    let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut done: Vec<bool> = params.iter().map(|p| p.max_tokens == 0).collect();
+    let budget = params.iter().map(|p| p.max_tokens).max().unwrap_or(0);
+    let mut steps = 0;
+
+    while steps < budget && done.iter().any(|d| !d) {
+        let (toks, pos) = pack_decode_windows(&seqs, b, t)?;
+        let logits = step(&toks)?;
+        anyhow::ensure!(logits.len() == b * t * vocab, "bad logits length {}", logits.len());
+        steps += 1;
+        for r in 0..n {
+            if done[r] {
+                continue;
+            }
+            let off = (r * t + pos[r]) * vocab;
+            let row = &logits[off..off + vocab];
+            let p = params[r];
+            let idx =
+                if p.temperature <= 0.0 { argmax(row) } else { sample(row, p.temperature, rng) };
+            let next = idx as u32;
+            // growth is bounded by max_tokens; pack_decode_windows
+            // re-windows to the last t tokens every step
+            seqs[r].push(next);
+            outputs[r].push(next);
+            if outputs[r].len() >= p.max_tokens || p.stop == Some(next) {
+                done[r] = true;
+            }
+        }
+    }
+    Ok(Generation { outputs, steps })
+}
+
+/// Rank tokens with `total_cmp`: NaN logits from a degraded model sort
+/// low instead of panicking the worker thread.
 fn argmax(row: &[f32]) -> usize {
-    row.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .unwrap()
-        .0
+    row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap_or(0)
 }
 
 fn sample(row: &[f32], temperature: f32, rng: &mut Pcg32) -> usize {
-    let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-    let w: Vec<f64> = row.iter().map(|&v| (((v - mx) / temperature) as f64).exp()).collect();
+    let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| if v > m { v } else { m });
+    if !mx.is_finite() {
+        // all-NaN / all -inf row: degrade to the total_cmp argmax
+        return argmax(row);
+    }
+    let w: Vec<f64> = row
+        .iter()
+        .map(|&v| if v.is_nan() { 0.0 } else { (((v - mx) / temperature) as f64).exp() })
+        .collect();
     rng.categorical(&w)
 }
 
-/// The worker loop: batch → generate → reply.
-pub fn worker_loop(
-    mut rt: Runtime,
-    mut engine: Engine,
-    rx: Receiver<Request>,
+/// A worker's engine half: the runtime plus the engine pinned to it.
+/// Built inside the worker thread (PJRT handles are not `Send`).
+pub struct EngineWorker {
+    pub rt: Runtime,
+    pub engine: Engine,
+}
+
+impl Generator for EngineWorker {
+    fn generate(&mut self, prompts: &[Vec<u32>], params: &[DecodeParams]) -> Result<Generation> {
+        self.engine.generate(&mut self.rt, prompts, params)
+    }
+}
+
+/// The worker loop: pull a batch off the shared queue, decode, reply.
+/// Several workers may run this concurrently against one queue; each
+/// request is answered exactly once — on success with its own
+/// `max_tokens`-long output, on failure with an error response per
+/// request (never a dropped batch).
+pub fn worker_loop<G: Generator>(
+    mut engine: G,
+    rx: Arc<Mutex<Receiver<Request>>>,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
 ) {
     while running.load(Ordering::Relaxed) {
-        let Some(batch) = next_batch(&rx, &policy) else { break };
+        let Some(batch) = next_batch_shared(&rx, &policy) else { break };
+        metrics.queue_depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
         metrics.record_batch(batch.len());
         let prompts: Vec<Vec<u32>> = batch.iter().map(|r| r.prompt.clone()).collect();
-        let max_new = batch.iter().map(|r| r.max_tokens).max().unwrap_or(1);
-        let temperature = batch[0].temperature;
-        match engine.generate(&mut rt, &prompts, max_new, temperature) {
-            Ok(outs) => {
-                for (req, mut out) in batch.into_iter().zip(outs) {
-                    out.truncate(req.max_tokens);
+        let params: Vec<DecodeParams> = batch.iter().map(|r| r.params).collect();
+        let budget = params.iter().map(|p| p.max_tokens).max().unwrap_or(0);
+        match engine.generate(&prompts, &params) {
+            Ok(g) => {
+                metrics
+                    .early_exit_steps
+                    .fetch_add(budget.saturating_sub(g.steps) as u64, Ordering::Relaxed);
+                for (req, out) in batch.into_iter().zip(g.outputs) {
                     let latency = req.arrived.elapsed();
                     metrics.record_latency(latency);
                     metrics.responses.fetch_add(1, Ordering::Relaxed);
                     metrics.tokens_out.fetch_add(out.len() as u64, Ordering::Relaxed);
-                    let _ = req.reply.send(Response {
-                        tokens: out,
-                        latency_us: latency.as_micros() as u64,
-                    });
+                    let _ = req.reply.send(Response::ok(out, latency.as_micros() as u64));
                 }
             }
             Err(e) => {
-                eprintln!("worker error: {e:#}");
+                let msg = format!("{e:#}");
+                eprintln!("worker error: {msg}");
+                for req in batch {
+                    let latency = req.arrived.elapsed();
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(Response::err(&msg, latency.as_micros() as u64));
+                }
             }
         }
     }
 }
 
 /// Parse one request line.
-pub fn parse_request(line: &str) -> Result<(Vec<u32>, usize, f32)> {
+pub fn parse_request(line: &str) -> Result<(Vec<u32>, DecodeParams)> {
     let j = Json::parse(line).context("bad request json")?;
     let prompt: Vec<u32> = j
         .get("prompt")?
@@ -169,18 +296,36 @@ pub fn parse_request(line: &str) -> Result<(Vec<u32>, usize, f32)> {
         .collect::<Result<_>>()?;
     anyhow::ensure!(!prompt.is_empty(), "empty prompt");
     let max_tokens = j.get("max_tokens")?.as_usize()?;
-    let temperature = j.opt("temperature").map(|t| t.as_f64().unwrap_or(0.0)).unwrap_or(0.0) as f32;
-    Ok((prompt, max_tokens, temperature))
+    anyhow::ensure!(
+        max_tokens <= MAX_TOKENS_CAP,
+        "max_tokens {max_tokens} exceeds cap {MAX_TOKENS_CAP}"
+    );
+    let temperature =
+        j.opt("temperature").map(|t| t.as_f64().unwrap_or(0.0)).unwrap_or(0.0) as f32;
+    let stop = match j.opt("stop") {
+        Some(v) => Some(v.as_usize()? as u32),
+        None => None,
+    };
+    Ok((prompt, DecodeParams { max_tokens, temperature, stop }))
 }
 
-/// Render one response line.
+/// Render one response (or error) line.
 pub fn render_response(resp: &Response) -> String {
-    let toks = Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect());
-    Json::obj(vec![
-        ("tokens", toks),
-        ("latency_us", Json::num(resp.latency_us as f64)),
-    ])
-    .to_string()
+    match &resp.error {
+        Some(msg) => Json::obj(vec![
+            ("error", Json::str(msg.clone())),
+            ("latency_us", Json::num(resp.latency_us as f64)),
+        ])
+        .to_string(),
+        None => {
+            let toks = Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect());
+            Json::obj(vec![
+                ("tokens", toks),
+                ("latency_us", Json::num(resp.latency_us as f64)),
+            ])
+            .to_string()
+        }
+    }
 }
 
 fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>) {
@@ -193,19 +338,15 @@ fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>) {
             continue;
         }
         match parse_request(&line) {
-            Ok((prompt, max_tokens, temperature)) => {
+            Ok((prompt, params)) => {
                 metrics.requests.fetch_add(1, Ordering::Relaxed);
                 let (reply_tx, reply_rx) = channel();
+                metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
                 if tx
-                    .send(Request {
-                        prompt,
-                        max_tokens,
-                        temperature,
-                        reply: reply_tx,
-                        arrived: Instant::now(),
-                    })
+                    .send(Request { prompt, params, reply: reply_tx, arrived: Instant::now() })
                     .is_err()
                 {
+                    metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
                     break;
                 }
                 match reply_rx.recv() {
@@ -216,7 +357,8 @@ fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>) {
                 }
             }
             Err(e) => {
-                let _ = writeln!(writer, "{{\"error\": \"{e}\"}}");
+                let err_line = Json::obj(vec![("error", Json::str(format!("{e:#}")))]);
+                let _ = writeln!(writer, "{err_line}");
             }
         }
     }
@@ -224,13 +366,15 @@ fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>) {
 }
 
 /// Run the server until `running` is cleared.  Binds `addr`, spawns one
-/// thread per connection; the worker thread *constructs* the XLA
-/// runtime via `factory` (PJRT handles are not `Send`, so they must be
-/// born on the thread that uses them).
+/// thread per connection and `workers` engine workers competing on a
+/// shared request queue; each worker *constructs* its own XLA runtime
+/// via `factory` (PJRT handles are not `Send`, so they must be born on
+/// the thread that uses them).
 pub fn serve(
-    factory: impl FnOnce() -> Result<(Runtime, Engine)> + Send + 'static,
+    factory: impl Fn() -> Result<(Runtime, Engine)> + Send + Sync + 'static,
     addr: &str,
     policy: BatchPolicy,
+    workers: usize,
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
 ) -> Result<std::net::SocketAddr> {
@@ -238,13 +382,26 @@ pub fn serve(
     let local = listener.local_addr()?;
     listener.set_nonblocking(true)?;
     let (tx, rx) = channel::<Request>();
+    let rx = Arc::new(Mutex::new(rx));
+    let factory = Arc::new(factory);
 
-    let m2 = metrics.clone();
-    let r2 = running.clone();
-    std::thread::spawn(move || match factory() {
-        Ok((rt, engine)) => worker_loop(rt, engine, rx, policy, m2, r2),
-        Err(e) => eprintln!("engine init failed: {e:#}"),
-    });
+    for w in 0..workers.max(1) {
+        let rx = rx.clone();
+        let policy = policy.clone();
+        let m = metrics.clone();
+        let r = running.clone();
+        let f = factory.clone();
+        std::thread::Builder::new()
+            .name(format!("engine-worker-{w}"))
+            .spawn(move || match f() {
+                Ok((rt, mut engine)) => {
+                    engine.fork_rng(w as u64);
+                    worker_loop(EngineWorker { rt, engine }, rx, policy, m, r)
+                }
+                Err(e) => eprintln!("engine init failed: {e:#}"),
+            })
+            .context("spawning engine worker")?;
+    }
 
     let m3 = metrics;
     let r3 = running;
@@ -272,13 +429,17 @@ mod tests {
 
     #[test]
     fn parse_request_roundtrip() {
-        let (p, m, t) = parse_request(r#"{"prompt": [1, 2, 3], "max_tokens": 8}"#).unwrap();
+        let (p, d) = parse_request(r#"{"prompt": [1, 2, 3], "max_tokens": 8}"#).unwrap();
         assert_eq!(p, vec![1, 2, 3]);
-        assert_eq!(m, 8);
-        assert_eq!(t, 0.0);
-        let (_, _, t2) =
-            parse_request(r#"{"prompt": [1], "max_tokens": 1, "temperature": 0.7}"#).unwrap();
-        assert!((t2 - 0.7).abs() < 1e-6);
+        assert_eq!(d.max_tokens, 8);
+        assert_eq!(d.temperature, 0.0);
+        assert_eq!(d.stop, None);
+        let (_, d2) = parse_request(
+            r#"{"prompt": [1], "max_tokens": 1, "temperature": 0.7, "stop": 2}"#,
+        )
+        .unwrap();
+        assert!((d2.temperature - 0.7).abs() < 1e-6);
+        assert_eq!(d2.stop, Some(2));
     }
 
     #[test]
@@ -289,12 +450,34 @@ mod tests {
     }
 
     #[test]
+    fn parse_caps_max_tokens() {
+        // one request must not be able to pin a worker forever
+        let over = format!(r#"{{"prompt": [1], "max_tokens": {}}}"#, MAX_TOKENS_CAP + 1);
+        let err = parse_request(&over).unwrap_err().to_string();
+        assert!(err.contains("exceeds cap"), "{err}");
+        assert!(parse_request(&format!(
+            r#"{{"prompt": [1], "max_tokens": {MAX_TOKENS_CAP}}}"#
+        ))
+        .is_ok());
+    }
+
+    #[test]
     fn render_response_shape() {
-        let r = Response { tokens: vec![4, 5], latency_us: 123 };
+        let r = Response::ok(vec![4, 5], 123);
         let s = render_response(&r);
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.usize_list("tokens").unwrap(), vec![4, 5]);
         assert_eq!(j.get("latency_us").unwrap().as_usize().unwrap(), 123);
+    }
+
+    #[test]
+    fn render_error_shape() {
+        let r = Response::err("engine \"died\"", 7);
+        let s = render_response(&r);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "engine \"died\"");
+        assert_eq!(j.get("latency_us").unwrap().as_usize().unwrap(), 7);
+        assert!(j.opt("tokens").is_none());
     }
 
     #[test]
@@ -311,5 +494,107 @@ mod tests {
             }
         }
         assert!(hits >= 48, "{hits}");
+    }
+
+    #[test]
+    fn argmax_survives_nan() {
+        let row = vec![f32::NAN, 1.0, f32::NAN, 3.0, 2.0];
+        assert_eq!(argmax(&row), 3);
+        let all_nan = vec![f32::NAN; 4];
+        // no panic; some in-range index
+        assert!(argmax(&all_nan) < 4);
+        let mut rng = Pcg32::seeded(2);
+        assert!(sample(&row, 0.5, &mut rng) < 5);
+        assert!(sample(&all_nan, 0.5, &mut rng) < 4);
+    }
+
+    /// Fake forward: row r's logits peak hard at token r+1, at every
+    /// position.  Peak is big enough that even the sampling path is
+    /// deterministic (other weights underflow to exactly 0).
+    fn row_peaked_step(b: usize, t: usize, vocab: usize) -> impl FnMut(&[i32]) -> Result<Vec<f32>> {
+        move |toks: &[i32]| {
+            assert_eq!(toks.len(), b * t);
+            let mut logits = vec![0.0f32; b * t * vocab];
+            for r in 0..b {
+                for p in 0..t {
+                    logits[(r * t + p) * vocab + (r + 1) % vocab] = 100.0;
+                }
+            }
+            Ok(logits)
+        }
+    }
+
+    #[test]
+    fn decode_batch_mixed_params() {
+        let (b, t, vocab) = (3, 4, 8);
+        let mut rng = Pcg32::seeded(3);
+        let prompts = vec![vec![5u32], vec![6, 7], vec![1, 2, 3]];
+        let params = vec![
+            DecodeParams::greedy(2),
+            DecodeParams { max_tokens: 5, temperature: 0.001, stop: None },
+            DecodeParams::greedy(3),
+        ];
+        let g = decode_batch(row_peaked_step(b, t, vocab), b, t, vocab, &prompts, &params, &mut rng)
+            .unwrap();
+        // each row got exactly its own budget, decoded with its own
+        // temperature against its own logits
+        assert_eq!(g.outputs[0], vec![1, 1]);
+        assert_eq!(g.outputs[1], vec![2, 2, 2, 2, 2]);
+        assert_eq!(g.outputs[2], vec![3, 3, 3]);
+        // the longest row bounds the step count
+        assert_eq!(g.steps, 5);
+    }
+
+    #[test]
+    fn decode_batch_stop_token_early_exit() {
+        let (b, t, vocab) = (2, 4, 8);
+        let mut rng = Pcg32::seeded(4);
+        let prompts = vec![vec![5u32], vec![6u32]];
+        // both rows would run 10 steps, but their peaked tokens are
+        // also their stop tokens: the loop exits after a single step
+        let params = vec![
+            DecodeParams { max_tokens: 10, temperature: 0.0, stop: Some(1) },
+            DecodeParams { max_tokens: 10, temperature: 0.0, stop: Some(2) },
+        ];
+        let g = decode_batch(row_peaked_step(b, t, vocab), b, t, vocab, &prompts, &params, &mut rng)
+            .unwrap();
+        assert_eq!(g.outputs[0], vec![1]);
+        assert_eq!(g.outputs[1], vec![2]);
+        assert_eq!(g.steps, 1, "all rows done -> early exit");
+    }
+
+    #[test]
+    fn decode_batch_keeps_recent_context() {
+        // prompt longer than the window: the window must hold the
+        // *last* t tokens, so the fake step should see them
+        let (b, t, vocab) = (1, 3, 8);
+        let mut rng = Pcg32::seeded(5);
+        let mut seen = Vec::new();
+        let step = |toks: &[i32]| {
+            seen.push(toks.to_vec());
+            Ok(vec![0.0f32; b * t * vocab])
+        };
+        let prompts = vec![vec![9u32, 8, 7, 6, 5]];
+        let params = vec![DecodeParams::greedy(1)];
+        let _ = decode_batch(step, b, t, vocab, &prompts, &params, &mut rng).unwrap();
+        assert_eq!(seen[0][..3], [7, 6, 5], "window must keep the most recent tokens");
+    }
+
+    #[test]
+    fn decode_batch_zero_budget() {
+        let (b, t, vocab) = (1, 4, 8);
+        let mut rng = Pcg32::seeded(6);
+        let g = decode_batch(
+            |_| panic!("no forward should run"),
+            b,
+            t,
+            vocab,
+            &[vec![1u32]],
+            &[DecodeParams::greedy(0)],
+            &mut rng,
+        )
+        .unwrap();
+        assert!(g.outputs[0].is_empty());
+        assert_eq!(g.steps, 0);
     }
 }

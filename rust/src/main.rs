@@ -7,7 +7,9 @@
 //!   table     --id 1|2|3|4|5|6|7 [--windows N] [--teachers S,M]
 //!   figure    --id 1|3|4|6|7
 //!   serve     --teacher S [--method dbllm] [--addr 127.0.0.1:7878]
+//!             [--workers 2] [--max-batch 4] [--linger-ms 20]
 //!   client    --addr 127.0.0.1:7878 --prompt 1,2,3 --max-tokens 8
+//!             [--temperature 0.7] [--stop 0]
 //!
 //! Argument parsing is hand-rolled (offline build, no clap); every flag
 //! is `--name value`.
@@ -148,7 +150,9 @@ fn print_help() {
            table    --id N                   regenerate paper table N (1-7)\n\
            figure   --id N                   regenerate paper figure N (1,3,4,6,7)\n\
            serve    --teacher S [--method M] [--addr A] TCP serving demo\n\
+                    [--workers N] [--max-batch N] [--linger-ms N]\n\
            client   --addr A --prompt 1,2,3 --max-tokens 8\n\
+                    [--temperature T] [--stop TOKEN]\n\
          \n\
          common flags: --artifacts DIR --windows N --dad-batches N\n\
                        --teachers S,M,L --zs-items N --out-dir results\n\
@@ -292,6 +296,15 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let teacher = flags.get("teacher").context("--teacher required")?.clone();
     let method = method_from_str(flags.get("method").map(String::as_str).unwrap_or("fp16"))?;
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
+    let workers: usize =
+        flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(1).max(1);
+    let mut policy = BatchPolicy::default();
+    if let Some(v) = flags.get("max-batch").map(|s| s.parse()).transpose()? {
+        policy.max_batch = v;
+    }
+    if let Some(v) = flags.get("linger-ms").map(|s| s.parse()).transpose()? {
+        policy.linger = std::time::Duration::from_millis(v);
+    }
     let opts = opts_from_flags(flags);
     let metrics = Arc::new(Metrics::default());
     let running = Arc::new(AtomicBool::new(true));
@@ -299,7 +312,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let m2 = metrics.clone();
     let local = serve(
         move || {
-            let mut rt = Runtime::open(dir)?;
+            let mut rt = Runtime::open(&dir)?;
             let student = tables::make_student(&mut rt, &teacher, method, &opts, None)?;
             let vocab = rt.manifest.vocab();
             let session = Session::new(&rt, &student.weights)?;
@@ -307,12 +320,13 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             Ok((rt, Engine::new(session, vocab, 42)))
         },
         &addr,
-        BatchPolicy::default(),
+        policy,
+        workers,
         m2,
         running.clone(),
     )?;
-    println!("serving on {local} — protocol: one JSON per line");
-    println!("  {{\"prompt\": [1,2,3], \"max_tokens\": 8}}");
+    println!("serving on {local} with {workers} worker(s) — protocol: one JSON per line");
+    println!("  {{\"prompt\": [1,2,3], \"max_tokens\": 8, \"temperature\": 0.7, \"stop\": 0}}");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
         println!("[metrics] {}", metrics.snapshot());
@@ -325,7 +339,16 @@ fn cmd_client(flags: &BTreeMap<String, String>) -> Result<()> {
     let prompt = flags.get("prompt").context("--prompt 1,2,3 required")?;
     let max_tokens: usize = flags.get("max-tokens").map(|s| s.parse()).transpose()?.unwrap_or(8);
     let mut stream = std::net::TcpStream::connect(&addr)?;
-    let req = format!("{{\"prompt\": [{prompt}], \"max_tokens\": {max_tokens}}}");
+    let mut req = format!("{{\"prompt\": [{prompt}], \"max_tokens\": {max_tokens}");
+    if let Some(t) = flags.get("temperature") {
+        let t: f64 = t.parse()?;
+        req.push_str(&format!(", \"temperature\": {t}"));
+    }
+    if let Some(s) = flags.get("stop") {
+        let s: usize = s.parse()?;
+        req.push_str(&format!(", \"stop\": {s}"));
+    }
+    req.push('}');
     writeln!(stream, "{req}")?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();

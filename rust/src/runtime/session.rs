@@ -91,6 +91,37 @@ pub fn pack_batch(windows: &[Vec<u32>], batch: usize, width: usize) -> Result<Ve
     Ok(out)
 }
 
+/// Pack decode-loop sliding windows into the flat `[batch, width]` i32
+/// layout `Session::logits` expects.  Each row holds the *last*
+/// `width` tokens of its sequence (the most recent context); short
+/// rows are right-padded by repeating their own last token, and unused
+/// batch slots stay zero — the AOT executable's shape is fixed, so
+/// finished or absent rows still occupy a slot but their logits are
+/// simply never read.  Returns the packed tokens plus each row's
+/// last-content position (where its next-token logits live).
+pub fn pack_decode_windows(
+    seqs: &[Vec<u32>],
+    batch: usize,
+    width: usize,
+) -> Result<(Vec<i32>, Vec<usize>)> {
+    ensure!(seqs.len() <= batch, "batch too large: {} > {batch}", seqs.len());
+    let mut toks = vec![0i32; batch * width];
+    let mut pos = vec![0usize; seqs.len()];
+    for (r, s) in seqs.iter().enumerate() {
+        ensure!(!s.is_empty(), "empty sequence in row {r}");
+        let start = s.len().saturating_sub(width);
+        let window = &s[start..];
+        for (i, &tok) in window.iter().enumerate() {
+            toks[r * width + i] = tok as i32;
+        }
+        for i in window.len()..width {
+            toks[r * width + i] = *window.last().unwrap() as i32;
+        }
+        pos[r] = window.len() - 1;
+    }
+    Ok((toks, pos))
+}
+
 /// Convenience: read back the teacher weights named in the manifest.
 pub fn load_teacher(rt: &Runtime, tag: &str) -> Result<Weights> {
     let info = rt.manifest.teacher(tag)?;
@@ -115,5 +146,25 @@ mod tests {
     fn pack_batch_rejects_bad_width() {
         assert!(pack_batch(&[vec![1u32, 2, 3]], 1, 2).is_err());
         assert!(pack_batch(&[], 1, 2).is_err());
+    }
+
+    #[test]
+    fn decode_windows_keep_recent_and_pad() {
+        let seqs = vec![vec![9u32, 8, 7, 6], vec![5u32]];
+        let (toks, pos) = pack_decode_windows(&seqs, 3, 3).unwrap();
+        // row 0: last 3 tokens of a long sequence
+        assert_eq!(&toks[0..3], &[8, 7, 6]);
+        assert_eq!(pos[0], 2);
+        // row 1: short row right-padded with its own last token
+        assert_eq!(&toks[3..6], &[5, 5, 5]);
+        assert_eq!(pos[1], 0);
+        // unused slot stays zero
+        assert_eq!(&toks[6..9], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn decode_windows_reject_bad_rows() {
+        assert!(pack_decode_windows(&[vec![1u32], vec![2]], 1, 4).is_err());
+        assert!(pack_decode_windows(&[vec![]], 1, 4).is_err());
     }
 }

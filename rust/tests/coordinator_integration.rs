@@ -1,16 +1,22 @@
 //! Integration: the coordinator over real artifacts — DAD fine-tuning
 //! (XLA gradients + rust AdamW), the serving stack end to end over TCP,
-//! and generation determinism.  Requires `make artifacts`.
+//! and generation determinism.  The XLA-backed tests require
+//! `make artifacts`; the worker-pool tests drive `worker_loop` with a
+//! fake generator and run everywhere.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::sync::atomic::AtomicBool;
-use std::sync::Arc;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use db_llm::coordinator::batcher::BatchPolicy;
 use db_llm::coordinator::finetune::{DadConfig, DadTrainer};
 use db_llm::coordinator::metrics::Metrics;
-use db_llm::coordinator::serve::{serve, Engine};
+use db_llm::coordinator::serve::{
+    serve, worker_loop, DecodeParams, Engine, Generation, Generator, Request,
+};
 use db_llm::data::TokenStream;
 use db_llm::quant::{fdb::Fdb, Calib, Quantizer};
 use db_llm::runtime::{session::load_teacher, Runtime, Session};
@@ -105,6 +111,7 @@ fn tcp_serving_end_to_end() {
         },
         "127.0.0.1:0",
         BatchPolicy::default(),
+        1,
         metrics.clone(),
         running.clone(),
     )
@@ -145,4 +152,201 @@ fn tcp_serving_end_to_end() {
 
     running.store(false, std::sync::atomic::Ordering::Relaxed);
     assert!(metrics.responses.load(std::sync::atomic::Ordering::Relaxed) >= 3);
+}
+
+/// Mixed per-request decode state over real artifacts: one server with
+/// two workers, concurrent clients with different temperatures and
+/// budgets — every request answered exactly once, at exactly its own
+/// length, and greedy rows stay deterministic even when batched next to
+/// sampled rows.
+#[test]
+fn tcp_mixed_batch_multi_worker() {
+    if !have_artifacts() {
+        return;
+    }
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+    let addr = serve(
+        || {
+            let rt = Runtime::open(artifacts_dir())?;
+            let weights = load_teacher(&rt, "S")?;
+            let vocab = rt.manifest.vocab();
+            let session = Session::new(&rt, &weights)?;
+            Ok((rt, Engine::new(session, vocab, 1)))
+        },
+        "127.0.0.1:0",
+        BatchPolicy::default(),
+        2,
+        metrics.clone(),
+        running.clone(),
+    )
+    .unwrap();
+
+    let mut handles = Vec::new();
+    for c in 0..4usize {
+        handles.push(std::thread::spawn(move || {
+            let mut stream = loop {
+                match std::net::TcpStream::connect(addr) {
+                    Ok(s) => break s,
+                    Err(_) => std::thread::sleep(Duration::from_millis(50)),
+                }
+            };
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            // even clients: greedy, short; odd clients: sampled, long
+            let (max_tokens, temperature) = if c % 2 == 0 { (3, 0.0) } else { (7, 1.3) };
+            let mut outs = Vec::new();
+            for _ in 0..3 {
+                writeln!(
+                    stream,
+                    "{{\"prompt\": [5, 10, 15], \"max_tokens\": {max_tokens}, \
+                     \"temperature\": {temperature}}}"
+                )
+                .unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let j = db_llm::util::Json::parse(line.trim()).unwrap();
+                let toks = j.usize_list("tokens").unwrap();
+                assert_eq!(toks.len(), max_tokens, "row must honor its own budget");
+                outs.push(toks);
+            }
+            (c, outs)
+        }));
+    }
+    let mut greedy_rows: Vec<Vec<usize>> = Vec::new();
+    let mut answered = 0usize;
+    for h in handles {
+        let (c, outs) = h.join().unwrap();
+        answered += outs.len();
+        if c % 2 == 0 {
+            greedy_rows.extend(outs);
+        }
+    }
+    assert_eq!(answered, 12, "every request answered exactly once");
+    for row in &greedy_rows[1..] {
+        assert_eq!(row, &greedy_rows[0], "greedy rows deterministic in mixed batches");
+    }
+    running.store(false, std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(metrics.responses.load(std::sync::atomic::Ordering::Relaxed), 12);
+    assert_eq!(metrics.errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+/// Test double: echoes `prompt[0]` for exactly `max_tokens` steps.
+struct EchoGen;
+
+impl Generator for EchoGen {
+    fn generate(
+        &mut self,
+        prompts: &[Vec<u32>],
+        params: &[DecodeParams],
+    ) -> anyhow::Result<Generation> {
+        let outputs = prompts
+            .iter()
+            .zip(params)
+            .map(|(p, d)| vec![p[0]; d.max_tokens])
+            .collect::<Vec<_>>();
+        let steps = params.iter().map(|d| d.max_tokens).max().unwrap_or(0);
+        Ok(Generation { outputs, steps })
+    }
+}
+
+/// Test double: every batch fails.
+struct FailGen;
+
+impl Generator for FailGen {
+    fn generate(
+        &mut self,
+        _prompts: &[Vec<u32>],
+        _params: &[DecodeParams],
+    ) -> anyhow::Result<Generation> {
+        anyhow::bail!("injected engine failure")
+    }
+}
+
+fn pool_policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 4, linger: Duration::from_millis(2) }
+}
+
+/// A worker error must degrade to one error reply per request — never a
+/// dropped batch (the seed bug left clients on a closed channel).
+#[test]
+fn worker_error_replies_per_request() {
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+    let (tx, rx) = channel::<Request>();
+    let rx = Arc::new(Mutex::new(rx));
+    let worker = {
+        let (rx, m, r) = (rx.clone(), metrics.clone(), running.clone());
+        std::thread::spawn(move || worker_loop(FailGen, rx, pool_policy(), m, r))
+    };
+
+    let mut replies = Vec::new();
+    for i in 0..3 {
+        let (reply_tx, reply_rx) = channel();
+        metrics.queue_depth.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        tx.send(Request {
+            prompt: vec![i],
+            params: DecodeParams::greedy(4),
+            reply: reply_tx,
+            arrived: Instant::now(),
+        })
+        .unwrap();
+        replies.push(reply_rx);
+    }
+    for reply_rx in replies {
+        let resp = reply_rx.recv().expect("reply channel must not be dropped");
+        let msg = resp.error.expect("error reply expected");
+        assert!(msg.contains("injected engine failure"), "{msg}");
+        assert!(resp.tokens.is_empty());
+    }
+    assert_eq!(metrics.errors.load(std::sync::atomic::Ordering::Relaxed), 3);
+    drop(tx);
+    worker.join().unwrap();
+}
+
+/// Several workers competing on one shared queue: every request is
+/// answered exactly once with its own budget, and the early-exit /
+/// queue-depth accounting converges.
+#[test]
+fn worker_pool_exactly_once() {
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+    let (tx, rx) = channel::<Request>();
+    let rx = Arc::new(Mutex::new(rx));
+    let mut workers = Vec::new();
+    for _ in 0..3 {
+        let (rx, m, r) = (rx.clone(), metrics.clone(), running.clone());
+        workers.push(std::thread::spawn(move || worker_loop(EchoGen, rx, pool_policy(), m, r)));
+    }
+
+    let n = 48u32;
+    let mut replies = Vec::new();
+    for i in 0..n {
+        let (reply_tx, reply_rx) = channel();
+        metrics.queue_depth.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        tx.send(Request {
+            prompt: vec![i],
+            params: DecodeParams::greedy(1 + (i as usize) % 5),
+            reply: reply_tx,
+            arrived: Instant::now(),
+        })
+        .unwrap();
+        replies.push((i, reply_rx));
+    }
+    for (i, reply_rx) in replies {
+        let resp = reply_rx.recv().expect("exactly one reply per request");
+        assert!(resp.error.is_none());
+        assert_eq!(resp.tokens, vec![i; 1 + (i as usize) % 5], "row echoes its own budget");
+        assert!(
+            reply_rx.try_recv().is_err(),
+            "request {i} must not be answered twice"
+        );
+    }
+    drop(tx);
+    for w in workers {
+        w.join().unwrap();
+    }
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(metrics.responses.load(ord), n as u64);
+    assert_eq!(metrics.queue_depth.load(ord), 0, "gauge drains back to zero");
+    assert!(metrics.batches.load(ord) >= (n as u64).div_ceil(4));
 }
