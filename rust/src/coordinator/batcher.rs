@@ -3,9 +3,15 @@
 //! policy of LLM serving stacks (vLLM/Orca style), sized here to the
 //! AOT executables' fixed batch dimension.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// How long a shared-queue worker waits for a first item before
+/// re-checking the shutdown flag: bounds shutdown latency without
+/// spinning while the queue is idle.
+const SHUTDOWN_POLL: Duration = Duration::from_millis(50);
 
 /// Batching policy.
 #[derive(Clone, Debug)]
@@ -22,12 +28,31 @@ impl Default for BatchPolicy {
     }
 }
 
+impl BatchPolicy {
+    /// Clamp `max_batch` to an executable's fixed batch dimension.  A
+    /// batch collected above that dimension makes every decode bail
+    /// with "batch too large" — a persistent misconfiguration that
+    /// looks like engine failure — so workers clamp at startup.
+    /// Returns the rejected value when clamping happened.
+    pub fn clamp_max_batch(&mut self, batch_dim: usize) -> Option<usize> {
+        let cap = batch_dim.max(1);
+        (self.max_batch > cap).then(|| std::mem::replace(&mut self.max_batch, cap))
+    }
+}
+
 /// Pull the next batch from `rx`.  Blocks for the first item, then
 /// lingers up to the deadline collecting more, never exceeding
 /// `max_batch`.  Returns None when the channel is closed and drained.
 pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
     let first = rx.recv().ok()?;
     let mut batch = vec![first];
+    linger_fill(rx, policy, &mut batch);
+    Some(batch)
+}
+
+/// After the first item: linger up to the deadline topping the batch up
+/// to `max_batch`.
+fn linger_fill<T>(rx: &Receiver<T>, policy: &BatchPolicy, batch: &mut Vec<T>) {
     let deadline = Instant::now() + policy.linger;
     while batch.len() < policy.max_batch {
         let now = Instant::now();
@@ -40,20 +65,50 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    Some(batch)
 }
 
 /// Multi-consumer batch pull for a worker pool: `Receiver` is not
 /// `Sync`, so competing workers share it behind a mutex.  Exactly one
-/// worker holds the lock while it collects a batch (blocking for the
-/// first item, then lingering), releases it, and decodes — so batch
-/// collection and decoding pipeline across workers, and every queued
-/// item lands in exactly one batch.  Returns None once the channel is
-/// closed and drained (or the lock is poisoned); callers treat that as
-/// shutdown.
-pub fn next_batch_shared<T>(rx: &Mutex<Receiver<T>>, policy: &BatchPolicy) -> Option<Vec<T>> {
-    let guard = rx.lock().ok()?;
-    next_batch(&guard, policy)
+/// worker holds the lock while it collects a batch, releases it, and
+/// decodes — so batch collection and decoding pipeline across workers,
+/// and every queued item lands in exactly one batch.
+///
+/// The wait for the *first* item is bounded (`SHUTDOWN_POLL`) so a
+/// cleared `running` flag is observed even while the queue is idle and
+/// senders are still alive (connection threads hold `tx` clones for as
+/// long as clients stay connected; an unbounded `recv` would pin the
+/// lock until the last one disconnects).  Once the flag is cleared,
+/// items already queued are still handed back (without lingering) so
+/// the caller can answer them — a queued request is never silently
+/// dropped.  Returns None on shutdown with an empty queue, or once the
+/// channel is closed and drained (or the lock is poisoned).
+pub fn next_batch_shared<T>(
+    rx: &Mutex<Receiver<T>>,
+    policy: &BatchPolicy,
+    running: &AtomicBool,
+) -> Option<Vec<T>> {
+    loop {
+        let guard = rx.lock().ok()?;
+        if !running.load(Ordering::Relaxed) {
+            let mut batch = Vec::new();
+            while batch.len() < policy.max_batch {
+                match guard.try_recv() {
+                    Ok(item) => batch.push(item),
+                    Err(_) => break,
+                }
+            }
+            return (!batch.is_empty()).then_some(batch);
+        }
+        match guard.recv_timeout(SHUTDOWN_POLL) {
+            Ok(first) => {
+                let mut batch = vec![first];
+                linger_fill(&guard, policy, &mut batch);
+                return Some(batch);
+            }
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -108,6 +163,7 @@ mod tests {
     fn shared_receiver_partitions_items_exactly_once() {
         let (tx, rx) = channel();
         let rx = Arc::new(Mutex::new(rx));
+        let running = Arc::new(AtomicBool::new(true));
         let n_items = 64usize;
         for i in 0..n_items {
             tx.send(i).unwrap();
@@ -118,9 +174,10 @@ mod tests {
         for _ in 0..3 {
             let rx = rx.clone();
             let policy = policy.clone();
+            let running = running.clone();
             handles.push(std::thread::spawn(move || {
                 let mut got = Vec::new();
-                while let Some(batch) = next_batch_shared(&rx, &policy) {
+                while let Some(batch) = next_batch_shared(&rx, &policy, &running) {
                     assert!(batch.len() <= policy.max_batch);
                     got.extend(batch);
                 }
@@ -131,6 +188,50 @@ mod tests {
         all.sort_unstable();
         // every item consumed exactly once across the pool
         assert_eq!(all, (0..n_items).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shared_pull_observes_shutdown_while_idle() {
+        let (tx, rx) = channel::<u32>();
+        let rx = Arc::new(Mutex::new(rx));
+        let running = Arc::new(AtomicBool::new(true));
+        let handle = {
+            let (rx, running) = (rx.clone(), running.clone());
+            std::thread::spawn(move || next_batch_shared(&rx, &BatchPolicy::default(), &running))
+        };
+        std::thread::sleep(Duration::from_millis(5));
+        running.store(false, Ordering::Relaxed);
+        // the sender stays alive: only the cleared flag can end the wait
+        assert!(handle.join().unwrap().is_none());
+        drop(tx);
+    }
+
+    #[test]
+    fn shutdown_hands_back_queued_items() {
+        let (tx, rx) = channel();
+        let rx = Mutex::new(rx);
+        let running = AtomicBool::new(false);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        // flag already cleared: queued items still come back (no
+        // linger) so the caller can answer them, then None
+        let b = next_batch_shared(&rx, &BatchPolicy::default(), &running).unwrap();
+        assert_eq!(b, vec![1, 2]);
+        assert!(next_batch_shared(&rx, &BatchPolicy::default(), &running).is_none());
+        drop(tx);
+    }
+
+    #[test]
+    fn policy_clamps_to_batch_dim() {
+        let mut p = BatchPolicy { max_batch: 16, linger: Duration::from_millis(1) };
+        assert_eq!(p.clamp_max_batch(4), Some(16));
+        assert_eq!(p.max_batch, 4);
+        // already within the dim: untouched
+        assert_eq!(p.clamp_max_batch(4), None);
+        assert_eq!(p.max_batch, 4);
+        // degenerate batch dim still leaves a working (size-1) pool
+        assert_eq!(p.clamp_max_batch(0), Some(4));
+        assert_eq!(p.max_batch, 1);
     }
 
     #[test]

@@ -208,10 +208,18 @@ pub fn decode_batch(
     Ok(Generation { outputs, steps })
 }
 
-/// Rank tokens with `total_cmp`: NaN logits from a degraded model sort
-/// low instead of panicking the worker thread.
+/// Rank tokens skipping NaN logits: a degraded model degrades to the
+/// best well-defined logit (index 0 if there is none) instead of
+/// panicking the worker thread.  NaNs must be filtered, not ordered:
+/// `total_cmp` ranks positive NaN *above* +inf, so a plain `max_by`
+/// would elect the NaN's index as the token.
 fn argmax(row: &[f32]) -> usize {
-    row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap_or(0)
+    row.iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
 }
 
 fn sample(row: &[f32], temperature: f32, rng: &mut Pcg32) -> usize {
@@ -244,7 +252,8 @@ impl Generator for EngineWorker {
 /// Several workers may run this concurrently against one queue; each
 /// request is answered exactly once — on success with its own
 /// `max_tokens`-long output, on failure with an error response per
-/// request (never a dropped batch).
+/// request (never a dropped batch).  Requests still queued at shutdown
+/// are answered with an error reply instead of being decoded.
 pub fn worker_loop<G: Generator>(
     mut engine: G,
     rx: Arc<Mutex<Receiver<Request>>>,
@@ -252,11 +261,24 @@ pub fn worker_loop<G: Generator>(
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
 ) {
-    while running.load(Ordering::Relaxed) {
-        let Some(batch) = next_batch_shared(&rx, &policy) else { break };
+    loop {
+        let Some(mut batch) = next_batch_shared(&rx, &policy, &running) else { break };
         metrics.queue_depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
+        if !running.load(Ordering::Relaxed) {
+            // shutdown drain: answer what was already queued, fast
+            for req in batch {
+                let latency = req.arrived.elapsed();
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let resp = Response::err("server shutting down", latency.as_micros() as u64);
+                let _ = req.reply.send(resp);
+            }
+            continue;
+        }
         metrics.record_batch(batch.len());
-        let prompts: Vec<Vec<u32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+        // take the prompts out of the owned batch: decode_batch makes
+        // the one working copy it mutates, no second clone here
+        let prompts: Vec<Vec<u32>> =
+            batch.iter_mut().map(|r| std::mem::take(&mut r.prompt)).collect();
         let params: Vec<DecodeParams> = batch.iter().map(|r| r.params).collect();
         let budget = params.iter().map(|p| p.max_tokens).max().unwrap_or(0);
         match engine.generate(&prompts, &params) {
@@ -300,10 +322,13 @@ pub fn parse_request(line: &str) -> Result<(Vec<u32>, DecodeParams)> {
         max_tokens <= MAX_TOKENS_CAP,
         "max_tokens {max_tokens} exceeds cap {MAX_TOKENS_CAP}"
     );
-    let temperature =
-        j.opt("temperature").map(|t| t.as_f64().unwrap_or(0.0)).unwrap_or(0.0) as f32;
+    let temperature = j.opt("temperature").map(|t| t.as_f64().unwrap_or(0.0)).unwrap_or(0.0) as f32;
     let stop = match j.opt("stop") {
-        Some(v) => Some(v.as_usize()? as u32),
+        Some(v) => {
+            let s = v.as_usize()?;
+            anyhow::ensure!(s <= u32::MAX as usize, "stop token {s} out of u32 range");
+            Some(s as u32)
+        }
         None => None,
     };
     Ok((prompt, DecodeParams { max_tokens, temperature, stop }))
@@ -396,6 +421,17 @@ pub fn serve(
             .spawn(move || match f() {
                 Ok((rt, mut engine)) => {
                     engine.fork_rng(w as u64);
+                    // a max_batch above the executable's fixed batch
+                    // dim would make every decode bail "batch too
+                    // large" — clamp to the session's real capacity
+                    let mut policy = policy;
+                    if let Some(asked) = policy.clamp_max_batch(engine.session.logits_batch) {
+                        eprintln!(
+                            "worker {w}: max_batch {asked} exceeds the executable's \
+                             batch dim; clamped to {}",
+                            policy.max_batch
+                        );
+                    }
                     worker_loop(EngineWorker { rt, engine }, rx, policy, m, r)
                 }
                 Err(e) => eprintln!("engine init failed: {e:#}"),
@@ -450,6 +486,14 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_out_of_range_stop() {
+        // 2^32 must not silently truncate to stop token 0
+        let req = r#"{"prompt": [1], "max_tokens": 4, "stop": 4294967296}"#;
+        let err = parse_request(req).unwrap_err().to_string();
+        assert!(err.contains("out of u32 range"), "{err}");
+    }
+
+    #[test]
     fn parse_caps_max_tokens() {
         // one request must not be able to pin a worker forever
         let over = format!(r#"{{"prompt": [1], "max_tokens": {}}}"#, MAX_TOKENS_CAP + 1);
@@ -500,9 +544,13 @@ mod tests {
     fn argmax_survives_nan() {
         let row = vec![f32::NAN, 1.0, f32::NAN, 3.0, 2.0];
         assert_eq!(argmax(&row), 3);
+        // total_cmp ranks positive NaN above +inf, so NaN must be
+        // filtered out, not just ordered
+        assert_eq!(argmax(&[f32::NAN, f32::INFINITY]), 1);
+        assert_eq!(argmax(&[1.0, f32::NAN]), 0);
         let all_nan = vec![f32::NAN; 4];
-        // no panic; some in-range index
-        assert!(argmax(&all_nan) < 4);
+        // no finite logit at all: fall back to index 0, no panic
+        assert_eq!(argmax(&all_nan), 0);
         let mut rng = Pcg32::seeded(2);
         assert!(sample(&row, 0.5, &mut rng) < 5);
         assert!(sample(&all_nan, 0.5, &mut rng) < 4);

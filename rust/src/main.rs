@@ -296,8 +296,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let teacher = flags.get("teacher").context("--teacher required")?.clone();
     let method = method_from_str(flags.get("method").map(String::as_str).unwrap_or("fp16"))?;
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
-    let workers: usize =
-        flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(1).max(1);
+    let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(1).max(1);
     let mut policy = BatchPolicy::default();
     if let Some(v) = flags.get("max-batch").map(|s| s.parse()).transpose()? {
         policy.max_batch = v;

@@ -303,6 +303,43 @@ fn worker_error_replies_per_request() {
     worker.join().unwrap();
 }
 
+/// Requests still queued when `running` is cleared get an error reply
+/// (never a silently dropped reply channel), and the worker exits
+/// without waiting for the request senders to disconnect.
+#[test]
+fn shutdown_answers_queued_requests() {
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = channel::<Request>();
+    let rx = Arc::new(Mutex::new(rx));
+    let mut replies = Vec::new();
+    for i in 0..3 {
+        let (reply_tx, reply_rx) = channel();
+        metrics.queue_depth.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        tx.send(Request {
+            prompt: vec![i],
+            params: DecodeParams::greedy(4),
+            reply: reply_tx,
+            arrived: Instant::now(),
+        })
+        .unwrap();
+        replies.push(reply_rx);
+    }
+    let worker = {
+        let (rx, m, r) = (rx.clone(), metrics.clone(), running.clone());
+        std::thread::spawn(move || worker_loop(EchoGen, rx, pool_policy(), m, r))
+    };
+    for reply_rx in replies {
+        let resp = reply_rx.recv().expect("queued request must still be answered");
+        let msg = resp.error.expect("error reply expected");
+        assert!(msg.contains("shutting down"), "{msg}");
+    }
+    // the sender is still alive: the worker exits on the flag alone
+    worker.join().unwrap();
+    assert_eq!(metrics.queue_depth.load(std::sync::atomic::Ordering::Relaxed), 0);
+    drop(tx);
+}
+
 /// Several workers competing on one shared queue: every request is
 /// answered exactly once with its own budget, and the early-exit /
 /// queue-depth accounting converges.
