@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use db_llm::coordinator::batcher::BatchPolicy;
 use db_llm::coordinator::metrics::Metrics;
-use db_llm::coordinator::serve::{serve, Engine};
+use db_llm::coordinator::serve::{serve, Engine, EngineWorker};
 use db_llm::eval::tables::{make_student, Method, TableOpts};
 use db_llm::runtime::{Runtime, Session};
 
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
             let vocab = rt.manifest.vocab();
             let session = Session::new(&rt, &student.weights)?;
             eprintln!("engine: DB-LLM-quantized teacher S pinned on device");
-            Ok((rt, Engine::new(session, vocab, 7)))
+            Ok(EngineWorker { rt, engine: Engine::new(session, vocab, 7) })
         },
         "127.0.0.1:0",
         BatchPolicy::default(),

@@ -1,0 +1,70 @@
+//! Decode scaling: the KV-cached incremental step vs full-window
+//! recompute, at several window occupancies — the measured form of the
+//! tentpole claim that a cached step is O(T) (roughly flat in sequence
+//! position) while the recompute loop pays O(T²) per generated token.
+//!
+//!     cargo bench --bench decode        (BENCH_QUICK=1 for smoke)
+
+use std::collections::BTreeMap;
+
+use db_llm::infer::{IncrementalForward, KvCache};
+use db_llm::model::native::Forward;
+use db_llm::model::{ModelConfig, Weights};
+use db_llm::quant::FdbLinear;
+use db_llm::util::bench::{black_box, Bench};
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "bench".into(),
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 384,
+        vocab: 256,
+        seq_len: 128,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    }
+}
+
+fn main() {
+    let cfg = cfg();
+    let weights = Weights::synthetic(&cfg, 1);
+    let mut b = Bench::new("decode");
+
+    for &t in &[16usize, 32, 64, 128] {
+        let toks: Vec<u32> = (0..t as u32).map(|i| i % cfg.vocab as u32).collect();
+
+        // what the O(T²) loop pays per generated token at position t:
+        // one full forward over the window
+        b.bench_with_work(&format!("full_recompute_T{t}"), Some(t as f64), || {
+            black_box(Forward::new(&weights).run(&toks));
+        });
+
+        // the KV-cached step at the same occupancy: the ring stays at
+        // `t` entries, so every iteration measures a steady-state step
+        let mut f = IncrementalForward::new(weights.clone(), &BTreeMap::new());
+        let mut cache = KvCache::new(cfg.n_layers, t, cfg.d_model);
+        f.prefill(&mut cache, &toks);
+        b.bench_with_work(&format!("kv_step_T{t}"), Some(1.0), || {
+            black_box(f.step(&mut cache, 7));
+        });
+    }
+
+    // the same step with every linear on the compiled FDB sparse
+    // kernel (the paper's decode path) at one representative window
+    let mut fdb = BTreeMap::new();
+    for name in cfg.linear_names() {
+        fdb.insert(name.clone(), FdbLinear::from_weights(weights.mat(&name), 64));
+    }
+    let t = 64usize;
+    let toks: Vec<u32> = (0..t as u32).collect();
+    let mut f = IncrementalForward::new(weights.clone(), &fdb);
+    let mut cache = KvCache::new(cfg.n_layers, t, cfg.d_model);
+    f.prefill(&mut cache, &toks);
+    b.bench_with_work(&format!("kv_step_fdb_T{t}"), Some(1.0), || {
+        black_box(f.step(&mut cache, 7));
+    });
+
+    b.report();
+}

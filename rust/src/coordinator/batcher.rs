@@ -20,11 +20,15 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// wait at most this long to fill a batch
     pub linger: Duration,
+    /// admission cap on the shared request queue: requests arriving
+    /// while `queue_depth >= queue_cap` are rejected immediately with
+    /// `"server overloaded"` instead of growing latency without bound
+    pub queue_cap: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 4, linger: Duration::from_millis(20) }
+        BatchPolicy { max_batch: 4, linger: Duration::from_millis(20), queue_cap: 1024 }
     }
 }
 
@@ -123,7 +127,11 @@ mod tests {
         for i in 0..10 {
             tx.send(i).unwrap();
         }
-        let policy = BatchPolicy { max_batch: 4, linger: Duration::from_millis(5) };
+        let policy = BatchPolicy {
+            max_batch: 4,
+            linger: Duration::from_millis(5),
+            ..Default::default()
+        };
         let b1 = next_batch(&rx, &policy).unwrap();
         assert_eq!(b1, vec![0, 1, 2, 3]);
         let b2 = next_batch(&rx, &policy).unwrap();
@@ -135,7 +143,11 @@ mod tests {
         let (tx, rx) = channel();
         tx.send(1).unwrap();
         tx.send(2).unwrap();
-        let policy = BatchPolicy { max_batch: 8, linger: Duration::from_millis(10) };
+        let policy = BatchPolicy {
+            max_batch: 8,
+            linger: Duration::from_millis(10),
+            ..Default::default()
+        };
         let t0 = Instant::now();
         let b = next_batch(&rx, &policy).unwrap();
         assert_eq!(b, vec![1, 2]);
@@ -169,7 +181,11 @@ mod tests {
             tx.send(i).unwrap();
         }
         drop(tx);
-        let policy = BatchPolicy { max_batch: 4, linger: Duration::from_millis(1) };
+        let policy = BatchPolicy {
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        };
         let mut handles = Vec::new();
         for _ in 0..3 {
             let rx = rx.clone();
@@ -223,7 +239,11 @@ mod tests {
 
     #[test]
     fn policy_clamps_to_batch_dim() {
-        let mut p = BatchPolicy { max_batch: 16, linger: Duration::from_millis(1) };
+        let mut p = BatchPolicy {
+            max_batch: 16,
+            linger: Duration::from_millis(1),
+            ..Default::default()
+        };
         assert_eq!(p.clamp_max_batch(4), Some(16));
         assert_eq!(p.max_batch, 4);
         // already within the dim: untouched
@@ -242,7 +262,11 @@ mod tests {
             std::thread::sleep(Duration::from_millis(3));
             tx.send(1).unwrap();
         });
-        let policy = BatchPolicy { max_batch: 4, linger: Duration::from_millis(50) };
+        let policy = BatchPolicy {
+            max_batch: 4,
+            linger: Duration::from_millis(50),
+            ..Default::default()
+        };
         let b = next_batch(&rx, &policy).unwrap();
         handle.join().unwrap();
         assert_eq!(b, vec![0, 1]);

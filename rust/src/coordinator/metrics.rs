@@ -12,6 +12,9 @@ pub struct Metrics {
     pub responses: AtomicU64,
     /// requests answered with an error line (worker-side failures)
     pub errors: AtomicU64,
+    /// requests rejected at admission because the shared queue was at
+    /// `queue_cap` (backpressure, answered "server overloaded")
+    pub rejected: AtomicU64,
     pub tokens_out: AtomicU64,
     pub batches: AtomicU64,
     pub batch_occupancy_sum: AtomicU64,
@@ -31,6 +34,7 @@ impl Default for Metrics {
             requests: AtomicU64::new(0),
             responses: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
             tokens_out: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_occupancy_sum: AtomicU64::new(0),
@@ -81,11 +85,12 @@ impl Metrics {
 
     pub fn snapshot(&self) -> String {
         format!(
-            "req={} resp={} err={} tokens={} batches={} occ={:.2} queue={} saved_steps={} \
-             p50={}us p95={}us p99={}us",
+            "req={} resp={} err={} rejected={} tokens={} batches={} occ={:.2} queue={} \
+             saved_steps={} p50={}us p95={}us p99={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
             self.tokens_out.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_occupancy(),
@@ -138,9 +143,11 @@ mod tests {
         m.queue_depth.fetch_sub(1, Ordering::Relaxed);
         m.early_exit_steps.fetch_add(7, Ordering::Relaxed);
         m.errors.fetch_add(1, Ordering::Relaxed);
+        m.rejected.fetch_add(2, Ordering::Relaxed);
         let s = m.snapshot();
         assert!(s.contains("queue=2"), "{s}");
         assert!(s.contains("saved_steps=7"), "{s}");
         assert!(s.contains("err=1"), "{s}");
+        assert!(s.contains("rejected=2"), "{s}");
     }
 }

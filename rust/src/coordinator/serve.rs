@@ -102,11 +102,25 @@ pub struct Generation {
     pub steps: usize,
 }
 
-/// Anything that can decode a batch of per-request rows — the real
-/// XLA-backed engine, or a test double for driving `worker_loop`
-/// without artifacts.
+/// Anything that can decode a batch of per-request rows — the
+/// XLA-backed `EngineWorker`, the KV-cached `infer::NativeEngine`, or
+/// a test double for driving `worker_loop` without artifacts.
 pub trait Generator {
     fn generate(&mut self, prompts: &[Vec<u32>], params: &[DecodeParams]) -> Result<Generation>;
+
+    /// Largest number of rows one `generate` call accepts.  The AOT
+    /// executables have a fixed batch dimension; native backends are
+    /// unbounded (the default).  Workers clamp their batch policy to
+    /// this at startup.
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    /// Move this generator's sampler onto its own stream — the pool
+    /// builds every worker from one factory, so without this every
+    /// worker would sample byte-identical sequences.  No-op for
+    /// generators that never sample.
+    fn fork_rng(&mut self, _stream: u64) {}
 }
 
 /// Generation engine over a pinned session.
@@ -212,8 +226,9 @@ pub fn decode_batch(
 /// best well-defined logit (index 0 if there is none) instead of
 /// panicking the worker thread.  NaNs must be filtered, not ordered:
 /// `total_cmp` ranks positive NaN *above* +inf, so a plain `max_by`
-/// would elect the NaN's index as the token.
-fn argmax(row: &[f32]) -> usize {
+/// would elect the NaN's index as the token.  Public: the native
+/// backend (`infer::engine`) samples with the same semantics.
+pub fn argmax(row: &[f32]) -> usize {
     row.iter()
         .enumerate()
         .filter(|(_, v)| !v.is_nan())
@@ -222,7 +237,8 @@ fn argmax(row: &[f32]) -> usize {
         .unwrap_or(0)
 }
 
-fn sample(row: &[f32], temperature: f32, rng: &mut Pcg32) -> usize {
+/// Temperature sampling over one logits row; NaN logits get zero mass.
+pub fn sample(row: &[f32], temperature: f32, rng: &mut Pcg32) -> usize {
     let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| if v > m { v } else { m });
     if !mx.is_finite() {
         // all-NaN / all -inf row: degrade to the total_cmp argmax
@@ -245,6 +261,14 @@ pub struct EngineWorker {
 impl Generator for EngineWorker {
     fn generate(&mut self, prompts: &[Vec<u32>], params: &[DecodeParams]) -> Result<Generation> {
         self.engine.generate(&mut self.rt, prompts, params)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.engine.session.logits_batch
+    }
+
+    fn fork_rng(&mut self, stream: u64) {
+        self.engine.fork_rng(stream);
     }
 }
 
@@ -353,7 +377,26 @@ pub fn render_response(resp: &Response) -> String {
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>) {
+/// Admission control (backpressure): a request only enters the shared
+/// queue while its depth is below `queue_cap`; beyond that the client
+/// gets an immediate `"server overloaded"` error line instead of an
+/// unbounded queue silently growing latency.  Reserves the gauge slot
+/// *before* checking (increment, then undo on reject) so concurrent
+/// connection threads cannot all pass a below-cap read and overshoot
+/// the cap.  On `true` the caller owns one `queue_depth` increment and
+/// must pair it with the worker-side decrement (or undo it if the
+/// enqueue fails); rejections count in `metrics.rejected`.
+pub fn admit(metrics: &Metrics, queue_cap: usize) -> bool {
+    let prev = metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+    if prev >= queue_cap as u64 {
+        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        return false;
+    }
+    true
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>, queue_cap: usize) {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(stream.try_clone().expect("clone stream"));
     let mut writer = stream;
@@ -365,8 +408,14 @@ fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>) {
         match parse_request(&line) {
             Ok((prompt, params)) => {
                 metrics.requests.fetch_add(1, Ordering::Relaxed);
+                // admit() already reserved this request's queue_depth
+                // slot; the worker decrements it when batching
+                if !admit(&metrics, queue_cap) {
+                    let resp = Response::err("server overloaded", 0);
+                    let _ = writeln!(writer, "{}", render_response(&resp));
+                    continue;
+                }
                 let (reply_tx, reply_rx) = channel();
-                metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
                 if tx
                     .send(Request { prompt, params, reply: reply_tx, arrived: Instant::now() })
                     .is_err()
@@ -392,11 +441,12 @@ fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>) {
 
 /// Run the server until `running` is cleared.  Binds `addr`, spawns one
 /// thread per connection and `workers` engine workers competing on a
-/// shared request queue; each worker *constructs* its own XLA runtime
-/// via `factory` (PJRT handles are not `Send`, so they must be born on
-/// the thread that uses them).
-pub fn serve(
-    factory: impl Fn() -> Result<(Runtime, Engine)> + Send + Sync + 'static,
+/// shared request queue; each worker *constructs* its own generator via
+/// `factory` on its own thread (PJRT handles are not `Send`, so the
+/// XLA backend must be born on the thread that uses it; the native
+/// backend simply builds its engine there too).
+pub fn serve<G: Generator>(
+    factory: impl Fn() -> Result<G> + Send + Sync + 'static,
     addr: &str,
     policy: BatchPolicy,
     workers: usize,
@@ -409,6 +459,7 @@ pub fn serve(
     let (tx, rx) = channel::<Request>();
     let rx = Arc::new(Mutex::new(rx));
     let factory = Arc::new(factory);
+    let queue_cap = policy.queue_cap;
 
     for w in 0..workers.max(1) {
         let rx = rx.clone();
@@ -419,20 +470,20 @@ pub fn serve(
         std::thread::Builder::new()
             .name(format!("engine-worker-{w}"))
             .spawn(move || match f() {
-                Ok((rt, mut engine)) => {
+                Ok(mut engine) => {
                     engine.fork_rng(w as u64);
-                    // a max_batch above the executable's fixed batch
-                    // dim would make every decode bail "batch too
-                    // large" — clamp to the session's real capacity
+                    // a max_batch above the backend's capacity (the
+                    // executable's fixed batch dim) would make every
+                    // decode bail "batch too large" — clamp to it
                     let mut policy = policy;
-                    if let Some(asked) = policy.clamp_max_batch(engine.session.logits_batch) {
+                    if let Some(asked) = policy.clamp_max_batch(engine.max_batch()) {
                         eprintln!(
-                            "worker {w}: max_batch {asked} exceeds the executable's \
-                             batch dim; clamped to {}",
+                            "worker {w}: max_batch {asked} exceeds the backend's \
+                             batch capacity; clamped to {}",
                             policy.max_batch
                         );
                     }
-                    worker_loop(EngineWorker { rt, engine }, rx, policy, m, r)
+                    worker_loop(engine, rx, policy, m, r)
                 }
                 Err(e) => eprintln!("engine init failed: {e:#}"),
             })
@@ -447,7 +498,7 @@ pub fn serve(
                 Ok((stream, _)) => {
                     let tx = tx.clone();
                     let m = m3.clone();
-                    std::thread::spawn(move || handle_conn(stream, tx, m));
+                    std::thread::spawn(move || handle_conn(stream, tx, m, queue_cap));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(10));
@@ -626,6 +677,34 @@ mod tests {
         let params = vec![DecodeParams::greedy(1)];
         let _ = decode_batch(step, b, t, vocab, &prompts, &params, &mut rng).unwrap();
         assert_eq!(seen[0][..3], [7, 6, 5], "window must keep the most recent tokens");
+    }
+
+    #[test]
+    fn admit_rejects_at_capacity() {
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        let m = Metrics::default();
+        // each successful admit reserves one queue_depth slot
+        assert!(admit(&m, 2));
+        assert_eq!(m.queue_depth.load(ord), 1);
+        assert!(admit(&m, 2));
+        assert_eq!(m.queue_depth.load(ord), 2);
+        // at cap: rejected, and the reservation is rolled back
+        assert!(!admit(&m, 2), "at cap: reject");
+        assert!(!admit(&m, 1));
+        assert_eq!(m.queue_depth.load(ord), 2, "failed admits leave the gauge untouched");
+        assert_eq!(m.rejected.load(ord), 2);
+        // a worker draining one request reopens admission
+        m.queue_depth.fetch_sub(1, ord);
+        assert!(admit(&m, 2), "below cap again: admit");
+        assert_eq!(m.queue_depth.load(ord), 2);
+        assert_eq!(m.rejected.load(ord), 2);
+    }
+
+    #[test]
+    fn overload_error_line_shape() {
+        let s = render_response(&Response::err("server overloaded", 0));
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "server overloaded");
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! `NativeEngine` — the KV-cached native decode backend for the
+//! serving stack.  Implements the same [`Generator`] contract as the
+//! XLA-backed `EngineWorker` (per-row `DecodeParams`, early exit,
+//! NaN-safe sampling), so `serve()` runs the whole worker-pool /
+//! batcher / metrics stack unchanged on top of it via `--backend
+//! native`.
+//!
+//! Rows decode sequentially: prefill fills the request's KV cache in
+//! one batched pass, then each token costs a single O(window)
+//! incremental step — not a full-window forward.  One cache allocation
+//! is reused (`clear`) across rows and requests.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::serve::{argmax, sample, DecodeParams, Generation, Generator};
+use crate::model::Weights;
+use crate::quant::FdbLinear;
+use crate::util::Pcg32;
+
+use super::kv::KvCache;
+use super::step::IncrementalForward;
+
+/// Native incremental generation engine.
+pub struct NativeEngine {
+    model: IncrementalForward,
+    cache: KvCache,
+    rng: Pcg32,
+}
+
+impl NativeEngine {
+    /// Build from a full weight set; linears named in `fdb` decode on
+    /// the compiled sparse kernel.  `window` is the sliding attention
+    /// window (use the manifest `seq_len` to mirror the XLA backend).
+    pub fn new(
+        weights: Weights,
+        fdb: &BTreeMap<String, FdbLinear>,
+        window: usize,
+        seed: u64,
+    ) -> NativeEngine {
+        let n_layers = weights.config.n_layers;
+        let d = weights.config.d_model;
+        let model = IncrementalForward::new(weights, fdb);
+        NativeEngine {
+            model,
+            cache: KvCache::new(n_layers, window.max(1), d),
+            rng: Pcg32::seeded(seed),
+        }
+    }
+
+    /// Number of FDB-compiled linears (diagnostics / startup log).
+    pub fn n_fdb_ops(&self) -> usize {
+        self.model.n_fdb_ops()
+    }
+
+    /// Move the sampler onto its own PCG stream (worker pools build
+    /// every engine from one factory).
+    pub fn fork_rng(&mut self, stream: u64) {
+        let state = self.rng.next_u64();
+        self.rng = Pcg32::new(state, stream);
+    }
+}
+
+impl Generator for NativeEngine {
+    /// Decode each row to completion under its own `DecodeParams`.
+    /// `Generation::steps` reports the longest row's decoded length —
+    /// the same "batch forwards" accounting as the XLA decode loop, so
+    /// the early-exit metric stays comparable across backends.
+    fn generate(&mut self, prompts: &[Vec<u32>], params: &[DecodeParams]) -> Result<Generation> {
+        anyhow::ensure!(params.len() == prompts.len(), "params/prompts length mismatch");
+        let vocab = self.model.vocab();
+        for p in prompts {
+            anyhow::ensure!(!p.is_empty(), "empty prompt");
+            for &t in p {
+                anyhow::ensure!((t as usize) < vocab, "prompt token {t} out of vocab {vocab}");
+            }
+        }
+        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
+        let mut steps = 0usize;
+        for (r, (prompt, p)) in prompts.iter().zip(params).enumerate() {
+            if p.max_tokens == 0 {
+                continue;
+            }
+            self.cache.clear();
+            let mut logits = self.model.prefill(&mut self.cache, prompt);
+            let out = &mut outputs[r];
+            loop {
+                let idx = if p.temperature <= 0.0 {
+                    argmax(&logits)
+                } else {
+                    sample(&logits, p.temperature, &mut self.rng)
+                };
+                let next = idx as u32;
+                out.push(next);
+                if out.len() >= p.max_tokens || p.stop == Some(next) {
+                    break;
+                }
+                logits = self.model.step(&mut self.cache, next);
+            }
+            steps = steps.max(out.len());
+        }
+        Ok(Generation { outputs, steps })
+    }
+
+    fn fork_rng(&mut self, stream: u64) {
+        NativeEngine::fork_rng(self, stream);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 192,
+            vocab: 96,
+            seq_len: 32,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    fn engine(seed: u64) -> NativeEngine {
+        let cfg = tiny();
+        NativeEngine::new(Weights::synthetic(&cfg, seed), &BTreeMap::new(), cfg.seq_len, 42)
+    }
+
+    #[test]
+    fn per_row_budgets_and_early_exit() {
+        let mut e = engine(1);
+        let prompts = vec![vec![1u32, 2], vec![3u32], vec![4u32, 5, 6]];
+        let params = vec![
+            DecodeParams::greedy(2),
+            DecodeParams::greedy(0),
+            DecodeParams::greedy(5),
+        ];
+        let g = e.generate(&prompts, &params).unwrap();
+        assert_eq!(g.outputs[0].len(), 2);
+        assert!(g.outputs[1].is_empty());
+        assert_eq!(g.outputs[2].len(), 5);
+        assert_eq!(g.steps, 5, "longest row bounds the step count");
+    }
+
+    #[test]
+    fn greedy_is_deterministic_and_stop_fires() {
+        let mut e = engine(2);
+        let prompts = vec![vec![7u32, 8, 9]];
+        let params = vec![DecodeParams::greedy(4)];
+        let a = e.generate(&prompts, &params).unwrap().outputs.remove(0);
+        let b = e.generate(&prompts, &params).unwrap().outputs.remove(0);
+        assert_eq!(a, b, "greedy decode must be deterministic");
+        // stopping on the first greedy token truncates to length 1
+        let stopped = e
+            .generate(
+                &prompts,
+                &[DecodeParams { max_tokens: 4, temperature: 0.0, stop: Some(a[0]) }],
+            )
+            .unwrap();
+        assert_eq!(stopped.outputs[0], vec![a[0]]);
+    }
+
+    #[test]
+    fn rejects_bad_prompts() {
+        let mut e = engine(3);
+        assert!(e.generate(&[vec![]], &[DecodeParams::greedy(1)]).is_err());
+        assert!(e.generate(&[vec![9999]], &[DecodeParams::greedy(1)]).is_err());
+        assert!(e.generate(&[vec![1]], &[]).is_err());
+    }
+
+    #[test]
+    fn decodes_past_the_window_with_bounded_cache() {
+        let cfg = tiny();
+        let window = 8;
+        let mut e =
+            NativeEngine::new(Weights::synthetic(&cfg, 4), &BTreeMap::new(), window, 42);
+        let prompt: Vec<u32> = (0..6u32).collect();
+        let g = e.generate(&[prompt], &[DecodeParams::greedy(10)]).unwrap();
+        // 6 prompt + 10 decoded blows past window 8; the ring must cap
+        assert_eq!(g.outputs[0].len(), 10);
+        assert_eq!(e.cache.len(), window);
+        assert!(g.outputs[0].iter().all(|&t| (t as usize) < cfg.vocab));
+    }
+}

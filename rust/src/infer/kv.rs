@@ -1,0 +1,164 @@
+//! Per-request KV cache: per-layer K/V ring buffers over a sliding
+//! window of the last `window` positions — the state that turns the
+//! O(T²) full-recompute decode loop into an O(T) incremental one.
+//!
+//! Window semantics match `runtime::session::recent_window` (and thus
+//! `pack_decode_windows` / the XLA decode loop): the cache always holds
+//! the *most recent* `window` positions; once full, appending a
+//! position evicts the oldest.  Keys are stored RoPE'd at their
+//! *absolute* position — RoPE attention scores depend only on relative
+//! position, so evicting the head of the window never requires
+//! re-rotating the survivors.
+//!
+//! Memory: `2 (K,V) · n_layers · window · d_model · 4` bytes per
+//! request, allocated once and reused (`clear`) across requests.
+
+/// One layer's K and V ring storage, `[window, width]` row-major each.
+struct LayerKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Ring-buffered K/V for every layer of one sequence.  All layers share
+/// one chronology: `advance()` reserves the slot for the next position
+/// once, then every layer writes its rows into that slot.
+pub struct KvCache {
+    /// max cached positions (the sliding-window length)
+    pub window: usize,
+    /// row width = n_heads * head_dim (= d_model here)
+    pub width: usize,
+    layers: Vec<LayerKv>,
+    /// filled positions (≤ window)
+    len: usize,
+    /// ring index of the oldest cached position
+    start: usize,
+    /// absolute position of the next appended token (monotonic)
+    next_pos: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, window: usize, width: usize) -> KvCache {
+        assert!(window > 0, "window must be positive");
+        let layers = (0..n_layers)
+            .map(|_| LayerKv { k: vec![0.0; window * width], v: vec![0.0; window * width] })
+            .collect();
+        KvCache { window, width, layers, len: 0, start: 0, next_pos: 0 }
+    }
+
+    /// Cached positions (chronological indices run `0..len()`).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Absolute position the next appended token will occupy.
+    pub fn next_pos(&self) -> usize {
+        self.next_pos
+    }
+
+    /// Absolute position of chronological index `i`.
+    pub fn pos_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.len);
+        self.next_pos - self.len + i
+    }
+
+    /// Reset for a new request without touching the allocations.
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.start = 0;
+        self.next_pos = 0;
+    }
+
+    /// Reserve the ring slot for the next position, evicting the oldest
+    /// when the window is full.  Returns the slot to pass to `write`.
+    /// Call exactly once per position, before the per-layer writes.
+    pub fn advance(&mut self) -> usize {
+        let slot = (self.start + self.len) % self.window;
+        if self.len == self.window {
+            self.start = (self.start + 1) % self.window;
+        } else {
+            self.len += 1;
+        }
+        self.next_pos += 1;
+        slot
+    }
+
+    /// Write one layer's K/V rows for the slot returned by `advance`.
+    pub fn write(&mut self, layer: usize, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.width);
+        debug_assert_eq!(v_row.len(), self.width);
+        let l = &mut self.layers[layer];
+        l.k[slot * self.width..(slot + 1) * self.width].copy_from_slice(k_row);
+        l.v[slot * self.width..(slot + 1) * self.width].copy_from_slice(v_row);
+    }
+
+    /// Layer `layer`'s key row at chronological index `i` (0 = oldest).
+    pub fn k_row(&self, layer: usize, i: usize) -> &[f32] {
+        debug_assert!(i < self.len);
+        let slot = (self.start + i) % self.window;
+        &self.layers[layer].k[slot * self.width..(slot + 1) * self.width]
+    }
+
+    /// Layer `layer`'s value row at chronological index `i`.
+    pub fn v_row(&self, layer: usize, i: usize) -> &[f32] {
+        debug_assert!(i < self.len);
+        let slot = (self.start + i) % self.window;
+        &self.layers[layer].v[slot * self.width..(slot + 1) * self.width]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_evicts_oldest() {
+        let mut c = KvCache::new(1, 3, 2);
+        for t in 0..5u32 {
+            let slot = c.advance();
+            let row = [t as f32, -(t as f32)];
+            c.write(0, slot, &row, &row);
+        }
+        // window 3 over 5 appends: chronological content is 2, 3, 4
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.next_pos(), 5);
+        for (i, expect) in [2.0f32, 3.0, 4.0].iter().enumerate() {
+            assert_eq!(c.k_row(0, i)[0], *expect);
+            assert_eq!(c.v_row(0, i)[1], -expect);
+            assert_eq!(c.pos_of(i), 2 + i);
+        }
+    }
+
+    #[test]
+    fn layers_share_one_chronology() {
+        let mut c = KvCache::new(2, 2, 1);
+        let s0 = c.advance();
+        c.write(0, s0, &[10.0], &[10.5]);
+        c.write(1, s0, &[20.0], &[20.5]);
+        let s1 = c.advance();
+        c.write(0, s1, &[11.0], &[11.5]);
+        c.write(1, s1, &[21.0], &[21.5]);
+        assert_eq!(c.k_row(0, 0), &[10.0]);
+        assert_eq!(c.k_row(1, 1), &[21.0]);
+        assert_eq!(c.v_row(1, 0), &[20.5]);
+    }
+
+    #[test]
+    fn clear_resets_without_reallocating() {
+        let mut c = KvCache::new(1, 2, 1);
+        for _ in 0..3 {
+            let s = c.advance();
+            c.write(0, s, &[1.0], &[1.0]);
+        }
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.next_pos(), 0);
+        let s = c.advance();
+        c.write(0, s, &[9.0], &[9.0]);
+        assert_eq!(c.k_row(0, 0), &[9.0]);
+        assert_eq!(c.pos_of(0), 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Native incremental inference: the KV-cached decode engine behind
+//! `serve --backend native`.
+//!
+//! Three pieces:
+//! - [`kv::KvCache`] — per-layer K/V ring buffers over a sliding
+//!   window (`runtime::session::recent_window` semantics);
+//! - [`step::IncrementalForward`] — prefill (one batched pass) +
+//!   O(window) single-position decode steps, every linear dispatched
+//!   through [`step::LinearOp`] (dense, or the compiled FDB sparse
+//!   kernel — the paper's "efficient bitwise operation" on the decode
+//!   path end to end);
+//! - [`engine::NativeEngine`] — the `coordinator::serve::Generator`
+//!   implementation that plugs it under the worker pool.
+
+pub mod engine;
+pub mod kv;
+pub mod step;
+
+pub use engine::NativeEngine;
+pub use kv::KvCache;
+pub use step::{IncrementalForward, LinearOp};

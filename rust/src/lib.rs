@@ -11,6 +11,7 @@ pub mod codec;
 pub mod coordinator;
 pub mod eval;
 pub mod data;
+pub mod infer;
 pub mod model;
 pub mod quant;
 pub mod runtime;

@@ -7,7 +7,8 @@
 //!   table     --id 1|2|3|4|5|6|7 [--windows N] [--teachers S,M]
 //!   figure    --id 1|3|4|6|7
 //!   serve     --teacher S [--method dbllm] [--addr 127.0.0.1:7878]
-//!             [--workers 2] [--max-batch 4] [--linger-ms 20]
+//!             [--backend native|xla] [--workers 2] [--max-batch 4]
+//!             [--linger-ms 20] [--queue-cap 1024] [--window T]
 //!   client    --addr 127.0.0.1:7878 --prompt 1,2,3 --max-tokens 8
 //!             [--temperature 0.7] [--stop 0]
 //!
@@ -22,8 +23,9 @@ use anyhow::{bail, Context, Result};
 
 use db_llm::coordinator::batcher::BatchPolicy;
 use db_llm::coordinator::metrics::Metrics;
-use db_llm::coordinator::serve::{serve, Engine};
+use db_llm::coordinator::serve::{serve, Engine, EngineWorker};
 use db_llm::data::TokenStream;
+use db_llm::infer::NativeEngine;
 use db_llm::eval::ppl::perplexity;
 use db_llm::eval::tables::{self, Method, TableOpts};
 use db_llm::runtime::{Runtime, Session};
@@ -150,7 +152,8 @@ fn print_help() {
            table    --id N                   regenerate paper table N (1-7)\n\
            figure   --id N                   regenerate paper figure N (1,3,4,6,7)\n\
            serve    --teacher S [--method M] [--addr A] TCP serving demo\n\
-                    [--workers N] [--max-batch N] [--linger-ms N]\n\
+                    [--backend native|xla] [--workers N] [--max-batch N]\n\
+                    [--linger-ms N] [--queue-cap N] [--window T]\n\
            client   --addr A --prompt 1,2,3 --max-tokens 8\n\
                     [--temperature T] [--stop TOKEN]\n\
          \n\
@@ -297,6 +300,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let method = method_from_str(flags.get("method").map(String::as_str).unwrap_or("fp16"))?;
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
     let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(1).max(1);
+    let backend = flags.get("backend").cloned().unwrap_or_else(|| "xla".to_string());
     let mut policy = BatchPolicy::default();
     if let Some(v) = flags.get("max-batch").map(|s| s.parse()).transpose()? {
         policy.max_batch = v;
@@ -304,27 +308,62 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     if let Some(v) = flags.get("linger-ms").map(|s| s.parse()).transpose()? {
         policy.linger = std::time::Duration::from_millis(v);
     }
+    if let Some(v) = flags.get("queue-cap").map(|s| s.parse()).transpose()? {
+        policy.queue_cap = v;
+    }
+    let window_override: Option<usize> = flags.get("window").map(|s| s.parse()).transpose()?;
     let opts = opts_from_flags(flags);
     let metrics = Arc::new(Metrics::default());
     let running = Arc::new(AtomicBool::new(true));
 
+    if backend == "xla" && window_override.is_some() {
+        eprintln!("warning: --window only applies to --backend native; ignored (the xla \
+                   executable's window is fixed at the manifest seq_len)");
+    }
     let m2 = metrics.clone();
-    let local = serve(
-        move || {
-            let mut rt = Runtime::open(&dir)?;
-            let student = tables::make_student(&mut rt, &teacher, method, &opts, None)?;
-            let vocab = rt.manifest.vocab();
-            let session = Session::new(&rt, &student.weights)?;
-            eprintln!("engine ready ({} weights pinned)", session.n_weight_buffers());
-            Ok((rt, Engine::new(session, vocab, 42)))
-        },
-        &addr,
-        policy,
-        workers,
-        m2,
-        running.clone(),
-    )?;
-    println!("serving on {local} with {workers} worker(s) — protocol: one JSON per line");
+    let local = match backend.as_str() {
+        // the AOT fwd_logits executable: full-window recompute per step
+        "xla" => serve(
+            move || {
+                let mut rt = Runtime::open(&dir)?;
+                let student = tables::make_student(&mut rt, &teacher, method, &opts, None)?;
+                let vocab = rt.manifest.vocab();
+                let session = Session::new(&rt, &student.weights)?;
+                eprintln!("engine ready ({} weights pinned)", session.n_weight_buffers());
+                Ok(EngineWorker { rt, engine: Engine::new(session, vocab, 42) })
+            },
+            &addr,
+            policy,
+            workers,
+            m2,
+            running.clone(),
+        )?,
+        // the KV-cached incremental engine: O(T) per decoded token, FDB
+        // students run on the compiled sparse kernel
+        "native" => serve(
+            move || {
+                let mut rt = Runtime::open(&dir)?;
+                let student = tables::make_student(&mut rt, &teacher, method, &opts, None)?;
+                let window = window_override.unwrap_or_else(|| rt.manifest.seq_len());
+                let engine =
+                    NativeEngine::new(student.weights, &student.fdb_layers, window, 42);
+                eprintln!(
+                    "native engine ready (window {window}, {} FDB-compiled linears)",
+                    engine.n_fdb_ops()
+                );
+                Ok(engine)
+            },
+            &addr,
+            policy,
+            workers,
+            m2,
+            running.clone(),
+        )?,
+        other => bail!("unknown backend {other} (expected native|xla)"),
+    };
+    println!(
+        "serving on {local} with {workers} {backend} worker(s) — protocol: one JSON per line"
+    );
     println!("  {{\"prompt\": [1,2,3], \"max_tokens\": 8, \"temperature\": 0.7, \"stop\": 0}}");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));

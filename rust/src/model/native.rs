@@ -122,18 +122,38 @@ pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
+/// RMSNorm one row into `out` — the row primitive shared by the batched
+/// forward and the incremental (`infer::step`) path.
+pub fn rmsnorm_row(row: &[f32], gain: &[f32], eps: f64, out: &mut [f32]) {
+    let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / row.len() as f64;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for ((o, &v), &g) in out.iter_mut().zip(row).zip(gain) {
+        *o = (v as f64 * inv) as f32 * g;
+    }
+}
+
 pub fn rmsnorm(x: &Matrix, gain: &[f32], eps: f64) -> Matrix {
     let mut out = Matrix::zeros(x.rows, x.cols);
     for r in 0..x.rows {
-        let row = x.row(r);
-        let ms: f64 =
-            row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.cols as f64;
-        let inv = 1.0 / (ms + eps).sqrt();
-        for (c, &v) in row.iter().enumerate() {
-            out.data[r * x.cols + c] = (v as f64 * inv) as f32 * gain[c];
-        }
+        rmsnorm_row(x.row(r), gain, eps, out.row_mut(r));
     }
     out
+}
+
+/// (cos, sin) rows `[hd/2]` for a single absolute position — the
+/// per-position primitive behind `rope_tables`, used directly by the
+/// incremental decode path (one new position per step).
+pub fn rope_pos(pos: usize, hd: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+    let half = hd / 2;
+    let mut cos = vec![0.0f32; half];
+    let mut sin = vec![0.0f32; half];
+    for i in 0..half {
+        let inv = theta.powf(-((2 * i) as f64) / hd as f64);
+        let ang = pos as f64 * inv;
+        cos[i] = ang.cos() as f32;
+        sin[i] = ang.sin() as f32;
+    }
+    (cos, sin)
 }
 
 /// (cos, sin) tables `[T, hd/2]`, matching the python `rope_tables`.
@@ -142,28 +162,74 @@ pub fn rope_tables(t: usize, hd: usize, theta: f64) -> (Matrix, Matrix) {
     let mut cos = Matrix::zeros(t, half);
     let mut sin = Matrix::zeros(t, half);
     for pos in 0..t {
-        for i in 0..half {
-            let inv = theta.powf(-((2 * i) as f64) / hd as f64);
-            let ang = pos as f64 * inv;
-            *cos.at_mut(pos, i) = ang.cos() as f32;
-            *sin.at_mut(pos, i) = ang.sin() as f32;
-        }
+        let (c, s) = rope_pos(pos, hd, theta);
+        cos.row_mut(pos).copy_from_slice(&c);
+        sin.row_mut(pos).copy_from_slice(&s);
     }
     (cos, sin)
 }
 
-/// In-place RoPE on `[T, h*hd]` (pairs (0,1),(2,3),… within each head).
-pub fn apply_rope(x: &mut Matrix, h: usize, hd: usize, cos: &Matrix, sin: &Matrix) {
+/// In-place RoPE on one `[h*hd]` row given that position's (cos, sin)
+/// rows (pairs (0,1),(2,3),… within each head).
+pub fn rope_row(x: &mut [f32], h: usize, hd: usize, cos: &[f32], sin: &[f32]) {
     let half = hd / 2;
+    for head in 0..h {
+        let base = head * hd;
+        for i in 0..half {
+            let (c, s) = (cos[i], sin[i]);
+            let a = x[base + 2 * i];
+            let b = x[base + 2 * i + 1];
+            x[base + 2 * i] = a * c - b * s;
+            x[base + 2 * i + 1] = a * s + b * c;
+        }
+    }
+}
+
+/// In-place RoPE on `[T, h*hd]`.
+pub fn apply_rope(x: &mut Matrix, h: usize, hd: usize, cos: &Matrix, sin: &Matrix) {
     for t in 0..x.rows {
-        for head in 0..h {
-            let base = head * hd;
-            for i in 0..half {
-                let (c, s) = (cos.at(t, i), sin.at(t, i));
-                let a = x.at(t, base + 2 * i);
-                let b = x.at(t, base + 2 * i + 1);
-                *x.at_mut(t, base + 2 * i) = a * c - b * s;
-                *x.at_mut(t, base + 2 * i + 1) = a * s + b * c;
+        rope_row(x.row_mut(t), h, hd, cos.row(t), sin.row(t));
+    }
+}
+
+/// Single-query softmax attention: one query row `[h*hd]` over `n`
+/// cached K/V rows (`k_at`/`v_at` return chronological row `i`, width
+/// `h*hd`), accumulated into `out`.  This is the primitive both the
+/// batched causal forward and the KV-cached incremental step build on.
+pub fn attend_one<'k, 'v>(
+    q: &[f32],
+    n: usize,
+    k_at: impl Fn(usize) -> &'k [f32],
+    v_at: impl Fn(usize) -> &'v [f32],
+    h: usize,
+    hd: usize,
+    scores: &mut Vec<f64>,
+    out: &mut [f32],
+) {
+    let scale = 1.0 / (hd as f64).sqrt();
+    scores.resize(n, 0.0);
+    out.fill(0.0);
+    for head in 0..h {
+        let base = head * hd;
+        let qrow = &q[base..base + hd];
+        let mut mx = f64::NEG_INFINITY;
+        for ki in 0..n {
+            let krow = &k_at(ki)[base..base + hd];
+            let dot: f64 = qrow.iter().zip(krow).map(|(&a, &b)| a as f64 * b as f64).sum();
+            scores[ki] = dot * scale;
+            mx = mx.max(scores[ki]);
+        }
+        let mut denom = 0.0f64;
+        for s in scores.iter_mut().take(n) {
+            *s = (*s - mx).exp();
+            denom += *s;
+        }
+        let orow = &mut out[base..base + hd];
+        for ki in 0..n {
+            let wgt = (scores[ki] / denom) as f32;
+            let vrow = &v_at(ki)[base..base + hd];
+            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                *o += wgt * vv;
             }
         }
     }
@@ -172,39 +238,11 @@ pub fn apply_rope(x: &mut Matrix, h: usize, hd: usize, cos: &Matrix, sin: &Matri
 /// Causal softmax attention; q,k,v `[T, h*hd]` -> ctx `[T, h*hd]`.
 pub fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, h: usize, hd: usize) -> Matrix {
     let t = q.rows;
-    let scale = 1.0 / (hd as f64).sqrt();
     let mut ctx = Matrix::zeros(t, h * hd);
-    let mut scores = vec![0.0f64; t];
-    for head in 0..h {
-        let base = head * hd;
-        for qi in 0..t {
-            // scores over keys 0..=qi
-            let qrow = &q.row(qi)[base..base + hd];
-            let mut mx = f64::NEG_INFINITY;
-            for ki in 0..=qi {
-                let krow = &k.row(ki)[base..base + hd];
-                let dot: f64 = qrow
-                    .iter()
-                    .zip(krow)
-                    .map(|(&a, &b)| a as f64 * b as f64)
-                    .sum();
-                scores[ki] = dot * scale;
-                mx = mx.max(scores[ki]);
-            }
-            let mut denom = 0.0f64;
-            for s in scores.iter_mut().take(qi + 1) {
-                *s = (*s - mx).exp();
-                denom += *s;
-            }
-            let out = &mut ctx.row_mut(qi)[base..base + hd];
-            for ki in 0..=qi {
-                let wgt = (scores[ki] / denom) as f32;
-                let vrow = &v.row(ki)[base..base + hd];
-                for (o, &vv) in out.iter_mut().zip(vrow) {
-                    *o += wgt * vv;
-                }
-            }
-        }
+    let mut scores = Vec::with_capacity(t);
+    for qi in 0..t {
+        let out = &mut ctx.data[qi * h * hd..(qi + 1) * h * hd];
+        attend_one(q.row(qi), qi + 1, |i| k.row(i), |i| v.row(i), h, hd, &mut scores, out);
     }
     ctx
 }

@@ -11,9 +11,26 @@
 //!       `m` contiguous activations — the CPU analogue of the paper's
 //!       "two binary matmuls feeding one accumulator".
 
+use std::cell::RefCell;
+
 use super::fdb::FdbLinear;
 use super::packing::WORD_BITS;
 use crate::tensor::Matrix;
+
+/// Reusable transpose scratch for [`FdbExec::matmul`].  The decode hot
+/// loop calls matmul every linear of every step; without this each call
+/// churned two fresh `din*m` / `dout*m` allocations.
+#[derive(Default)]
+pub struct FdbScratch {
+    xt: Vec<f32>,
+    yt: Vec<f32>,
+}
+
+thread_local! {
+    /// Per-thread scratch behind the allocation-free [`FdbExec::matmul`]
+    /// entry point (engine workers each live on their own thread).
+    static MM_SCRATCH: RefCell<FdbScratch> = RefCell::new(FdbScratch::default());
+}
 
 /// Compiled FDB layer: combined-level CSC.
 pub struct FdbExec {
@@ -72,19 +89,30 @@ impl FdbExec {
     /// y = x·Ŵ with x `[m, din]` row-major -> y `[m, dout]`.
     ///
     /// Internally transposes x so the batch is contiguous: each nonzero
-    /// level performs `m` sequential FMAs — auto-vectorizable.
+    /// level performs `m` sequential FMAs — auto-vectorizable.  Uses a
+    /// per-thread [`FdbScratch`] so repeated calls (the decode loop)
+    /// allocate nothing but the returned matrix.
     pub fn matmul(&self, x: &Matrix) -> Matrix {
+        MM_SCRATCH.with(|s| self.matmul_with(x, &mut s.borrow_mut()))
+    }
+
+    /// [`matmul`](Self::matmul) against an explicit caller-owned scratch.
+    pub fn matmul_with(&self, x: &Matrix, scratch: &mut FdbScratch) -> Matrix {
         assert_eq!(x.cols, self.din);
         let m = x.rows;
-        // xt[k*m + r] = x[r, k]
-        let mut xt = vec![0.0f32; self.din * m];
+        // xt[k*m + r] = x[r, k] — every entry overwritten below
+        scratch.xt.resize(self.din * m, 0.0);
+        let xt = &mut scratch.xt[..self.din * m];
         for r in 0..m {
             let row = x.row(r);
             for k in 0..self.din {
                 xt[k * m + r] = row[k];
             }
         }
-        let mut yt = vec![0.0f32; self.dout * m];
+        // yt accumulates, so it must start zeroed
+        scratch.yt.resize(self.dout * m, 0.0);
+        let yt = &mut scratch.yt[..self.dout * m];
+        yt.fill(0.0);
         for c in 0..self.dout {
             let s = self.col_ptr[c] as usize;
             let e = self.col_ptr[c + 1] as usize;
@@ -194,6 +222,30 @@ mod tests {
         let y2 = exec.matmul(&x);
         for (a, b) in y.iter().zip(&y2.data) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_clean() {
+        // a stale (larger) scratch must not leak accumulator state into
+        // a later, smaller matmul
+        let mut rng = Pcg32::seeded(79);
+        let w_big = Matrix::randn(256, 48, &mut rng, 1.0);
+        let w_small = Matrix::randn(64, 8, &mut rng, 1.0);
+        let exec_big = FdbExec::compile(&FdbLinear::from_weights(&w_big, 64));
+        let exec_small = FdbExec::compile(&FdbLinear::from_weights(&w_small, 64));
+        let mut scratch = FdbScratch::default();
+        let xb = Matrix::randn(5, 256, &mut rng, 1.0);
+        let xs = Matrix::randn(2, 64, &mut rng, 1.0);
+        for _ in 0..2 {
+            let yb = exec_big.matmul_with(&xb, &mut scratch);
+            let ys = exec_small.matmul_with(&xs, &mut scratch);
+            for (a, b) in yb.data.iter().zip(&exec_big.matmul(&xb).data) {
+                assert!((a - b).abs() < 1e-6);
+            }
+            for (a, b) in ys.data.iter().zip(&exec_small.matmul(&xs).data) {
+                assert!((a - b).abs() < 1e-6);
+            }
         }
     }
 

@@ -91,6 +91,15 @@ pub fn pack_batch(windows: &[Vec<u32>], batch: usize, width: usize) -> Result<Ve
     Ok(out)
 }
 
+/// The sliding-window view of a sequence: the *last* `width` tokens
+/// (the most recent context).  Single source of the window semantics
+/// shared by the XLA decode loop (`pack_decode_windows`,
+/// `coordinator::serve::decode_batch`) and the native KV-cached engine
+/// (`infer`): both keep the tail, never the head.
+pub fn recent_window(s: &[u32], width: usize) -> &[u32] {
+    &s[s.len().saturating_sub(width)..]
+}
+
 /// Pack decode-loop sliding windows into the flat `[batch, width]` i32
 /// layout `Session::logits` expects.  Each row holds the *last*
 /// `width` tokens of its sequence (the most recent context); short
@@ -109,8 +118,7 @@ pub fn pack_decode_windows(
     let mut pos = vec![0usize; seqs.len()];
     for (r, s) in seqs.iter().enumerate() {
         ensure!(!s.is_empty(), "empty sequence in row {r}");
-        let start = s.len().saturating_sub(width);
-        let window = &s[start..];
+        let window = recent_window(s, width);
         for (i, &tok) in window.iter().enumerate() {
             toks[r * width + i] = tok as i32;
         }
@@ -166,5 +174,14 @@ mod tests {
     fn decode_windows_reject_bad_rows() {
         assert!(pack_decode_windows(&[vec![1u32], vec![2]], 1, 4).is_err());
         assert!(pack_decode_windows(&[vec![]], 1, 4).is_err());
+    }
+
+    #[test]
+    fn recent_window_keeps_tail() {
+        let s = [1u32, 2, 3, 4, 5];
+        assert_eq!(recent_window(&s, 3), &[3, 4, 5]);
+        assert_eq!(recent_window(&s, 5), &s);
+        assert_eq!(recent_window(&s, 9), &s);
+        assert_eq!(recent_window(&s, 0), &[] as &[u32]);
     }
 }

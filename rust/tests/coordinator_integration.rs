@@ -15,7 +15,7 @@ use db_llm::coordinator::batcher::BatchPolicy;
 use db_llm::coordinator::finetune::{DadConfig, DadTrainer};
 use db_llm::coordinator::metrics::Metrics;
 use db_llm::coordinator::serve::{
-    serve, worker_loop, DecodeParams, Engine, Generation, Generator, Request,
+    serve, worker_loop, DecodeParams, Engine, EngineWorker, Generation, Generator, Request,
 };
 use db_llm::data::TokenStream;
 use db_llm::quant::{fdb::Fdb, Calib, Quantizer};
@@ -107,7 +107,7 @@ fn tcp_serving_end_to_end() {
             let weights = load_teacher(&rt, "S")?;
             let vocab = rt.manifest.vocab();
             let session = Session::new(&rt, &weights)?;
-            Ok((rt, Engine::new(session, vocab, 1)))
+            Ok(EngineWorker { rt, engine: Engine::new(session, vocab, 1) })
         },
         "127.0.0.1:0",
         BatchPolicy::default(),
@@ -172,7 +172,7 @@ fn tcp_mixed_batch_multi_worker() {
             let weights = load_teacher(&rt, "S")?;
             let vocab = rt.manifest.vocab();
             let session = Session::new(&rt, &weights)?;
-            Ok((rt, Engine::new(session, vocab, 1)))
+            Ok(EngineWorker { rt, engine: Engine::new(session, vocab, 1) })
         },
         "127.0.0.1:0",
         BatchPolicy::default(),
@@ -263,7 +263,7 @@ impl Generator for FailGen {
 }
 
 fn pool_policy() -> BatchPolicy {
-    BatchPolicy { max_batch: 4, linger: Duration::from_millis(2) }
+    BatchPolicy { max_batch: 4, linger: Duration::from_millis(2), ..Default::default() }
 }
 
 /// A worker error must degrade to one error reply per request — never a
