@@ -3,15 +3,25 @@
 //! tentpole claim that a cached step is O(T) (roughly flat in sequence
 //! position) while the recompute loop pays O(T²) per generated token.
 //!
+//! Plus the scheduler comparison: mixed-length traffic (lengths
+//! {4, 32, 128} interleaved) drained by the continuous-batching
+//! scheduler vs static arrival-order waves.  Deterministic lockstep
+//! metrics (decode ticks, stalled row-steps — what a batch-synchronous
+//! device pays) and measured wall clock both land in
+//! `BENCH_scheduler.json` at the repo root.
+//!
 //!     cargo bench --bench decode        (BENCH_QUICK=1 for smoke)
 
 use std::collections::BTreeMap;
 
-use db_llm::infer::{IncrementalForward, KvCache};
+use db_llm::coordinator::scheduler::{Job, ManualClock, Scheduler, SchedulerConfig};
+use db_llm::coordinator::serve::{DecodeParams, Generator};
+use db_llm::infer::{IncrementalForward, KvCache, NativeEngine};
 use db_llm::model::native::Forward;
 use db_llm::model::{ModelConfig, Weights};
 use db_llm::quant::FdbLinear;
 use db_llm::util::bench::{black_box, Bench};
+use db_llm::util::Json;
 
 fn cfg() -> ModelConfig {
     ModelConfig {
@@ -66,5 +76,104 @@ fn main() {
         black_box(f.step(&mut cache, 7));
     });
 
+    bench_scheduler_mixed(&cfg, &weights, &mut b);
+
     b.report();
+}
+
+/// Mixed-length continuous-vs-static comparison: 12 requests with
+/// budgets {4, 32, 128} interleaved in arrival order, 4 slots.
+///
+/// Two cost axes:
+/// - **lockstep ticks** — what a batch-synchronous device pays: the
+///   static batcher runs each arrival-order wave until its *slowest*
+///   row finishes (finished rows stall in their slots), while the
+///   continuous scheduler refills freed slots mid-flight.  These
+///   counts are deterministic.
+/// - **wall clock** — this host's CPU decode, where per-row work is
+///   sequential either way, so the times mostly confirm the scheduler
+///   adds no overhead.
+fn bench_scheduler_mixed(cfg: &ModelConfig, weights: &Weights, b: &mut Bench) {
+    const SLOTS: usize = 4;
+    let budgets: Vec<usize> = [4usize, 32, 128].iter().copied().cycle().take(12).collect();
+    let window = cfg.seq_len;
+    let prompts: Vec<Vec<u32>> =
+        (0..budgets.len()).map(|i| vec![(i % cfg.vocab) as u32, 3, 5]).collect();
+    let params: Vec<DecodeParams> =
+        budgets.iter().map(|&n| DecodeParams::greedy(n)).collect();
+    let tokens: usize = budgets.iter().sum();
+
+    // deterministic lockstep metrics for the static waves
+    let mut ticks_static = 0usize;
+    let mut stalled_static = 0usize;
+    for wave in budgets.chunks(SLOTS) {
+        let longest = wave.iter().copied().max().unwrap_or(0);
+        ticks_static += longest;
+        stalled_static += wave.iter().map(|&n| longest - n).sum::<usize>();
+    }
+
+    // one cold continuous drain for its deterministic tick metrics
+    let engine = NativeEngine::new(weights.clone(), &BTreeMap::new(), window, 42)
+        .with_slots(SLOTS);
+    let sched_cfg = SchedulerConfig { slots: SLOTS, ..Default::default() };
+    let mut sched = Scheduler::new(engine, ManualClock::default(), sched_cfg);
+    let drain = |sched: &mut Scheduler<NativeEngine, ManualClock>| {
+        for (p, d) in prompts.iter().zip(&params) {
+            let job = Job { prompt: p.clone(), params: *d, timeout_ms: None, queued_for_ms: 0 };
+            sched.submit(job);
+        }
+        let mut replies = 0usize;
+        while !sched.is_idle() {
+            replies += sched.tick().len();
+        }
+        assert_eq!(replies, prompts.len(), "every request answered exactly once");
+    };
+    drain(&mut sched);
+    let ticks_continuous = sched.stats.ticks as usize;
+    let busy = sched.stats.busy_slot_ticks as usize;
+    assert_eq!(busy, tokens, "continuous slots never stall: busy ticks == tokens");
+
+    // measured wall clock, same work each iteration
+    let wall_cont =
+        b.bench_with_work("continuous_mixed_4_32_128", Some(tokens as f64), || {
+            drain(&mut sched);
+        });
+    let mut static_engine = NativeEngine::new(weights.clone(), &BTreeMap::new(), window, 42);
+    let wall_static =
+        b.bench_with_work("static_waves_mixed_4_32_128", Some(tokens as f64), || {
+            for w in 0..prompts.len().div_ceil(SLOTS) {
+                let lo = w * SLOTS;
+                let hi = (lo + SLOTS).min(prompts.len());
+                black_box(static_engine.generate(&prompts[lo..hi], &params[lo..hi]).unwrap());
+            }
+        });
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("scheduler_mixed_lengths")),
+        ("slots", Json::num(SLOTS as f64)),
+        ("requests", Json::num(budgets.len() as f64)),
+        ("lengths_cycle", Json::Arr(vec![Json::num(4.0), Json::num(32.0), Json::num(128.0)])),
+        ("tokens", Json::num(tokens as f64)),
+        ("ticks_static", Json::num(ticks_static as f64)),
+        ("ticks_continuous", Json::num(ticks_continuous as f64)),
+        ("stalled_row_steps_static", Json::num(stalled_static as f64)),
+        ("stalled_row_steps_continuous", Json::num(0.0)),
+        (
+            "lockstep_speedup",
+            Json::num(ticks_static as f64 / ticks_continuous.max(1) as f64),
+        ),
+        (
+            "slot_occupancy_continuous",
+            Json::num(busy as f64 / (ticks_continuous.max(1) * SLOTS) as f64),
+        ),
+        ("wall_ns_per_drain_continuous", Json::num(wall_cont)),
+        ("wall_ns_per_drain_static", Json::num(wall_static)),
+        ("wall_tokens_per_sec_continuous", Json::num(tokens as f64 * 1e9 / wall_cont)),
+        ("wall_tokens_per_sec_static", Json::num(tokens as f64 * 1e9 / wall_static)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_scheduler.json");
+    match std::fs::write(&path, format!("{out}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }

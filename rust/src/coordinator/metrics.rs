@@ -24,6 +24,21 @@ pub struct Metrics {
     /// forward steps *saved* by per-request early exit: the gap
     /// between each batch's largest token budget and the steps run
     pub early_exit_steps: AtomicU64,
+    /// the static-batch stall: row-steps a finished row sat idle while
+    /// its batch kept running (the lockstep waste continuous batching
+    /// removes) — early-exited rows no longer masquerade as
+    /// full-length decodes
+    pub stalled_row_steps: AtomicU64,
+    /// scheduler slot-ticks that decoded a token (occupancy numerator)
+    pub slot_busy_ticks: AtomicU64,
+    /// total scheduler slot-ticks: decode ticks × slots (denominator)
+    pub slot_ticks: AtomicU64,
+    /// scheduler admissions into a batch already mid-flight (a freed
+    /// slot refilled while its neighbours kept decoding)
+    pub refills: AtomicU64,
+    /// requests finished by deadline expiry (partial-result replies,
+    /// including requests that expired while still queued)
+    pub timeouts: AtomicU64,
     /// log₂-bucketed latencies, bucket i = [2^i, 2^(i+1)) microseconds
     lat_buckets: [AtomicU64; BUCKETS],
 }
@@ -40,6 +55,11 @@ impl Default for Metrics {
             batch_occupancy_sum: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             early_exit_steps: AtomicU64::new(0),
+            stalled_row_steps: AtomicU64::new(0),
+            slot_busy_ticks: AtomicU64::new(0),
+            slot_ticks: AtomicU64::new(0),
+            refills: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
             lat_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -83,10 +103,21 @@ impl Metrics {
         self.batch_occupancy_sum.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    /// Fraction of scheduler slot-ticks that decoded a token (0 when
+    /// the continuous scheduler never ran).
+    pub fn slot_occupancy(&self) -> f64 {
+        let total = self.slot_ticks.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        self.slot_busy_ticks.load(Ordering::Relaxed) as f64 / total as f64
+    }
+
     pub fn snapshot(&self) -> String {
         format!(
             "req={} resp={} err={} rejected={} tokens={} batches={} occ={:.2} queue={} \
-             saved_steps={} p50={}us p95={}us p99={}us",
+             saved_steps={} stalled={} slot_occ={:.2} refills={} timeouts={} \
+             p50={}us p95={}us p99={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -96,6 +127,10 @@ impl Metrics {
             self.mean_batch_occupancy(),
             self.queue_depth.load(Ordering::Relaxed),
             self.early_exit_steps.load(Ordering::Relaxed),
+            self.stalled_row_steps.load(Ordering::Relaxed),
+            self.slot_occupancy(),
+            self.refills.load(Ordering::Relaxed),
+            self.timeouts.load(Ordering::Relaxed),
             self.latency_percentile(0.50),
             self.latency_percentile(0.95),
             self.latency_percentile(0.99),
@@ -134,6 +169,27 @@ mod tests {
         assert!(m.snapshot().contains("req=0"));
         assert!(m.snapshot().contains("queue=0"));
         assert!(m.snapshot().contains("saved_steps=0"));
+        assert!(m.snapshot().contains("stalled=0"));
+        assert!(m.snapshot().contains("slot_occ=0.00"));
+        assert!(m.snapshot().contains("timeouts=0"));
+        assert_eq!(m.slot_occupancy(), 0.0, "no scheduler ticks -> 0, not NaN");
+    }
+
+    #[test]
+    fn scheduler_counters_surface() {
+        let m = Metrics::default();
+        // 10 decode ticks on 4 slots, 29 of 40 slot-ticks busy
+        m.slot_ticks.fetch_add(40, Ordering::Relaxed);
+        m.slot_busy_ticks.fetch_add(29, Ordering::Relaxed);
+        m.refills.fetch_add(3, Ordering::Relaxed);
+        m.timeouts.fetch_add(2, Ordering::Relaxed);
+        m.stalled_row_steps.fetch_add(11, Ordering::Relaxed);
+        assert!((m.slot_occupancy() - 0.725).abs() < 1e-12);
+        let s = m.snapshot();
+        assert!(s.contains("slot_occ=0.72"), "{s}");
+        assert!(s.contains("refills=3"), "{s}");
+        assert!(s.contains("timeouts=2"), "{s}");
+        assert!(s.contains("stalled=11"), "{s}");
     }
 
     #[test]

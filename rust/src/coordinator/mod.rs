@@ -1,11 +1,13 @@
 //! Layer-3 coordinator: the DAD fine-tuning driver (AdamW loop around
 //! the AOT `dad_step` executable — gradients come from XLA, the
 //! optimizer and state management live here) and the serving stack
-//! (TCP line-protocol server, continuous batcher, worker, metrics).
+//! (TCP line-protocol server, dynamic batcher, static worker pool,
+//! iteration-level continuous-batching scheduler, metrics).
 
 pub mod batcher;
 pub mod finetune;
 pub mod metrics;
+pub mod scheduler;
 pub mod serve;
 
 pub use finetune::{DadConfig, DadTrainer};

@@ -1,0 +1,930 @@
+//! Iteration-level continuous-batching scheduler (Orca/vLLM-style) for
+//! the native KV-cached backend, with per-request deadlines.
+//!
+//! The static batcher (`worker_loop` + `decode_batch`) runs whole
+//! batches in lockstep: a row that hits EOS keeps its slot until the
+//! *slowest* row of the batch finishes.  This scheduler instead owns a
+//! fixed set of decode **slots** and re-plans between decode steps:
+//!
+//! - a queued request is admitted into any free slot *mid-flight* — its
+//!   per-slot KV prefill runs while the other slots keep decoding;
+//! - every active slot emits exactly one token per `tick` (the
+//!   admission tick's token comes from the prefill logits);
+//! - a finished row (budget / stop token) frees its slot at the end of
+//!   the tick, so the next tick's admission refills it immediately;
+//! - a request whose **deadline** expires is evicted with a
+//!   partial-result reply flagged `timeout` (a request that expires
+//!   while still queued — including `timeout_ms: 0` — is answered
+//!   without ever occupying a slot).
+//!
+//! Determinism: the core is driven by an abstract [`Clock`] and an
+//! abstract [`SlotEngine`], so `tests/scheduler_sim.rs` scripts arrival
+//! times, lengths and EOS positions against a virtual clock and asserts
+//! exact slot-assignment traces.  Sampling state is **forked per
+//! request** — the stream is seeded from (scheduler seed, request id)
+//! alone, so neither admission interleaving nor the fate of earlier
+//! requests changes a request's sampled tokens; greedy rows are
+//! interleaving-independent by construction, which is what makes the
+//! single-slot / no-refill configurations token-for-token identical to
+//! the static path.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex, TryLockError};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::Pcg32;
+
+use super::metrics::Metrics;
+use super::serve::{
+    argmax, bind_listener, sample, spawn_accept_loop, DecodeParams, Request, Response,
+};
+
+/// How long an idle scheduler worker waits for a first request before
+/// re-checking the shutdown flag (mirrors the static batcher).
+const SHUTDOWN_POLL: Duration = Duration::from_millis(50);
+
+/// Milliseconds on a monotonic axis with an arbitrary origin.  The
+/// scheduler only ever compares instants on the same clock, so the
+/// origin does not matter — which is what lets simulations drive the
+/// deadline logic with a manually advanced clock.
+pub trait Clock {
+    fn now_ms(&self) -> u64;
+}
+
+/// Real time, measured from construction.
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock { origin: Instant::now() }
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> u64 {
+        self.origin.elapsed().as_millis() as u64
+    }
+}
+
+/// Manually advanced clock for deterministic scheduler simulations.
+#[derive(Clone, Default)]
+pub struct ManualClock(Arc<AtomicU64>);
+
+impl ManualClock {
+    pub fn advance(&self, ms: u64) {
+        self.0.fetch_add(ms, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, ms: u64) {
+        self.0.store(ms, Ordering::Relaxed);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ms(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Slot-granular decode backend: per-slot KV lifecycle instead of the
+/// batch-at-a-time [`super::serve::Generator`] contract.  Implemented
+/// by `infer::NativeEngine` (one `KvCache` per slot) and by the test
+/// doubles in `tests/scheduler_sim.rs`.
+pub trait SlotEngine {
+    /// Number of independent decode slots this engine holds state for.
+    fn slots(&self) -> usize;
+
+    /// Reset `slot` and prefill it with `prompt`; returns the logits of
+    /// the first decoded token.  Other slots' state is untouched — this
+    /// is the contract that lets admission run mid-flight.
+    fn prefill_slot(&mut self, slot: usize, prompt: &[u32]) -> Result<Vec<f32>>;
+
+    /// One incremental decode step on `slot` given its last token;
+    /// returns the next-token logits.
+    fn step_slot(&mut self, slot: usize, token: u32) -> Result<Vec<f32>>;
+
+    /// Drop `slot`'s sequence state (eviction / completion).
+    fn reset_slot(&mut self, slot: usize);
+}
+
+/// Scheduler policy knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// decode slots (clamped to the engine's capacity)
+    pub slots: usize,
+    /// admit into freed slots mid-flight; `false` degrades to static
+    /// waves (a new wave only starts once every slot is free) — the
+    /// configuration the equivalence tests pin against `decode_batch`
+    pub refill: bool,
+    /// default deadline for requests that carry no `timeout_ms`
+    pub default_timeout_ms: Option<u64>,
+    /// base seed for the per-request sampling streams
+    pub seed: u64,
+    /// record [`TraceEvent`]s (simulation/testing only — the trace
+    /// grows without bound, so the serving loop leaves it off)
+    pub trace: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { slots: 4, refill: true, default_timeout_ms: None, seed: 42, trace: false }
+    }
+}
+
+/// One unit of work for the scheduler.
+pub struct Job {
+    pub prompt: Vec<u32>,
+    pub params: DecodeParams,
+    /// per-request deadline override; `None` = the scheduler default
+    pub timeout_ms: Option<u64>,
+    /// time the request already spent queued upstream (the shared
+    /// server queue) — counted against the deadline, so `timeout_ms`
+    /// bounds the wait from *arrival*, not from worker pickup
+    pub queued_for_ms: u64,
+}
+
+/// Why a request left the scheduler.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FinishReason {
+    /// budget reached or stop token emitted
+    Done,
+    /// deadline expired: `tokens` holds the partial result
+    Timeout,
+    /// engine failure — degrades to an error reply
+    Error(String),
+}
+
+/// One finished request: every submitted job produces exactly one.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub reason: FinishReason,
+}
+
+/// Scheduler decision log, recorded when `SchedulerConfig::trace` is
+/// set; the simulation tests assert exact event sequences.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// request placed into a slot (its prefill ran this tick);
+    /// `refill` marks admissions into a batch already mid-flight
+    Admit { id: u64, slot: usize, at_ms: u64, refill: bool },
+    /// request left its slot ("done" | "timeout" | "error")
+    Finish { id: u64, slot: usize, at_ms: u64, reason: &'static str, decoded: usize },
+    /// deadline expired while still queued — never occupied a slot
+    Expire { id: u64, at_ms: u64 },
+}
+
+/// Cumulative scheduler counters (monotonic; the serving loop feeds
+/// deltas into the shared [`Metrics`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedStats {
+    /// decode ticks run (ticks where at least one slot was active)
+    pub ticks: u64,
+    /// slots that decoded a token, summed over ticks (occupancy
+    /// numerator; `ticks * slots` is the denominator)
+    pub busy_slot_ticks: u64,
+    /// requests admitted into a slot
+    pub admissions: u64,
+    /// admissions that refilled a batch already mid-flight
+    pub refills: u64,
+    /// requests finished by deadline (evicted or expired in queue)
+    pub timeouts: u64,
+}
+
+struct Queued {
+    id: u64,
+    prompt: Vec<u32>,
+    params: DecodeParams,
+    deadline_ms: Option<u64>,
+}
+
+struct Active {
+    id: u64,
+    params: DecodeParams,
+    deadline_ms: Option<u64>,
+    out: Vec<u32>,
+    rng: Pcg32,
+    /// token feeding the next incremental step
+    last: u32,
+    /// admitted this tick: its token came from the prefill logits
+    fresh: bool,
+}
+
+/// The continuous-batching core: a fixed slot set over a [`SlotEngine`]
+/// plus an admission queue, advanced one decode step per [`tick`].
+///
+/// [`tick`]: Scheduler::tick
+pub struct Scheduler<E: SlotEngine, C: Clock> {
+    engine: E,
+    clock: C,
+    cfg: SchedulerConfig,
+    active: Vec<Option<Active>>,
+    queue: VecDeque<Queued>,
+    next_id: u64,
+    pub stats: SchedStats,
+    trace: Vec<TraceEvent>,
+}
+
+impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
+    pub fn new(engine: E, clock: C, cfg: SchedulerConfig) -> Scheduler<E, C> {
+        let slots = cfg.slots.clamp(1, engine.slots().max(1));
+        Scheduler {
+            engine,
+            clock,
+            cfg,
+            active: (0..slots).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            next_id: 0,
+            stats: SchedStats::default(),
+            trace: Vec::new(),
+        }
+    }
+
+    /// Enqueue a job.  Its deadline budget is `timeout_ms` (or the
+    /// scheduler default) minus the time it already waited upstream
+    /// (`queued_for_ms`), so the deadline bounds the wait from request
+    /// arrival.  Returns the id its [`Completion`] will carry.
+    pub fn submit(&mut self, job: Job) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let timeout = job.timeout_ms.or(self.cfg.default_timeout_ms);
+        let deadline_ms = timeout.map(|t| {
+            self.clock.now_ms().saturating_add(t.saturating_sub(job.queued_for_ms))
+        });
+        self.queue.push_back(Queued { id, prompt: job.prompt, params: job.params, deadline_ms });
+        id
+    }
+
+    pub fn slots(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.active.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.iter().all(|s| s.is_none())
+    }
+
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+
+    pub fn trace(&self) -> &[TraceEvent] {
+        &self.trace
+    }
+
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.trace)
+    }
+
+    /// One scheduler iteration: expire queued requests, refill free
+    /// slots (prefill + first token), then one decode step per active
+    /// slot, then evict deadline-expired rows.  Every completed request
+    /// (and only completed requests) comes back as a [`Completion`].
+    pub fn tick(&mut self) -> Vec<Completion> {
+        let mut done = Vec::new();
+        self.expire_queued(&mut done);
+        self.admit(&mut done);
+        // a tick that decodes nothing (e.g. it only expired queued
+        // requests) must not count slot-ticks, or slot_occ deflates
+        let active = (self.active.len() - self.free_slots()) as u64;
+        if active > 0 {
+            self.stats.busy_slot_ticks += active;
+            self.stats.ticks += 1;
+        }
+        self.step_active(&mut done);
+        self.expire_active(&mut done);
+        done
+    }
+
+    /// Shutdown: answer everything still queued or in flight with an
+    /// error completion (never a silent drop).
+    pub fn abort_all(&mut self, msg: &str) -> Vec<Completion> {
+        let mut done = Vec::new();
+        while let Some(q) = self.queue.pop_front() {
+            done.push(Completion {
+                id: q.id,
+                tokens: Vec::new(),
+                reason: FinishReason::Error(msg.to_string()),
+            });
+        }
+        for slot in 0..self.active.len() {
+            if self.active[slot].is_some() {
+                self.finish(slot, FinishReason::Error(msg.to_string()), &mut done);
+            }
+        }
+        done
+    }
+
+    /// Drop queued requests whose deadline already passed: they are
+    /// answered with an (empty) timeout reply *before* occupying a slot
+    /// — this is also the path a `timeout_ms: 0` request takes.
+    fn expire_queued(&mut self, done: &mut Vec<Completion>) {
+        let now = self.clock.now_ms();
+        if !self.queue.iter().any(|q| q.deadline_ms.is_some_and(|d| now >= d)) {
+            return;
+        }
+        let mut keep = VecDeque::with_capacity(self.queue.len());
+        while let Some(q) = self.queue.pop_front() {
+            if q.deadline_ms.is_some_and(|d| now >= d) {
+                self.stats.timeouts += 1;
+                if self.cfg.trace {
+                    self.trace.push(TraceEvent::Expire { id: q.id, at_ms: now });
+                }
+                done.push(Completion {
+                    id: q.id,
+                    tokens: Vec::new(),
+                    reason: FinishReason::Timeout,
+                });
+            } else {
+                keep.push_back(q);
+            }
+        }
+        self.queue = keep;
+    }
+
+    /// Refill every free slot from the queue (FCFS, slot order).  The
+    /// prefill samples the request's first token, so an admitted slot
+    /// produces a token this very tick — a freed slot never sits idle
+    /// while work is queued.
+    fn admit(&mut self, done: &mut Vec<Completion>) {
+        if self.queue.is_empty() {
+            return;
+        }
+        // slots still decoding from previous ticks: admissions next to
+        // them are refills; `false` only for a fresh wave from idle
+        let carried = self.active.len() - self.free_slots();
+        if !self.cfg.refill && carried > 0 {
+            return;
+        }
+        let now = self.clock.now_ms();
+        for slot in 0..self.active.len() {
+            if self.active[slot].is_some() {
+                continue;
+            }
+            while let Some(q) = self.queue.pop_front() {
+                if q.params.max_tokens == 0 {
+                    // a zero-budget request never needs a slot
+                    done.push(Completion {
+                        id: q.id,
+                        tokens: Vec::new(),
+                        reason: FinishReason::Done,
+                    });
+                    continue;
+                }
+                match self.engine.prefill_slot(slot, &q.prompt) {
+                    Ok(logits) => {
+                        // sampling stream derived from (seed, id) only:
+                        // no shared RNG draw, so the fate of earlier
+                        // requests never shifts this request's stream
+                        let state = self.cfg.seed ^ q.id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                        let mut rng = Pcg32::new(state, q.id);
+                        let tok = pick(&logits, q.params, &mut rng);
+                        self.stats.admissions += 1;
+                        let refill = carried > 0;
+                        if refill {
+                            self.stats.refills += 1;
+                        }
+                        if self.cfg.trace {
+                            let ev = TraceEvent::Admit { id: q.id, slot, at_ms: now, refill };
+                            self.trace.push(ev);
+                        }
+                        self.active[slot] = Some(Active {
+                            id: q.id,
+                            params: q.params,
+                            deadline_ms: q.deadline_ms,
+                            out: vec![tok],
+                            rng,
+                            last: tok,
+                            fresh: true,
+                        });
+                        break;
+                    }
+                    Err(e) => {
+                        // per-request failure: error completion, slot
+                        // stays free for the next queued request
+                        self.engine.reset_slot(slot);
+                        done.push(Completion {
+                            id: q.id,
+                            tokens: Vec::new(),
+                            reason: FinishReason::Error(format!("{e:#}")),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// One decode step per active slot.  Fresh slots already hold this
+    /// tick's token (from the prefill logits) — they only run the
+    /// finish check, keeping the invariant of exactly one token per
+    /// active slot per tick.
+    fn step_active(&mut self, done: &mut Vec<Completion>) {
+        for slot in 0..self.active.len() {
+            let mut failed: Option<String> = None;
+            if let Some(a) = self.active[slot].as_mut() {
+                if a.fresh {
+                    a.fresh = false;
+                } else {
+                    match self.engine.step_slot(slot, a.last) {
+                        Ok(logits) => {
+                            let tok = pick(&logits, a.params, &mut a.rng);
+                            a.out.push(tok);
+                            a.last = tok;
+                        }
+                        Err(e) => failed = Some(format!("{e:#}")),
+                    }
+                }
+            } else {
+                continue;
+            }
+            if let Some(msg) = failed {
+                self.finish(slot, FinishReason::Error(msg), done);
+                continue;
+            }
+            let finished = {
+                let a = self.active[slot].as_ref().expect("slot emptied mid-step");
+                a.out.len() >= a.params.max_tokens
+                    || a.params.stop.is_some_and(|s| a.last == s)
+            };
+            if finished {
+                self.finish(slot, FinishReason::Done, done);
+            }
+        }
+    }
+
+    /// Evict rows whose deadline passed, carrying the tokens decoded so
+    /// far as the partial result.
+    fn expire_active(&mut self, done: &mut Vec<Completion>) {
+        let now = self.clock.now_ms();
+        for slot in 0..self.active.len() {
+            let expired = self.active[slot]
+                .as_ref()
+                .is_some_and(|a| a.deadline_ms.is_some_and(|d| now >= d));
+            if expired {
+                self.finish(slot, FinishReason::Timeout, done);
+            }
+        }
+    }
+
+    fn finish(&mut self, slot: usize, reason: FinishReason, done: &mut Vec<Completion>) {
+        let a = self.active[slot].take().expect("finish on empty slot");
+        self.engine.reset_slot(slot);
+        if matches!(reason, FinishReason::Timeout) {
+            self.stats.timeouts += 1;
+        }
+        if self.cfg.trace {
+            let label = match &reason {
+                FinishReason::Done => "done",
+                FinishReason::Timeout => "timeout",
+                FinishReason::Error(_) => "error",
+            };
+            self.trace.push(TraceEvent::Finish {
+                id: a.id,
+                slot,
+                at_ms: self.clock.now_ms(),
+                reason: label,
+                decoded: a.out.len(),
+            });
+        }
+        done.push(Completion { id: a.id, tokens: a.out, reason });
+    }
+}
+
+/// Sample one token from a logits row under `params` (greedy when
+/// temperature <= 0) — the same semantics as the static decode loop.
+fn pick(logits: &[f32], params: DecodeParams, rng: &mut Pcg32) -> u32 {
+    let idx = if params.temperature <= 0.0 {
+        argmax(logits)
+    } else {
+        sample(logits, params.temperature, rng)
+    };
+    idx as u32
+}
+
+struct PendingReply {
+    reply: Sender<Response>,
+    arrived: Instant,
+}
+
+/// The continuous-batching worker loop: pull requests off the shared
+/// queue into the scheduler core, drive `tick()` until idle, reply per
+/// completion.  Several scheduler workers may compete on one queue;
+/// each request is answered exactly once — success, timeout (partial
+/// result), or error.
+pub fn scheduler_loop<E: SlotEngine>(
+    engine: E,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    cfg: SchedulerConfig,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+) {
+    let mut core = Scheduler::new(engine, WallClock::default(), cfg);
+    let mut pending: HashMap<u64, PendingReply> = HashMap::new();
+    let mut last = SchedStats::default();
+    loop {
+        if !running.load(Ordering::Relaxed) {
+            fail_pending(&mut core, &mut pending, &metrics, "server shutting down");
+            if let Ok(guard) = rx.lock() {
+                while let Ok(req) = guard.try_recv() {
+                    metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let us = req.arrived.elapsed().as_micros() as u64;
+                    let _ = req.reply.send(Response::err("server shutting down", us));
+                }
+            }
+            break;
+        }
+
+        let mut disconnected = false;
+        if core.is_idle() {
+            // idle: block (bounded) for the first request, then top up
+            // one wave of lookahead while the lock is already held
+            let Ok(guard) = rx.lock() else {
+                // poisoned pool lock: answer what this worker owes
+                // before bailing — never a silent drop
+                fail_pending(&mut core, &mut pending, &metrics, "server worker pool failed");
+                break;
+            };
+            match guard.recv_timeout(SHUTDOWN_POLL) {
+                Ok(req) => submit_request(&mut core, &mut pending, &metrics, req),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+            while !disconnected && core.queue_len() < core.free_slots() {
+                match guard.try_recv() {
+                    Ok(req) => submit_request(&mut core, &mut pending, &metrics, req),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => disconnected = true,
+                }
+            }
+        } else if core.queue_len() < core.free_slots() {
+            // decoding: never block on the queue lock — an idle
+            // neighbour worker holds it for a full SHUTDOWN_POLL while
+            // it waits, and a decode tick must not stall behind that
+            // (skipped top-ups retry next tick).  Lookahead is bounded
+            // by *free* slots: a fully-busy worker pulls nothing, so a
+            // request is never stranded behind this worker's long
+            // decodes while an idle neighbour could admit it at once.
+            match rx.try_lock() {
+                Ok(guard) => {
+                    while core.queue_len() < core.free_slots() {
+                        match guard.try_recv() {
+                            Ok(req) => submit_request(&mut core, &mut pending, &metrics, req),
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => {
+                                disconnected = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                Err(TryLockError::WouldBlock) => {}
+                Err(TryLockError::Poisoned(_)) => {
+                    fail_pending(&mut core, &mut pending, &metrics, "server worker pool failed");
+                    break;
+                }
+            }
+        }
+        if core.is_idle() {
+            if disconnected {
+                break;
+            }
+            continue;
+        }
+
+        let completions = core.tick();
+        // flush this tick's counter deltas *before* the replies go out:
+        // a client that just read its reply must observe the metrics
+        // that include its own decode
+        let s = core.stats;
+        let slots = core.slots() as u64;
+        metrics.slot_ticks.fetch_add((s.ticks - last.ticks) * slots, Ordering::Relaxed);
+        metrics
+            .slot_busy_ticks
+            .fetch_add(s.busy_slot_ticks - last.busy_slot_ticks, Ordering::Relaxed);
+        metrics.refills.fetch_add(s.refills - last.refills, Ordering::Relaxed);
+        metrics.timeouts.fetch_add(s.timeouts - last.timeouts, Ordering::Relaxed);
+        last = s;
+        for c in completions {
+            respond(&metrics, &mut pending, c);
+        }
+    }
+}
+
+/// Answer everything this worker still owes — in-flight rows and
+/// requests queued in its core — with an error reply.  Used on
+/// shutdown and on pool failure (poisoned queue lock): the
+/// exactly-once reply contract holds even on the exit paths.
+fn fail_pending<E: SlotEngine, C: Clock>(
+    core: &mut Scheduler<E, C>,
+    pending: &mut HashMap<u64, PendingReply>,
+    metrics: &Metrics,
+    msg: &str,
+) {
+    for c in core.abort_all(msg) {
+        if let Some(p) = pending.remove(&c.id) {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let us = p.arrived.elapsed().as_micros() as u64;
+            let _ = p.reply.send(Response::err(msg, us));
+        }
+    }
+}
+
+fn submit_request<E: SlotEngine, C: Clock>(
+    core: &mut Scheduler<E, C>,
+    pending: &mut HashMap<u64, PendingReply>,
+    metrics: &Metrics,
+    req: Request,
+) {
+    metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    let id = core.submit(Job {
+        prompt: req.prompt,
+        params: req.params,
+        timeout_ms: req.timeout_ms,
+        // deadline budget counts from arrival, not worker pickup
+        queued_for_ms: req.arrived.elapsed().as_millis() as u64,
+    });
+    pending.insert(id, PendingReply { reply: req.reply, arrived: req.arrived });
+}
+
+fn respond(metrics: &Metrics, pending: &mut HashMap<u64, PendingReply>, c: Completion) {
+    let Some(p) = pending.remove(&c.id) else { return };
+    let latency = p.arrived.elapsed();
+    let us = latency.as_micros() as u64;
+    let resp = match c.reason {
+        FinishReason::Error(msg) => {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            Response::err(msg, us)
+        }
+        FinishReason::Timeout => {
+            metrics.record_latency(latency);
+            metrics.responses.fetch_add(1, Ordering::Relaxed);
+            metrics.tokens_out.fetch_add(c.tokens.len() as u64, Ordering::Relaxed);
+            Response::timed_out(c.tokens, us)
+        }
+        FinishReason::Done => {
+            metrics.record_latency(latency);
+            metrics.responses.fetch_add(1, Ordering::Relaxed);
+            metrics.tokens_out.fetch_add(c.tokens.len() as u64, Ordering::Relaxed);
+            Response::ok(c.tokens, us)
+        }
+    };
+    let _ = p.reply.send(resp);
+}
+
+/// Run the server with the continuous-batching scheduler driving every
+/// worker — the native-backend counterpart of [`super::serve::serve`]
+/// (which keeps the static batcher for the XLA path).  Each worker
+/// builds its own engine via `factory` on its own thread and runs
+/// [`scheduler_loop`] against the shared request queue.
+pub fn serve_continuous<E: SlotEngine>(
+    factory: impl Fn() -> Result<E> + Send + Sync + 'static,
+    addr: &str,
+    queue_cap: usize,
+    cfg: SchedulerConfig,
+    workers: usize,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+) -> Result<std::net::SocketAddr> {
+    // bind before spawning anything: a bad --addr must fail fast, not
+    // after every worker has spent seconds building its engine
+    let (listener, local) = bind_listener(addr)?;
+    let (tx, rx) = channel::<Request>();
+    let rx = Arc::new(Mutex::new(rx));
+    let factory = Arc::new(factory);
+    for w in 0..workers.max(1) {
+        let rx = rx.clone();
+        let cfg = cfg.clone();
+        let m = metrics.clone();
+        let r = running.clone();
+        let f = factory.clone();
+        std::thread::Builder::new()
+            .name(format!("sched-worker-{w}"))
+            .spawn(move || match f() {
+                Ok(engine) => {
+                    // one sampling stream base per worker — the pool
+                    // builds every engine from one factory
+                    let mut cfg = cfg;
+                    cfg.seed = cfg.seed.wrapping_add(w as u64);
+                    scheduler_loop(engine, rx, cfg, m, r)
+                }
+                Err(e) => eprintln!("engine init failed: {e:#}"),
+            })
+            .context("spawning scheduler worker")?;
+    }
+    spawn_accept_loop(listener, tx, metrics, queue_cap, running);
+    Ok(local)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal scripted engine: request key = prompt[0]; emits the key
+    /// until the scripted EOS position, then the EOS token.
+    struct TinyGen {
+        slots: usize,
+        eos: u32,
+        /// key -> content tokens before EOS
+        lens: Vec<(u32, usize)>,
+        state: Vec<Option<(u32, usize)>>,
+    }
+
+    impl TinyGen {
+        fn new(slots: usize, eos: u32, lens: Vec<(u32, usize)>) -> TinyGen {
+            TinyGen { slots, eos, lens, state: (0..slots).map(|_| None).collect() }
+        }
+
+        fn logits(&self, key: u32, emitted: usize) -> Vec<f32> {
+            let n = self.lens.iter().find(|(k, _)| *k == key).map(|(_, n)| *n).unwrap();
+            let mut l = vec![0.0f32; 64];
+            let target = if emitted >= n { self.eos } else { key };
+            l[target as usize] = 10.0;
+            l
+        }
+    }
+
+    impl SlotEngine for TinyGen {
+        fn slots(&self) -> usize {
+            self.slots
+        }
+
+        fn prefill_slot(&mut self, slot: usize, prompt: &[u32]) -> Result<Vec<f32>> {
+            anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+            let key = prompt[0];
+            self.state[slot] = Some((key, 0));
+            Ok(self.logits(key, 0))
+        }
+
+        fn step_slot(&mut self, slot: usize, _token: u32) -> Result<Vec<f32>> {
+            let (key, emitted) = self.state[slot].expect("step before prefill");
+            self.state[slot] = Some((key, emitted + 1));
+            Ok(self.logits(key, emitted + 1))
+        }
+
+        fn reset_slot(&mut self, slot: usize) {
+            self.state[slot] = None;
+        }
+    }
+
+    fn drain<E: SlotEngine, C: Clock>(core: &mut Scheduler<E, C>) -> Vec<Completion> {
+        let mut out = Vec::new();
+        let mut guard = 0;
+        while !core.is_idle() {
+            out.extend(core.tick());
+            guard += 1;
+            assert!(guard < 10_000, "scheduler failed to drain");
+        }
+        out
+    }
+
+    fn greedy_stop(max_tokens: usize, eos: u32) -> DecodeParams {
+        DecodeParams { stop: Some(eos), ..DecodeParams::greedy(max_tokens) }
+    }
+
+    fn job(key: u32, params: DecodeParams) -> Job {
+        Job { prompt: vec![key], params, timeout_ms: None, queued_for_ms: 0 }
+    }
+
+    #[test]
+    fn single_request_decodes_to_eos() {
+        let eos = 63;
+        let gen = TinyGen::new(1, eos, vec![(7, 3)]);
+        let cfg = SchedulerConfig { slots: 1, trace: true, ..Default::default() };
+        let mut core = Scheduler::new(gen, ManualClock::default(), cfg);
+        let id = core.submit(job(7, greedy_stop(16, eos)));
+        let done = drain(&mut core);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, id);
+        assert_eq!(done[0].tokens, vec![7, 7, 7, eos]);
+        assert_eq!(done[0].reason, FinishReason::Done);
+        assert_eq!(core.stats.ticks, 4, "one token per tick");
+        assert_eq!(core.stats.busy_slot_ticks, 4);
+        assert_eq!(core.stats.refills, 0);
+    }
+
+    #[test]
+    fn budget_caps_before_eos() {
+        let eos = 63;
+        let gen = TinyGen::new(1, eos, vec![(5, 100)]);
+        let mut core =
+            Scheduler::new(gen, ManualClock::default(), SchedulerConfig::default());
+        core.submit(job(5, greedy_stop(4, eos)));
+        let done = drain(&mut core);
+        assert_eq!(done[0].tokens, vec![5, 5, 5, 5]);
+        assert_eq!(done[0].reason, FinishReason::Done);
+    }
+
+    #[test]
+    fn upstream_wait_counts_against_the_deadline() {
+        let eos = 63;
+        let gen = TinyGen::new(1, eos, vec![(9, 100)]);
+        let mut core =
+            Scheduler::new(gen, ManualClock::default(), SchedulerConfig::default());
+        // 10ms budget already fully spent in the shared server queue:
+        // expires on the first tick, before taking a slot
+        core.submit(Job {
+            prompt: vec![9],
+            params: greedy_stop(50, eos),
+            timeout_ms: Some(10),
+            queued_for_ms: 10,
+        });
+        let done = drain(&mut core);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::Timeout);
+        assert!(done[0].tokens.is_empty());
+        assert_eq!(core.stats.admissions, 0, "never occupied a slot");
+    }
+
+    #[test]
+    fn zero_budget_completes_without_a_slot() {
+        let eos = 63;
+        let gen = TinyGen::new(1, eos, vec![(5, 3)]);
+        let cfg = SchedulerConfig { trace: true, ..Default::default() };
+        let mut core = Scheduler::new(gen, ManualClock::default(), cfg);
+        core.submit(job(5, greedy_stop(0, eos)));
+        let done = drain(&mut core);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].tokens.is_empty());
+        assert_eq!(done[0].reason, FinishReason::Done);
+        assert_eq!(core.stats.admissions, 0, "never occupied a slot");
+        assert!(core.trace().is_empty());
+    }
+
+    #[test]
+    fn slots_clamped_to_engine_capacity() {
+        let gen = TinyGen::new(2, 63, vec![]);
+        let cfg = SchedulerConfig { slots: 8, ..Default::default() };
+        let core = Scheduler::new(gen, ManualClock::default(), cfg);
+        assert_eq!(core.slots(), 2);
+        assert_eq!(core.free_slots(), 2);
+    }
+
+    #[test]
+    fn prefill_error_degrades_to_error_completion() {
+        struct FailGen;
+        impl SlotEngine for FailGen {
+            fn slots(&self) -> usize {
+                1
+            }
+            fn prefill_slot(&mut self, _s: usize, _p: &[u32]) -> Result<Vec<f32>> {
+                anyhow::bail!("injected prefill failure")
+            }
+            fn step_slot(&mut self, _s: usize, _t: u32) -> Result<Vec<f32>> {
+                unreachable!()
+            }
+            fn reset_slot(&mut self, _s: usize) {}
+        }
+        let mut core =
+            Scheduler::new(FailGen, ManualClock::default(), SchedulerConfig::default());
+        core.submit(job(1, DecodeParams::greedy(4)));
+        let done = drain(&mut core);
+        assert_eq!(done.len(), 1);
+        match &done[0].reason {
+            FinishReason::Error(msg) => assert!(msg.contains("injected"), "{msg}"),
+            other => panic!("expected error completion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn abort_answers_queued_and_active() {
+        let eos = 63;
+        let gen = TinyGen::new(1, eos, vec![(1, 50), (2, 50)]);
+        let mut core =
+            Scheduler::new(gen, ManualClock::default(), SchedulerConfig::default());
+        core.submit(job(1, greedy_stop(50, eos)));
+        core.submit(job(2, greedy_stop(50, eos)));
+        let ticked = core.tick();
+        assert!(ticked.is_empty());
+        let done = core.abort_all("server shutting down");
+        assert_eq!(done.len(), 2, "active + queued both answered");
+        assert!(done
+            .iter()
+            .all(|c| matches!(&c.reason, FinishReason::Error(m) if m.contains("shutting"))));
+        assert!(core.is_idle());
+    }
+
+    #[test]
+    fn manual_clock_advances() {
+        let c = ManualClock::default();
+        assert_eq!(c.now_ms(), 0);
+        c.advance(5);
+        assert_eq!(c.now_ms(), 5);
+        c.set(100);
+        assert_eq!(c.now_ms(), 100);
+    }
+}

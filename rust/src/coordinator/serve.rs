@@ -24,9 +24,15 @@
 //!
 //! Protocol: one JSON object per line.
 //!   request:  {"prompt": [int, ...], "max_tokens": int,
-//!              "temperature"?: float, "stop"?: int}
+//!              "temperature"?: float, "stop"?: int, "timeout_ms"?: int}
 //!   response: {"tokens": [int, ...], "latency_us": int}
+//!   timeout:  {"tokens": [int, ...], "latency_us": int, "timeout": true}
 //!   error:    {"error": str, "latency_us": int}
+//!
+//! `timeout_ms` is a per-request deadline honored by the continuous
+//! scheduler (`--backend native`); a deadline-expired request gets the
+//! tokens decoded so far back, flagged `"timeout": true`.  The static
+//! XLA batcher ignores it (documented in rust/README.md).
 //!
 //! Errors are *per request*: a failed forward degrades every request of
 //! the batch to an error line, never a dropped connection.
@@ -75,6 +81,9 @@ pub struct Request {
     pub params: DecodeParams,
     pub reply: Sender<Response>,
     pub arrived: Instant,
+    /// per-request deadline (wire field `timeout_ms`), honored by the
+    /// continuous scheduler; `None` = the server default
+    pub timeout_ms: Option<u64>,
 }
 
 #[derive(Clone, Debug)]
@@ -83,15 +92,22 @@ pub struct Response {
     pub latency_us: u64,
     /// Some(message) degrades this response to an error line.
     pub error: Option<String>,
+    /// deadline expired: `tokens` holds the partial result decoded
+    /// before eviction (rendered as `"timeout": true`)
+    pub timeout: bool,
 }
 
 impl Response {
     pub fn ok(tokens: Vec<u32>, latency_us: u64) -> Response {
-        Response { tokens, latency_us, error: None }
+        Response { tokens, latency_us, error: None, timeout: false }
     }
 
     pub fn err(message: impl Into<String>, latency_us: u64) -> Response {
-        Response { tokens: Vec::new(), latency_us, error: Some(message.into()) }
+        Response { tokens: Vec::new(), latency_us, error: Some(message.into()), timeout: false }
+    }
+
+    pub fn timed_out(tokens: Vec<u32>, latency_us: u64) -> Response {
+        Response { tokens, latency_us, error: None, timeout: true }
     }
 }
 
@@ -310,6 +326,14 @@ pub fn worker_loop<G: Generator>(
                 metrics
                     .early_exit_steps
                     .fetch_add(budget.saturating_sub(g.steps) as u64, Ordering::Relaxed);
+                // the static-batch stall: a row that finished early
+                // still sat in the batch for every remaining step.
+                // Count those idle row-steps instead of pretending the
+                // row decoded for the batch's full length — the metric
+                // the continuous scheduler exists to drive to zero.
+                let stalled: usize =
+                    g.outputs.iter().map(|o| g.steps.saturating_sub(o.len())).sum();
+                metrics.stalled_row_steps.fetch_add(stalled as u64, Ordering::Relaxed);
                 for (req, out) in batch.into_iter().zip(g.outputs) {
                     let latency = req.arrived.elapsed();
                     metrics.record_latency(latency);
@@ -331,8 +355,8 @@ pub fn worker_loop<G: Generator>(
     }
 }
 
-/// Parse one request line.
-pub fn parse_request(line: &str) -> Result<(Vec<u32>, DecodeParams)> {
+/// Parse one request line: `(prompt, params, timeout_ms)`.
+pub fn parse_request(line: &str) -> Result<(Vec<u32>, DecodeParams, Option<u64>)> {
     let j = Json::parse(line).context("bad request json")?;
     let prompt: Vec<u32> = j
         .get("prompt")?
@@ -355,7 +379,11 @@ pub fn parse_request(line: &str) -> Result<(Vec<u32>, DecodeParams)> {
         }
         None => None,
     };
-    Ok((prompt, DecodeParams { max_tokens, temperature, stop }))
+    let timeout_ms = match j.opt("timeout_ms") {
+        Some(v) => Some(v.as_usize()? as u64),
+        None => None,
+    };
+    Ok((prompt, DecodeParams { max_tokens, temperature, stop }, timeout_ms))
 }
 
 /// Render one response (or error) line.
@@ -368,11 +396,12 @@ pub fn render_response(resp: &Response) -> String {
         .to_string(),
         None => {
             let toks = Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect());
-            Json::obj(vec![
-                ("tokens", toks),
-                ("latency_us", Json::num(resp.latency_us as f64)),
-            ])
-            .to_string()
+            let mut pairs =
+                vec![("tokens", toks), ("latency_us", Json::num(resp.latency_us as f64))];
+            if resp.timeout {
+                pairs.push(("timeout", Json::Bool(true)));
+            }
+            Json::obj(pairs).to_string()
         }
     }
 }
@@ -406,7 +435,7 @@ fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>, qu
             continue;
         }
         match parse_request(&line) {
-            Ok((prompt, params)) => {
+            Ok((prompt, params, timeout_ms)) => {
                 metrics.requests.fetch_add(1, Ordering::Relaxed);
                 // admit() already reserved this request's queue_depth
                 // slot; the worker decrements it when batching
@@ -417,7 +446,13 @@ fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>, qu
                 }
                 let (reply_tx, reply_rx) = channel();
                 if tx
-                    .send(Request { prompt, params, reply: reply_tx, arrived: Instant::now() })
+                    .send(Request {
+                        prompt,
+                        params,
+                        reply: reply_tx,
+                        arrived: Instant::now(),
+                        timeout_ms,
+                    })
                     .is_err()
                 {
                     metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
@@ -453,9 +488,9 @@ pub fn serve<G: Generator>(
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
 ) -> Result<std::net::SocketAddr> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    let local = listener.local_addr()?;
-    listener.set_nonblocking(true)?;
+    // bind before spawning anything: a bad --addr must fail fast, not
+    // after every worker has spent seconds building its engine
+    let (listener, local) = bind_listener(addr)?;
     let (tx, rx) = channel::<Request>();
     let rx = Arc::new(Mutex::new(rx));
     let factory = Arc::new(factory);
@@ -490,14 +525,37 @@ pub fn serve<G: Generator>(
             .context("spawning engine worker")?;
     }
 
-    let m3 = metrics;
-    let r3 = running;
+    spawn_accept_loop(listener, tx, metrics, queue_cap, running);
+    Ok(local)
+}
+
+/// Bind `addr` for the serving front door.  Split from
+/// [`spawn_accept_loop`] so callers can fail fast on a bad address
+/// *before* building any engine.
+pub(crate) fn bind_listener(addr: &str) -> Result<(TcpListener, std::net::SocketAddr)> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    Ok((listener, local))
+}
+
+/// Spawn the accept loop over an already-bound listener: one connection
+/// thread per client, requests funneled into `tx`.  Shared by the
+/// static worker pool ([`serve`]) and the continuous scheduler
+/// (`scheduler::serve_continuous`).
+pub(crate) fn spawn_accept_loop(
+    listener: TcpListener,
+    tx: Sender<Request>,
+    metrics: Arc<Metrics>,
+    queue_cap: usize,
+    running: Arc<AtomicBool>,
+) {
     std::thread::spawn(move || {
-        while r3.load(Ordering::Relaxed) {
+        while running.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, _)) => {
                     let tx = tx.clone();
-                    let m = m3.clone();
+                    let m = metrics.clone();
                     std::thread::spawn(move || handle_conn(stream, tx, m, queue_cap));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -507,7 +565,6 @@ pub fn serve<G: Generator>(
             }
         }
     });
-    Ok(local)
 }
 
 #[cfg(test)]
@@ -516,17 +573,24 @@ mod tests {
 
     #[test]
     fn parse_request_roundtrip() {
-        let (p, d) = parse_request(r#"{"prompt": [1, 2, 3], "max_tokens": 8}"#).unwrap();
+        let (p, d, to) = parse_request(r#"{"prompt": [1, 2, 3], "max_tokens": 8}"#).unwrap();
         assert_eq!(p, vec![1, 2, 3]);
         assert_eq!(d.max_tokens, 8);
         assert_eq!(d.temperature, 0.0);
         assert_eq!(d.stop, None);
-        let (_, d2) = parse_request(
-            r#"{"prompt": [1], "max_tokens": 1, "temperature": 0.7, "stop": 2}"#,
+        assert_eq!(to, None);
+        let (_, d2, to2) = parse_request(
+            r#"{"prompt": [1], "max_tokens": 1, "temperature": 0.7, "stop": 2, "timeout_ms": 250}"#,
         )
         .unwrap();
         assert!((d2.temperature - 0.7).abs() < 1e-6);
         assert_eq!(d2.stop, Some(2));
+        assert_eq!(to2, Some(250));
+        // zero is a valid (immediately-expiring) deadline; negatives are not
+        let (_, _, to3) =
+            parse_request(r#"{"prompt": [1], "max_tokens": 1, "timeout_ms": 0}"#).unwrap();
+        assert_eq!(to3, Some(0));
+        assert!(parse_request(r#"{"prompt": [1], "max_tokens": 1, "timeout_ms": -5}"#).is_err());
     }
 
     #[test]
@@ -563,6 +627,19 @@ mod tests {
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.usize_list("tokens").unwrap(), vec![4, 5]);
         assert_eq!(j.get("latency_us").unwrap().as_usize().unwrap(), 123);
+    }
+
+    #[test]
+    fn render_timeout_shape() {
+        // a timeout reply carries the partial result plus the flag …
+        let r = Response::timed_out(vec![4, 5], 123);
+        let s = render_response(&r);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.usize_list("tokens").unwrap(), vec![4, 5]);
+        assert!(j.get("timeout").unwrap().as_bool().unwrap());
+        // … and a normal reply never carries the key at all
+        let ok = render_response(&Response::ok(vec![1], 1));
+        assert!(Json::parse(&ok).unwrap().opt("timeout").is_none());
     }
 
     #[test]

@@ -1,19 +1,27 @@
 //! `NativeEngine` — the KV-cached native decode backend for the
-//! serving stack.  Implements the same [`Generator`] contract as the
-//! XLA-backed `EngineWorker` (per-row `DecodeParams`, early exit,
-//! NaN-safe sampling), so `serve()` runs the whole worker-pool /
-//! batcher / metrics stack unchanged on top of it via `--backend
-//! native`.
+//! serving stack.  `serve --backend native` drives it through the
+//! continuous-batching scheduler (`coordinator::scheduler`); the
+//! [`Generator`] contract (per-row `DecodeParams`, early exit,
+//! NaN-safe sampling, same as the XLA-backed `EngineWorker`) is kept
+//! for the static path — tests, benches, and equivalence checks.
 //!
-//! Rows decode sequentially: prefill fills the request's KV cache in
-//! one batched pass, then each token costs a single O(window)
-//! incremental step — not a full-window forward.  One cache allocation
-//! is reused (`clear`) across rows and requests.
+//! Two decode lifecycles over one model:
+//!
+//! - the batch-at-a-time [`Generator`] contract (rows decode
+//!   sequentially on slot 0's cache — the static path);
+//! - the slot-granular [`SlotEngine`] contract for the continuous
+//!   scheduler: one [`KvCache`] per slot, so `prefill_slot(i)` /
+//!   `step_slot(i)` / `reset_slot(i)` touch slot `i`'s state only and
+//!   a freed row can be refilled while its neighbours keep decoding.
+//!
+//! Cache allocations are made once (`with_slots`) and reused (`clear`)
+//! across requests.
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use crate::coordinator::scheduler::SlotEngine;
 use crate::coordinator::serve::{argmax, sample, DecodeParams, Generation, Generator};
 use crate::model::Weights;
 use crate::quant::FdbLinear;
@@ -25,7 +33,8 @@ use super::step::IncrementalForward;
 /// Native incremental generation engine.
 pub struct NativeEngine {
     model: IncrementalForward,
-    cache: KvCache,
+    /// one KV cache per decode slot; `new` starts with a single slot
+    caches: Vec<KvCache>,
     rng: Pcg32,
 }
 
@@ -44,9 +53,21 @@ impl NativeEngine {
         let model = IncrementalForward::new(weights, fdb);
         NativeEngine {
             model,
-            cache: KvCache::new(n_layers, window.max(1), d),
+            caches: vec![KvCache::new(n_layers, window.max(1), d)],
             rng: Pcg32::seeded(seed),
         }
+    }
+
+    /// Resize to `slots` independent decode slots (each with its own KV
+    /// cache of the same geometry) for the continuous scheduler.  Slot
+    /// state is dropped; call before serving, not mid-request.
+    pub fn with_slots(mut self, slots: usize) -> NativeEngine {
+        let (n_layers, window, width) = {
+            let c = &self.caches[0];
+            (c.n_layers(), c.window, c.width)
+        };
+        self.caches = (0..slots.max(1)).map(|_| KvCache::new(n_layers, window, width)).collect();
+        self
     }
 
     /// Number of FDB-compiled linears (diagnostics / startup log).
@@ -82,8 +103,9 @@ impl Generator for NativeEngine {
             if p.max_tokens == 0 {
                 continue;
             }
-            self.cache.clear();
-            let mut logits = self.model.prefill(&mut self.cache, prompt);
+            // the static path decodes every row on slot 0's cache
+            self.caches[0].clear();
+            let mut logits = self.model.prefill(&mut self.caches[0], prompt);
             let out = &mut outputs[r];
             loop {
                 let idx = if p.temperature <= 0.0 {
@@ -96,7 +118,7 @@ impl Generator for NativeEngine {
                 if out.len() >= p.max_tokens || p.stop == Some(next) {
                     break;
                 }
-                logits = self.model.step(&mut self.cache, next);
+                logits = self.model.step(&mut self.caches[0], next);
             }
             steps = steps.max(out.len());
         }
@@ -105,6 +127,38 @@ impl Generator for NativeEngine {
 
     fn fork_rng(&mut self, stream: u64) {
         NativeEngine::fork_rng(self, stream);
+    }
+}
+
+impl SlotEngine for NativeEngine {
+    fn slots(&self) -> usize {
+        self.caches.len()
+    }
+
+    fn prefill_slot(&mut self, slot: usize, prompt: &[u32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(slot < self.caches.len(), "slot {slot} out of range");
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let vocab = self.model.vocab();
+        for &t in prompt {
+            anyhow::ensure!((t as usize) < vocab, "prompt token {t} out of vocab {vocab}");
+        }
+        let cache = &mut self.caches[slot];
+        cache.clear();
+        Ok(self.model.prefill(cache, prompt))
+    }
+
+    fn step_slot(&mut self, slot: usize, token: u32) -> Result<Vec<f32>> {
+        anyhow::ensure!(slot < self.caches.len(), "slot {slot} out of range");
+        anyhow::ensure!(!self.caches[slot].is_empty(), "step on a slot without prefill");
+        let vocab = self.model.vocab();
+        anyhow::ensure!((token as usize) < vocab, "token {token} out of vocab {vocab}");
+        Ok(self.model.step(&mut self.caches[slot], token))
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        if let Some(cache) = self.caches.get_mut(slot) {
+            cache.clear();
+        }
     }
 }
 
@@ -184,7 +238,54 @@ mod tests {
         let g = e.generate(&[prompt], &[DecodeParams::greedy(10)]).unwrap();
         // 6 prompt + 10 decoded blows past window 8; the ring must cap
         assert_eq!(g.outputs[0].len(), 10);
-        assert_eq!(e.cache.len(), window);
+        assert_eq!(e.caches[0].len(), window);
         assert!(g.outputs[0].iter().all(|&t| (t as usize) < cfg.vocab));
+    }
+
+    /// Slot-granular lifecycle: decoding on one slot must not disturb
+    /// another slot's in-flight sequence — prefill slot 1 mid-decode of
+    /// slot 0 and the slot-0 stream must match an undisturbed run.
+    #[test]
+    fn slot_isolation_under_interleaving() {
+        let mut reference = engine(7).with_slots(1);
+        let prompt = vec![4u32, 9, 2];
+        let mut expect = Vec::new();
+        let mut logits = reference.prefill_slot(0, &prompt).unwrap();
+        for _ in 0..6 {
+            let tok = argmax(&logits) as u32;
+            expect.push(tok);
+            logits = reference.step_slot(0, tok).unwrap();
+        }
+
+        let mut e = engine(7).with_slots(3);
+        assert_eq!(SlotEngine::slots(&e), 3);
+        let mut got = Vec::new();
+        let mut logits = e.prefill_slot(0, &prompt).unwrap();
+        for i in 0..6 {
+            let tok = argmax(&logits) as u32;
+            got.push(tok);
+            if i == 2 {
+                // mid-flight admission into a neighbour slot
+                e.prefill_slot(1, &[1u32, 2, 3]).unwrap();
+                let other = argmax(&e.step_slot(1, 5).unwrap()) as u32;
+                assert!((other as usize) < tiny().vocab);
+                e.reset_slot(1);
+            }
+            logits = e.step_slot(0, tok).unwrap();
+        }
+        assert_eq!(got, expect, "slot 0 stream disturbed by slot 1 traffic");
+    }
+
+    #[test]
+    fn slot_engine_validates_inputs() {
+        let mut e = engine(8).with_slots(2);
+        assert!(e.prefill_slot(2, &[1]).is_err(), "slot out of range");
+        assert!(e.prefill_slot(0, &[]).is_err(), "empty prompt");
+        assert!(e.prefill_slot(0, &[9999]).is_err(), "token out of vocab");
+        assert!(e.step_slot(1, 1).is_err(), "step before prefill");
+        e.prefill_slot(1, &[1, 2]).unwrap();
+        assert!(e.step_slot(1, 1).is_ok());
+        e.reset_slot(1);
+        assert!(e.step_slot(1, 1).is_err(), "reset drops the sequence");
     }
 }

@@ -50,6 +50,12 @@ impl KvCache {
         self.len
     }
 
+    /// Number of layers this cache holds K/V rows for (lets callers
+    /// clone a cache's geometry without carrying the model config).
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

@@ -10,7 +10,11 @@
 //!   kernel — the paper's "efficient bitwise operation" on the decode
 //!   path end to end);
 //! - [`engine::NativeEngine`] — the `coordinator::serve::Generator`
-//!   implementation that plugs it under the worker pool.
+//!   implementation that plugs it under the static worker pool, plus
+//!   the slot-granular `coordinator::scheduler::SlotEngine` lifecycle
+//!   (one `KvCache` per slot via `with_slots`) that the continuous
+//!   batching scheduler drives: prefill a freed slot mid-flight while
+//!   the other slots keep decoding.
 
 pub mod engine;
 pub mod kv;

@@ -9,8 +9,9 @@
 //!   serve     --teacher S [--method dbllm] [--addr 127.0.0.1:7878]
 //!             [--backend native|xla] [--workers 2] [--max-batch 4]
 //!             [--linger-ms 20] [--queue-cap 1024] [--window T]
+//!             [--slots 4] [--timeout-ms N] [--no-refill]
 //!   client    --addr 127.0.0.1:7878 --prompt 1,2,3 --max-tokens 8
-//!             [--temperature 0.7] [--stop 0]
+//!             [--temperature 0.7] [--stop 0] [--timeout-ms N]
 //!
 //! Argument parsing is hand-rolled (offline build, no clap); every flag
 //! is `--name value`.
@@ -23,6 +24,7 @@ use anyhow::{bail, Context, Result};
 
 use db_llm::coordinator::batcher::BatchPolicy;
 use db_llm::coordinator::metrics::Metrics;
+use db_llm::coordinator::scheduler::{serve_continuous, SchedulerConfig};
 use db_llm::coordinator::serve::{serve, Engine, EngineWorker};
 use db_llm::data::TokenStream;
 use db_llm::infer::NativeEngine;
@@ -154,8 +156,9 @@ fn print_help() {
            serve    --teacher S [--method M] [--addr A] TCP serving demo\n\
                     [--backend native|xla] [--workers N] [--max-batch N]\n\
                     [--linger-ms N] [--queue-cap N] [--window T]\n\
+                    [--slots N] [--timeout-ms N] [--no-refill]\n\
            client   --addr A --prompt 1,2,3 --max-tokens 8\n\
-                    [--temperature T] [--stop TOKEN]\n\
+                    [--temperature T] [--stop TOKEN] [--timeout-ms N]\n\
          \n\
          common flags: --artifacts DIR --windows N --dad-batches N\n\
                        --teachers S,M,L --zs-items N --out-dir results\n\
@@ -312,17 +315,32 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
         policy.queue_cap = v;
     }
     let window_override: Option<usize> = flags.get("window").map(|s| s.parse()).transpose()?;
+    let slots: usize = flags.get("slots").map(|s| s.parse()).transpose()?.unwrap_or(4).max(1);
+    let timeout_ms: Option<u64> = flags.get("timeout-ms").map(|s| s.parse()).transpose()?;
+    let refill = !flags.contains_key("no-refill");
     let opts = opts_from_flags(flags);
     let metrics = Arc::new(Metrics::default());
     let running = Arc::new(AtomicBool::new(true));
 
-    if backend == "xla" && window_override.is_some() {
-        eprintln!("warning: --window only applies to --backend native; ignored (the xla \
-                   executable's window is fixed at the manifest seq_len)");
+    if backend == "xla" {
+        if window_override.is_some() {
+            eprintln!("warning: --window only applies to --backend native; ignored (the xla \
+                       executable's window is fixed at the manifest seq_len)");
+        }
+        if timeout_ms.is_some() || flags.contains_key("slots") || !refill {
+            eprintln!("warning: --slots/--timeout-ms/--no-refill only apply to the \
+                       continuous scheduler (--backend native); the xla path keeps the \
+                       static batcher and ignores them");
+        }
+    } else if flags.contains_key("max-batch") || flags.contains_key("linger-ms") {
+        eprintln!("warning: --max-batch/--linger-ms only apply to the static batcher \
+                   (--backend xla); the continuous scheduler admits per slot (--slots) \
+                   and ignores them");
     }
     let m2 = metrics.clone();
     let local = match backend.as_str() {
-        // the AOT fwd_logits executable: full-window recompute per step
+        // the AOT fwd_logits executable: full-window recompute per
+        // step, static batches under the dynamic batcher
         "xla" => serve(
             move || {
                 let mut rt = Runtime::open(&dir)?;
@@ -338,23 +356,33 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             m2,
             running.clone(),
         )?,
-        // the KV-cached incremental engine: O(T) per decoded token, FDB
-        // students run on the compiled sparse kernel
-        "native" => serve(
+        // the KV-cached incremental engine behind the iteration-level
+        // continuous-batching scheduler: finished slots refill
+        // mid-flight, per-request deadlines get partial-result replies
+        "native" => serve_continuous(
             move || {
                 let mut rt = Runtime::open(&dir)?;
                 let student = tables::make_student(&mut rt, &teacher, method, &opts, None)?;
                 let window = window_override.unwrap_or_else(|| rt.manifest.seq_len());
                 let engine =
-                    NativeEngine::new(student.weights, &student.fdb_layers, window, 42);
+                    NativeEngine::new(student.weights, &student.fdb_layers, window, 42)
+                        .with_slots(slots);
                 eprintln!(
-                    "native engine ready (window {window}, {} FDB-compiled linears)",
+                    "native engine ready (window {window}, {slots} slots, {} FDB-compiled \
+                     linears)",
                     engine.n_fdb_ops()
                 );
                 Ok(engine)
             },
             &addr,
-            policy,
+            policy.queue_cap,
+            SchedulerConfig {
+                slots,
+                refill,
+                default_timeout_ms: timeout_ms,
+                seed: 42,
+                trace: false,
+            },
             workers,
             m2,
             running.clone(),
@@ -364,7 +392,10 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     println!(
         "serving on {local} with {workers} {backend} worker(s) — protocol: one JSON per line"
     );
-    println!("  {{\"prompt\": [1,2,3], \"max_tokens\": 8, \"temperature\": 0.7, \"stop\": 0}}");
+    println!(
+        "  {{\"prompt\": [1,2,3], \"max_tokens\": 8, \"temperature\": 0.7, \"stop\": 0, \
+         \"timeout_ms\": 500}}"
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
         println!("[metrics] {}", metrics.snapshot());
@@ -385,6 +416,10 @@ fn cmd_client(flags: &BTreeMap<String, String>) -> Result<()> {
     if let Some(s) = flags.get("stop") {
         let s: usize = s.parse()?;
         req.push_str(&format!(", \"stop\": {s}"));
+    }
+    if let Some(t) = flags.get("timeout-ms") {
+        let t: u64 = t.parse()?;
+        req.push_str(&format!(", \"timeout_ms\": {t}"));
     }
     req.push('}');
     writeln!(stream, "{req}")?;

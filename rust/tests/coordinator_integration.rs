@@ -288,6 +288,7 @@ fn worker_error_replies_per_request() {
             params: DecodeParams::greedy(4),
             reply: reply_tx,
             arrived: Instant::now(),
+            timeout_ms: None,
         })
         .unwrap();
         replies.push(reply_rx);
@@ -321,6 +322,7 @@ fn shutdown_answers_queued_requests() {
             params: DecodeParams::greedy(4),
             reply: reply_tx,
             arrived: Instant::now(),
+            timeout_ms: None,
         })
         .unwrap();
         replies.push(reply_rx);
@@ -338,6 +340,49 @@ fn shutdown_answers_queued_requests() {
     worker.join().unwrap();
     assert_eq!(metrics.queue_depth.load(std::sync::atomic::Ordering::Relaxed), 0);
     drop(tx);
+}
+
+/// The static-batch stall is *measured*, not hidden: a row that
+/// finished early counts only its actual decoded tokens, and the steps
+/// it sat idle inside the still-running batch land in
+/// `stalled_row_steps` (the waste the continuous scheduler removes).
+#[test]
+fn static_batch_stall_accounted() {
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+    let (tx, rx) = channel::<Request>();
+    let rx = Arc::new(Mutex::new(rx));
+    // queue one batch worth of mixed budgets BEFORE the worker starts,
+    // so exactly one batch [1, 2, 4] is collected
+    let mut replies = Vec::new();
+    for budget in [1usize, 2, 4] {
+        let (reply_tx, reply_rx) = channel();
+        metrics.queue_depth.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        tx.send(Request {
+            prompt: vec![9],
+            params: DecodeParams::greedy(budget),
+            reply: reply_tx,
+            arrived: Instant::now(),
+            timeout_ms: None,
+        })
+        .unwrap();
+        replies.push((budget, reply_rx));
+    }
+    let worker = {
+        let (rx, m, r) = (rx.clone(), metrics.clone(), running.clone());
+        std::thread::spawn(move || worker_loop(EchoGen, rx, pool_policy(), m, r))
+    };
+    for (budget, reply_rx) in replies {
+        let resp = reply_rx.recv().unwrap();
+        assert_eq!(resp.tokens.len(), budget, "actual decoded tokens reported");
+    }
+    drop(tx);
+    worker.join().unwrap();
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    // EchoGen ran the batch for max(budget)=4 steps: the budget-1 row
+    // idled 3 of them, the budget-2 row idled 2
+    assert_eq!(metrics.stalled_row_steps.load(ord), 5, "{}", metrics.snapshot());
+    assert_eq!(metrics.tokens_out.load(ord), 7);
 }
 
 /// Several workers competing on one shared queue: every request is
@@ -365,6 +410,7 @@ fn worker_pool_exactly_once() {
             params: DecodeParams::greedy(1 + (i as usize) % 5),
             reply: reply_tx,
             arrived: Instant::now(),
+            timeout_ms: None,
         })
         .unwrap();
         replies.push((i, reply_rx));
