@@ -14,7 +14,7 @@
 
 use std::collections::BTreeMap;
 
-use db_llm::coordinator::scheduler::{Job, ManualClock, Scheduler, SchedulerConfig};
+use db_llm::coordinator::scheduler::{Job, ManualClock, Scheduler, SchedulerConfig, SlotEngine};
 use db_llm::coordinator::serve::{DecodeParams, Generator};
 use db_llm::infer::{IncrementalForward, KvCache, NativeEngine};
 use db_llm::model::native::Forward;
@@ -77,8 +77,100 @@ fn main() {
     });
 
     bench_scheduler_mixed(&cfg, &weights, &mut b);
+    bench_fused_step(&cfg, &weights, &mut b);
 
     b.report();
+}
+
+/// Fused-vs-sequential decode sweep: one tick over {1, 2, 4, 8} active
+/// slots, dense and full-FDB-student engines.  Sequential advances each
+/// slot with its own `step_slot` (every linear re-streams its weight
+/// matrix / CSC level stream once per slot); fused advances the same
+/// rows with one batched `step_slots` call (each linear streamed once
+/// per tick, batch innermost).  Both decode identical token streams —
+/// the equivalence suite pins that — so this measures pure kernel
+/// amortization.  Results land in `BENCH_fused_step.json`.
+fn bench_fused_step(cfg: &ModelConfig, weights: &Weights, b: &mut Bench) {
+    let window = cfg.seq_len;
+    let mut fdb = BTreeMap::new();
+    for name in cfg.linear_names() {
+        fdb.insert(name.clone(), FdbLinear::from_weights(weights.mat(&name), 64));
+    }
+    let dense: BTreeMap<String, FdbLinear> = BTreeMap::new();
+    let mut sweep = Vec::new();
+    for &m in &[1usize, 2, 4, 8] {
+        for (label, fdb_map) in [("dense", &dense), ("fdb", &fdb)] {
+            // two engines so the timing loops never share ring state;
+            // staggered prompt lengths put every slot at its own
+            // position, as continuous batching does
+            let mut seq =
+                NativeEngine::new(weights.clone(), fdb_map, window, 42).with_slots(m);
+            let mut fus =
+                NativeEngine::new(weights.clone(), fdb_map, window, 42).with_slots(m);
+            for slot in 0..m {
+                let plen = 8 + 4 * slot;
+                let prompt: Vec<u32> =
+                    (0..plen as u32).map(|i| i % cfg.vocab as u32).collect();
+                seq.prefill_slot(slot, &prompt).unwrap();
+                fus.prefill_slot(slot, &prompt).unwrap();
+            }
+            let steps: Vec<(usize, u32)> = (0..m).map(|s| (s, 7u32)).collect();
+            let ns_seq =
+                b.bench_with_work(&format!("seq_step_{label}_m{m}"), Some(m as f64), || {
+                    for &(slot, tok) in &steps {
+                        black_box(seq.step_slot(slot, tok).unwrap());
+                    }
+                });
+            let ns_fused =
+                b.bench_with_work(&format!("fused_step_{label}_m{m}"), Some(m as f64), || {
+                    black_box(fus.step_slots(&steps).unwrap());
+                });
+            sweep.push(Json::obj(vec![
+                ("mode", Json::str(label)),
+                ("slots", Json::num(m as f64)),
+                ("wall_ns_per_tick_sequential", Json::num(ns_seq)),
+                ("wall_ns_per_tick_fused", Json::num(ns_fused)),
+                ("fused_speedup", Json::num(ns_seq / ns_fused)),
+                // the deterministic work model: weight streams paid per
+                // tick by each strategy
+                ("weight_streams_per_tick_sequential", Json::num(m as f64)),
+                ("weight_streams_per_tick_fused", Json::num(1.0)),
+            ]));
+        }
+    }
+    let out = Json::obj(vec![
+        ("bench", Json::str("fused_step_slots")),
+        ("model", Json::str(cfg.name.clone())),
+        ("d_model", Json::num(cfg.d_model as f64)),
+        ("n_layers", Json::num(cfg.n_layers as f64)),
+        ("window", Json::num(window as f64)),
+        ("slots_sweep", Json::Arr(vec![
+            Json::num(1.0),
+            Json::num(2.0),
+            Json::num(4.0),
+            Json::num(8.0),
+        ])),
+        ("sweep", Json::Arr(sweep)),
+        (
+            "note",
+            // byte-identical to the committed BENCH_fused_step.json
+            // note, so a bench run only churns the measured fields
+            Json::str(
+                "the weight-stream model is deterministic: sequential decode re-streams \
+                 every linear's weight matrix (dense) or CSC level stream (FDB) once per \
+                 active slot per tick, fused streams each exactly once per tick with the \
+                 batch innermost; fused and sequential decode identical greedy streams \
+                 (tests/fused_decode.rs pins bit-identical logits); wall_* and \
+                 fused_speedup fields are host-dependent and filled in by \
+                 `cargo bench --bench decode`, which overwrites this file",
+            ),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_fused_step.json");
+    match std::fs::write(&path, format!("{out}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }
 
 /// Mixed-length continuous-vs-static comparison: 12 requests with

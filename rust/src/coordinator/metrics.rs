@@ -39,6 +39,16 @@ pub struct Metrics {
     /// requests finished by deadline expiry (partial-result replies,
     /// including requests that expired while still queued)
     pub timeouts: AtomicU64,
+    /// scheduler ticks that ran at least one decode step (mean decode
+    /// batch denominator)
+    pub decode_batches: AtomicU64,
+    /// slot-rows advanced by decode steps, summed over ticks (mean
+    /// decode batch numerator)
+    pub decode_batch_rows: AtomicU64,
+    /// rows advanced through a multi-row fused `step_slots` call —
+    /// rows whose per-layer linears shared one batched product with at
+    /// least one neighbour slot
+    pub fused_rows: AtomicU64,
     /// log₂-bucketed latencies, bucket i = [2^i, 2^(i+1)) microseconds
     lat_buckets: [AtomicU64; BUCKETS],
 }
@@ -60,6 +70,9 @@ impl Default for Metrics {
             slot_ticks: AtomicU64::new(0),
             refills: AtomicU64::new(0),
             timeouts: AtomicU64::new(0),
+            decode_batches: AtomicU64::new(0),
+            decode_batch_rows: AtomicU64::new(0),
+            fused_rows: AtomicU64::new(0),
             lat_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -113,11 +126,21 @@ impl Metrics {
         self.slot_busy_ticks.load(Ordering::Relaxed) as f64 / total as f64
     }
 
+    /// Mean rows per decode step tick — how many slots each tick's one
+    /// fused pass actually advanced (0 when the scheduler never ran).
+    pub fn mean_decode_batch(&self) -> f64 {
+        let b = self.decode_batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.decode_batch_rows.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
     pub fn snapshot(&self) -> String {
         format!(
             "req={} resp={} err={} rejected={} tokens={} batches={} occ={:.2} queue={} \
              saved_steps={} stalled={} slot_occ={:.2} refills={} timeouts={} \
-             p50={}us p95={}us p99={}us",
+             fused_rows={} decode_batch={:.2} p50={}us p95={}us p99={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -131,6 +154,8 @@ impl Metrics {
             self.slot_occupancy(),
             self.refills.load(Ordering::Relaxed),
             self.timeouts.load(Ordering::Relaxed),
+            self.fused_rows.load(Ordering::Relaxed),
+            self.mean_decode_batch(),
             self.latency_percentile(0.50),
             self.latency_percentile(0.95),
             self.latency_percentile(0.99),
@@ -172,7 +197,10 @@ mod tests {
         assert!(m.snapshot().contains("stalled=0"));
         assert!(m.snapshot().contains("slot_occ=0.00"));
         assert!(m.snapshot().contains("timeouts=0"));
+        assert!(m.snapshot().contains("fused_rows=0"));
+        assert!(m.snapshot().contains("decode_batch=0.00"));
         assert_eq!(m.slot_occupancy(), 0.0, "no scheduler ticks -> 0, not NaN");
+        assert_eq!(m.mean_decode_batch(), 0.0, "no decode ticks -> 0, not NaN");
     }
 
     #[test]
@@ -190,6 +218,20 @@ mod tests {
         assert!(s.contains("refills=3"), "{s}");
         assert!(s.contains("timeouts=2"), "{s}");
         assert!(s.contains("stalled=11"), "{s}");
+    }
+
+    #[test]
+    fn fused_decode_counters_surface() {
+        let m = Metrics::default();
+        // 5 decode-step ticks advanced 15 rows, 12 of them in
+        // multi-row fused calls
+        m.decode_batches.fetch_add(5, Ordering::Relaxed);
+        m.decode_batch_rows.fetch_add(15, Ordering::Relaxed);
+        m.fused_rows.fetch_add(12, Ordering::Relaxed);
+        assert!((m.mean_decode_batch() - 3.0).abs() < 1e-12);
+        let s = m.snapshot();
+        assert!(s.contains("fused_rows=12"), "{s}");
+        assert!(s.contains("decode_batch=3.00"), "{s}");
     }
 
     #[test]

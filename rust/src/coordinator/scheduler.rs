@@ -109,6 +109,36 @@ pub trait SlotEngine {
     /// returns the next-token logits.
     fn step_slot(&mut self, slot: usize, token: u32) -> Result<Vec<f32>>;
 
+    /// Advance several slots in one call: `steps` pairs each distinct
+    /// slot with the token feeding its next step, and the result holds
+    /// one next-token logits row per entry, in order.  Batched engines
+    /// override this to amortize every weight traversal across the
+    /// active rows (`infer::NativeEngine` runs each linear once per
+    /// tick as an `[m, d]` product); the default just loops
+    /// [`step_slot`](Self::step_slot), so scripted test engines keep
+    /// working unchanged.
+    fn step_slots(&mut self, steps: &[(usize, u32)]) -> Result<Vec<Vec<f32>>> {
+        steps.iter().map(|&(slot, token)| self.step_slot(slot, token)).collect()
+    }
+
+    /// Whether [`step_slots`](Self::step_slots) fails *atomically*: an
+    /// `Err` guarantees no slot's state advanced (the implementation
+    /// validates the whole batch before mutating anything).  The
+    /// scheduler only issues the batched call when this holds — a
+    /// failed atomic batch can be retried row by row, isolating the
+    /// failing request, whereas retrying a partially-advanced batch
+    /// would double-step the surviving slots.  Engines that return
+    /// `false` (the default, matching the default `step_slots`, which
+    /// loops `step_slot` and can fail mid-batch) are stepped row by
+    /// row by the scheduler itself — identical work, exact per-row
+    /// isolation, no fused fast path.  Engines overriding
+    /// `step_slots` with upfront validation (like
+    /// `infer::NativeEngine`) — or whose `step_slot` cannot fail —
+    /// should return `true`.
+    fn step_slots_atomic(&self) -> bool {
+        false
+    }
+
     /// Drop `slot`'s sequence state (eviction / completion).
     fn reset_slot(&mut self, slot: usize);
 }
@@ -196,6 +226,17 @@ pub struct SchedStats {
     pub refills: u64,
     /// requests finished by deadline (evicted or expired in queue)
     pub timeouts: u64,
+    /// ticks that ran at least one decode step (mean decode batch
+    /// denominator; fresh slots consume their prefill token instead of
+    /// stepping, so this can trail `ticks`)
+    pub step_ticks: u64,
+    /// slot-rows advanced by decode steps, summed over ticks (mean
+    /// decode batch = stepped_rows / step_ticks)
+    pub stepped_rows: u64,
+    /// rows advanced through a multi-row fused `step_slots` call —
+    /// rows whose linears shared one batched product with at least one
+    /// neighbour
+    pub fused_rows: u64,
 }
 
 struct Queued {
@@ -356,10 +397,26 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
         self.queue = keep;
     }
 
-    /// Refill every free slot from the queue (FCFS, slot order).  The
-    /// prefill samples the request's first token, so an admitted slot
-    /// produces a token this very tick — a freed slot never sits idle
-    /// while work is queued.
+    /// Pop the queued request admission picks next: earliest effective
+    /// deadline first (EDF), no-deadline requests ranking last, FCFS
+    /// among ties (the strict `<` keeps the earliest arrival, since
+    /// `submit` pushes in arrival order).
+    fn pop_next(&mut self) -> Option<Queued> {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, q) in self.queue.iter().enumerate() {
+            let d = q.deadline_ms.unwrap_or(u64::MAX);
+            match best {
+                Some((_, bd)) if d >= bd => {}
+                _ => best = Some((i, d)),
+            }
+        }
+        best.and_then(|(i, _)| self.queue.remove(i))
+    }
+
+    /// Refill every free slot from the queue (earliest-deadline-first,
+    /// slot order).  The prefill samples the request's first token, so
+    /// an admitted slot produces a token this very tick — a freed slot
+    /// never sits idle while work is queued.
     fn admit(&mut self, done: &mut Vec<Completion>) {
         if self.queue.is_empty() {
             return;
@@ -375,7 +432,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             if self.active[slot].is_some() {
                 continue;
             }
-            while let Some(q) = self.queue.pop_front() {
+            while let Some(q) = self.pop_next() {
                 if q.params.max_tokens == 0 {
                     // a zero-budget request never needs a slot
                     done.push(Completion {
@@ -428,42 +485,114 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
         }
     }
 
-    /// One decode step per active slot.  Fresh slots already hold this
+    /// One decode step per active slot.  Engines whose batched step is
+    /// atomic on failure ([`SlotEngine::step_slots_atomic`]) advance
+    /// every row through a single [`SlotEngine::step_slots`] call — the
+    /// hot loop runs each linear once per tick instead of once per slot
+    /// — and a failed call is retried row by row, so one slot's
+    /// failure answers that request alone, not the whole tick.
+    /// Engines without that guarantee are stepped row by row directly
+    /// (the same work their default `step_slots` would do, with exact
+    /// per-row isolation and no risk of double-stepping a
+    /// partially-advanced batch).  Fresh slots already hold this
     /// tick's token (from the prefill logits) — they only run the
     /// finish check, keeping the invariant of exactly one token per
     /// active slot per tick.
     fn step_active(&mut self, done: &mut Vec<Completion>) {
-        for slot in 0..self.active.len() {
-            let mut failed: Option<String> = None;
-            if let Some(a) = self.active[slot].as_mut() {
-                if a.fresh {
-                    a.fresh = false;
-                } else {
-                    match self.engine.step_slot(slot, a.last) {
-                        Ok(logits) => {
-                            let tok = pick(&logits, a.params, &mut a.rng);
-                            a.out.push(tok);
-                            a.last = tok;
+        // gather the rows needing a decode step this tick
+        let steps: Vec<(usize, u32)> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, a)| match a {
+                Some(a) if !a.fresh => Some((slot, a.last)),
+                _ => None,
+            })
+            .collect();
+
+        let mut failures: Vec<(usize, String)> = Vec::new();
+        if !steps.is_empty() {
+            let m = steps.len();
+            // rows that actually advanced this tick (accounted only
+            // after the engine calls resolve — a failed fused call must
+            // not masquerade as fused throughput in the metrics)
+            let mut advanced = 0u64;
+            let mut fused = 0u64;
+            let mut batch_failed = false;
+            if self.engine.step_slots_atomic() {
+                match self.engine.step_slots(&steps) {
+                    Ok(rows) if rows.len() == steps.len() => {
+                        for (&(slot, _), logits) in steps.iter().zip(&rows) {
+                            self.accept_token(slot, logits);
                         }
-                        Err(e) => failed = Some(format!("{e:#}")),
+                        advanced = m as u64;
+                        if m > 1 {
+                            fused = m as u64;
+                        }
+                    }
+                    Ok(rows) => {
+                        // a row-count mismatch is an engine bug
+                        // affecting the whole batch — there is no
+                        // telling which row got which logits
+                        let msg = format!(
+                            "engine returned {} logits rows for {} stepped slots",
+                            rows.len(),
+                            steps.len()
+                        );
+                        failures.extend(steps.iter().map(|&(slot, _)| (slot, msg.clone())));
+                    }
+                    // atomic contract: the failed call advanced
+                    // nothing, so the per-row pass below can safely
+                    // isolate the failing request
+                    Err(_) => batch_failed = true,
+                }
+            }
+            if !self.engine.step_slots_atomic() || batch_failed {
+                for &(slot, last) in &steps {
+                    match self.engine.step_slot(slot, last) {
+                        Ok(logits) => {
+                            self.accept_token(slot, &logits);
+                            advanced += 1;
+                        }
+                        Err(e) => failures.push((slot, format!("{e:#}"))),
                     }
                 }
-            } else {
-                continue;
             }
-            if let Some(msg) = failed {
+            if advanced > 0 {
+                self.stats.step_ticks += 1;
+                self.stats.stepped_rows += advanced;
+                self.stats.fused_rows += fused;
+            }
+        }
+        for (slot, msg) in failures {
+            if self.active[slot].is_some() {
                 self.finish(slot, FinishReason::Error(msg), done);
-                continue;
             }
-            let finished = {
-                let a = self.active[slot].as_ref().expect("slot emptied mid-step");
-                a.out.len() >= a.params.max_tokens
-                    || a.params.stop.is_some_and(|s| a.last == s)
-            };
+        }
+
+        // finish checks (budget / stop token) for every surviving slot,
+        // fresh ones included
+        for slot in 0..self.active.len() {
+            let Some(a) = self.active[slot].as_mut() else { continue };
+            if a.fresh {
+                a.fresh = false;
+            }
+            let finished =
+                a.out.len() >= a.params.max_tokens || a.params.stop.is_some_and(|s| a.last == s);
             if finished {
                 self.finish(slot, FinishReason::Done, done);
             }
         }
+    }
+
+    /// Record one decoded logits row for `slot`: sample under the
+    /// slot's own params/stream, append, and remember the token for the
+    /// next step.
+    fn accept_token(&mut self, slot: usize, logits: &[f32]) {
+        let a = self.active[slot].as_mut().expect("stepped slot emptied mid-tick");
+        let tok = pick(logits, a.params, &mut a.rng);
+        a.out.push(tok);
+        a.last = tok;
     }
 
     /// Evict rows whose deadline passed, carrying the tokens decoded so
@@ -618,6 +747,11 @@ pub fn scheduler_loop<E: SlotEngine>(
             .fetch_add(s.busy_slot_ticks - last.busy_slot_ticks, Ordering::Relaxed);
         metrics.refills.fetch_add(s.refills - last.refills, Ordering::Relaxed);
         metrics.timeouts.fetch_add(s.timeouts - last.timeouts, Ordering::Relaxed);
+        metrics.decode_batches.fetch_add(s.step_ticks - last.step_ticks, Ordering::Relaxed);
+        metrics
+            .decode_batch_rows
+            .fetch_add(s.stepped_rows - last.stepped_rows, Ordering::Relaxed);
+        metrics.fused_rows.fetch_add(s.fused_rows - last.fused_rows, Ordering::Relaxed);
         last = s;
         for c in completions {
             respond(&metrics, &mut pending, c);
@@ -776,6 +910,13 @@ mod tests {
             Ok(self.logits(key, emitted + 1))
         }
 
+        fn step_slots_atomic(&self) -> bool {
+            // step_slot is infallible, so the default batched loop
+            // trivially never fails mid-batch — the scheduler may use
+            // the batched path
+            true
+        }
+
         fn reset_slot(&mut self, slot: usize) {
             self.state[slot] = None;
         }
@@ -916,6 +1057,208 @@ mod tests {
             .iter()
             .all(|c| matches!(&c.reason, FinishReason::Error(m) if m.contains("shutting"))));
         assert!(core.is_idle());
+    }
+
+    /// Two rows decoding together advance through one fused call per
+    /// tick: the step counters account the batch sizes exactly.
+    #[test]
+    fn fused_step_counters_account_batches() {
+        let eos = 63;
+        let gen = TinyGen::new(2, eos, vec![(1, 4), (2, 4)]);
+        let cfg = SchedulerConfig { slots: 2, ..Default::default() };
+        let mut core = Scheduler::new(gen, ManualClock::default(), cfg);
+        core.submit(job(1, greedy_stop(8, eos)));
+        core.submit(job(2, greedy_stop(8, eos)));
+        let done = drain(&mut core);
+        assert_eq!(done.len(), 2);
+        // tick 1 admits both (fresh: prefill token, no step); ticks 2-5
+        // step both rows to their 5-token streams
+        assert_eq!(core.stats.step_ticks, 4);
+        assert_eq!(core.stats.stepped_rows, 8);
+        assert_eq!(core.stats.fused_rows, 8, "both rows shared every batched step");
+
+        // a lone request never fuses
+        let gen = TinyGen::new(2, eos, vec![(1, 4)]);
+        let cfg = SchedulerConfig { slots: 2, ..Default::default() };
+        let mut core = Scheduler::new(gen, ManualClock::default(), cfg);
+        core.submit(job(1, greedy_stop(8, eos)));
+        drain(&mut core);
+        assert_eq!(core.stats.step_ticks, 4);
+        assert_eq!(core.stats.stepped_rows, 4);
+        assert_eq!(core.stats.fused_rows, 0, "single-row ticks are not fused");
+    }
+
+    /// EDF admission: with both queued, the tighter deadline wins the
+    /// slot even though the loose request arrived first; no-deadline
+    /// requests rank last.
+    #[test]
+    fn edf_prefers_earliest_deadline() {
+        let eos = 63;
+        let gen = TinyGen::new(1, eos, vec![(1, 1), (2, 1)]);
+        let cfg = SchedulerConfig { slots: 1, trace: true, ..Default::default() };
+        let mut core = Scheduler::new(gen, ManualClock::default(), cfg);
+        let loose = core.submit(job(1, greedy_stop(8, eos)));
+        let tight = core.submit(Job {
+            prompt: vec![2],
+            params: greedy_stop(8, eos),
+            timeout_ms: Some(1_000),
+            queued_for_ms: 0,
+        });
+        let done = drain(&mut core);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, tight, "deadline request admitted first");
+        assert_eq!(done[0].tokens, vec![2, eos]);
+        assert_eq!(done[1].id, loose);
+        let admits: Vec<u64> = core
+            .take_trace()
+            .into_iter()
+            .filter_map(|ev| match ev {
+                TraceEvent::Admit { id, .. } => Some(id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(admits, vec![tight, loose]);
+    }
+
+    /// FCFS survives as the EDF tie-break: equal deadlines (and the
+    /// no-deadline case, exercised everywhere else) admit in arrival
+    /// order.
+    #[test]
+    fn edf_ties_stay_fcfs() {
+        let eos = 63;
+        let gen = TinyGen::new(1, eos, vec![(1, 1), (2, 1)]);
+        let mut core =
+            Scheduler::new(gen, ManualClock::default(), SchedulerConfig::default());
+        let first = core.submit(Job {
+            prompt: vec![1],
+            params: greedy_stop(8, eos),
+            timeout_ms: Some(500),
+            queued_for_ms: 0,
+        });
+        let second = core.submit(Job {
+            prompt: vec![2],
+            params: greedy_stop(8, eos),
+            timeout_ms: Some(500),
+            queued_for_ms: 0,
+        });
+        let done = drain(&mut core);
+        assert_eq!(done.iter().map(|c| c.id).collect::<Vec<_>>(), vec![first, second]);
+    }
+
+    /// A batched step failure is retried row by row: only the slot
+    /// whose individual step also fails degrades to an error reply —
+    /// its neighbour's stream is untouched.
+    #[test]
+    fn step_failure_is_isolated_per_row() {
+        /// `step_slots` always errs without stepping; `step_slot` fails
+        /// only for the poisoned key.
+        struct FlakyGen {
+            inner: TinyGen,
+            fail_key: u32,
+        }
+        impl SlotEngine for FlakyGen {
+            fn slots(&self) -> usize {
+                self.inner.slots()
+            }
+            fn prefill_slot(&mut self, slot: usize, prompt: &[u32]) -> Result<Vec<f32>> {
+                self.inner.prefill_slot(slot, prompt)
+            }
+            fn step_slot(&mut self, slot: usize, token: u32) -> Result<Vec<f32>> {
+                let (key, _) = self.inner.state[slot].expect("step before prefill");
+                anyhow::ensure!(key != self.fail_key, "injected step failure for {key}");
+                self.inner.step_slot(slot, token)
+            }
+            fn step_slots(&mut self, _steps: &[(usize, u32)]) -> Result<Vec<Vec<f32>>> {
+                anyhow::bail!("fused path unavailable")
+            }
+            fn step_slots_atomic(&self) -> bool {
+                // the override above fails without stepping anything,
+                // so the per-row retry is sound
+                true
+            }
+            fn reset_slot(&mut self, slot: usize) {
+                self.inner.reset_slot(slot)
+            }
+        }
+
+        let eos = 63;
+        let gen = FlakyGen { inner: TinyGen::new(2, eos, vec![(1, 3), (2, 3)]), fail_key: 1 };
+        let cfg = SchedulerConfig { slots: 2, ..Default::default() };
+        let mut core = Scheduler::new(gen, ManualClock::default(), cfg);
+        let bad = core.submit(job(1, greedy_stop(8, eos)));
+        let good = core.submit(job(2, greedy_stop(8, eos)));
+        let done = drain(&mut core);
+        assert_eq!(done.len(), 2);
+        let bad_c = done.iter().find(|c| c.id == bad).unwrap();
+        assert!(
+            matches!(&bad_c.reason, FinishReason::Error(m) if m.contains("injected")),
+            "{:?}",
+            bad_c.reason
+        );
+        assert_eq!(bad_c.tokens, vec![1], "kept the prefill token decoded before the failure");
+        let good_c = done.iter().find(|c| c.id == good).unwrap();
+        assert_eq!(good_c.reason, FinishReason::Done);
+        assert_eq!(good_c.tokens, vec![2, 2, 2, eos], "neighbour stream disturbed");
+    }
+
+    /// An engine without the atomic-batch guarantee (the trait
+    /// default) never sees a batched call: the scheduler steps its
+    /// rows individually, so one slot's failure is still isolated —
+    /// and nothing counts as fused throughput.
+    #[test]
+    fn non_atomic_engine_keeps_per_row_isolation_without_fusing() {
+        struct FragileGen {
+            inner: TinyGen,
+            fail_key: u32,
+            batched_calls: usize,
+        }
+        impl SlotEngine for FragileGen {
+            fn slots(&self) -> usize {
+                self.inner.slots()
+            }
+            fn prefill_slot(&mut self, slot: usize, prompt: &[u32]) -> Result<Vec<f32>> {
+                self.inner.prefill_slot(slot, prompt)
+            }
+            fn step_slot(&mut self, slot: usize, token: u32) -> Result<Vec<f32>> {
+                let (key, _) = self.inner.state[slot].expect("step before prefill");
+                anyhow::ensure!(key != self.fail_key, "injected step failure for {key}");
+                self.inner.step_slot(slot, token)
+            }
+            fn step_slots(&mut self, steps: &[(usize, u32)]) -> Result<Vec<Vec<f32>>> {
+                self.batched_calls += 1;
+                steps.iter().map(|&(slot, token)| self.step_slot(slot, token)).collect()
+            }
+            // default `step_slots_atomic()` == false: the batched call
+            // above can fail after mutating earlier rows
+            fn reset_slot(&mut self, slot: usize) {
+                self.inner.reset_slot(slot)
+            }
+        }
+
+        let eos = 63;
+        let gen = FragileGen {
+            inner: TinyGen::new(2, eos, vec![(1, 3), (2, 3)]),
+            fail_key: 1,
+            batched_calls: 0,
+        };
+        let cfg = SchedulerConfig { slots: 2, ..Default::default() };
+        let mut core = Scheduler::new(gen, ManualClock::default(), cfg);
+        let bad = core.submit(job(1, greedy_stop(8, eos)));
+        let good = core.submit(job(2, greedy_stop(8, eos)));
+        let done = drain(&mut core);
+        assert_eq!(done.len(), 2, "both requests answered exactly once");
+        assert_eq!(
+            core.engine().batched_calls, 0,
+            "a non-atomic engine must never receive the batched call"
+        );
+        let bad_c = done.iter().find(|c| c.id == bad).unwrap();
+        assert!(matches!(&bad_c.reason, FinishReason::Error(m) if m.contains("injected")));
+        assert_eq!(bad_c.tokens, vec![1]);
+        let good_c = done.iter().find(|c| c.id == good).unwrap();
+        assert_eq!(good_c.reason, FinishReason::Done);
+        assert_eq!(good_c.tokens, vec![2, 2, 2, eos], "neighbour stream disturbed");
+        assert_eq!(core.stats.fused_rows, 0, "row-by-row stepping is not fused throughput");
+        assert_eq!(core.stats.stepped_rows, 3, "good's three decode steps still count");
     }
 
     #[test]

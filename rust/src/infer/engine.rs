@@ -50,10 +50,17 @@ impl NativeEngine {
     ) -> NativeEngine {
         let n_layers = weights.config.n_layers;
         let d = weights.config.d_model;
+        let wide = d.max(weights.config.d_ff);
+        let window = window.max(1);
+        // engine construction runs on the thread that will decode, so
+        // warm the per-thread prefill scratch here: the first request's
+        // batched FDB products ([≤window, d|d_ff] inputs) allocate
+        // nothing
+        crate::quant::kernel::warm_thread_scratch(window, wide, wide);
         let model = IncrementalForward::new(weights, fdb);
         NativeEngine {
             model,
-            caches: vec![KvCache::new(n_layers, window.max(1), d)],
+            caches: vec![KvCache::new(n_layers, window, d)],
             rng: Pcg32::seeded(seed),
         }
     }
@@ -67,6 +74,9 @@ impl NativeEngine {
             (c.n_layers(), c.window, c.width)
         };
         self.caches = (0..slots.max(1)).map(|_| KvCache::new(n_layers, window, width)).collect();
+        // a fused tick can batch every slot at once: pre-size the row
+        // scratch so the first decode tick pays no allocation
+        self.model.reserve_rows(self.caches.len(), window);
         self
     }
 
@@ -153,6 +163,38 @@ impl SlotEngine for NativeEngine {
         let vocab = self.model.vocab();
         anyhow::ensure!((token as usize) < vocab, "token {token} out of vocab {vocab}");
         Ok(self.model.step(&mut self.caches[slot], token))
+    }
+
+    /// Fused multi-slot step: every linear (and the LM head) runs once
+    /// as a batched product over the active rows instead of once per
+    /// slot.  The whole batch is validated *before* any slot advances,
+    /// so an `Err` means no state changed — the contract the
+    /// scheduler's per-row fallback depends on.
+    fn step_slots(&mut self, steps: &[(usize, u32)]) -> Result<Vec<Vec<f32>>> {
+        let vocab = self.model.vocab();
+        let mut seen = vec![false; self.caches.len()];
+        for &(slot, token) in steps {
+            anyhow::ensure!(slot < self.caches.len(), "slot {slot} out of range");
+            anyhow::ensure!(!seen[slot], "slot {slot} listed twice in one fused step");
+            seen[slot] = true;
+            anyhow::ensure!(!self.caches[slot].is_empty(), "step on a slot without prefill");
+            anyhow::ensure!((token as usize) < vocab, "token {token} out of vocab {vocab}");
+        }
+        if steps.len() == 1 {
+            // one active row: the allocation-free single-row kernel
+            // beats the batched path (no transpose staging)
+            let (slot, token) = steps[0];
+            return Ok(vec![self.model.step(&mut self.caches[slot], token)]);
+        }
+        Ok(self.model.step_rows(&mut self.caches, steps))
+    }
+
+    /// `step_slots` validates the whole batch before mutating any
+    /// slot (and the fused math after validation is infallible), so a
+    /// failed call never advances state — the scheduler may retry row
+    /// by row.
+    fn step_slots_atomic(&self) -> bool {
+        true
     }
 
     fn reset_slot(&mut self, slot: usize) {
@@ -287,5 +329,44 @@ mod tests {
         assert!(e.step_slot(1, 1).is_ok());
         e.reset_slot(1);
         assert!(e.step_slot(1, 1).is_err(), "reset drops the sequence");
+    }
+
+    /// The fused batch is validated before any slot advances: a failed
+    /// `step_slots` must leave every slot exactly where it was.
+    #[test]
+    fn step_slots_validates_before_stepping() {
+        let mut e = engine(11).with_slots(2);
+        e.prefill_slot(0, &[1, 2]).unwrap();
+        assert!(e.step_slots(&[(0, 3), (1, 4)]).is_err(), "slot 1 never prefilled");
+        assert!(e.step_slots(&[(0, 3), (0, 4)]).is_err(), "duplicate slot");
+        assert!(e.step_slots(&[(0, 9999)]).is_err(), "token out of vocab");
+        assert!(e.step_slots(&[(2, 1)]).is_err(), "slot out of range");
+        // slot 0 must continue exactly where an undisturbed engine does
+        let mut clean = engine(11).with_slots(2);
+        clean.prefill_slot(0, &[1, 2]).unwrap();
+        let got = e.step_slot(0, 3).unwrap();
+        let expect = clean.step_slot(0, 3).unwrap();
+        assert_eq!(got, expect, "failed fused call advanced slot state");
+    }
+
+    /// Engine-level fused-vs-sequential check (the full property lives
+    /// in `tests/fused_decode.rs`): same logits, same cache state.
+    #[test]
+    fn step_slots_matches_sequential_step_slot() {
+        let mut seq = engine(12).with_slots(3);
+        let mut fus = engine(12).with_slots(3);
+        for (slot, prompt) in [(0usize, vec![1u32, 2, 3]), (1, vec![4u32]), (2, vec![5u32, 6])] {
+            seq.prefill_slot(slot, &prompt).unwrap();
+            fus.prefill_slot(slot, &prompt).unwrap();
+        }
+        let steps = [(0usize, 7u32), (1, 8), (2, 9)];
+        for _ in 0..4 {
+            let a: Vec<Vec<f32>> =
+                steps.iter().map(|&(s, t)| seq.step_slot(s, t).unwrap()).collect();
+            let b = fus.step_slots(&steps).unwrap();
+            assert_eq!(a, b, "fused logits diverge from sequential");
+        }
+        // an empty batch is a no-op
+        assert!(fus.step_slots(&[]).unwrap().is_empty());
     }
 }

@@ -12,6 +12,13 @@
 //!
 //! Memory: `2 (K,V) · n_layers · window · d_model · 4` bytes per
 //! request, allocated once and reused (`clear`) across requests.
+//!
+//! The fused multi-slot decode advances several independent caches per
+//! tick; [`advance_rows`] / [`write_rows`] are its batched append
+//! primitives (one chronology bump per row, then one per-layer scatter
+//! of the batched K/V matrices into each row's own ring).
+
+use crate::tensor::Matrix;
 
 /// One layer's K and V ring storage, `[window, width]` row-major each.
 struct LayerKv {
@@ -116,6 +123,37 @@ impl KvCache {
     }
 }
 
+/// Batched append across independent caches: reserve the next ring slot
+/// in each listed cache (exactly one [`KvCache::advance`] per row).
+/// `slots[i]` names the cache row `i` appends to — slots must be
+/// distinct — and the reserved ring slot per row lands in `ring`
+/// (cleared first), to be passed to [`write_rows`] for every layer.
+pub fn advance_rows(caches: &mut [KvCache], slots: &[usize], ring: &mut Vec<usize>) {
+    ring.clear();
+    for &slot in slots {
+        ring.push(caches[slot].advance());
+    }
+}
+
+/// Write one layer's batched K/V rows (`k`, `v` are `[m, width]`
+/// row-major, row `i` belonging to `caches[slots[i]]`) into the ring
+/// slots reserved by [`advance_rows`].
+pub fn write_rows(
+    caches: &mut [KvCache],
+    slots: &[usize],
+    ring: &[usize],
+    layer: usize,
+    k: &Matrix,
+    v: &Matrix,
+) {
+    debug_assert_eq!(slots.len(), ring.len());
+    debug_assert_eq!(k.rows, slots.len());
+    debug_assert_eq!(v.rows, slots.len());
+    for (i, (&slot, &rs)) in slots.iter().zip(ring).enumerate() {
+        caches[slot].write(layer, rs, k.row(i), v.row(i));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +188,67 @@ mod tests {
         assert_eq!(c.k_row(0, 0), &[10.0]);
         assert_eq!(c.k_row(1, 1), &[21.0]);
         assert_eq!(c.v_row(1, 0), &[20.5]);
+    }
+
+    #[test]
+    fn batched_append_matches_sequential_appends() {
+        // two caches at different occupancies: the batched helpers must
+        // land the same rows in the same ring slots as per-cache
+        // advance+write
+        let build = || {
+            let mut a = KvCache::new(2, 3, 2);
+            let mut b = KvCache::new(2, 3, 2);
+            for t in 0..4u32 {
+                // cache 0 is already wrapping, cache 1 half full
+                let s = a.advance();
+                a.write(0, s, &[t as f32, 0.0], &[0.0, t as f32]);
+                a.write(1, s, &[t as f32, 1.0], &[1.0, t as f32]);
+            }
+            let s = b.advance();
+            b.write(0, s, &[9.0, 9.0], &[9.0, 9.0]);
+            b.write(1, s, &[8.0, 8.0], &[8.0, 8.0]);
+            vec![a, b]
+        };
+
+        let mut seq = build();
+        let k = Matrix::from_vec(2, 2, vec![10.0, 11.0, 20.0, 21.0]);
+        let v = Matrix::from_vec(2, 2, vec![30.0, 31.0, 40.0, 41.0]);
+        for (row, cache) in seq.iter_mut().enumerate() {
+            let s = cache.advance();
+            for l in 0..2 {
+                cache.write(l, s, k.row(row), v.row(row));
+            }
+        }
+
+        let mut fused = build();
+        let slots = vec![0usize, 1];
+        let mut ring = Vec::new();
+        advance_rows(&mut fused, &slots, &mut ring);
+        assert_eq!(ring.len(), 2);
+        for l in 0..2 {
+            write_rows(&mut fused, &slots, &ring, l, &k, &v);
+        }
+
+        for (a, b) in seq.iter().zip(&fused) {
+            assert_eq!(a.len(), b.len());
+            assert_eq!(a.next_pos(), b.next_pos());
+            for l in 0..2 {
+                for i in 0..a.len() {
+                    assert_eq!(a.k_row(l, i), b.k_row(l, i), "layer {l} row {i}");
+                    assert_eq!(a.v_row(l, i), b.v_row(l, i), "layer {l} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn advance_rows_reuses_ring_buffer() {
+        let mut caches = vec![KvCache::new(1, 2, 1)];
+        let mut ring = vec![7usize, 7, 7];
+        advance_rows(&mut caches, &[0], &mut ring);
+        assert_eq!(ring, vec![0], "stale entries must be cleared");
+        advance_rows(&mut caches, &[0], &mut ring);
+        assert_eq!(ring, vec![1]);
     }
 
     #[test]

@@ -8,13 +8,17 @@
 //!   O(window) single-position decode steps, every linear dispatched
 //!   through [`step::LinearOp`] (dense, or the compiled FDB sparse
 //!   kernel — the paper's "efficient bitwise operation" on the decode
-//!   path end to end);
+//!   path end to end); plus the fused multi-slot
+//!   [`step::IncrementalForward::step_rows`], which advances every
+//!   active slot in one pass — each linear and the LM head run once
+//!   per tick as a batched product, bit-identical to looping `step`;
 //! - [`engine::NativeEngine`] — the `coordinator::serve::Generator`
 //!   implementation that plugs it under the static worker pool, plus
 //!   the slot-granular `coordinator::scheduler::SlotEngine` lifecycle
-//!   (one `KvCache` per slot via `with_slots`) that the continuous
-//!   batching scheduler drives: prefill a freed slot mid-flight while
-//!   the other slots keep decoding.
+//!   (one `KvCache` per slot via `with_slots`, batched ticks via
+//!   `step_slots`) that the continuous batching scheduler drives:
+//!   prefill a freed slot mid-flight while the other slots keep
+//!   decoding, then advance all of them together.
 
 pub mod engine;
 pub mod kv;

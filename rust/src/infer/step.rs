@@ -22,16 +22,16 @@
 use std::collections::BTreeMap;
 
 use crate::model::native::{
-    apply_rope, attend_one, causal_attention, rmsnorm, rmsnorm_row, rope_pos, rope_row,
-    rope_tables, silu,
+    apply_rope, attend_one, causal_attention, rmsnorm, rmsnorm_row, rope_pos, rope_pos_into,
+    rope_row, rope_tables, silu,
 };
 use crate::model::{ModelConfig, Weights};
-use crate::quant::kernel::FdbExec;
+use crate::quant::kernel::{FdbExec, FdbScratch};
 use crate::quant::FdbLinear;
 use crate::runtime::session::recent_window;
 use crate::tensor::Matrix;
 
-use super::kv::KvCache;
+use super::kv::{advance_rows, write_rows, KvCache};
 
 /// y = xᵀ·W for dense `[din, dout]` weights (row-major, zero-skipping
 /// like `Matrix::matmul`).
@@ -45,6 +45,29 @@ pub fn dense_matvec(w: &Matrix, x: &[f32], y: &mut [f32]) {
         }
         for (o, &wv) in y.iter_mut().zip(w.row(k)) {
             *o += xv * wv;
+        }
+    }
+}
+
+/// y = x·W for dense `[din, dout]` weights into a caller-owned
+/// `[m, dout]` row-major buffer — the batched counterpart of
+/// [`dense_matvec`] with the identical per-row operation order (same
+/// zero-skipping ikj loop as `Matrix::matmul`), which is what keeps
+/// the fused and sequential decode paths bit-identical.
+pub fn dense_matmul_rows(w: &Matrix, x: &Matrix, y: &mut [f32]) {
+    assert_eq!(x.cols, w.rows, "matmul input width");
+    assert_eq!(y.len(), x.rows * w.cols, "output buffer is not [m, dout]");
+    let n = w.cols;
+    for r in 0..x.rows {
+        let yrow = &mut y[r * n..(r + 1) * n];
+        yrow.fill(0.0);
+        for (k, &xv) in x.row(r).iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            for (o, &wv) in yrow.iter_mut().zip(w.row(k)) {
+                *o += xv * wv;
+            }
         }
     }
 }
@@ -86,6 +109,39 @@ impl LinearOp {
             LinearOp::Dense(w) => x.matmul(w),
             LinearOp::Fdb(e) => e.matmul(x),
         }
+    }
+
+    /// Batched product into a reused output — the fused multi-slot
+    /// decode hot path (one call per linear per tick advances every
+    /// active row).  `out` is reshaped to `[m, dout]` around its kept
+    /// allocation; dense weights run the ikj loop, FDB layers the CSC
+    /// kernel with the batch innermost and no output transpose — both
+    /// with the same per-row operation order as
+    /// [`matvec`](Self::matvec), so fused and sequential steps agree
+    /// bit-for-bit.
+    pub fn matmul_rows(&self, x: &Matrix, out: &mut Matrix, scratch: &mut FdbScratch) {
+        set_shape(out, x.rows, self.dout());
+        match self {
+            LinearOp::Dense(w) => dense_matmul_rows(w, x, &mut out.data),
+            LinearOp::Fdb(e) => e.matmul_rows(x, &mut out.data, scratch),
+        }
+    }
+}
+
+/// Reshape a reused matrix around its kept allocation (callers fully
+/// overwrite the data, so stale values never leak).
+fn set_shape(mat: &mut Matrix, rows: usize, cols: usize) {
+    mat.rows = rows;
+    mat.cols = cols;
+    mat.data.resize(rows * cols, 0.0);
+}
+
+/// rmsnorm into a reused output matrix — the fused-step counterpart of
+/// [`crate::model::native::rmsnorm`], built on the same row primitive.
+fn rmsnorm_rows(x: &Matrix, gain: &[f32], eps: f64, out: &mut Matrix) {
+    set_shape(out, x.rows, x.cols);
+    for r in 0..x.rows {
+        rmsnorm_row(x.row(r), gain, eps, out.row_mut(r));
     }
 }
 
@@ -138,6 +194,70 @@ impl StepScratch {
     }
 }
 
+/// Reused fused-step buffers — the batched counterpart of
+/// [`StepScratch`], reshaped on demand for each tick's row count and
+/// kept across ticks (pre-sized via
+/// [`IncrementalForward::reserve_rows`], so a steady-state fused step
+/// allocates nothing but the returned logits rows).
+struct RowsScratch {
+    fdb: FdbScratch,
+    x: Matrix,
+    hn: Matrix,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    ctx: Matrix,
+    proj: Matrix,
+    gate: Matrix,
+    up: Matrix,
+    act: Matrix,
+    down: Matrix,
+    logits: Matrix,
+    /// per-row (cos, sin) half-rows at each row's own absolute position
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    /// cache index per row (mirrors the `rows` argument)
+    slots: Vec<usize>,
+    /// ring slot per row, reserved by `advance_rows`
+    ring: Vec<usize>,
+    scores: Vec<f64>,
+}
+
+impl RowsScratch {
+    fn new() -> RowsScratch {
+        RowsScratch {
+            fdb: FdbScratch::default(),
+            x: Matrix::zeros(0, 0),
+            hn: Matrix::zeros(0, 0),
+            q: Matrix::zeros(0, 0),
+            k: Matrix::zeros(0, 0),
+            v: Matrix::zeros(0, 0),
+            ctx: Matrix::zeros(0, 0),
+            proj: Matrix::zeros(0, 0),
+            gate: Matrix::zeros(0, 0),
+            up: Matrix::zeros(0, 0),
+            act: Matrix::zeros(0, 0),
+            down: Matrix::zeros(0, 0),
+            logits: Matrix::zeros(0, 0),
+            cos: Vec::new(),
+            sin: Vec::new(),
+            slots: Vec::new(),
+            ring: Vec::new(),
+            scores: Vec::new(),
+        }
+    }
+
+    /// Shape the buffers `step_rows` writes before the batched
+    /// products (everything else is reshaped by its producer).
+    fn ensure(&mut self, m: usize, d: usize, half: usize) {
+        set_shape(&mut self.x, m, d);
+        set_shape(&mut self.ctx, m, d);
+        self.cos.resize(m * half, 0.0);
+        self.sin.resize(m * half, 0.0);
+        self.slots.clear();
+    }
+}
+
 /// The incremental model: embeddings/norms/head plus per-layer
 /// [`LinearOp`]s, stateless across requests (all sequence state lives
 /// in the caller's [`KvCache`]).
@@ -148,6 +268,7 @@ pub struct IncrementalForward {
     final_norm: Vec<f32>,
     layers: Vec<LayerOps>,
     scratch: StepScratch,
+    rows_scratch: RowsScratch,
 }
 
 impl IncrementalForward {
@@ -190,7 +311,39 @@ impl IncrementalForward {
             layers,
             cfg,
             scratch,
+            rows_scratch: RowsScratch::new(),
         }
+    }
+
+    /// Pre-size the fused-step buffers for up to `max_rows` active rows
+    /// over a `window`-entry cache, so the first fused decode tick pays
+    /// no allocation (engines call this at build time, once the slot
+    /// count is known).
+    pub fn reserve_rows(&mut self, max_rows: usize, window: usize) {
+        let m = max_rows.max(1);
+        let cfg = &self.cfg;
+        let (d, d_ff) = (cfg.d_model, cfg.d_ff);
+        let half = cfg.head_dim() / 2;
+        let wide = d.max(d_ff);
+        let s = &mut self.rows_scratch;
+        s.fdb.reserve(m, wide, wide);
+        set_shape(&mut s.x, m, d);
+        set_shape(&mut s.hn, m, d);
+        set_shape(&mut s.q, m, d);
+        set_shape(&mut s.k, m, d);
+        set_shape(&mut s.v, m, d);
+        set_shape(&mut s.ctx, m, d);
+        set_shape(&mut s.proj, m, d);
+        set_shape(&mut s.gate, m, d_ff);
+        set_shape(&mut s.up, m, d_ff);
+        set_shape(&mut s.act, m, d_ff);
+        set_shape(&mut s.down, m, d);
+        set_shape(&mut s.logits, m, cfg.vocab);
+        s.cos.resize(m * half, 0.0);
+        s.sin.resize(m * half, 0.0);
+        s.slots.reserve(m);
+        s.ring.reserve(m);
+        s.scores.reserve(window);
     }
 
     pub fn vocab(&self) -> usize {
@@ -312,6 +465,113 @@ impl IncrementalForward {
         dense_matvec(&self.head, &self.scratch.hn, &mut logits);
         logits
     }
+
+    /// Fused multi-slot decode: advance `rows` — (cache index, token)
+    /// pairs over *distinct* caches — in ONE forward pass.  The active
+    /// rows' embeddings are gathered into an `[m, d_model]` batch and
+    /// each of the 7 per-layer linears plus the LM head runs once as a
+    /// batched product ([`LinearOp::matmul_rows`]: dense ikj / FDB CSC
+    /// with the batch innermost), amortizing every weight traversal
+    /// across the active slots; RoPE, K/V appends and attention stay
+    /// per-row against each row's own cache and absolute position.
+    /// Returns one next-token logits row per entry, in order.
+    ///
+    /// Equivalence: every per-element operation runs in the same order
+    /// as [`step`](Self::step), so fused and sequential decode agree
+    /// bit-for-bit (`tests/fused_decode.rs` pins this).
+    pub fn step_rows(&mut self, caches: &mut [KvCache], rows: &[(usize, u32)]) -> Vec<Vec<f32>> {
+        let m = rows.len();
+        if m == 0 {
+            return Vec::new();
+        }
+        let cfg = &self.cfg;
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let (d, d_ff) = (cfg.d_model, cfg.d_ff);
+        let half = hd / 2;
+        #[cfg(debug_assertions)]
+        {
+            let mut seen = vec![false; caches.len()];
+            for &(slot, token) in rows {
+                debug_assert!(slot < caches.len(), "cache index {slot} out of range");
+                debug_assert!(!seen[slot], "cache index {slot} listed twice in one fused step");
+                seen[slot] = true;
+                debug_assert!((token as usize) < cfg.vocab, "token {token} out of vocab");
+                debug_assert_eq!(caches[slot].width, d, "cache width != d_model");
+                debug_assert!(!caches[slot].is_empty(), "step on a cache without prefill");
+            }
+        }
+
+        let s = &mut self.rows_scratch;
+        s.ensure(m, d, half);
+        s.slots.extend(rows.iter().map(|&(slot, _)| slot));
+
+        // per-row RoPE at each row's own absolute position, read before
+        // the rings advance (same order as `step`), and the embedding
+        // gather; then one batched chronology bump across the caches
+        for (i, &(slot, token)) in rows.iter().enumerate() {
+            rope_pos_into(
+                caches[slot].next_pos(),
+                hd,
+                cfg.rope_theta,
+                &mut s.cos[i * half..(i + 1) * half],
+                &mut s.sin[i * half..(i + 1) * half],
+            );
+            s.x.row_mut(i).copy_from_slice(self.tok_emb.row(token as usize));
+        }
+        advance_rows(caches, &s.slots, &mut s.ring);
+
+        for (l, layer) in self.layers.iter().enumerate() {
+            // attention: batched projections, per-row rope/append/attend
+            rmsnorm_rows(&s.x, &layer.attn_norm, cfg.rmsnorm_eps, &mut s.hn);
+            layer.wq.matmul_rows(&s.hn, &mut s.q, &mut s.fdb);
+            layer.wk.matmul_rows(&s.hn, &mut s.k, &mut s.fdb);
+            layer.wv.matmul_rows(&s.hn, &mut s.v, &mut s.fdb);
+            for i in 0..m {
+                let cs = &s.cos[i * half..(i + 1) * half];
+                let sn = &s.sin[i * half..(i + 1) * half];
+                rope_row(s.q.row_mut(i), h, hd, cs, sn);
+                rope_row(s.k.row_mut(i), h, hd, cs, sn);
+            }
+            write_rows(caches, &s.slots, &s.ring, l, &s.k, &s.v);
+            for i in 0..m {
+                let cache = &caches[s.slots[i]];
+                let n = cache.len();
+                attend_one(
+                    s.q.row(i),
+                    n,
+                    |j| cache.k_row(l, j),
+                    |j| cache.v_row(l, j),
+                    h,
+                    hd,
+                    &mut s.scores,
+                    s.ctx.row_mut(i),
+                );
+            }
+            layer.wo.matmul_rows(&s.ctx, &mut s.proj, &mut s.fdb);
+            for (xi, &p) in s.x.data.iter_mut().zip(&s.proj.data) {
+                *xi += p;
+            }
+            // mlp: three batched products around the elementwise gate
+            rmsnorm_rows(&s.x, &layer.mlp_norm, cfg.rmsnorm_eps, &mut s.hn);
+            layer.w_gate.matmul_rows(&s.hn, &mut s.gate, &mut s.fdb);
+            layer.w_up.matmul_rows(&s.hn, &mut s.up, &mut s.fdb);
+            set_shape(&mut s.act, m, d_ff);
+            for i in 0..m * d_ff {
+                s.act.data[i] = silu(s.gate.data[i]) * s.up.data[i];
+            }
+            layer.w_down.matmul_rows(&s.act, &mut s.down, &mut s.fdb);
+            for (xi, &p) in s.x.data.iter_mut().zip(&s.down.data) {
+                *xi += p;
+            }
+        }
+
+        // the LM head, once, as a batched product (dense ikj == per-row
+        // matvec, so this too matches `step` bit-for-bit)
+        rmsnorm_rows(&s.x, &self.final_norm, cfg.rmsnorm_eps, &mut s.hn);
+        set_shape(&mut s.logits, m, cfg.vocab);
+        dense_matmul_rows(&self.head, &s.hn, &mut s.logits.data);
+        (0..m).map(|i| s.logits.row(i).to_vec()).collect()
+    }
 }
 
 #[cfg(test)]
@@ -373,6 +633,72 @@ mod tests {
         }
         let f = IncrementalForward::new(w, &fdb);
         assert_eq!(f.n_fdb_ops(), cfg.linear_names().len());
+    }
+
+    #[test]
+    fn dense_matmul_rows_matches_matvec_bitwise() {
+        let mut rng = Pcg32::seeded(21);
+        let w = Matrix::randn(48, 24, &mut rng, 1.0);
+        let x = Matrix::randn(5, 48, &mut rng, 1.0);
+        let mut y = vec![0.0f32; 5 * 24];
+        dense_matmul_rows(&w, &x, &mut y);
+        let mut row = vec![0.0f32; 24];
+        for r in 0..5 {
+            dense_matvec(&w, x.row(r), &mut row);
+            assert_eq!(&y[r * 24..(r + 1) * 24], &row[..], "row {r} not bit-identical");
+        }
+    }
+
+    /// The fused multi-slot step must be bit-identical to sequential
+    /// per-cache steps — mixed FDB/dense linears, staggered positions.
+    /// (`tests/fused_decode.rs` runs the full engine-level property.)
+    #[test]
+    fn step_rows_matches_sequential_steps_bitwise() {
+        let cfg = tiny();
+        let w = Weights::synthetic(&cfg, 19);
+        let mut fdb = BTreeMap::new();
+        // half the linears on the sparse kernel, half dense
+        for (i, name) in cfg.linear_names().iter().enumerate() {
+            if i % 2 == 0 {
+                fdb.insert(name.clone(), FdbLinear::from_weights(w.mat(name), 64));
+            }
+        }
+        let mut seq = IncrementalForward::new(w.clone(), &fdb);
+        let mut fus = IncrementalForward::new(w, &fdb);
+        fus.reserve_rows(2, cfg.seq_len);
+        let mk = || KvCache::new(cfg.n_layers, cfg.seq_len, cfg.d_model);
+        let mut sc = vec![mk(), mk()];
+        let mut fc = vec![mk(), mk()];
+        // staggered prefills: the rows sit at different positions
+        seq.prefill(&mut sc[0], &[1, 2, 3]);
+        fus.prefill(&mut fc[0], &[1, 2, 3]);
+        seq.prefill(&mut sc[1], &[4, 5]);
+        fus.prefill(&mut fc[1], &[4, 5]);
+        let _ = seq.step(&mut sc[1], 6);
+        let _ = fus.step(&mut fc[1], 6);
+        for round in 0..3u32 {
+            let (t0, t1) = (7 + round, 11 + round);
+            let a0 = seq.step(&mut sc[0], t0);
+            let a1 = seq.step(&mut sc[1], t1);
+            let b = fus.step_rows(&mut fc, &[(0, t0), (1, t1)]);
+            assert_eq!(b.len(), 2);
+            assert_eq!(a0, b[0], "row 0 diverged at round {round}");
+            assert_eq!(a1, b[1], "row 1 diverged at round {round}");
+            assert_eq!(sc[0].next_pos(), fc[0].next_pos());
+            assert_eq!(sc[1].next_pos(), fc[1].next_pos());
+        }
+    }
+
+    #[test]
+    fn step_rows_empty_batch_is_a_noop() {
+        let cfg = tiny();
+        let w = Weights::synthetic(&cfg, 23);
+        let mut f = IncrementalForward::new(w, &BTreeMap::new());
+        let mut caches = vec![KvCache::new(cfg.n_layers, cfg.seq_len, cfg.d_model)];
+        f.prefill(&mut caches[0], &[1, 2]);
+        let out = f.step_rows(&mut caches, &[]);
+        assert!(out.is_empty());
+        assert_eq!(caches[0].len(), 2, "empty fused step must not touch any cache");
     }
 
     #[test]

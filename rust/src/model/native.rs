@@ -147,13 +147,23 @@ pub fn rope_pos(pos: usize, hd: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
     let half = hd / 2;
     let mut cos = vec![0.0f32; half];
     let mut sin = vec![0.0f32; half];
+    rope_pos_into(pos, hd, theta, &mut cos, &mut sin);
+    (cos, sin)
+}
+
+/// [`rope_pos`] into caller-owned `[hd/2]` slices — the allocation-free
+/// form the fused multi-slot decode uses (one row per active slot, each
+/// at its own absolute position).
+pub fn rope_pos_into(pos: usize, hd: usize, theta: f64, cos: &mut [f32], sin: &mut [f32]) {
+    let half = hd / 2;
+    debug_assert_eq!(cos.len(), half);
+    debug_assert_eq!(sin.len(), half);
     for i in 0..half {
         let inv = theta.powf(-((2 * i) as f64) / hd as f64);
         let ang = pos as f64 * inv;
         cos[i] = ang.cos() as f32;
         sin[i] = ang.sin() as f32;
     }
-    (cos, sin)
 }
 
 /// (cos, sin) tables `[T, hd/2]`, matching the python `rope_tables`.

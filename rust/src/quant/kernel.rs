@@ -26,10 +26,31 @@ pub struct FdbScratch {
     yt: Vec<f32>,
 }
 
+impl FdbScratch {
+    /// Pre-size for products up to `[m, din]·[din, dout]` so later
+    /// calls against this scratch allocate nothing — engines call this
+    /// at build time so the first decode tick pays no allocation.
+    pub fn reserve(&mut self, m: usize, din: usize, dout: usize) {
+        if self.xt.len() < din * m {
+            self.xt.resize(din * m, 0.0);
+        }
+        if self.yt.len() < dout * m {
+            self.yt.resize(dout * m, 0.0);
+        }
+    }
+}
+
 thread_local! {
     /// Per-thread scratch behind the allocation-free [`FdbExec::matmul`]
     /// entry point (engine workers each live on their own thread).
     static MM_SCRATCH: RefCell<FdbScratch> = RefCell::new(FdbScratch::default());
+}
+
+/// Pre-size this thread's [`FdbExec::matmul`] scratch.  Engine
+/// construction runs on the worker thread that will decode, so warming
+/// here makes the first prefill on that thread allocation-free too.
+pub fn warm_thread_scratch(m: usize, din: usize, dout: usize) {
+    MM_SCRATCH.with(|s| s.borrow_mut().reserve(m, din, dout));
 }
 
 /// Compiled FDB layer: combined-level CSC.
@@ -100,8 +121,11 @@ impl FdbExec {
     pub fn matmul_with(&self, x: &Matrix, scratch: &mut FdbScratch) -> Matrix {
         assert_eq!(x.cols, self.din);
         let m = x.rows;
-        // xt[k*m + r] = x[r, k] — every entry overwritten below
-        scratch.xt.resize(self.din * m, 0.0);
+        // xt[k*m + r] = x[r, k] — every entry is overwritten below, so
+        // the scratch only grows (never shrinks back and re-zeroes)
+        if scratch.xt.len() < self.din * m {
+            scratch.xt.resize(self.din * m, 0.0);
+        }
         let xt = &mut scratch.xt[..self.din * m];
         for r in 0..m {
             let row = x.row(r);
@@ -109,10 +133,18 @@ impl FdbExec {
                 xt[k * m + r] = row[k];
             }
         }
-        // yt accumulates, so it must start zeroed
-        scratch.yt.resize(self.dout * m, 0.0);
-        let yt = &mut scratch.yt[..self.dout * m];
-        yt.fill(0.0);
+        // yt accumulates, so its used prefix must start zeroed — but
+        // exactly once: growth zero-fills the whole buffer, steady-state
+        // reuse re-zeroes just the prefix (the old resize-then-fill did
+        // both passes on every growing call)
+        let need = self.dout * m;
+        if scratch.yt.len() < need {
+            scratch.yt.clear();
+            scratch.yt.resize(need, 0.0);
+        } else {
+            scratch.yt[..need].fill(0.0);
+        }
+        let yt = &mut scratch.yt[..need];
         for c in 0..self.dout {
             let s = self.col_ptr[c] as usize;
             let e = self.col_ptr[c + 1] as usize;
@@ -134,6 +166,56 @@ impl FdbExec {
             }
         }
         y
+    }
+
+    /// Row-major-in / row-major-out batched product into a caller-owned
+    /// `[m, dout]` buffer — the fused multi-slot decode entry.
+    ///
+    /// Keeps the batch innermost like [`matmul_with`](Self::matmul_with)
+    /// (every nonzero level does up to `TILE` contiguous FMAs), but
+    /// accumulates each column's rows in a stack-resident tile and
+    /// scatters them straight into `y`, so the `[dout, m]` scratch
+    /// accumulator — its zeroing pass and the final output transpose —
+    /// disappears entirely.  Per output element the additions run in
+    /// the same CSC order as [`matvec`](Self::matvec), which keeps
+    /// fused and sequential decode bit-identical.
+    pub fn matmul_rows(&self, x: &Matrix, y: &mut [f32], scratch: &mut FdbScratch) {
+        assert_eq!(x.cols, self.din);
+        let m = x.rows;
+        assert_eq!(y.len(), m * self.dout, "output buffer is not [m, dout]");
+        // xt[k*m + r] = x[r, k] — every entry overwritten
+        if scratch.xt.len() < self.din * m {
+            scratch.xt.resize(self.din * m, 0.0);
+        }
+        let xt = &mut scratch.xt[..self.din * m];
+        for r in 0..m {
+            let row = x.row(r);
+            for k in 0..self.din {
+                xt[k * m + r] = row[k];
+            }
+        }
+        const TILE: usize = 8;
+        let mut r0 = 0;
+        while r0 < m {
+            let tw = TILE.min(m - r0);
+            for c in 0..self.dout {
+                let s = self.col_ptr[c] as usize;
+                let e = self.col_ptr[c + 1] as usize;
+                let mut acc = [0.0f32; TILE];
+                for i in s..e {
+                    let k = self.row_idx[i] as usize;
+                    let v = self.val[i];
+                    let src = &xt[k * m + r0..k * m + r0 + tw];
+                    for (a, &xv) in acc[..tw].iter_mut().zip(src) {
+                        *a += v * xv;
+                    }
+                }
+                for (r, &a) in acc[..tw].iter().enumerate() {
+                    y[(r0 + r) * self.dout + c] = a;
+                }
+            }
+            r0 += TILE;
+        }
     }
 
     /// Single-vector product (decode-cached v2 path).
@@ -247,6 +329,69 @@ mod tests {
                 assert!((a - b).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn matmul_rows_matches_matmul_and_matvec_exactly() {
+        prop::check(12, |rng| {
+            let din = 64 * rng.range(1, 4);
+            let dout = rng.range(1, 48);
+            let w = Matrix::randn(din, dout, rng, 1.0);
+            let exec = FdbExec::compile(&FdbLinear::from_weights(&w, 64));
+            // m spans partial tiles (< 8), one full tile, and a ragged
+            // second tile
+            let m = rng.range(1, 12);
+            let x = Matrix::randn(m, din, rng, 1.0);
+            let mut scratch = FdbScratch::default();
+            let mut y = vec![0.0f32; m * dout];
+            exec.matmul_rows(&x, &mut y, &mut scratch);
+            // fp-tolerance against the transposing batched kernel
+            let y_ref = exec.matmul(&x);
+            for (a, b) in y.iter().zip(&y_ref.data) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+            // bit-exact against the per-row matvec — the contract the
+            // fused decode path leans on
+            let mut row = vec![0.0f32; dout];
+            for r in 0..m {
+                exec.matvec(x.row(r), &mut row);
+                assert_eq!(&y[r * dout..(r + 1) * dout], &row[..], "row {r} not bit-identical");
+            }
+        });
+    }
+
+    #[test]
+    fn matmul_rows_reuses_oversized_scratch_cleanly() {
+        // a stale (larger) xt must not leak into a later, smaller call
+        let mut rng = Pcg32::seeded(81);
+        let w = Matrix::randn(128, 16, &mut rng, 1.0);
+        let exec = FdbExec::compile(&FdbLinear::from_weights(&w, 64));
+        let mut scratch = FdbScratch::default();
+        scratch.reserve(16, 512, 512);
+        let x = Matrix::randn(3, 128, &mut rng, 1.0);
+        let mut y = vec![0.0f32; 3 * 16];
+        exec.matmul_rows(&x, &mut y, &mut scratch);
+        for (a, b) in y.iter().zip(&exec.matmul(&x).data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn reserve_presizes_without_corrupting_results() {
+        let mut rng = Pcg32::seeded(80);
+        let w = Matrix::randn(192, 24, &mut rng, 1.0);
+        let exec = FdbExec::compile(&FdbLinear::from_weights(&w, 64));
+        let x = Matrix::randn(4, 192, &mut rng, 1.0);
+        let mut cold = FdbScratch::default();
+        let mut warm = FdbScratch::default();
+        warm.reserve(8, 192, 24);
+        let xt_cap = warm.xt.capacity();
+        let yt_cap = warm.yt.capacity();
+        let a = exec.matmul_with(&x, &mut cold);
+        let b = exec.matmul_with(&x, &mut warm);
+        assert_eq!(a.data, b.data, "warm scratch changed the result");
+        assert_eq!(warm.xt.capacity(), xt_cap, "pre-sized xt still reallocated");
+        assert_eq!(warm.yt.capacity(), yt_cap, "pre-sized yt still reallocated");
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Fused-vs-sequential decode equivalence: the batched
+//! `SlotEngine::step_slots` path (one GEMM per linear per tick) must
+//! produce *bit-identical* logits — and therefore token-for-token
+//! identical greedy streams — to looping `step_slot` over the same
+//! slots.  The property is exercised across seeds, mixed prompt
+//! lengths, staggered prefills (so every row sits at its own absolute
+//! position), shifting active-slot subsets, and FDB-vs-dense layer
+//! mixes.  Everything here is artifact-free and runs in every
+//! environment.
+
+use std::collections::BTreeMap;
+
+use db_llm::coordinator::scheduler::SlotEngine;
+use db_llm::coordinator::serve::argmax;
+use db_llm::infer::NativeEngine;
+use db_llm::model::{ModelConfig, Weights};
+use db_llm::quant::FdbLinear;
+use db_llm::util::Pcg32;
+
+fn tiny() -> ModelConfig {
+    ModelConfig {
+        name: "t".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 192,
+        vocab: 96,
+        seq_len: 32,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    }
+}
+
+/// Build an engine; `fdb_stride` compiles every `stride`-th linear to
+/// the sparse FDB kernel (None = all dense, Some(1) = the full paper
+/// student), so the sweep covers dense, mixed, and fully-binarized
+/// layer stacks.
+fn build(seed: u64, slots: usize, fdb_stride: Option<usize>) -> NativeEngine {
+    let cfg = tiny();
+    let w = Weights::synthetic(&cfg, seed);
+    let mut fdb = BTreeMap::new();
+    if let Some(stride) = fdb_stride {
+        for (i, name) in cfg.linear_names().iter().enumerate() {
+            if i % stride == 0 {
+                fdb.insert(name.clone(), FdbLinear::from_weights(w.mat(name), 64));
+            }
+        }
+    }
+    NativeEngine::new(w, &fdb, cfg.seq_len, 7).with_slots(slots)
+}
+
+/// Advance `active` on both engines — sequential `step_slot` loop on
+/// `seq`, one batched `step_slots` call on `fus` — asserting the
+/// logits rows and the greedy tokens they induce are identical.
+fn step_both(
+    seq: &mut NativeEngine,
+    fus: &mut NativeEngine,
+    active: &[usize],
+    last: &mut [u32],
+) {
+    if active.is_empty() {
+        return;
+    }
+    let steps: Vec<(usize, u32)> = active.iter().map(|&s| (s, last[s])).collect();
+    let mut reference = Vec::with_capacity(steps.len());
+    for &(slot, token) in &steps {
+        reference.push(seq.step_slot(slot, token).unwrap());
+    }
+    let fused = fus.step_slots(&steps).unwrap();
+    assert_eq!(fused.len(), steps.len());
+    for (i, &slot) in active.iter().enumerate() {
+        assert_eq!(
+            reference[i], fused[i],
+            "slot {slot}: fused logits diverge from sequential"
+        );
+        last[slot] = argmax(&fused[i]) as u32;
+    }
+}
+
+/// The acceptance property: across seeds, prompt lengths, staggered
+/// prefill schedules and FDB/dense mixes, fused and sequential decode
+/// agree bit-for-bit on every logits row of every greedy stream.
+#[test]
+fn fused_step_slots_matches_sequential_streams() {
+    let vocab = tiny().vocab;
+    for seed in 1..=4u64 {
+        for fdb_stride in [None, Some(2), Some(1)] {
+            let slots = 4usize;
+            let mut seq = build(seed, slots, fdb_stride);
+            let mut fus = build(seed, slots, fdb_stride);
+            let mut rng = Pcg32::seeded(seed * 97 + 3);
+
+            let mut last = vec![0u32; slots];
+            let mut active: Vec<usize> = Vec::new();
+            for slot in 0..slots {
+                // mixed prompt lengths, admitted mid-flight: earlier
+                // slots keep stepping between admissions, so every row
+                // ends up at its own absolute position
+                let plen = rng.range(1, 7);
+                let prompt: Vec<u32> =
+                    (0..plen).map(|_| rng.range(0, vocab) as u32).collect();
+                let a = seq.prefill_slot(slot, &prompt).unwrap();
+                let b = fus.prefill_slot(slot, &prompt).unwrap();
+                assert_eq!(a, b, "prefill logits diverge on slot {slot}");
+                last[slot] = argmax(&b) as u32;
+                active.push(slot);
+                for _ in 0..rng.range(0, 3) {
+                    step_both(&mut seq, &mut fus, &active, &mut last);
+                }
+            }
+            // steady state: the full batch decodes together
+            for _ in 0..8 {
+                step_both(&mut seq, &mut fus, &active, &mut last);
+            }
+            // partial batches: only a shifting subset of slots steps,
+            // the rest keep their state frozen in both engines
+            for round in 0..4 {
+                let subset: Vec<usize> =
+                    (0..slots).filter(|s| (s + round) % 2 == 0).collect();
+                step_both(&mut seq, &mut fus, &subset, &mut last);
+            }
+        }
+    }
+}
+
+/// Refilled slots re-enter the batch cleanly: resetting and
+/// re-prefilling one slot mid-flight must not perturb the fused
+/// neighbours, and the refilled row fuses back in at its new position.
+#[test]
+fn fused_batch_survives_mid_flight_refill() {
+    let slots = 3usize;
+    let mut seq = build(9, slots, Some(2));
+    let mut fus = build(9, slots, Some(2));
+    let mut last = vec![0u32; slots];
+    for slot in 0..slots {
+        let prompt: Vec<u32> = (1..=(slot as u32 + 2)).collect();
+        let a = seq.prefill_slot(slot, &prompt).unwrap();
+        let b = fus.prefill_slot(slot, &prompt).unwrap();
+        assert_eq!(a, b);
+        last[slot] = argmax(&b) as u32;
+    }
+    let all: Vec<usize> = (0..slots).collect();
+    for _ in 0..3 {
+        step_both(&mut seq, &mut fus, &all, &mut last);
+    }
+    // slot 1 finishes and is refilled with a fresh prompt
+    seq.reset_slot(1);
+    fus.reset_slot(1);
+    let a = seq.prefill_slot(1, &[42, 17]).unwrap();
+    let b = fus.prefill_slot(1, &[42, 17]).unwrap();
+    assert_eq!(a, b, "refill prefill diverged");
+    last[1] = argmax(&b) as u32;
+    for _ in 0..4 {
+        step_both(&mut seq, &mut fus, &all, &mut last);
+    }
+}

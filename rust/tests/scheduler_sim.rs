@@ -80,6 +80,12 @@ impl SlotEngine for MockGen {
         Ok(self.logits(key, emitted + 1))
     }
 
+    fn step_slots_atomic(&self) -> bool {
+        // step_slot is infallible, so the default batched loop never
+        // fails mid-batch: let the scheduler drive the batched path
+        true
+    }
+
     fn reset_slot(&mut self, slot: usize) {
         self.state[slot] = None;
     }
@@ -280,6 +286,8 @@ fn zero_timeout_rejected_before_slot() {
 
 /// A deadline can expire while the request is still waiting for a slot:
 /// it is answered without a slot, and the slot-holder is unaffected.
+/// (The holder is admitted before the waiter arrives — EDF admission
+/// would otherwise hand the only slot to the tighter deadline.)
 #[test]
 fn queued_request_expires_without_a_slot() {
     let gen = MockGen::new(1, &[(1, 100), (2, 1)]);
@@ -287,14 +295,16 @@ fn queued_request_expires_without_a_slot() {
     let cfg = SchedulerConfig { slots: 1, ..Default::default() };
     let mut core = Scheduler::new(gen, clock.clone(), cfg);
     let holder = core.submit(job(1, 10, None));
+    let mut done = Vec::new();
+    done.extend(core.tick());
     let waiter = core.submit(job(2, 8, Some(3)));
 
-    let mut done = Vec::new();
     for _ in 0..4 {
         done.extend(core.tick());
         clock.advance(1);
     }
-    // after 4 ticks (clock 4 > 3) the waiter expired in-queue
+    // by the last tick (clock 3 >= deadline 3) the waiter expired
+    // in-queue
     assert_eq!(done.len(), 1);
     assert_eq!(done[0].id, waiter);
     assert_eq!(done[0].reason, FinishReason::Timeout);
@@ -305,6 +315,46 @@ fn queued_request_expires_without_a_slot() {
     assert_eq!(rest.len(), 1);
     assert_eq!(rest[0].id, holder);
     assert_eq!(rest[0].tokens.len(), 10, "holder decoded its full budget undisturbed");
+}
+
+/// EDF admission: a tight-deadline request that arrives *after* a
+/// loose-deadline one jumps the queue when the slot frees up — and the
+/// no-deadline request ranks last of all.
+#[test]
+fn edf_admits_tight_deadline_late_arrival_first() {
+    // holder pins the only slot; loose (10s budget), then nodeadline,
+    // then tight (50ms budget) queue up behind it in that order
+    let gen = MockGen::new(1, &[(1, 2), (2, 1), (3, 1), (4, 1)]);
+    let clock = ManualClock::default();
+    let cfg = SchedulerConfig { slots: 1, trace: true, ..Default::default() };
+    let mut core = Scheduler::new(gen, clock.clone(), cfg);
+    let holder = core.submit(job(1, 16, None));
+    let mut done = Vec::new();
+    done.extend(core.tick()); // holder admitted
+    let loose = core.submit(job(2, 16, Some(10_000)));
+    let nodeadline = core.submit(job(3, 16, None));
+    let tight = core.submit(job(4, 16, Some(50)));
+
+    done.extend(drain(&mut core));
+    assert_eq!(done.len(), 4, "every request answered exactly once");
+    assert!(done.iter().all(|c| c.reason == FinishReason::Done));
+
+    // admission order: holder (already in), then tight, loose,
+    // no-deadline — not arrival order
+    let admits: Vec<u64> = core
+        .take_trace()
+        .into_iter()
+        .filter_map(|ev| match ev {
+            TraceEvent::Admit { id, .. } => Some(id),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(admits, vec![holder, tight, loose, nodeadline]);
+    assert_eq!(
+        core.engine().prefill_log,
+        vec![(0, 1), (0, 4), (0, 2), (0, 3)],
+        "EDF must hand the freed slot to the tight deadline first"
+    );
 }
 
 /// Engine failure on one request degrades to an error completion; the
