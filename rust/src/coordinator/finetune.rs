@@ -23,13 +23,19 @@ use crate::runtime::{lit_f32, lit_i32, Runtime, Session};
 /// LLaMA's — documented in DESIGN.md §2).
 #[derive(Clone, Debug)]
 pub struct DadConfig {
+    /// distillation temperature-style weight on the DAD term
     pub gamma: f64,
+    /// weight of the plane-consistency regularizer
     pub lambda: f64,
+    /// AdamW learning rate over the flat α vector
     pub lr: f64,
+    /// passes over the calibration stream
     pub epochs: usize,
+    /// batches per epoch cap (bounds fine-tuning cost)
     pub max_batches: usize,
     /// re-derive planes from the fp weights after fine-tuning (Eq. 6-7)
     pub resplit: bool,
+    /// record a [`StepLog`] every this many steps
     pub log_every: usize,
 }
 
@@ -81,21 +87,28 @@ impl AdamW {
 /// One recorded step.
 #[derive(Clone, Debug)]
 pub struct StepLog {
+    /// optimizer step index
     pub step: usize,
+    /// total loss (ce + weighted dad)
     pub total: f64,
+    /// cross-entropy component
     pub ce: f64,
+    /// deviation-aware distillation component
     pub dad: f64,
 }
 
 /// The DAD fine-tuning driver for one FDB-quantized model.
 pub struct DadTrainer {
+    /// hyper-parameters this trainer was built with
     pub config: DadConfig,
+    /// model size tag (selects the AOT `dad_step_<size>` executable)
     pub size: String,
     alpha_names: Vec<String>,
     plane_names: Vec<String>,
     frozen_names: Vec<String>,
     /// flat α storage, in `alpha_names` order (each entry [g*out])
     alphas: BTreeMap<String, (Vec<f32>, Vec<i64>)>,
+    /// recorded loss curve (every `log_every` steps)
     pub history: Vec<StepLog>,
 }
 

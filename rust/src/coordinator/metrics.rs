@@ -8,15 +8,20 @@ const BUCKETS: usize = 40;
 
 /// Thread-safe metrics registry.
 pub struct Metrics {
+    /// well-formed request lines received
     pub requests: AtomicU64,
+    /// successful (non-error) replies sent, timeouts included
     pub responses: AtomicU64,
     /// requests answered with an error line (worker-side failures)
     pub errors: AtomicU64,
     /// requests rejected at admission because the shared queue was at
     /// `queue_cap` (backpressure, answered "server overloaded")
     pub rejected: AtomicU64,
+    /// tokens decoded into successful replies
     pub tokens_out: AtomicU64,
+    /// static batches collected by the worker pool
     pub batches: AtomicU64,
+    /// summed static batch sizes (mean occupancy numerator)
     pub batch_occupancy_sum: AtomicU64,
     /// gauge: requests enqueued but not yet pulled into a batch
     /// (incremented by connection threads, decremented by workers)
@@ -49,6 +54,14 @@ pub struct Metrics {
     /// rows whose per-layer linears shared one batched product with at
     /// least one neighbour slot
     pub fused_rows: AtomicU64,
+    /// prompt tokens served from the shared prefix cache instead of
+    /// being prefilled (cross-request prefix sharing, native backend)
+    pub prefix_hit_tokens: AtomicU64,
+    /// prompt tokens that paid prefill: uncached suffixes, plus whole
+    /// prompts when the cache missed or was bypassed
+    pub prefix_miss_tokens: AtomicU64,
+    /// prefix-cache blocks evicted under the `--prefix-cache-mb` budget
+    pub prefix_evictions: AtomicU64,
     /// log₂-bucketed latencies, bucket i = [2^i, 2^(i+1)) microseconds
     lat_buckets: [AtomicU64; BUCKETS],
 }
@@ -73,18 +86,23 @@ impl Default for Metrics {
             decode_batches: AtomicU64::new(0),
             decode_batch_rows: AtomicU64::new(0),
             fused_rows: AtomicU64::new(0),
+            prefix_hit_tokens: AtomicU64::new(0),
+            prefix_miss_tokens: AtomicU64::new(0),
+            prefix_evictions: AtomicU64::new(0),
             lat_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 }
 
 impl Metrics {
+    /// Record one request's end-to-end latency into the log₂ histogram.
     pub fn record_latency(&self, d: Duration) {
         let us = d.as_micros().max(1) as u64;
         let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
         self.lat_buckets[bucket].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one collected static batch and its row count.
     pub fn record_batch(&self, occupancy: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_occupancy_sum.fetch_add(occupancy as u64, Ordering::Relaxed);
@@ -108,6 +126,7 @@ impl Metrics {
         1u64 << BUCKETS
     }
 
+    /// Mean rows per collected static batch (0 before any batch).
     pub fn mean_batch_occupancy(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -136,11 +155,27 @@ impl Metrics {
         self.decode_batch_rows.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    /// Fraction of prompt tokens served from the shared prefix cache
+    /// (0 when the native scheduler never admitted anything, or prefix
+    /// sharing is off).  `hit / (hit + miss)`: a value of 0.5 means
+    /// half of all prompt-token work was skipped.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let hit = self.prefix_hit_tokens.load(Ordering::Relaxed);
+        let miss = self.prefix_miss_tokens.load(Ordering::Relaxed);
+        if hit + miss == 0 {
+            return 0.0;
+        }
+        hit as f64 / (hit + miss) as f64
+    }
+
+    /// One-line human-readable dump of every counter (the `[metrics]`
+    /// line `db-llm serve` prints every 10 s).
     pub fn snapshot(&self) -> String {
         format!(
             "req={} resp={} err={} rejected={} tokens={} batches={} occ={:.2} queue={} \
              saved_steps={} stalled={} slot_occ={:.2} refills={} timeouts={} \
-             fused_rows={} decode_batch={:.2} p50={}us p95={}us p99={}us",
+             fused_rows={} decode_batch={:.2} prefix_hit={} prefix_miss={} \
+             prefix_hit_rate={:.2} prefix_evict={} p50={}us p95={}us p99={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -156,6 +191,10 @@ impl Metrics {
             self.timeouts.load(Ordering::Relaxed),
             self.fused_rows.load(Ordering::Relaxed),
             self.mean_decode_batch(),
+            self.prefix_hit_tokens.load(Ordering::Relaxed),
+            self.prefix_miss_tokens.load(Ordering::Relaxed),
+            self.prefix_hit_rate(),
+            self.prefix_evictions.load(Ordering::Relaxed),
             self.latency_percentile(0.50),
             self.latency_percentile(0.95),
             self.latency_percentile(0.99),
@@ -232,6 +271,22 @@ mod tests {
         let s = m.snapshot();
         assert!(s.contains("fused_rows=12"), "{s}");
         assert!(s.contains("decode_batch=3.00"), "{s}");
+    }
+
+    #[test]
+    fn prefix_cache_counters_surface() {
+        let m = Metrics::default();
+        assert_eq!(m.prefix_hit_rate(), 0.0, "no prefix traffic -> 0, not NaN");
+        // 30 of 40 prompt tokens served from the cache, 2 evictions
+        m.prefix_hit_tokens.fetch_add(30, Ordering::Relaxed);
+        m.prefix_miss_tokens.fetch_add(10, Ordering::Relaxed);
+        m.prefix_evictions.fetch_add(2, Ordering::Relaxed);
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        let s = m.snapshot();
+        assert!(s.contains("prefix_hit=30"), "{s}");
+        assert!(s.contains("prefix_miss=10"), "{s}");
+        assert!(s.contains("prefix_hit_rate=0.75"), "{s}");
+        assert!(s.contains("prefix_evict=2"), "{s}");
     }
 
     #[test]

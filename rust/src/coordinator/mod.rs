@@ -3,6 +3,11 @@
 //! optimizer and state management live here) and the serving stack
 //! (TCP line-protocol server, dynamic batcher, static worker pool,
 //! iteration-level continuous-batching scheduler, metrics).
+//!
+//! The request lifecycle across these modules is documented end to end
+//! in `rust/docs/ARCHITECTURE.md`.
+
+#![warn(missing_docs)]
 
 pub mod batcher;
 pub mod finetune;

@@ -52,6 +52,7 @@ const SHUTDOWN_POLL: Duration = Duration::from_millis(50);
 /// origin does not matter — which is what lets simulations drive the
 /// deadline logic with a manually advanced clock.
 pub trait Clock {
+    /// Milliseconds since this clock's (arbitrary) origin.
     fn now_ms(&self) -> u64;
 }
 
@@ -77,10 +78,12 @@ impl Clock for WallClock {
 pub struct ManualClock(Arc<AtomicU64>);
 
 impl ManualClock {
+    /// Move time forward by `ms` milliseconds.
     pub fn advance(&self, ms: u64) {
         self.0.fetch_add(ms, Ordering::Relaxed);
     }
 
+    /// Jump to an absolute `ms` reading.
     pub fn set(&self, ms: u64) {
         self.0.store(ms, Ordering::Relaxed);
     }
@@ -96,6 +99,26 @@ impl Clock for ManualClock {
 /// batch-at-a-time [`super::serve::Generator`] contract.  Implemented
 /// by `infer::NativeEngine` (one `KvCache` per slot) and by the test
 /// doubles in `tests/scheduler_sim.rs`.
+///
+/// # Examples
+///
+/// The slot lifecycle the scheduler drives — prefill a free slot, step
+/// it once per tick, reset it when the request finishes:
+///
+/// ```no_run
+/// # use db_llm::coordinator::scheduler::SlotEngine;
+/// # fn run<E: SlotEngine>(engine: &mut E) -> anyhow::Result<()> {
+/// let logits = engine.prefill_slot(0, &[1, 2, 3])?; // admission
+/// let first = logits.iter().cloned().fold(f32::MIN, f32::max);
+/// let logits = engine.step_slot(0, 4)?; // one token per tick
+/// engine.reset_slot(0); // request finished: slot is reusable
+/// # let _ = (first, logits);
+/// # Ok(())
+/// # }
+/// ```
+///
+/// (`Scheduler::tick`'s example shows a complete scripted
+/// implementation.)
 pub trait SlotEngine {
     /// Number of independent decode slots this engine holds state for.
     fn slots(&self) -> usize;
@@ -141,6 +164,31 @@ pub trait SlotEngine {
 
     /// Drop `slot`'s sequence state (eviction / completion).
     fn reset_slot(&mut self, slot: usize);
+
+    /// Cumulative cross-request prefix-cache counters for *this*
+    /// engine, or `None` when the engine has no prefix sharing (the
+    /// default).  Counters are per-engine (not cache-global) so the
+    /// serving loop's per-worker metric deltas never double-count a
+    /// cache shared across workers.  The scheduler snapshots these into
+    /// [`SchedStats`] after every admission phase.
+    fn prefix_counters(&self) -> Option<PrefixCounters> {
+        None
+    }
+}
+
+/// Cumulative prefix-cache counters one engine accumulated (see
+/// [`SlotEngine::prefix_counters`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PrefixCounters {
+    /// prompt tokens served from cached prefix blocks instead of
+    /// running prefill
+    pub hit_tokens: u64,
+    /// prompt tokens that did run prefill (the uncached suffix, plus
+    /// whole prompts on cache bypass/miss)
+    pub miss_tokens: u64,
+    /// cache blocks this engine's publishes evicted under budget
+    /// pressure
+    pub evictions: u64,
 }
 
 /// Scheduler policy knobs.
@@ -169,7 +217,10 @@ impl Default for SchedulerConfig {
 
 /// One unit of work for the scheduler.
 pub struct Job {
+    /// prompt token ids (also the prefix-sharing key on engines with a
+    /// prefix cache — admission hands it to `prefill_slot` verbatim)
     pub prompt: Vec<u32>,
+    /// decode budget and sampling settings
     pub params: DecodeParams,
     /// per-request deadline override; `None` = the scheduler default
     pub timeout_ms: Option<u64>,
@@ -193,14 +244,18 @@ pub enum FinishReason {
 /// One finished request: every submitted job produces exactly one.
 #[derive(Clone, Debug)]
 pub struct Completion {
+    /// the id `submit` returned for this job
     pub id: u64,
+    /// decoded tokens (partial on timeout, empty on queued expiry)
     pub tokens: Vec<u32>,
+    /// how the request finished
     pub reason: FinishReason,
 }
 
 /// Scheduler decision log, recorded when `SchedulerConfig::trace` is
 /// set; the simulation tests assert exact event sequences.
 #[derive(Clone, Debug, PartialEq)]
+#[allow(missing_docs)] // field names (id/slot/at_ms/…) are the docs
 pub enum TraceEvent {
     /// request placed into a slot (its prefill ran this tick);
     /// `refill` marks admissions into a batch already mid-flight
@@ -237,6 +292,13 @@ pub struct SchedStats {
     /// rows whose linears shared one batched product with at least one
     /// neighbour
     pub fused_rows: u64,
+    /// prompt tokens served from the shared prefix cache instead of
+    /// prefilling (snapshot of [`SlotEngine::prefix_counters`])
+    pub prefix_hit_tokens: u64,
+    /// prompt tokens that paid prefill (uncached suffixes + bypasses)
+    pub prefix_miss_tokens: u64,
+    /// prefix-cache blocks evicted by this engine's publishes
+    pub prefix_evictions: u64,
 }
 
 struct Queued {
@@ -269,11 +331,14 @@ pub struct Scheduler<E: SlotEngine, C: Clock> {
     active: Vec<Option<Active>>,
     queue: VecDeque<Queued>,
     next_id: u64,
+    /// cumulative counters (see [`SchedStats`])
     pub stats: SchedStats,
     trace: Vec<TraceEvent>,
 }
 
 impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
+    /// Build over `engine`, clamping the configured slot count to the
+    /// engine's actual capacity.
     pub fn new(engine: E, clock: C, cfg: SchedulerConfig) -> Scheduler<E, C> {
         let slots = cfg.slots.clamp(1, engine.slots().max(1));
         Scheduler {
@@ -303,30 +368,37 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
         id
     }
 
+    /// Decode slots this scheduler plans over.
     pub fn slots(&self) -> usize {
         self.active.len()
     }
 
+    /// Slots not currently holding an active request.
     pub fn free_slots(&self) -> usize {
         self.active.iter().filter(|s| s.is_none()).count()
     }
 
+    /// Requests admitted to the core but not yet holding a slot.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when nothing is queued and no slot is active.
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty() && self.active.iter().all(|s| s.is_none())
     }
 
+    /// The wrapped engine (tests inspect scripted-engine state).
     pub fn engine(&self) -> &E {
         &self.engine
     }
 
+    /// The decision log recorded so far (`SchedulerConfig::trace`).
     pub fn trace(&self) -> &[TraceEvent] {
         &self.trace
     }
 
+    /// Take ownership of the decision log, leaving it empty.
     pub fn take_trace(&mut self) -> Vec<TraceEvent> {
         std::mem::take(&mut self.trace)
     }
@@ -335,10 +407,63 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
     /// slots (prefill + first token), then one decode step per active
     /// slot, then evict deadline-expired rows.  Every completed request
     /// (and only completed requests) comes back as a [`Completion`].
+    ///
+    /// # Examples
+    ///
+    /// Drive a scripted one-slot engine to completion, one token per
+    /// tick:
+    ///
+    /// ```
+    /// use anyhow::Result;
+    /// use db_llm::coordinator::scheduler::{
+    ///     Job, ManualClock, Scheduler, SchedulerConfig, SlotEngine,
+    /// };
+    /// use db_llm::coordinator::serve::DecodeParams;
+    ///
+    /// /// Always predicts token 7.
+    /// struct Const;
+    /// impl SlotEngine for Const {
+    ///     fn slots(&self) -> usize {
+    ///         1
+    ///     }
+    ///     fn prefill_slot(&mut self, _s: usize, _p: &[u32]) -> Result<Vec<f32>> {
+    ///         let mut l = vec![0.0; 16];
+    ///         l[7] = 1.0;
+    ///         Ok(l)
+    ///     }
+    ///     fn step_slot(&mut self, s: usize, _t: u32) -> Result<Vec<f32>> {
+    ///         self.prefill_slot(s, &[])
+    ///     }
+    ///     fn reset_slot(&mut self, _s: usize) {}
+    /// }
+    ///
+    /// let cfg = SchedulerConfig { slots: 1, ..Default::default() };
+    /// let mut core = Scheduler::new(Const, ManualClock::default(), cfg);
+    /// core.submit(Job {
+    ///     prompt: vec![1, 2],
+    ///     params: DecodeParams::greedy(3),
+    ///     timeout_ms: None,
+    ///     queued_for_ms: 0,
+    /// });
+    /// let mut replies = Vec::new();
+    /// while !core.is_idle() {
+    ///     replies.extend(core.tick());
+    /// }
+    /// assert_eq!(replies.len(), 1, "every submitted job completes exactly once");
+    /// assert_eq!(replies[0].tokens, vec![7, 7, 7]);
+    /// ```
     pub fn tick(&mut self) -> Vec<Completion> {
         let mut done = Vec::new();
         self.expire_queued(&mut done);
         self.admit(&mut done);
+        // admissions may have walked the prefix cache: snapshot the
+        // engine's cumulative counters (assignment, not accumulation —
+        // both sides are monotonic totals)
+        if let Some(p) = self.engine.prefix_counters() {
+            self.stats.prefix_hit_tokens = p.hit_tokens;
+            self.stats.prefix_miss_tokens = p.miss_tokens;
+            self.stats.prefix_evictions = p.evictions;
+        }
         // a tick that decodes nothing (e.g. it only expired queued
         // requests) must not count slot-ticks, or slot_occ deflates
         let active = (self.active.len() - self.free_slots()) as u64;
@@ -752,6 +877,15 @@ pub fn scheduler_loop<E: SlotEngine>(
             .decode_batch_rows
             .fetch_add(s.stepped_rows - last.stepped_rows, Ordering::Relaxed);
         metrics.fused_rows.fetch_add(s.fused_rows - last.fused_rows, Ordering::Relaxed);
+        metrics
+            .prefix_hit_tokens
+            .fetch_add(s.prefix_hit_tokens - last.prefix_hit_tokens, Ordering::Relaxed);
+        metrics
+            .prefix_miss_tokens
+            .fetch_add(s.prefix_miss_tokens - last.prefix_miss_tokens, Ordering::Relaxed);
+        metrics
+            .prefix_evictions
+            .fetch_add(s.prefix_evictions - last.prefix_evictions, Ordering::Relaxed);
         last = s;
         for c in completions {
             respond(&metrics, &mut pending, c);

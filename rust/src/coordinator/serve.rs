@@ -70,6 +70,7 @@ pub struct DecodeParams {
 }
 
 impl DecodeParams {
+    /// Greedy decoding for exactly `max_tokens` tokens, no stop token.
     pub fn greedy(max_tokens: usize) -> DecodeParams {
         DecodeParams { max_tokens, temperature: 0.0, stop: None }
     }
@@ -77,18 +78,25 @@ impl DecodeParams {
 
 /// An in-flight request.
 pub struct Request {
+    /// prompt token ids (validated non-empty at parse time)
     pub prompt: Vec<u32>,
+    /// per-request decode budget and sampling settings
     pub params: DecodeParams,
+    /// channel the owning connection thread waits on
     pub reply: Sender<Response>,
+    /// arrival instant (latency measurement + deadline origin)
     pub arrived: Instant,
     /// per-request deadline (wire field `timeout_ms`), honored by the
     /// continuous scheduler; `None` = the server default
     pub timeout_ms: Option<u64>,
 }
 
+/// One reply line: success, timeout (partial result) or error.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// decoded tokens (empty on error)
     pub tokens: Vec<u32>,
+    /// end-to-end latency in microseconds
     pub latency_us: u64,
     /// Some(message) degrades this response to an error line.
     pub error: Option<String>,
@@ -98,14 +106,17 @@ pub struct Response {
 }
 
 impl Response {
+    /// A successful reply carrying the decoded tokens.
     pub fn ok(tokens: Vec<u32>, latency_us: u64) -> Response {
         Response { tokens, latency_us, error: None, timeout: false }
     }
 
+    /// An error reply (rendered as `{"error": ...}`).
     pub fn err(message: impl Into<String>, latency_us: u64) -> Response {
         Response { tokens: Vec::new(), latency_us, error: Some(message.into()), timeout: false }
     }
 
+    /// A deadline-expired reply carrying the partial result.
     pub fn timed_out(tokens: Vec<u32>, latency_us: u64) -> Response {
         Response { tokens, latency_us, error: None, timeout: true }
     }
@@ -114,14 +125,51 @@ impl Response {
 /// One decoded batch: per-row outputs plus the number of forward steps
 /// actually run (≤ the largest row budget when rows stop early).
 pub struct Generation {
+    /// decoded tokens per row, in prompt order
     pub outputs: Vec<Vec<u32>>,
+    /// batch forward steps actually run (early exit can trail budgets)
     pub steps: usize,
 }
 
 /// Anything that can decode a batch of per-request rows — the
 /// XLA-backed `EngineWorker`, the KV-cached `infer::NativeEngine`, or
 /// a test double for driving `worker_loop` without artifacts.
+///
+/// # Examples
+///
+/// A scripted generator (the shape every test double takes):
+///
+/// ```
+/// use anyhow::Result;
+/// use db_llm::coordinator::serve::{DecodeParams, Generation, Generator};
+///
+/// /// Echoes each row's first prompt token, `max_tokens` times.
+/// struct Echo;
+/// impl Generator for Echo {
+///     fn generate(
+///         &mut self,
+///         prompts: &[Vec<u32>],
+///         params: &[DecodeParams],
+///     ) -> Result<Generation> {
+///         let outputs: Vec<Vec<u32>> = prompts
+///             .iter()
+///             .zip(params)
+///             .map(|(p, d)| vec![p[0]; d.max_tokens])
+///             .collect();
+///         let steps = params.iter().map(|d| d.max_tokens).max().unwrap_or(0);
+///         Ok(Generation { outputs, steps })
+///     }
+/// }
+///
+/// let mut e = Echo;
+/// let g = e.generate(&[vec![5]], &[DecodeParams::greedy(3)]).unwrap();
+/// assert_eq!(g.outputs, vec![vec![5, 5, 5]]);
+/// ```
 pub trait Generator {
+    /// Decode every row to completion under its own [`DecodeParams`]
+    /// (budget, temperature, stop token), returning one output per
+    /// prompt in order.  Errors fail the whole batch — the worker loop
+    /// degrades each affected request to an error reply.
     fn generate(&mut self, prompts: &[Vec<u32>], params: &[DecodeParams]) -> Result<Generation>;
 
     /// Largest number of rows one `generate` call accepts.  The AOT
@@ -141,12 +189,15 @@ pub trait Generator {
 
 /// Generation engine over a pinned session.
 pub struct Engine {
+    /// the pinned-weight XLA session this engine decodes through
     pub session: Session,
+    /// vocabulary size (logits row width)
     pub vocab: usize,
     rng: Pcg32,
 }
 
 impl Engine {
+    /// Build over a pinned session with a seeded sampling stream.
     pub fn new(session: Session, vocab: usize, seed: u64) -> Engine {
         Engine { session, vocab, rng: Pcg32::seeded(seed) }
     }
@@ -270,7 +321,9 @@ pub fn sample(row: &[f32], temperature: f32, rng: &mut Pcg32) -> usize {
 /// A worker's engine half: the runtime plus the engine pinned to it.
 /// Built inside the worker thread (PJRT handles are not `Send`).
 pub struct EngineWorker {
+    /// the PJRT runtime this worker thread owns
     pub rt: Runtime,
+    /// the engine pinned to that runtime
     pub engine: Engine,
 }
 

@@ -19,7 +19,7 @@ use crate::util::Pcg32;
 #[derive(Clone, Debug)]
 pub struct ZeroShotTask {
     pub context: Vec<u32>,
-    /// choices[answer] is the true continuation
+    /// `choices[answer]` is the true continuation
     pub choices: Vec<Vec<u32>>,
     pub answer: usize,
 }

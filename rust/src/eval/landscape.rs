@@ -22,7 +22,7 @@ pub struct Landscape {
     pub method: String,
     /// grid of perturbation magnitudes per axis (relative, e.g. ±0.5)
     pub axis: Vec<f64>,
-    /// loss[i][j] at (axis[i] along direction u, axis[j] along v)
+    /// `loss[i][j]` at (`axis[i]` along direction u, `axis[j]` along v)
     pub loss: Vec<Vec<f64>>,
     pub min_loss: f64,
     /// fraction of grid within 2x of this surface's own minimum

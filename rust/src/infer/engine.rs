@@ -18,16 +18,18 @@
 //! across requests.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::coordinator::scheduler::SlotEngine;
+use crate::coordinator::scheduler::{PrefixCounters, SlotEngine};
 use crate::coordinator::serve::{argmax, sample, DecodeParams, Generation, Generator};
 use crate::model::Weights;
 use crate::quant::FdbLinear;
 use crate::util::Pcg32;
 
-use super::kv::KvCache;
+use super::kv::{KvBlock, KvCache};
+use super::prefix::PrefixCache;
 use super::step::IncrementalForward;
 
 /// Native incremental generation engine.
@@ -35,6 +37,15 @@ pub struct NativeEngine {
     model: IncrementalForward,
     /// one KV cache per decode slot; `new` starts with a single slot
     caches: Vec<KvCache>,
+    /// cross-request prefix sharing, usually one cache shared across
+    /// every worker's engine (`with_prefix_cache`); `None` = every
+    /// prefill is cold
+    prefix: Option<Arc<Mutex<PrefixCache>>>,
+    /// per-slot pinned prefix blocks (released on reset / re-prefill)
+    slot_pins: Vec<Vec<u64>>,
+    /// this engine's cumulative hit/miss/eviction tally (per-engine so
+    /// per-worker metric deltas never double-count the shared cache)
+    prefix_counters: PrefixCounters,
     rng: Pcg32,
 }
 
@@ -61,6 +72,9 @@ impl NativeEngine {
         NativeEngine {
             model,
             caches: vec![KvCache::new(n_layers, window, d)],
+            prefix: None,
+            slot_pins: vec![Vec::new()],
+            prefix_counters: PrefixCounters::default(),
             rng: Pcg32::seeded(seed),
         }
     }
@@ -69,15 +83,91 @@ impl NativeEngine {
     /// cache of the same geometry) for the continuous scheduler.  Slot
     /// state is dropped; call before serving, not mid-request.
     pub fn with_slots(mut self, slots: usize) -> NativeEngine {
+        self.release_all_pins();
         let (n_layers, window, width) = {
             let c = &self.caches[0];
             (c.n_layers(), c.window, c.width)
         };
         self.caches = (0..slots.max(1)).map(|_| KvCache::new(n_layers, window, width)).collect();
+        self.slot_pins = (0..self.caches.len()).map(|_| Vec::new()).collect();
         // a fused tick can batch every slot at once: pre-size the row
         // scratch so the first decode tick pays no allocation
         self.model.reserve_rows(self.caches.len(), window);
         self
+    }
+
+    /// Attach a shared cross-request prefix cache: prefills first copy
+    /// the longest cached prefix match into the slot's `KvCache` and
+    /// only run the model over the uncached suffix, then publish the
+    /// prompt's full blocks back.  Every engine sharing one cache must
+    /// share model geometry (same factory) — block shapes are asserted
+    /// on copy-in.  Warm and cold prefills emit bit-identical logits
+    /// (`tests/prefix_cache.rs`).
+    pub fn with_prefix_cache(mut self, cache: Arc<Mutex<PrefixCache>>) -> NativeEngine {
+        self.prefix = Some(cache);
+        self
+    }
+
+    /// Unpin every prefix block `slot` was holding.
+    fn release_pins(&mut self, slot: usize) {
+        let Some(pins) = self.slot_pins.get_mut(slot) else { return };
+        if pins.is_empty() {
+            return;
+        }
+        let pins = std::mem::take(pins);
+        if let Some(pc) = &self.prefix {
+            if let Ok(mut g) = pc.lock() {
+                g.release(&pins);
+            }
+        }
+    }
+
+    fn release_all_pins(&mut self) {
+        for slot in 0..self.slot_pins.len() {
+            self.release_pins(slot);
+        }
+    }
+
+    /// Prefill `slot` through the prefix cache when one is attached:
+    /// walk the longest cached prefix, copy its K/V blocks in, run
+    /// [`IncrementalForward::prefill_suffix`] over the rest, publish
+    /// the prompt's blocks back.  Falls back to a cold prefill when
+    /// sharing is off, the prompt overflows the window (sliding-window
+    /// truncation relabels positions, so those prompts never share),
+    /// or the cache lock is poisoned.
+    fn prefill_cached(&mut self, slot: usize, prompt: &[u32]) -> Vec<f32> {
+        self.release_pins(slot);
+        self.caches[slot].clear();
+        let window = self.caches[slot].window;
+        let Some(pc) = self.prefix.clone() else {
+            return self.model.prefill(&mut self.caches[slot], prompt);
+        };
+        if prompt.len() > window {
+            self.prefix_counters.miss_tokens += window as u64;
+            return self.model.prefill(&mut self.caches[slot], prompt);
+        }
+        let mut pins = Vec::new();
+        let mut matched = 0usize;
+        let mut blocks: Vec<Arc<KvBlock>> = Vec::new();
+        if let Ok(mut g) = pc.lock() {
+            let (p, m) = g.acquire(prompt);
+            blocks.extend(p.iter().map(|h| g.block(*h).expect("pinned block vanished")));
+            (pins, matched) = (p, m);
+        }
+        // the bulk K/V copy-in runs *outside* the shared cache lock
+        // (the Arcs keep the rows alive): one worker's warm admission
+        // never stalls another worker's behind a memcpy
+        for block in &blocks {
+            self.caches[slot].append_block(block);
+        }
+        self.prefix_counters.hit_tokens += matched as u64;
+        self.prefix_counters.miss_tokens += (prompt.len() - matched) as u64;
+        let logits = self.model.prefill_suffix(&mut self.caches[slot], &prompt[matched..]);
+        if let Ok(mut g) = pc.lock() {
+            self.prefix_counters.evictions += g.publish(prompt, &self.caches[slot]);
+        }
+        self.slot_pins[slot] = pins;
+        logits
     }
 
     /// Number of FDB-compiled linears (diagnostics / startup log).
@@ -114,8 +204,8 @@ impl Generator for NativeEngine {
                 continue;
             }
             // the static path decodes every row on slot 0's cache
-            self.caches[0].clear();
-            let mut logits = self.model.prefill(&mut self.caches[0], prompt);
+            // (prefix-shared when a cache is attached)
+            let mut logits = self.prefill_cached(0, prompt);
             let out = &mut outputs[r];
             loop {
                 let idx = if p.temperature <= 0.0 {
@@ -152,9 +242,7 @@ impl SlotEngine for NativeEngine {
         for &t in prompt {
             anyhow::ensure!((t as usize) < vocab, "prompt token {t} out of vocab {vocab}");
         }
-        let cache = &mut self.caches[slot];
-        cache.clear();
-        Ok(self.model.prefill(cache, prompt))
+        Ok(self.prefill_cached(slot, prompt))
     }
 
     fn step_slot(&mut self, slot: usize, token: u32) -> Result<Vec<f32>> {
@@ -198,15 +286,33 @@ impl SlotEngine for NativeEngine {
     }
 
     fn reset_slot(&mut self, slot: usize) {
+        self.release_pins(slot);
         if let Some(cache) = self.caches.get_mut(slot) {
             cache.clear();
         }
+    }
+
+    /// Present only when a prefix cache is attached, so backends
+    /// without sharing keep `prefix_*` metrics at zero instead of
+    /// reporting all-miss traffic.
+    fn prefix_counters(&self) -> Option<PrefixCounters> {
+        self.prefix.as_ref().map(|_| self.prefix_counters)
+    }
+}
+
+impl Drop for NativeEngine {
+    /// Unpin everything on teardown: a worker that exits mid-request
+    /// must not leave its slots' prefix blocks pinned (and therefore
+    /// unevictable) in the shared cache for the process's lifetime.
+    fn drop(&mut self) {
+        self.release_all_pins();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::infer::PrefixCache;
     use crate::model::ModelConfig;
 
     fn tiny() -> ModelConfig {
@@ -347,6 +453,38 @@ mod tests {
         let got = e.step_slot(0, 3).unwrap();
         let expect = clean.step_slot(0, 3).unwrap();
         assert_eq!(got, expect, "failed fused call advanced slot state");
+    }
+
+    /// Engine-level prefix-sharing smoke check (the full property —
+    /// whole greedy streams, eviction, racing — lives in
+    /// `tests/prefix_cache.rs`): a warm prefill's logits are
+    /// bit-identical to a cold engine's, and the hit/miss counters
+    /// account exactly the block-granular reuse.
+    #[test]
+    fn prefix_cache_warms_prefill_bit_identically() {
+        let pc = Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20)));
+        let mut cold = engine(21).with_slots(2);
+        let mut warm = engine(21).with_slots(2).with_prefix_cache(pc.clone());
+        assert!(SlotEngine::prefix_counters(&cold).is_none());
+        let prompt: Vec<u32> = (0..9u32).collect();
+        let a = cold.prefill_slot(0, &prompt).unwrap();
+        // first warm-engine prefill is a miss; it publishes 2 full
+        // 4-token blocks (8 of the 9 prompt tokens)
+        let b = warm.prefill_slot(0, &prompt).unwrap();
+        assert_eq!(a, b, "cold-vs-cold engines diverge");
+        assert_eq!(pc.lock().unwrap().entries(), 2);
+        // second prefill hits both blocks and only runs 1 suffix token
+        let c = warm.prefill_slot(1, &prompt).unwrap();
+        assert_eq!(a, c, "warm prefill logits diverge from cold");
+        let ctr = SlotEngine::prefix_counters(&warm).unwrap();
+        assert_eq!(ctr.hit_tokens, 8);
+        assert_eq!(ctr.miss_tokens, 9 + 1);
+        // decode continues identically on the imported rows
+        for tok in [3u32, 5, 8] {
+            let x = cold.step_slot(0, tok).unwrap();
+            let y = warm.step_slot(1, tok).unwrap();
+            assert_eq!(x, y, "post-warm decode diverges");
+        }
     }
 
     /// Engine-level fused-vs-sequential check (the full property lives

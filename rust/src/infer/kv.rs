@@ -26,9 +26,51 @@ struct LayerKv {
     v: Vec<f32>,
 }
 
+/// A contiguous run of prefilled positions, exported from one
+/// [`KvCache`] so another cache (or the shared
+/// [`super::prefix::PrefixCache`]) can reuse the K/V rows without
+/// re-running the model.  Layout: `layers[l]` holds that layer's
+/// `(k, v)` rows as `[len, width]` row-major, row `i` being the
+/// block's `i`-th position in chronological order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvBlock {
+    /// positions in this block
+    pub len: usize,
+    /// row width (`n_heads * head_dim`)
+    pub width: usize,
+    /// per-layer `(k, v)` rows, each `[len * width]` row-major
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl KvBlock {
+    /// Heap bytes this block pins (the budget unit for
+    /// [`super::prefix::PrefixCache`] eviction).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|(k, v)| (k.len() + v.len()) * 4).sum()
+    }
+}
+
 /// Ring-buffered K/V for every layer of one sequence.  All layers share
 /// one chronology: `advance()` reserves the slot for the next position
 /// once, then every layer writes its rows into that slot.
+///
+/// # Examples
+///
+/// ```
+/// use db_llm::infer::KvCache;
+///
+/// // 1 layer, a 2-position window, rows of width 2
+/// let mut cache = KvCache::new(1, 2, 2);
+/// for t in 0..3u32 {
+///     let slot = cache.advance(); // reserve the ring slot once …
+///     let row = [t as f32, -(t as f32)];
+///     cache.write(0, slot, &row, &row); // … then write each layer
+/// }
+/// // the window keeps the most recent 2 of the 3 appended positions
+/// assert_eq!(cache.len(), 2);
+/// assert_eq!(cache.k_row(0, 0), &[1.0, -1.0]); // oldest survivor
+/// assert_eq!(cache.pos_of(1), 2); // absolute position of the newest
+/// ```
 pub struct KvCache {
     /// max cached positions (the sliding-window length)
     pub window: usize,
@@ -44,6 +86,8 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Allocate a cache of `window` positions × `width` floats per row
+    /// for each of `n_layers` layers (K and V each), zero-filled.
     pub fn new(n_layers: usize, window: usize, width: usize) -> KvCache {
         assert!(window > 0, "window must be positive");
         let layers = (0..n_layers)
@@ -63,6 +107,7 @@ impl KvCache {
         self.layers.len()
     }
 
+    /// True when no position is cached (fresh or just cleared).
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -120,6 +165,48 @@ impl KvCache {
         debug_assert!(i < self.len);
         let slot = (self.start + i) % self.window;
         &self.layers[layer].v[slot * self.width..(slot + 1) * self.width]
+    }
+
+    /// Copy chronological positions `[start, start + len)` out as a
+    /// [`KvBlock`] — the publish half of cross-request prefix sharing.
+    /// Callers must only export positions whose absolute position
+    /// equals their chronological index (i.e. before the window ever
+    /// slid), or the block would be mislabeled; `prefill` never slides
+    /// within one pass, so prompt blocks always qualify.
+    pub fn export_block(&self, start: usize, len: usize) -> KvBlock {
+        assert!(start + len <= self.len, "export range outside cached positions");
+        let layers = (0..self.layers.len())
+            .map(|l| {
+                let mut k = Vec::with_capacity(len * self.width);
+                let mut v = Vec::with_capacity(len * self.width);
+                for i in start..start + len {
+                    k.extend_from_slice(self.k_row(l, i));
+                    v.extend_from_slice(self.v_row(l, i));
+                }
+                (k, v)
+            })
+            .collect();
+        KvBlock { len, width: self.width, layers }
+    }
+
+    /// Append an exported block's positions — the copy-in half of
+    /// prefix sharing.  The block's rows are appended in chronological
+    /// order exactly as `advance` + `write` would have, so a warm
+    /// cache is byte-identical to one that prefilled the same tokens.
+    pub fn append_block(&mut self, block: &KvBlock) {
+        assert_eq!(block.width, self.width, "block width != cache width");
+        assert_eq!(block.layers.len(), self.layers.len(), "block layer count");
+        assert!(
+            self.len + block.len <= self.window && self.len == self.next_pos,
+            "prefix import must fit the window before any slide"
+        );
+        let w = self.width;
+        for i in 0..block.len {
+            let slot = self.advance();
+            for (l, (k, v)) in block.layers.iter().enumerate() {
+                self.write(l, slot, &k[i * w..(i + 1) * w], &v[i * w..(i + 1) * w]);
+            }
+        }
     }
 }
 
@@ -249,6 +336,52 @@ mod tests {
         assert_eq!(ring, vec![0], "stale entries must be cleared");
         advance_rows(&mut caches, &[0], &mut ring);
         assert_eq!(ring, vec![1]);
+    }
+
+    #[test]
+    fn export_then_append_is_byte_identical() {
+        // fill a source cache, export its first 3 positions, import
+        // them into a fresh cache: rows, positions and chronology must
+        // match what direct advance+write would have produced
+        let mut src = KvCache::new(2, 8, 2);
+        for t in 0..5u32 {
+            let slot = src.advance();
+            for l in 0..2 {
+                let row = [t as f32 + l as f32 * 10.0, -(t as f32)];
+                src.write(l, slot, &row, &row);
+            }
+        }
+        let block = src.export_block(0, 3);
+        assert_eq!(block.len, 3);
+        assert_eq!(block.bytes(), 2 * 2 * 3 * 2 * 4, "2 layers x (k,v) x 3 rows x 2 f32s");
+
+        let mut dst = KvCache::new(2, 8, 2);
+        dst.append_block(&block);
+        assert_eq!(dst.len(), 3);
+        assert_eq!(dst.next_pos(), 3);
+        for l in 0..2 {
+            for i in 0..3 {
+                assert_eq!(dst.k_row(l, i), src.k_row(l, i), "layer {l} row {i}");
+                assert_eq!(dst.v_row(l, i), src.v_row(l, i), "layer {l} row {i}");
+            }
+        }
+        // appending continues the chronology exactly where the block ends
+        let slot = dst.advance();
+        dst.write(0, slot, &[9.0, 9.0], &[9.0, 9.0]);
+        assert_eq!(dst.pos_of(3), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "must fit the window")]
+    fn append_block_rejects_overflow() {
+        let mut src = KvCache::new(1, 4, 1);
+        for _ in 0..4 {
+            let s = src.advance();
+            src.write(0, s, &[1.0], &[1.0]);
+        }
+        let block = src.export_block(0, 4);
+        let mut dst = KvCache::new(1, 3, 1);
+        dst.append_block(&block);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Native incremental inference: the KV-cached decode engine behind
 //! `serve --backend native`.
 //!
-//! Three pieces:
+//! Four pieces:
 //! - [`kv::KvCache`] — per-layer K/V ring buffers over a sliding
 //!   window (`runtime::session::recent_window` semantics);
 //! - [`step::IncrementalForward`] — prefill (one batched pass) +
@@ -18,12 +18,22 @@
 //!   (one `KvCache` per slot via `with_slots`, batched ticks via
 //!   `step_slots`) that the continuous batching scheduler drives:
 //!   prefill a freed slot mid-flight while the other slots keep
-//!   decoding, then advance all of them together.
+//!   decoding, then advance all of them together;
+//! - [`prefix::PrefixCache`] — cross-request prefix sharing: prefilled
+//!   K/V blocks keyed by token-prefix hash chains, ref-counted, LRU
+//!   under a byte budget, shared across every scheduler worker so an
+//!   admission only runs prefill over its *uncached suffix*
+//!   ([`step::IncrementalForward::prefill_suffix`]) — bit-identical to
+//!   a cold prefill.
+
+#![warn(missing_docs)]
 
 pub mod engine;
 pub mod kv;
+pub mod prefix;
 pub mod step;
 
 pub use engine::NativeEngine;
-pub use kv::KvCache;
+pub use kv::{KvBlock, KvCache};
+pub use prefix::{DEFAULT_BLOCK_TOKENS, PrefixCache, PrefixCacheStats};
 pub use step::{IncrementalForward, LinearOp};

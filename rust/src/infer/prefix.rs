@@ -1,0 +1,495 @@
+//! Cross-request prefix sharing for the native KV cache.
+//!
+//! Production traffic is dominated by requests sharing long common
+//! prefixes (system prompts, few-shot templates).  The FDB kernels keep
+//! *decode* cheap, so after PR 2–4 the repeated cost is **prefill**:
+//! every admission re-ran the full prompt even when an identical prefix
+//! was prefilled moments ago.  This module stores prefilled K/V rows in
+//! a shared, block-granular [`PrefixCache`] (vLLM-style) so a new
+//! request only runs the model over its *uncached suffix*.
+//!
+//! Design:
+//!
+//! - **Blocks.** The token stream is cut into fixed-size blocks
+//!   (`block_tokens`, default [`DEFAULT_BLOCK_TOKENS`]).  A block is
+//!   keyed by the *hash chain* of everything up to and including it
+//!   (`h₀ = H(block₀)`, `hᵢ = H(hᵢ₋₁, blockᵢ)`), so one key identifies
+//!   the whole prefix, not just the block's own tokens.  Entries also
+//!   store their tokens and verify them on lookup — a hash collision
+//!   degrades to a miss, never to wrong K/V.
+//! - **Ref-counting.** A decode slot that copies cached blocks pins
+//!   them ([`PrefixCache::acquire`] increments `refs`, the engine
+//!   releases on slot reset).  Pinned blocks are never evicted.
+//! - **LRU eviction under a byte budget.** Publishing past
+//!   `budget_bytes` evicts least-recently-used *unpinned leaf* blocks
+//!   (no cached extension, no active reader).  Evicting leaves first
+//!   keeps every stored chain walkable from block 0; if nothing is
+//!   evictable the publish is skipped — the cache never overshoots its
+//!   budget and never blocks decode.
+//! - **Bit-identical reuse.** Cached K/V rows are the bytes a cold
+//!   prefill wrote; the suffix pass
+//!   ([`super::step::IncrementalForward::prefill_suffix`]) is built on
+//!   the same per-row primitives as full prefill, so a warm prefill's
+//!   logits — and therefore its greedy token stream — are bit-identical
+//!   to a cold one (`tests/prefix_cache.rs` pins this).
+//!
+//! The cache is engine-agnostic state: `infer::NativeEngine` shares one
+//! `Arc<Mutex<PrefixCache>>` across every scheduler worker, so a prefix
+//! prefilled by one worker warms all of them.
+//!
+//! # Examples
+//!
+//! Publish a prefilled prompt, then warm a second cache from it:
+//!
+//! ```
+//! use db_llm::infer::{KvCache, PrefixCache};
+//!
+//! let mut cache = PrefixCache::new(2, 1 << 20); // 2-token blocks, 1 MiB
+//! let prompt = [10u32, 11, 12, 13, 14];
+//!
+//! // a cold request prefilled `prompt` into its slot's KvCache …
+//! let mut slot = KvCache::new(1, 8, 4);
+//! for _ in 0..prompt.len() {
+//!     let s = slot.advance();
+//!     slot.write(0, s, &[1.0; 4], &[2.0; 4]);
+//! }
+//! // … and publishes the full blocks (2 of them — 4 of 5 tokens)
+//! cache.publish(&prompt, &slot);
+//! assert_eq!(cache.entries(), 2);
+//!
+//! // a second request with the same prompt matches both blocks …
+//! let (pins, matched) = cache.acquire(&prompt);
+//! assert_eq!(matched, 4);
+//! // … copies the cached rows instead of recomputing them (the
+//! // returned `Arc` lets real engines copy outside the cache lock) …
+//! let mut warm = KvCache::new(1, 8, 4);
+//! for pin in &pins {
+//!     warm.append_block(&cache.block(*pin).unwrap());
+//! }
+//! assert_eq!(warm.len(), 4);
+//! // … and unpins them once its slot is reset
+//! cache.release(&pins);
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::kv::{KvBlock, KvCache};
+
+/// Default tokens per prefix block: small enough that short shared
+/// system prompts still produce full blocks, large enough that the
+/// per-block map overhead stays negligible.
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// Cache-wide introspection counters (monotonic except the gauges).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PrefixCacheStats {
+    /// blocks currently stored (gauge)
+    pub entries: u64,
+    /// bytes currently stored (gauge)
+    pub bytes: u64,
+    /// blocks inserted by `publish`
+    pub insertions: u64,
+    /// blocks evicted under budget pressure
+    pub evictions: u64,
+    /// publishes skipped because nothing was evictable under budget
+    pub rejected_inserts: u64,
+}
+
+struct Entry {
+    /// this block's own tokens (verified on lookup: a chain-hash
+    /// collision degrades to a miss, never to wrong K/V)
+    tokens: Vec<u32>,
+    /// chain hash of the parent block (`None` for block 0)
+    parent: Option<u64>,
+    /// shared so readers clone the `Arc` under the cache lock and do
+    /// the bulk K/V copy-in *outside* it (pins keep the entry alive,
+    /// and the `Arc` keeps the bytes alive even across an eviction)
+    block: Arc<KvBlock>,
+    /// active readers (slots mid-copy or mid-decode); pinned blocks
+    /// are never evicted
+    refs: usize,
+    /// cached blocks extending this prefix; only leaves are evictable
+    children: usize,
+    /// LRU clock value at last touch
+    last_used: u64,
+}
+
+/// Shared store of prefilled K/V blocks keyed by token-prefix hash
+/// chains, with ref-counting and LRU eviction under a byte budget.
+///
+/// See the [module docs](self) for the design and an end-to-end
+/// example; `infer::NativeEngine::with_prefix_cache` wires it under
+/// the serving stack.
+pub struct PrefixCache {
+    block_tokens: usize,
+    budget_bytes: usize,
+    used_bytes: usize,
+    entries: HashMap<u64, Entry>,
+    clock: u64,
+    stats: PrefixCacheStats,
+}
+
+/// FNV-1a over the parent chain hash and a block's tokens.
+fn chain_hash(parent: Option<u64>, tokens: &[u32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: [u8; 8]| {
+        for b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(parent.unwrap_or(u64::MAX).to_le_bytes());
+    for &t in tokens {
+        eat((t as u64).to_le_bytes());
+    }
+    h
+}
+
+impl PrefixCache {
+    /// Build a cache of `block_tokens`-sized blocks holding at most
+    /// `budget_bytes` of K/V rows.  A zero budget is valid: every
+    /// publish is refused, every lookup misses — the disabled form the
+    /// CLI maps `--prefix-cache-mb 0` to.
+    pub fn new(block_tokens: usize, budget_bytes: usize) -> PrefixCache {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        PrefixCache {
+            block_tokens,
+            budget_bytes,
+            used_bytes: 0,
+            entries: HashMap::new(),
+            clock: 0,
+            stats: PrefixCacheStats::default(),
+        }
+    }
+
+    /// Tokens per block (lookup / publish granularity).
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Blocks currently stored.
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Bytes of K/V rows currently stored (always ≤ the budget).
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    /// Introspection counters (entries/bytes gauges refreshed here).
+    pub fn stats(&self) -> PrefixCacheStats {
+        let mut s = self.stats;
+        s.entries = self.entries.len() as u64;
+        s.bytes = self.used_bytes as u64;
+        s
+    }
+
+    /// Walk the longest cached chain matching `prompt`, pin every
+    /// matched block (`refs += 1`), and return the pinned chain hashes
+    /// plus the matched token count.  The caller copies each block via
+    /// [`block`](Self::block) and must pair this with exactly one
+    /// [`release`](Self::release) once the slot is done with them.
+    ///
+    /// Never matches the *entire* prompt: at least one suffix token is
+    /// always left for the model to run, because the last position's
+    /// forward is what produces the first decoded token's logits.
+    pub fn acquire(&mut self, prompt: &[u32]) -> (Vec<u64>, usize) {
+        self.clock += 1;
+        let b = self.block_tokens;
+        let mut pins = Vec::new();
+        let mut parent = None;
+        let mut matched = 0usize;
+        // `end < prompt.len()` (strict): a full-prompt match holds its
+        // last block back so the suffix is never empty
+        while matched + b < prompt.len() {
+            let tokens = &prompt[matched..matched + b];
+            let h = chain_hash(parent, tokens);
+            match self.entries.get_mut(&h) {
+                // the entry must match the block's own tokens AND its
+                // parent chain — by induction the whole prefix is then
+                // token-verified, so a 64-bit chain-hash collision can
+                // only ever degrade to a miss, never to wrong K/V
+                Some(e) if e.tokens == tokens && e.parent == parent => {
+                    e.refs += 1;
+                    e.last_used = self.clock;
+                    pins.push(h);
+                    parent = Some(h);
+                    matched += b;
+                }
+                // absent, or a hash collision: stop at the last good block
+                _ => break,
+            }
+        }
+        (pins, matched)
+    }
+
+    /// The K/V rows behind a pinned chain hash.  Returns a clone of
+    /// the entry's `Arc` so the caller can drop the cache lock before
+    /// copying the rows into a slot's `KvCache` — one worker's bulk
+    /// copy-in must not stall every other worker's admission.
+    pub fn block(&self, hash: u64) -> Option<Arc<KvBlock>> {
+        self.entries.get(&hash).map(|e| e.block.clone())
+    }
+
+    /// Unpin blocks previously pinned by [`acquire`](Self::acquire).
+    pub fn release(&mut self, pins: &[u64]) {
+        for h in pins {
+            if let Some(e) = self.entries.get_mut(h) {
+                e.refs = e.refs.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Publish the full blocks of a freshly prefilled `prompt` whose
+    /// K/V rows sit in `cache` (chronological row `i` = prompt position
+    /// `i`).  Existing blocks are refreshed (LRU) and deduplicated —
+    /// two requests racing the same cold prefix store its bytes once.
+    /// Returns the number of evictions the inserts forced.
+    pub fn publish(&mut self, prompt: &[u32], cache: &KvCache) -> u64 {
+        self.clock += 1;
+        let b = self.block_tokens;
+        let mut parent = None;
+        let mut start = 0usize;
+        let mut evicted = 0u64;
+        // the chain is pinned as it is walked so budget-pressure
+        // eviction for a later block can never take an earlier block of
+        // this very chain (released before returning)
+        let mut walked: Vec<u64> = Vec::new();
+        while start + b <= prompt.len() && start + b <= cache.len() {
+            let tokens = &prompt[start..start + b];
+            let h = chain_hash(parent, tokens);
+            match self.entries.get_mut(&h) {
+                // same tokens+parent verification as `acquire`: only a
+                // true duplicate refreshes, a collision stops the walk
+                Some(e) if e.tokens == tokens && e.parent == parent => {
+                    e.last_used = self.clock;
+                    e.refs += 1;
+                }
+                Some(_) => {
+                    // collision on the chain key: storing would corrupt
+                    // the chain, so stop publishing this prompt here
+                    break;
+                }
+                None => {
+                    let block = cache.export_block(start, b);
+                    let need = block.bytes();
+                    evicted += self.evict_for(need);
+                    if self.used_bytes + need > self.budget_bytes {
+                        // nothing (more) evictable: skip the rest of the
+                        // chain — a child without its parent would be
+                        // unreachable anyway
+                        self.stats.rejected_inserts += 1;
+                        break;
+                    }
+                    self.used_bytes += need;
+                    self.stats.insertions += 1;
+                    if let Some(p) = parent {
+                        if let Some(pe) = self.entries.get_mut(&p) {
+                            pe.children += 1;
+                        }
+                    }
+                    self.entries.insert(
+                        h,
+                        Entry {
+                            tokens: tokens.to_vec(),
+                            parent,
+                            block: Arc::new(block),
+                            refs: 1,
+                            children: 0,
+                            last_used: self.clock,
+                        },
+                    );
+                }
+            }
+            walked.push(h);
+            parent = Some(h);
+            start += b;
+        }
+        self.release(&walked);
+        evicted
+    }
+
+    /// Evict least-recently-used unpinned leaves until `need` more
+    /// bytes fit the budget (or nothing evictable remains).  Returns
+    /// the number of blocks evicted.
+    fn evict_for(&mut self, need: usize) -> u64 {
+        let mut evicted = 0u64;
+        while self.used_bytes + need > self.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.refs == 0 && e.children == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&h, _)| h);
+            let Some(h) = victim else { break };
+            let e = self.entries.remove(&h).expect("victim vanished");
+            self.used_bytes -= e.block.bytes();
+            if let Some(p) = e.parent {
+                if let Some(pe) = self.entries.get_mut(&p) {
+                    pe.children = pe.children.saturating_sub(1);
+                }
+            }
+            self.stats.evictions += 1;
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A KvCache standing in for a prefilled slot: position `i`'s K
+    /// row starts with `seed + i`, so block contents are position- and
+    /// request-distinguishable.
+    fn filled(n: usize, seed: f32) -> KvCache {
+        let mut c = KvCache::new(1, 32, 2);
+        for i in 0..n {
+            let s = c.advance();
+            let row = [seed + i as f32, 1.0];
+            c.write(0, s, &row, &row);
+        }
+        c
+    }
+
+    #[test]
+    fn acquire_walks_longest_chain_and_pins() {
+        let mut pc = PrefixCache::new(2, 1 << 20);
+        let prompt = [1u32, 2, 3, 4, 5, 6];
+        pc.publish(&prompt, &filled(6, 0.0));
+        assert_eq!(pc.entries(), 3);
+
+        // identical prompt: all blocks short of the suffix rule match
+        let (pins, matched) = pc.acquire(&[1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(matched, 6);
+        assert_eq!(pins.len(), 3);
+        // diverging third block: chain stops after two
+        let (pins2, matched2) = pc.acquire(&[1, 2, 3, 4, 9, 9, 9]);
+        assert_eq!(matched2, 4);
+        assert_eq!(pins2.len(), 2);
+        // diverging first token: nothing matches
+        let (pins3, matched3) = pc.acquire(&[9, 2, 3, 4]);
+        assert!(pins3.is_empty());
+        assert_eq!(matched3, 0);
+        pc.release(&pins);
+        pc.release(&pins2);
+    }
+
+    #[test]
+    fn never_matches_the_entire_prompt() {
+        let mut pc = PrefixCache::new(2, 1 << 20);
+        let prompt = [1u32, 2, 3, 4];
+        pc.publish(&prompt, &filled(4, 0.0));
+        // prompt == cached prefix: the last block is held back so the
+        // suffix pass still has ≥ 1 token to run
+        let (pins, matched) = pc.acquire(&prompt);
+        assert_eq!(matched, 2, "full-prompt match must leave a suffix");
+        assert_eq!(pins.len(), 1);
+        pc.release(&pins);
+    }
+
+    #[test]
+    fn publish_deduplicates_racing_prefixes() {
+        let mut pc = PrefixCache::new(2, 1 << 20);
+        let prompt = [1u32, 2, 3, 4];
+        pc.publish(&prompt, &filled(4, 0.0));
+        let bytes = pc.used_bytes();
+        // the losing racer publishes the same prefix: no growth
+        pc.publish(&prompt, &filled(4, 0.0));
+        assert_eq!(pc.used_bytes(), bytes, "racing publish must not double-store");
+        assert_eq!(pc.entries(), 2);
+        assert_eq!(pc.stats().insertions, 2);
+    }
+
+    #[test]
+    fn lru_evicts_unpinned_leaves_first() {
+        // budget fits exactly two 2-token blocks of width 2 (1 layer)
+        let block_bytes = filled(2, 0.0).export_block(0, 2).bytes();
+        let mut pc = PrefixCache::new(2, 2 * block_bytes);
+        pc.publish(&[1, 2], &filled(2, 0.0));
+        pc.publish(&[3, 4], &filled(2, 10.0));
+        assert_eq!(pc.entries(), 2);
+        // pin [1,2] (an active slot is reading it), then publish a third
+        // prefix: the unpinned [3,4] must be the victim
+        let (pins, matched) = pc.acquire(&[1, 2, 99]);
+        assert_eq!(matched, 2);
+        pc.publish(&[5, 6], &filled(2, 20.0));
+        assert_eq!(pc.entries(), 2);
+        assert!(pc.used_bytes() <= 2 * block_bytes);
+        let (gone, m) = pc.acquire(&[3, 4, 99]);
+        assert_eq!(m, 0, "unpinned LRU block should have been evicted");
+        assert!(gone.is_empty());
+        let (kept, m) = pc.acquire(&[5, 6, 99]);
+        assert_eq!(m, 2, "newly published block must be resident");
+        assert_eq!(pc.stats().evictions, 1);
+        pc.release(&pins);
+        pc.release(&kept);
+    }
+
+    #[test]
+    fn chains_evict_leaf_first_and_stay_walkable() {
+        let block_bytes = filled(2, 0.0).export_block(0, 2).bytes();
+        // room for three blocks: one 3-block chain overflows by zero,
+        // then pressure evicts its *leaf*, never an interior block
+        let mut pc = PrefixCache::new(2, 3 * block_bytes);
+        pc.publish(&[1, 2, 3, 4, 5, 6], &filled(6, 0.0));
+        assert_eq!(pc.entries(), 3);
+        pc.publish(&[7, 8], &filled(2, 50.0));
+        // the chain's leaf (tokens [5,6]) was the only evictable entry
+        let (pins, matched) = pc.acquire(&[1, 2, 3, 4, 5, 6, 9]);
+        assert_eq!(matched, 4, "interior blocks must survive, leaf evicted");
+        let (pins2, m2) = pc.acquire(&[7, 8, 9]);
+        assert_eq!(m2, 2);
+        pc.release(&pins);
+        pc.release(&pins2);
+    }
+
+    #[test]
+    fn zero_budget_disables_storage() {
+        let mut pc = PrefixCache::new(2, 0);
+        pc.publish(&[1, 2, 3, 4], &filled(4, 0.0));
+        assert_eq!(pc.entries(), 0);
+        assert_eq!(pc.used_bytes(), 0);
+        let (pins, matched) = pc.acquire(&[1, 2, 3, 4]);
+        assert!(pins.is_empty());
+        assert_eq!(matched, 0);
+        assert!(pc.stats().rejected_inserts >= 1);
+    }
+
+    #[test]
+    fn pinned_blocks_survive_total_pressure() {
+        let block_bytes = filled(2, 0.0).export_block(0, 2).bytes();
+        let mut pc = PrefixCache::new(2, block_bytes);
+        pc.publish(&[1, 2], &filled(2, 0.0));
+        let (pins, _) = pc.acquire(&[1, 2, 3]);
+        // budget full and the only entry is pinned: publish must be
+        // refused, not evict the in-use block
+        pc.publish(&[3, 4], &filled(2, 9.0));
+        let (still, m) = pc.acquire(&[1, 2, 3]);
+        assert_eq!(m, 2, "pinned block evicted under pressure");
+        assert_eq!(pc.stats().rejected_inserts, 1);
+        pc.release(&pins);
+        pc.release(&still);
+        // unpinned now: the next publish may evict it
+        pc.publish(&[3, 4], &filled(2, 9.0));
+        let (_, m) = pc.acquire(&[3, 4, 5]);
+        assert_eq!(m, 2);
+    }
+
+    #[test]
+    fn release_is_idempotent_per_pin() {
+        let mut pc = PrefixCache::new(2, 1 << 20);
+        pc.publish(&[1, 2], &filled(2, 0.0));
+        let (pins, _) = pc.acquire(&[1, 2, 3]);
+        pc.release(&pins);
+        pc.release(&pins); // saturates at zero, no underflow panic
+        let (pins2, m) = pc.acquire(&[1, 2, 3]);
+        assert_eq!(m, 2);
+        pc.release(&pins2);
+    }
+}

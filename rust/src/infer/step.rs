@@ -13,18 +13,21 @@
 //!
 //! Equivalence contract: while the total sequence length stays within
 //! the cache window, prefill + steps produce the same logits as the
-//! batched forward over the same tokens (fp tolerance).  Once the
-//! window slides, the cached path keeps each evicted-era token's K/V as
-//! computed at its own decode time (streaming attention), whereas full
-//! recompute re-encodes the truncated window — the two decode modes
-//! legitimately diverge there (see `rust/README.md` §Backends).
+//! batched forward over the same tokens (fp tolerance) — and prefill,
+//! [`IncrementalForward::prefill_suffix`] and `step` are bit-identical
+//! to *each other* (all three run the same per-row primitives in the
+//! same order: `rmsnorm_row`, per-row-exact batched matmuls,
+//! per-position RoPE, `attend_one`), which is what makes warm
+//! (cached-prefix) and cold prefill emit identical token streams
+//! (`tests/prefix_cache.rs`).  Once the window slides, the cached path
+//! keeps each evicted-era token's K/V as computed at its own decode
+//! time (streaming attention), whereas full recompute re-encodes the
+//! truncated window — the two decode modes legitimately diverge there
+//! (see `rust/README.md` §Backends).
 
 use std::collections::BTreeMap;
 
-use crate::model::native::{
-    apply_rope, attend_one, causal_attention, rmsnorm, rmsnorm_row, rope_pos, rope_pos_into,
-    rope_row, rope_tables, silu,
-};
+use crate::model::native::{attend_one, rmsnorm_row, rope_pos, rope_pos_into, rope_row, silu};
 use crate::model::{ModelConfig, Weights};
 use crate::quant::kernel::{FdbExec, FdbScratch};
 use crate::quant::FdbLinear;
@@ -81,6 +84,7 @@ pub enum LinearOp {
 }
 
 impl LinearOp {
+    /// Input width.
     pub fn din(&self) -> usize {
         match self {
             LinearOp::Dense(w) => w.rows,
@@ -88,6 +92,7 @@ impl LinearOp {
         }
     }
 
+    /// Output width.
     pub fn dout(&self) -> usize {
         match self {
             LinearOp::Dense(w) => w.cols,
@@ -262,6 +267,7 @@ impl RowsScratch {
 /// [`LinearOp`]s, stateless across requests (all sequence state lives
 /// in the caller's [`KvCache`]).
 pub struct IncrementalForward {
+    /// the model geometry these operators were built from
     pub cfg: ModelConfig,
     tok_emb: Matrix,
     head: Matrix,
@@ -346,6 +352,7 @@ impl IncrementalForward {
         s.scores.reserve(window);
     }
 
+    /// Vocabulary size (logits row width).
     pub fn vocab(&self) -> usize {
         self.cfg.vocab
     }
@@ -363,48 +370,118 @@ impl IncrementalForward {
     /// be cleared); prompts longer than the window keep the last
     /// `cache.window` tokens.  Returns the logits row at the last
     /// prompt position — the distribution of the first decoded token.
+    ///
+    /// Implemented as [`prefill_suffix`](Self::prefill_suffix) from
+    /// position 0, so a cold prefill and a warm (cached-prefix) one run
+    /// the exact same code over the suffix rows — the root of the
+    /// bit-identical warm-vs-cold guarantee.
     pub fn prefill(&mut self, cache: &mut KvCache, tokens: &[u32]) -> Vec<f32> {
         assert!(cache.is_empty(), "prefill expects a cleared cache");
-        assert_eq!(cache.width, self.cfg.d_model, "cache width != d_model");
         let toks = recent_window(tokens, cache.window);
         assert!(!toks.is_empty(), "empty prompt");
-        let cfg = &self.cfg;
-        let (t, d) = (toks.len(), cfg.d_model);
-        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        self.prefill_suffix(cache, toks)
+    }
 
-        let mut x = Matrix::zeros(t, d);
-        for (i, &tok) in toks.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(self.tok_emb.row(tok as usize));
+    /// Batched prefill of a *suffix*: append `tokens` to the sequence
+    /// already cached (possibly none), attending over the cached prefix
+    /// rows plus the in-pass suffix rows.  This is the entry the
+    /// cross-request prefix cache uses — the matched prefix's K/V
+    /// blocks are copied in ([`KvCache::append_block`]) and only the
+    /// uncached suffix pays model work.  Returns the logits at the last
+    /// suffix position.
+    ///
+    /// Requirements: the cache must not have slid (`next_pos == len`,
+    /// always true for imported prefixes) and prefix + suffix must fit
+    /// the window — callers with longer prompts take the cold
+    /// [`prefill`](Self::prefill) path instead.
+    ///
+    /// Equivalence: every per-row operation (rmsnorm, the batched
+    /// matmuls, RoPE, attention, residual adds) is independent of which
+    /// other rows share the batch, so splitting a prompt into
+    /// prefix-import + suffix passes is **bit-identical** to one cold
+    /// pass over the whole prompt.
+    pub fn prefill_suffix(&mut self, cache: &mut KvCache, tokens: &[u32]) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let (d, d_ff) = (cfg.d_model, cfg.d_ff);
+        let half = hd / 2;
+        let ts = tokens.len();
+        let base = cache.len();
+        assert!(ts > 0, "empty suffix");
+        assert_eq!(cache.width, d, "cache width != d_model");
+        assert_eq!(cache.next_pos(), base, "suffix prefill needs an unslid cache");
+        assert!(base + ts <= cache.window, "prefix + suffix overflow the window");
+        for &t in tokens {
+            assert!((t as usize) < cfg.vocab, "token {t} out of vocab");
         }
-        let (cos, sin) = rope_tables(t, hd, cfg.rope_theta);
-        // cache is empty and t <= window: no eviction during the pass
-        let slots: Vec<usize> = (0..t).map(|_| cache.advance()).collect();
+
+        let s = &mut self.rows_scratch;
+        s.ensure(ts, d, half);
+        // embeddings + per-position RoPE at absolute positions
+        // base..base+ts, then reserve the ring slots (no eviction: the
+        // whole sequence fits the window)
+        for (i, &tok) in tokens.iter().enumerate() {
+            rope_pos_into(
+                base + i,
+                hd,
+                cfg.rope_theta,
+                &mut s.cos[i * half..(i + 1) * half],
+                &mut s.sin[i * half..(i + 1) * half],
+            );
+            s.x.row_mut(i).copy_from_slice(self.tok_emb.row(tok as usize));
+        }
+        s.ring.clear();
+        for _ in 0..ts {
+            s.ring.push(cache.advance());
+        }
 
         for (l, layer) in self.layers.iter().enumerate() {
-            let hn = rmsnorm(&x, &layer.attn_norm, cfg.rmsnorm_eps);
-            let mut q = layer.wq.matmul(&hn);
-            let mut k = layer.wk.matmul(&hn);
-            let v = layer.wv.matmul(&hn);
-            apply_rope(&mut q, h, hd, &cos, &sin);
-            apply_rope(&mut k, h, hd, &cos, &sin);
-            for (i, &slot) in slots.iter().enumerate() {
-                cache.write(l, slot, k.row(i), v.row(i));
+            // attention: batched projections, per-row rope/append, then
+            // each suffix row attends over prefix + suffix rows ≤ it
+            rmsnorm_rows(&s.x, &layer.attn_norm, cfg.rmsnorm_eps, &mut s.hn);
+            layer.wq.matmul_rows(&s.hn, &mut s.q, &mut s.fdb);
+            layer.wk.matmul_rows(&s.hn, &mut s.k, &mut s.fdb);
+            layer.wv.matmul_rows(&s.hn, &mut s.v, &mut s.fdb);
+            for i in 0..ts {
+                let cs = &s.cos[i * half..(i + 1) * half];
+                let sn = &s.sin[i * half..(i + 1) * half];
+                rope_row(s.q.row_mut(i), h, hd, cs, sn);
+                rope_row(s.k.row_mut(i), h, hd, cs, sn);
             }
-            let ctx = causal_attention(&q, &k, &v, h, hd);
-            let proj = layer.wo.matmul(&ctx);
-            x = x.add(&proj);
-            let hn = rmsnorm(&x, &layer.mlp_norm, cfg.rmsnorm_eps);
-            let gate = layer.w_gate.matmul(&hn);
-            let up = layer.w_up.matmul(&hn);
-            let mut act = Matrix::zeros(t, cfg.d_ff);
-            for i in 0..t * cfg.d_ff {
-                act.data[i] = silu(gate.data[i]) * up.data[i];
+            for i in 0..ts {
+                cache.write(l, s.ring[i], s.k.row(i), s.v.row(i));
             }
-            let down = layer.w_down.matmul(&act);
-            x = x.add(&down);
+            for i in 0..ts {
+                attend_one(
+                    s.q.row(i),
+                    base + i + 1,
+                    |j| cache.k_row(l, j),
+                    |j| cache.v_row(l, j),
+                    h,
+                    hd,
+                    &mut s.scores,
+                    s.ctx.row_mut(i),
+                );
+            }
+            layer.wo.matmul_rows(&s.ctx, &mut s.proj, &mut s.fdb);
+            for (xi, &p) in s.x.data.iter_mut().zip(&s.proj.data) {
+                *xi += p;
+            }
+            // mlp
+            rmsnorm_rows(&s.x, &layer.mlp_norm, cfg.rmsnorm_eps, &mut s.hn);
+            layer.w_gate.matmul_rows(&s.hn, &mut s.gate, &mut s.fdb);
+            layer.w_up.matmul_rows(&s.hn, &mut s.up, &mut s.fdb);
+            set_shape(&mut s.act, ts, d_ff);
+            for i in 0..ts * d_ff {
+                s.act.data[i] = silu(s.gate.data[i]) * s.up.data[i];
+            }
+            layer.w_down.matmul_rows(&s.act, &mut s.down, &mut s.fdb);
+            for (xi, &p) in s.x.data.iter_mut().zip(&s.down.data) {
+                *xi += p;
+            }
         }
 
-        rmsnorm_row(x.row(t - 1), &self.final_norm, cfg.rmsnorm_eps, &mut self.scratch.hn);
+        rmsnorm_row(s.x.row(ts - 1), &self.final_norm, cfg.rmsnorm_eps, &mut self.scratch.hn);
         let mut logits = vec![0.0f32; cfg.vocab];
         dense_matvec(&self.head, &self.scratch.hn, &mut logits);
         logits
@@ -699,6 +776,73 @@ mod tests {
         let out = f.step_rows(&mut caches, &[]);
         assert!(out.is_empty());
         assert_eq!(caches[0].len(), 2, "empty fused step must not touch any cache");
+    }
+
+    /// The prefix-sharing foundation: prefilling `[0, split)` then
+    /// suffix-prefilling `[split, n)` must be *bit-identical* — logits
+    /// and every cached K/V row — to one cold pass over all `n` tokens,
+    /// for dense and FDB-mixed layers at every split point.
+    #[test]
+    fn prefill_split_is_bit_identical_to_cold() {
+        let cfg = tiny();
+        let w = Weights::synthetic(&cfg, 29);
+        let mut fdb = BTreeMap::new();
+        for (i, name) in cfg.linear_names().iter().enumerate() {
+            if i % 2 == 0 {
+                fdb.insert(name.clone(), FdbLinear::from_weights(w.mat(name), 64));
+            }
+        }
+        let toks: Vec<u32> = (0..10u32).map(|i| (i * 7) % cfg.vocab as u32).collect();
+        let mut cold = IncrementalForward::new(w.clone(), &fdb);
+        let mut cache_cold = KvCache::new(cfg.n_layers, cfg.seq_len, cfg.d_model);
+        let cold_logits = cold.prefill(&mut cache_cold, &toks);
+        for split in 1..toks.len() {
+            let mut warm = IncrementalForward::new(w.clone(), &fdb);
+            let mut cache = KvCache::new(cfg.n_layers, cfg.seq_len, cfg.d_model);
+            warm.prefill(&mut cache, &toks[..split]);
+            let warm_logits = warm.prefill_suffix(&mut cache, &toks[split..]);
+            assert_eq!(warm_logits, cold_logits, "split {split}: logits diverge");
+            for l in 0..cfg.n_layers {
+                for i in 0..toks.len() {
+                    assert_eq!(cache.k_row(l, i), cache_cold.k_row(l, i), "K {l}/{i}");
+                    assert_eq!(cache.v_row(l, i), cache_cold.v_row(l, i), "V {l}/{i}");
+                }
+            }
+        }
+    }
+
+    /// `step` is a 1-token `prefill_suffix`: appending one token either
+    /// way produces bit-identical logits and cache rows — the contract
+    /// that lets decoded positions feed future prefix matches.
+    #[test]
+    fn step_matches_one_token_suffix_bitwise() {
+        let cfg = tiny();
+        let w = Weights::synthetic(&cfg, 31);
+        let mut a = IncrementalForward::new(w.clone(), &BTreeMap::new());
+        let mut b = IncrementalForward::new(w, &BTreeMap::new());
+        let mk = || KvCache::new(cfg.n_layers, cfg.seq_len, cfg.d_model);
+        let (mut ca, mut cb) = (mk(), mk());
+        a.prefill(&mut ca, &[3, 1, 4]);
+        b.prefill(&mut cb, &[3, 1, 4]);
+        let la = a.step(&mut ca, 15);
+        let lb = b.prefill_suffix(&mut cb, &[15]);
+        assert_eq!(la, lb, "step and 1-token suffix prefill diverge");
+        for l in 0..cfg.n_layers {
+            assert_eq!(ca.k_row(l, 3), cb.k_row(l, 3));
+            assert_eq!(ca.v_row(l, 3), cb.v_row(l, 3));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow the window")]
+    fn prefill_suffix_rejects_window_overflow() {
+        let cfg = tiny();
+        let w = Weights::synthetic(&cfg, 33);
+        let mut f = IncrementalForward::new(w, &BTreeMap::new());
+        let mut cache = KvCache::new(cfg.n_layers, 4, cfg.d_model);
+        f.prefill(&mut cache, &[1, 2, 3]);
+        // 3 cached + 2 suffix > window 4: must panic, not slide silently
+        f.prefill_suffix(&mut cache, &[4, 5]);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!             [--backend native|xla] [--workers 2] [--max-batch 4]
 //!             [--linger-ms 20] [--queue-cap 1024] [--window T]
 //!             [--slots 4] [--timeout-ms N] [--no-refill]
+//!             [--prefix-cache-mb 64]
 //!   client    --addr 127.0.0.1:7878 --prompt 1,2,3 --max-tokens 8
 //!             [--temperature 0.7] [--stop 0] [--timeout-ms N]
 //!
@@ -27,7 +28,7 @@ use db_llm::coordinator::metrics::Metrics;
 use db_llm::coordinator::scheduler::{serve_continuous, SchedulerConfig};
 use db_llm::coordinator::serve::{serve, Engine, EngineWorker};
 use db_llm::data::TokenStream;
-use db_llm::infer::NativeEngine;
+use db_llm::infer::{NativeEngine, PrefixCache};
 use db_llm::eval::ppl::perplexity;
 use db_llm::eval::tables::{self, Method, TableOpts};
 use db_llm::runtime::{Runtime, Session};
@@ -157,6 +158,7 @@ fn print_help() {
                     [--backend native|xla] [--workers N] [--max-batch N]\n\
                     [--linger-ms N] [--queue-cap N] [--window T]\n\
                     [--slots N] [--timeout-ms N] [--no-refill]\n\
+                    [--prefix-cache-mb N]\n\
            client   --addr A --prompt 1,2,3 --max-tokens 8\n\
                     [--temperature T] [--stop TOKEN] [--timeout-ms N]\n\
          \n\
@@ -318,6 +320,10 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let slots: usize = flags.get("slots").map(|s| s.parse()).transpose()?.unwrap_or(4).max(1);
     let timeout_ms: Option<u64> = flags.get("timeout-ms").map(|s| s.parse()).transpose()?;
     let refill = !flags.contains_key("no-refill");
+    // cross-request prefix sharing budget (MiB of cached K/V blocks,
+    // shared across every scheduler worker); 0 disables sharing
+    let prefix_cache_mb: usize =
+        flags.get("prefix-cache-mb").map(|s| s.parse()).transpose()?.unwrap_or(64);
     let opts = opts_from_flags(flags);
     let metrics = Arc::new(Metrics::default());
     let running = Arc::new(AtomicBool::new(true));
@@ -331,6 +337,11 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             eprintln!("warning: --slots/--timeout-ms/--no-refill only apply to the \
                        continuous scheduler (--backend native); the xla path keeps the \
                        static batcher and ignores them");
+        }
+        if flags.contains_key("prefix-cache-mb") {
+            eprintln!("warning: --prefix-cache-mb only applies to --backend native \
+                       (the xla executable recomputes the full window every step and \
+                       has no KV cache to share); ignored");
         }
     } else if flags.contains_key("max-batch") || flags.contains_key("linger-ms") {
         eprintln!("warning: --max-batch/--linger-ms only apply to the static batcher \
@@ -358,35 +369,53 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
         )?,
         // the KV-cached incremental engine behind the iteration-level
         // continuous-batching scheduler: finished slots refill
-        // mid-flight, per-request deadlines get partial-result replies
-        "native" => serve_continuous(
-            move || {
-                let mut rt = Runtime::open(&dir)?;
-                let student = tables::make_student(&mut rt, &teacher, method, &opts, None)?;
-                let window = window_override.unwrap_or_else(|| rt.manifest.seq_len());
-                let engine =
-                    NativeEngine::new(student.weights, &student.fdb_layers, window, 42)
-                        .with_slots(slots);
-                eprintln!(
-                    "native engine ready (window {window}, {slots} slots, {} FDB-compiled \
-                     linears)",
-                    engine.n_fdb_ops()
-                );
-                Ok(engine)
-            },
-            &addr,
-            policy.queue_cap,
-            SchedulerConfig {
-                slots,
-                refill,
-                default_timeout_ms: timeout_ms,
-                seed: 42,
-                trace: false,
-            },
-            workers,
-            m2,
-            running.clone(),
-        )?,
+        // mid-flight, per-request deadlines get partial-result replies,
+        // and prompts share prefilled K/V prefixes across requests and
+        // workers through one PrefixCache
+        "native" => {
+            let prefix = (prefix_cache_mb > 0).then(|| {
+                Arc::new(std::sync::Mutex::new(PrefixCache::new(
+                    db_llm::infer::DEFAULT_BLOCK_TOKENS,
+                    prefix_cache_mb << 20,
+                )))
+            });
+            serve_continuous(
+                move || {
+                    let mut rt = Runtime::open(&dir)?;
+                    let student = tables::make_student(&mut rt, &teacher, method, &opts, None)?;
+                    let window = window_override.unwrap_or_else(|| rt.manifest.seq_len());
+                    let mut engine =
+                        NativeEngine::new(student.weights, &student.fdb_layers, window, 42)
+                            .with_slots(slots);
+                    if let Some(pc) = &prefix {
+                        engine = engine.with_prefix_cache(pc.clone());
+                    }
+                    eprintln!(
+                        "native engine ready (window {window}, {slots} slots, {} \
+                         FDB-compiled linears, prefix cache {})",
+                        engine.n_fdb_ops(),
+                        if prefix_cache_mb > 0 {
+                            format!("{prefix_cache_mb} MiB shared")
+                        } else {
+                            "off".to_string()
+                        },
+                    );
+                    Ok(engine)
+                },
+                &addr,
+                policy.queue_cap,
+                SchedulerConfig {
+                    slots,
+                    refill,
+                    default_timeout_ms: timeout_ms,
+                    seed: 42,
+                    trace: false,
+                },
+                workers,
+                m2,
+                running.clone(),
+            )?
+        }
         other => bail!("unknown backend {other} (expected native|xla)"),
     };
     println!(

@@ -149,7 +149,7 @@ impl FdbLinear {
     /// realized in closed form: for fixed planes the layer output is
     /// *linear* in the per-group scales,
     ///
-    ///   y_col = Σ_g α₁[g]·(X_g·b1_g) + α₂[g]·(X_g·b2_g),
+    ///   `y_col = Σ_g α₁[g]·(X_g·b1_g) + α₂[g]·(X_g·b2_g)`,
     ///
     /// so the reconstruction-optimal scales solve a small least-squares
     /// system per output column.  Alternating with plane re-assignment
@@ -241,7 +241,7 @@ impl FdbLinear {
     }
 }
 
-/// Σ_{k: bit k set} xs[k] — the bit-serial inner kernel.
+/// `Σ_{k: bit k set} xs[k]` — the bit-serial inner kernel.
 #[inline]
 pub fn bit_dot(mut word: u64, xs: &[f32]) -> f32 {
     debug_assert_eq!(xs.len(), WORD_BITS);

@@ -1,0 +1,292 @@
+//! Cross-request prefix sharing: warm (cached-prefix) prefill must be
+//! **bit-identical** to cold prefill — logits, K/V rows and therefore
+//! whole greedy token streams — plus the cache-policy edge cases:
+//! eviction under budget pressure mid-decode, two requests racing the
+//! same cold prefix across worker threads, and a cached-prefix request
+//! whose suffix is empty (prefix == full prompt).
+//!
+//! Everything is artifact-free (synthetic weights) and runs in every
+//! environment; CI runs this file as a named gate.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Barrier, Mutex};
+
+use db_llm::coordinator::scheduler::{
+    FinishReason, Job, ManualClock, SchedStats, Scheduler, SchedulerConfig, SlotEngine,
+};
+use db_llm::coordinator::serve::DecodeParams;
+use db_llm::infer::{NativeEngine, PrefixCache};
+use db_llm::model::{ModelConfig, Weights};
+use db_llm::quant::FdbLinear;
+
+fn tiny() -> ModelConfig {
+    ModelConfig {
+        name: "t".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 192,
+        vocab: 96,
+        seq_len: 32,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    }
+}
+
+/// Half the linears on the compiled FDB sparse kernel — the paper's
+/// decode path must share prefixes bit-identically too.
+fn half_fdb(cfg: &ModelConfig, w: &Weights) -> BTreeMap<String, FdbLinear> {
+    let mut fdb = BTreeMap::new();
+    for (i, name) in cfg.linear_names().iter().enumerate() {
+        if i % 2 == 0 {
+            fdb.insert(name.clone(), FdbLinear::from_weights(w.mat(name), 64));
+        }
+    }
+    fdb
+}
+
+fn engine(w: &Weights, fdb: &BTreeMap<String, FdbLinear>, slots: usize) -> NativeEngine {
+    NativeEngine::new(w.clone(), fdb, tiny().seq_len, 42).with_slots(slots)
+}
+
+/// Drain `jobs` through a fresh scheduler over `engine`; returns each
+/// job's greedy stream (in submit order) plus the final stats.
+fn run_sched(
+    engine: NativeEngine,
+    jobs: &[Vec<u32>],
+    budget: usize,
+) -> (Vec<Vec<u32>>, SchedStats) {
+    let cfg = SchedulerConfig { slots: SlotEngine::slots(&engine).min(2), ..Default::default() };
+    let mut core = Scheduler::new(engine, ManualClock::default(), cfg);
+    let ids: Vec<u64> = jobs
+        .iter()
+        .map(|p| {
+            core.submit(Job {
+                prompt: p.clone(),
+                params: DecodeParams::greedy(budget),
+                timeout_ms: None,
+                queued_for_ms: 0,
+            })
+        })
+        .collect();
+    let mut out = vec![Vec::new(); jobs.len()];
+    let mut guard = 0;
+    while !core.is_idle() {
+        for c in core.tick() {
+            assert_eq!(c.reason, FinishReason::Done, "unexpected completion {:?}", c.reason);
+            let idx = ids.iter().position(|&i| i == c.id).unwrap();
+            out[idx] = c.tokens;
+        }
+        guard += 1;
+        assert!(guard < 10_000, "scheduler failed to drain");
+    }
+    (out, core.stats)
+}
+
+/// The acceptance gate: the same shared-prefix traffic drained through
+/// a prefix-cached engine and a cold one produces **identical** greedy
+/// token streams, while the warm run demonstrably skipped prefill work
+/// (prefix_hit_tokens > 0).  Mixed FDB/dense layers, continuous
+/// batching with refills, 2 slots.
+#[test]
+fn warm_vs_cold_greedy_streams_are_bit_identical() {
+    let cfg = tiny();
+    let w = Weights::synthetic(&cfg, 61);
+    let fdb = half_fdb(&cfg, &w);
+    // 12-token shared prefix (3 blocks of 4) + distinct suffixes; one
+    // prompt is exactly the shared prefix (empty-suffix edge case goes
+    // through the same traffic mix)
+    let prefix: Vec<u32> = (0..12u32).map(|i| (i * 5) % cfg.vocab as u32).collect();
+    let jobs: Vec<Vec<u32>> = vec![
+        prefix.iter().copied().chain([70, 71]).collect(),
+        prefix.iter().copied().chain([80]).collect(),
+        prefix.clone(),
+        prefix.iter().copied().chain([90, 91, 92]).collect(),
+        prefix.iter().copied().chain([70, 71]).collect(), // exact repeat
+    ];
+
+    let (cold, cold_stats) = run_sched(engine(&w, &fdb, 2), &jobs, 6);
+    let pc = Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20)));
+    let warm_engine = engine(&w, &fdb, 2).with_prefix_cache(pc.clone());
+    let (warm, warm_stats) = run_sched(warm_engine, &jobs, 6);
+
+    assert_eq!(warm, cold, "warm and cold greedy streams diverge");
+    assert!(cold.iter().all(|s| s.len() == 6), "every request decoded its budget");
+    assert_eq!(cold_stats.prefix_hit_tokens, 0, "cold engine reports no prefix traffic");
+    assert_eq!(cold_stats.prefix_miss_tokens, 0);
+    assert!(
+        warm_stats.prefix_hit_tokens >= 3 * 12,
+        "at least the 3 later full-prefix requests should hit all 12 prefix tokens, got {}",
+        warm_stats.prefix_hit_tokens
+    );
+    assert!(warm_stats.prefix_miss_tokens > 0, "suffixes still pay prefill");
+    let g = pc.lock().unwrap();
+    assert!(g.entries() >= 3, "the shared prefix's blocks are resident");
+    assert!(g.used_bytes() <= 1 << 20);
+}
+
+/// Empty-suffix edge case in isolation: a prompt that is *exactly* a
+/// fully-cached prefix (a multiple of the block size) must still
+/// produce logits — the cache holds back the last block so the model
+/// always runs ≥ 1 suffix token — and stay bit-identical to cold.
+#[test]
+fn full_prompt_prefix_hit_keeps_a_nonempty_suffix() {
+    let cfg = tiny();
+    let w = Weights::synthetic(&cfg, 67);
+    let fdb = half_fdb(&cfg, &w);
+    let prompt: Vec<u32> = (0..16u32).collect(); // exactly 4 blocks of 4
+
+    let mut cold = engine(&w, &fdb, 1);
+    let a = cold.prefill_slot(0, &prompt).unwrap();
+
+    let pc = Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20)));
+    let mut warm = engine(&w, &fdb, 2).with_prefix_cache(pc.clone());
+    let b = warm.prefill_slot(0, &prompt).unwrap(); // cold publish
+    let c = warm.prefill_slot(1, &prompt).unwrap(); // full-prompt hit
+    assert_eq!(a, b);
+    assert_eq!(a, c, "empty-suffix warm prefill diverges from cold");
+    // 4 blocks published, but only 3 may match (suffix rule): the last
+    // block's 4 tokens run through the model
+    let counters = SlotEngine::prefix_counters(&warm).unwrap();
+    assert_eq!(counters.hit_tokens, 12);
+    assert_eq!(counters.miss_tokens, 16 + 4);
+    // decode must continue identically on the imported rows
+    for tok in [9u32, 33, 57] {
+        let x = cold.step_slot(0, tok).unwrap();
+        let y = warm.step_slot(1, tok).unwrap();
+        assert_eq!(x, y, "decode after full-prompt hit diverges");
+    }
+}
+
+/// Eviction under budget pressure mid-decode: blocks pinned by an
+/// in-flight request survive (the publish that can't fit is refused),
+/// the pinned request decodes on unaffected, and once it resets the
+/// pressure evicts its blocks LRU-first.
+#[test]
+fn budget_pressure_mid_decode_spares_pinned_blocks() {
+    let cfg = tiny();
+    let w = Weights::synthetic(&cfg, 71);
+    let fdb = BTreeMap::new();
+    let prompt_a: Vec<u32> = (0..8u32).collect(); // 2 blocks of 4
+    let prompt_b: Vec<u32> = (40..48u32).collect(); // 2 different blocks
+
+    // budget: exactly A's two published blocks
+    let block_bytes = 2 * cfg.n_layers * 4 * cfg.d_model * 4; // (K+V) rows
+    let pc = Arc::new(Mutex::new(PrefixCache::new(4, 2 * block_bytes)));
+    let mut e = engine(&w, &fdb, 2).with_prefix_cache(pc.clone());
+
+    // cold publish of A, then a warm re-admission pins A's blocks
+    e.prefill_slot(0, &prompt_a).unwrap();
+    e.reset_slot(0);
+    e.prefill_slot(0, &prompt_a).unwrap();
+    assert_eq!(SlotEngine::prefix_counters(&e).unwrap().hit_tokens, 4);
+
+    // mid-decode of slot 0, B's publish hits the budget: A's *pinned*
+    // first block survives (only its unpinned second block may evict),
+    // and the part of B's chain that cannot fit is refused
+    let mut cold = engine(&w, &fdb, 2);
+    cold.prefill_slot(0, &prompt_a).unwrap();
+    e.prefill_slot(1, &prompt_b).unwrap();
+    {
+        let mut g = pc.lock().unwrap();
+        assert!(g.used_bytes() <= 2 * block_bytes, "budget overshot");
+        assert!(g.stats().rejected_inserts >= 1, "B's overflow publish should be refused");
+        assert!(g.stats().evictions <= 1, "only the unpinned A leaf may evict");
+        let probe: Vec<u32> = prompt_a.iter().copied().chain([88]).collect();
+        let (pins, matched) = g.acquire(&probe);
+        assert_eq!(matched, 4, "the pinned A block must survive the pressure");
+        g.release(&pins);
+    }
+    for tok in [5u32, 60, 2] {
+        let x = cold.step_slot(0, tok).unwrap();
+        let y = e.step_slot(0, tok).unwrap();
+        assert_eq!(x, y, "pinned request's decode disturbed by budget pressure");
+    }
+
+    // request A finishes: its pins release, and B's next publish evicts
+    e.reset_slot(0);
+    e.reset_slot(1);
+    e.prefill_slot(1, &prompt_b).unwrap();
+    let g = pc.lock().unwrap();
+    assert!(g.stats().evictions >= 1, "unpinned LRU blocks evict under pressure");
+    assert!(g.used_bytes() <= 2 * block_bytes);
+    let counters = SlotEngine::prefix_counters(&e).unwrap();
+    assert!(counters.evictions >= 1, "engine counters surface the evictions");
+}
+
+/// Two workers racing the same cold prefix on one shared cache: both
+/// miss, both prefill, both publish — the cache stores the bytes once,
+/// nobody deadlocks, and both decode the cold reference stream.
+#[test]
+fn racing_cold_prefix_is_stored_once_and_streams_match() {
+    let cfg = tiny();
+    let w = Weights::synthetic(&cfg, 73);
+    let fdb = half_fdb(&cfg, &w);
+    let prompt: Vec<u32> = (0..12u32).map(|i| (i * 3 + 1) % cfg.vocab as u32).collect();
+
+    // cold reference stream
+    let mut reference = Vec::new();
+    {
+        let mut cold = engine(&w, &fdb, 1);
+        let mut logits = cold.prefill_slot(0, &prompt).unwrap();
+        for _ in 0..5 {
+            let tok = db_llm::coordinator::serve::argmax(&logits) as u32;
+            reference.push(tok);
+            logits = cold.step_slot(0, tok).unwrap();
+        }
+    }
+
+    let pc = Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20)));
+    let barrier = Arc::new(Barrier::new(2));
+    let mut handles = Vec::new();
+    for t in 0..2 {
+        let (pc, barrier) = (pc.clone(), barrier.clone());
+        let (w, fdb, prompt) = (w.clone(), fdb.clone(), prompt.clone());
+        handles.push(std::thread::spawn(move || {
+            let mut e = NativeEngine::new(w, &fdb, tiny().seq_len, 42 + t)
+                .with_slots(1)
+                .with_prefix_cache(pc);
+            barrier.wait(); // both prefill the same cold prefix at once
+            let mut logits = e.prefill_slot(0, &prompt).unwrap();
+            let mut stream = Vec::new();
+            for _ in 0..5 {
+                let tok = db_llm::coordinator::serve::argmax(&logits) as u32;
+                stream.push(tok);
+                logits = e.step_slot(0, tok).unwrap();
+            }
+            stream
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), reference, "racing stream diverges from cold");
+    }
+    let g = pc.lock().unwrap();
+    // 12 tokens / block 4 = 3 blocks (the chain may stop one short if
+    // one racer matched the other's freshly published blocks), stored
+    // exactly once
+    assert!(g.entries() == 3 || g.entries() == 2, "entries: {}", g.entries());
+    let per_block = 2 * cfg.n_layers * 4 * cfg.d_model * 4;
+    assert_eq!(g.used_bytes(), g.entries() * per_block, "racing publish double-stored bytes");
+}
+
+/// A prompt longer than the attention window bypasses sharing (the
+/// sliding-window truncation relabels positions) but still decodes
+/// identically to a cold engine.
+#[test]
+fn over_window_prompts_bypass_the_cache() {
+    let cfg = tiny();
+    let w = Weights::synthetic(&cfg, 79);
+    let fdb = BTreeMap::new();
+    let long: Vec<u32> = (0..40u32).map(|i| i % cfg.vocab as u32).collect(); // > window 32
+
+    let mut cold = engine(&w, &fdb, 1);
+    let a = cold.prefill_slot(0, &long).unwrap();
+    let pc = Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20)));
+    let mut warm = engine(&w, &fdb, 1).with_prefix_cache(pc.clone());
+    let b = warm.prefill_slot(0, &long).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(pc.lock().unwrap().entries(), 0, "over-window prompts must not publish");
+    let counters = SlotEngine::prefix_counters(&warm).unwrap();
+    assert_eq!(counters.hit_tokens, 0);
+    assert_eq!(counters.miss_tokens, cfg.seq_len as u64, "bypass counts the window tokens");
+}
