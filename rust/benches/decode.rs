@@ -397,6 +397,16 @@ fn bench_scheduler_mixed(cfg: &ModelConfig, weights: &Weights, b: &mut Bench) {
         ("wall_ns_per_drain_static", Json::num(wall_static)),
         ("wall_tokens_per_sec_continuous", Json::num(tokens as f64 * 1e9 / wall_cont)),
         ("wall_tokens_per_sec_static", Json::num(tokens as f64 * 1e9 / wall_static)),
+        (
+            "note",
+            // byte-identical to the committed BENCH_scheduler.json
+            // note, so a bench run only churns the measured fields
+            Json::str(
+                "tick-model fields are deterministic (FCFS, slot-order admission, one \
+                 token per active slot per tick); wall_* fields are host-dependent and \
+                 filled in by `cargo bench --bench decode`, which overwrites this file",
+            ),
+        ),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_scheduler.json");
     match std::fs::write(&path, format!("{out}\n")) {

@@ -1,0 +1,78 @@
+//! `db-llm-tidy` — the repo-native lint gate (see `src/lint/mod.rs` and
+//! `docs/INVARIANTS.md`).
+//!
+//! ```text
+//! db-llm-tidy [--root <repo_root>]                    # lint the tree
+//! db-llm-tidy --perf-check <baseline_dir> \
+//!             [--tolerance <x>] [--root <repo_root>]  # bench regression gate
+//! ```
+//!
+//! With no arguments the repo root is derived from the crate location
+//! (`rust/..`), which is what CI and `cargo run --bin db-llm-tidy` use.
+//! `--perf-check` compares the repo's current `BENCH_*.json` wall-clock
+//! fields against baseline copies in `<baseline_dir>`; any `wall_ns_*`
+//! more than `--tolerance`× (default 4.0) slower fails.  Exit status is
+//! the violation count's truthiness: 0 clean, 1 violations, 2 bad usage.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use db_llm::lint;
+
+fn usage() {
+    eprintln!(
+        "usage: db-llm-tidy [--root <repo_root>] \
+         [--perf-check <baseline_dir> [--tolerance <x>]]"
+    );
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let mut root: Option<PathBuf> = None;
+    let mut baseline: Option<PathBuf> = None;
+    let mut tolerance = 4.0f64;
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--perf-check" => baseline = args.next().map(PathBuf::from),
+            "--tolerance" => match args.next().and_then(|s| s.parse::<f64>().ok()) {
+                Some(t) if t >= 1.0 => tolerance = t,
+                _ => {
+                    eprintln!("--tolerance needs a number >= 1.0");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                usage();
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument {other:?}");
+                usage();
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // the crate lives at <repo_root>/rust
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."))
+    });
+
+    let (mode, violations) = match baseline {
+        Some(dir) => ("perf-check", lint::perf_check(&root, &dir, tolerance)),
+        None => ("lint", lint::run_all(&root)),
+    };
+    if violations.is_empty() {
+        println!("db-llm-tidy: {mode} clean ({})", root.display());
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("db-llm-tidy: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}

@@ -9,10 +9,12 @@ pub struct BitWriter {
 }
 
 impl BitWriter {
+    /// An empty writer.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one bit (MSB-first within each output byte).
     #[inline]
     pub fn push_bit(&mut self, bit: bool) {
         self.cur = (self.cur << 1) | bit as u8;
@@ -50,10 +52,13 @@ pub struct BitReader<'a> {
 }
 
 impl<'a> BitReader<'a> {
+    /// Read over `data`, exposing at most `bit_len` bits (clamped to the
+    /// byte length so a short buffer can never over-read).
     pub fn new(data: &'a [u8], bit_len: usize) -> Self {
         BitReader { data, pos: 0, len: bit_len.min(data.len() * 8) }
     }
 
+    /// The next bit, or `None` once all `bit_len` bits are consumed.
     #[inline]
     pub fn read_bit(&mut self) -> Option<bool> {
         if self.pos >= self.len {
@@ -65,6 +70,7 @@ impl<'a> BitReader<'a> {
         Some(bit)
     }
 
+    /// Bits left to read.
     pub fn remaining(&self) -> usize {
         self.len - self.pos
     }

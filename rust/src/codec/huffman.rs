@@ -42,13 +42,13 @@ fn code_lengths(freqs: &[u64; 256]) -> [u8; 256] {
         match (leaf_q.front(), merged.front()) {
             (Some(a), Some(b)) => {
                 if a.0 <= b.0 {
-                    leaf_q.pop_front().unwrap()
+                    leaf_q.pop_front().expect("front() was Some")
                 } else {
-                    merged.pop_front().unwrap()
+                    merged.pop_front().expect("front() was Some")
                 }
             }
-            (Some(_), None) => leaf_q.pop_front().unwrap(),
-            (None, Some(_)) => merged.pop_front().unwrap(),
+            (Some(_), None) => leaf_q.pop_front().expect("front() was Some"),
+            (None, Some(_)) => merged.pop_front().expect("front() was Some"),
             (None, None) => unreachable!(),
         }
     };

@@ -7,8 +7,13 @@
 //! measures the realized bits/weight of an `FdbLinear` after coding,
 //! which EXPERIMENTS.md compares against the paper's 1.88 figure.
 
+#![warn(missing_docs)]
+
+/// MSB-first bit-stream reader/writer shared by the coders.
 pub mod bitio;
+/// Canonical Huffman coder over byte streams.
 pub mod huffman;
+/// Zero-run run-length preprocessor for sparse plane bytes.
 pub mod rle;
 
 use crate::quant::FdbLinear;

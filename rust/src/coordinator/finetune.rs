@@ -166,7 +166,7 @@ impl DadTrainer {
         // ---- assemble the constant literals (planes + frozen) ----------
         let mut plane_lits = Vec::new();
         for name in &self.plane_names {
-            let (lin, kind) = name.rsplit_once('.').unwrap();
+            let (lin, kind) = name.rsplit_once('.').expect("plane names are <layer>.<kind>");
             let layer = &fdb_layers[lin];
             let plane = if kind == "b1" { &layer.b1 } else { &layer.b2 };
             let m = plane.unpack();
@@ -240,7 +240,7 @@ impl DadTrainer {
                 opt.step(&mut flat_p, &flat_g);
                 let mut off = 0;
                 for name in &self.alpha_names {
-                    let entry = self.alphas.get_mut(name).unwrap();
+                    let entry = self.alphas.get_mut(name).expect("alpha_names index alphas");
                     let n = entry.0.len();
                     entry.0.copy_from_slice(&flat_p[off..off + n]);
                     off += n;
@@ -266,7 +266,7 @@ impl DadTrainer {
     ) {
         let mut by_layer: BTreeMap<String, (Option<Vec<f32>>, Option<Vec<f32>>)> = BTreeMap::new();
         for name in &self.alpha_names {
-            let (lin, kind) = name.rsplit_once('.').unwrap();
+            let (lin, kind) = name.rsplit_once('.').expect("alpha names are <layer>.<kind>");
             let e = by_layer.entry(lin.to_string()).or_default();
             if kind == "a1" {
                 e.0 = Some(self.alphas[name].0.clone());
@@ -275,10 +275,10 @@ impl DadTrainer {
             }
         }
         for (lin, (a1, a2)) in by_layer {
-            let layer = fdb_layers.get_mut(&lin).unwrap();
+            let layer = fdb_layers.get_mut(&lin).expect("alpha names reference known layers");
             let (g, o) = (layer.a1.rows, layer.a1.cols);
-            let a1 = crate::tensor::Matrix::from_vec(g, o, a1.unwrap());
-            let a2 = crate::tensor::Matrix::from_vec(g, o, a2.unwrap());
+            let a1 = crate::tensor::Matrix::from_vec(g, o, a1.expect("a1 trained per layer"));
+            let a2 = crate::tensor::Matrix::from_vec(g, o, a2.expect("a2 trained per layer"));
             if self.config.resplit {
                 layer.resplit(original_weights.mat(&lin), a1, a2);
             } else {

@@ -62,6 +62,10 @@ pub struct Metrics {
     pub prefix_miss_tokens: AtomicU64,
     /// prefix-cache blocks evicted under the `--prefix-cache-mb` budget
     pub prefix_evictions: AtomicU64,
+    /// poisoned prefix-lock events: a worker found the shared prefix
+    /// cache's mutex poisoned and degraded to the cold (uncached) path
+    /// — counted, never silently swallowed
+    pub prefix_lock_poisoned: AtomicU64,
     /// log₂-bucketed latencies, bucket i = [2^i, 2^(i+1)) microseconds
     lat_buckets: [AtomicU64; BUCKETS],
 }
@@ -89,6 +93,7 @@ impl Default for Metrics {
             prefix_hit_tokens: AtomicU64::new(0),
             prefix_miss_tokens: AtomicU64::new(0),
             prefix_evictions: AtomicU64::new(0),
+            prefix_lock_poisoned: AtomicU64::new(0),
             lat_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -175,7 +180,8 @@ impl Metrics {
             "req={} resp={} err={} rejected={} tokens={} batches={} occ={:.2} queue={} \
              saved_steps={} stalled={} slot_occ={:.2} refills={} timeouts={} \
              fused_rows={} decode_batch={:.2} prefix_hit={} prefix_miss={} \
-             prefix_hit_rate={:.2} prefix_evict={} p50={}us p95={}us p99={}us",
+             prefix_hit_rate={:.2} prefix_evict={} prefix_poisoned={} \
+             p50={}us p95={}us p99={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -195,6 +201,7 @@ impl Metrics {
             self.prefix_miss_tokens.load(Ordering::Relaxed),
             self.prefix_hit_rate(),
             self.prefix_evictions.load(Ordering::Relaxed),
+            self.prefix_lock_poisoned.load(Ordering::Relaxed),
             self.latency_percentile(0.50),
             self.latency_percentile(0.95),
             self.latency_percentile(0.99),
@@ -281,12 +288,14 @@ mod tests {
         m.prefix_hit_tokens.fetch_add(30, Ordering::Relaxed);
         m.prefix_miss_tokens.fetch_add(10, Ordering::Relaxed);
         m.prefix_evictions.fetch_add(2, Ordering::Relaxed);
+        m.prefix_lock_poisoned.fetch_add(1, Ordering::Relaxed);
         assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
         let s = m.snapshot();
         assert!(s.contains("prefix_hit=30"), "{s}");
         assert!(s.contains("prefix_miss=10"), "{s}");
         assert!(s.contains("prefix_hit_rate=0.75"), "{s}");
         assert!(s.contains("prefix_evict=2"), "{s}");
+        assert!(s.contains("prefix_poisoned=1"), "{s}");
     }
 
     #[test]

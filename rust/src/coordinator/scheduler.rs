@@ -189,6 +189,10 @@ pub struct PrefixCounters {
     /// cache blocks this engine's publishes evicted under budget
     /// pressure
     pub evictions: u64,
+    /// times the prefix-cache mutex was found poisoned: the engine
+    /// degrades to the cold (uncached) path, but the event is counted
+    /// here instead of being silently swallowed
+    pub lock_poisoned: u64,
 }
 
 /// Scheduler policy knobs.
@@ -299,6 +303,9 @@ pub struct SchedStats {
     pub prefix_miss_tokens: u64,
     /// prefix-cache blocks evicted by this engine's publishes
     pub prefix_evictions: u64,
+    /// poisoned prefix-lock events this engine degraded through (see
+    /// [`PrefixCounters::lock_poisoned`])
+    pub prefix_lock_poisoned: u64,
 }
 
 struct Queued {
@@ -334,6 +341,9 @@ pub struct Scheduler<E: SlotEngine, C: Clock> {
     /// cumulative counters (see [`SchedStats`])
     pub stats: SchedStats,
     trace: Vec<TraceEvent>,
+    /// per-tick step list, reused across ticks so the steady-state
+    /// decode loop stops allocating once it has grown to the slot count
+    steps_buf: Vec<(usize, u32)>,
 }
 
 impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
@@ -350,6 +360,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             next_id: 0,
             stats: SchedStats::default(),
             trace: Vec::new(),
+            steps_buf: Vec::with_capacity(slots),
         }
     }
 
@@ -453,6 +464,9 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
     /// assert_eq!(replies[0].tokens, vec![7, 7, 7]);
     /// ```
     pub fn tick(&mut self) -> Vec<Completion> {
+        // tidy:no-alloc(start): the tick frame itself only reuses
+        // state — admission/expiry allocate in their own (cold-path)
+        // bodies, and the completions vec starts empty.
         let mut done = Vec::new();
         self.expire_queued(&mut done);
         self.admit(&mut done);
@@ -463,6 +477,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             self.stats.prefix_hit_tokens = p.hit_tokens;
             self.stats.prefix_miss_tokens = p.miss_tokens;
             self.stats.prefix_evictions = p.evictions;
+            self.stats.prefix_lock_poisoned = p.lock_poisoned;
         }
         // a tick that decodes nothing (e.g. it only expired queued
         // requests) must not count slot-ticks, or slot_occ deflates
@@ -473,7 +488,64 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
         }
         self.step_active(&mut done);
         self.expire_active(&mut done);
+        // tidy:no-alloc(end)
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
         done
+    }
+
+    /// Audit the scheduler's structural invariants; panics on the
+    /// first violation.  Debug builds run this after every [`tick`];
+    /// release builds compile the call sites out, and tests may call
+    /// it directly at any point.
+    ///
+    /// Checked invariants:
+    /// - the slot table never changes size after construction;
+    /// - every active id was issued by `submit` (`id < next_id`) and
+    ///   no id occupies two slots or a slot and the queue at once;
+    /// - counters are mutually consistent: occupancy never exceeds
+    ///   `ticks * slots`, decode ticks never exceed busy ticks, fused
+    ///   rows are a subset of stepped rows, and refills of mid-flight
+    ///   batches are a subset of admissions;
+    /// - a fresh slot's output holds exactly its prefill token.
+    ///
+    /// [`tick`]: Scheduler::tick
+    pub fn assert_invariants(&self) {
+        let slots = self.active.len();
+        assert!(slots >= 1, "scheduler lost its slot table");
+        let mut seen = Vec::with_capacity(slots + self.queue.len());
+        for a in self.active.iter().flatten() {
+            assert!(a.id < self.next_id, "active id {} never issued by submit", a.id);
+            assert!(!seen.contains(&a.id), "id {} occupies two slots", a.id);
+            assert!(!a.out.is_empty(), "active row decoded nothing (admission samples a token)");
+            if a.fresh {
+                assert_eq!(a.out.len(), 1, "fresh slot must hold exactly its prefill token");
+            }
+            assert!(a.out.len() <= a.params.max_tokens, "row decoded past its budget");
+            seen.push(a.id);
+        }
+        for q in &self.queue {
+            assert!(q.id < self.next_id, "queued id {} never issued by submit", q.id);
+            assert!(!seen.contains(&q.id), "id {} is both queued and active", q.id);
+            seen.push(q.id);
+        }
+        let s = &self.stats;
+        assert!(
+            s.busy_slot_ticks <= s.ticks * slots as u64,
+            "occupancy {} exceeds {} ticks x {} slots",
+            s.busy_slot_ticks,
+            s.ticks,
+            slots
+        );
+        assert!(s.ticks <= s.busy_slot_ticks, "a counted tick had at least one busy slot");
+        assert!(s.step_ticks <= s.ticks, "decode ticks exceed scheduler ticks");
+        assert!(s.fused_rows <= s.stepped_rows, "fused rows exceed stepped rows");
+        assert!(s.step_ticks <= s.stepped_rows, "a step tick advances at least one row");
+        assert!(s.refills <= s.admissions, "refills exceed admissions");
+        assert!(
+            self.steps_buf.len() <= slots,
+            "step scratch holds more rows than slots exist"
+        );
     }
 
     /// Shutdown: answer everything still queued or in flight with an
@@ -624,20 +696,20 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
     /// finish check, keeping the invariant of exactly one token per
     /// active slot per tick.
     fn step_active(&mut self, done: &mut Vec<Completion>) {
-        // gather the rows needing a decode step this tick
-        let steps: Vec<(usize, u32)> = self
-            .active
-            .iter()
-            .enumerate()
-            .filter_map(|(slot, a)| match a {
-                Some(a) if !a.fresh => Some((slot, a.last)),
-                _ => None,
-            })
-            .collect();
+        // tidy:no-alloc(start): per-tick decode hot loop — the step
+        // list reuses one scratch buffer across ticks; only the error
+        // paths (annotated per line) may allocate.
+        self.steps_buf.clear();
+        for (slot, a) in self.active.iter().enumerate() {
+            match a {
+                Some(a) if !a.fresh => self.steps_buf.push((slot, a.last)),
+                _ => {}
+            }
+        }
 
         let mut failures: Vec<(usize, String)> = Vec::new();
-        if !steps.is_empty() {
-            let m = steps.len();
+        if !self.steps_buf.is_empty() {
+            let m = self.steps_buf.len();
             // rows that actually advanced this tick (accounted only
             // after the engine calls resolve — a failed fused call must
             // not masquerade as fused throughput in the metrics)
@@ -645,9 +717,10 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             let mut fused = 0u64;
             let mut batch_failed = false;
             if self.engine.step_slots_atomic() {
-                match self.engine.step_slots(&steps) {
-                    Ok(rows) if rows.len() == steps.len() => {
-                        for (&(slot, _), logits) in steps.iter().zip(&rows) {
+                match self.engine.step_slots(&self.steps_buf) {
+                    Ok(rows) if rows.len() == m => {
+                        for (i, logits) in rows.iter().enumerate() {
+                            let slot = self.steps_buf[i].0;
                             self.accept_token(slot, logits);
                         }
                         advanced = m as u64;
@@ -659,12 +732,14 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                         // a row-count mismatch is an engine bug
                         // affecting the whole batch — there is no
                         // telling which row got which logits
-                        let msg = format!(
+                        let msg = format!( // tidy:allow(no-alloc): error path
                             "engine returned {} logits rows for {} stepped slots",
                             rows.len(),
-                            steps.len()
+                            m
                         );
-                        failures.extend(steps.iter().map(|&(slot, _)| (slot, msg.clone())));
+                        for &(slot, _) in &self.steps_buf {
+                            failures.push((slot, msg.clone())); // tidy:allow(no-alloc): error path
+                        }
                     }
                     // atomic contract: the failed call advanced
                     // nothing, so the per-row pass below can safely
@@ -673,13 +748,14 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                 }
             }
             if !self.engine.step_slots_atomic() || batch_failed {
-                for &(slot, last) in &steps {
+                for i in 0..m {
+                    let (slot, last) = self.steps_buf[i];
                     match self.engine.step_slot(slot, last) {
                         Ok(logits) => {
                             self.accept_token(slot, &logits);
                             advanced += 1;
                         }
-                        Err(e) => failures.push((slot, format!("{e:#}"))),
+                        Err(e) => failures.push((slot, format!("{e:#}"))), // tidy:allow(no-alloc): error path
                     }
                 }
             }
@@ -689,6 +765,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                 self.stats.fused_rows += fused;
             }
         }
+        // tidy:no-alloc(end)
         for (slot, msg) in failures {
             if self.active[slot].is_some() {
                 self.finish(slot, FinishReason::Error(msg), done);
@@ -886,6 +963,9 @@ pub fn scheduler_loop<E: SlotEngine>(
         metrics
             .prefix_evictions
             .fetch_add(s.prefix_evictions - last.prefix_evictions, Ordering::Relaxed);
+        metrics
+            .prefix_lock_poisoned
+            .fetch_add(s.prefix_lock_poisoned - last.prefix_lock_poisoned, Ordering::Relaxed);
         last = s;
         for c in completions {
             respond(&metrics, &mut pending, c);

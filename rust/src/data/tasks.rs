@@ -154,7 +154,7 @@ mod tests {
             // the true continuation must occur right after the context
             // somewhere in the stream
             let truth = &item.choices[item.answer];
-            let ctx_last = *item.context.last().unwrap();
+            let ctx_last = *item.context.last().expect("task items carry a non-empty context");
             let found = s
                 .tokens
                 .windows(1 + truth.len())

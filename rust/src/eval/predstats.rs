@@ -151,7 +151,7 @@ pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
 /// Binned means of `y` ordered by `x` (for the Fig. 7 curve rendering).
 pub fn binned_means(x: &[f64], y: &[f64], bins: usize) -> Vec<(f64, f64)> {
     let mut idx: Vec<usize> = (0..x.len()).collect();
-    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap());
+    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).expect("curve inputs are finite"));
     let per = (x.len() / bins).max(1);
     idx.chunks(per)
         .map(|c| {

@@ -144,12 +144,12 @@ pub fn make_student(
     let cache_key = format!("{teacher_tag}:{}", calib_path.display());
     let calib = {
         let cache = CALIB_CACHE.get_or_init(Default::default);
-        let hit = cache.lock().unwrap().get(&cache_key).cloned();
+        let hit = cache.lock().expect("calib cache poisoned").get(&cache_key).cloned();
         match hit {
             Some(c) => c,
             None => {
                 let c = Arc::new(pipeline.collect_calib(&weights, &calib_stream));
-                cache.lock().unwrap().insert(cache_key, c.clone());
+                cache.lock().expect("calib cache poisoned").insert(cache_key, c.clone());
                 c
             }
         }

@@ -51,8 +51,8 @@ pub fn accuracy(
     for item in &items {
         let n = item.choices.len();
         let best = (0..n)
-            .max_by(|&a, &b| scores[k + a].partial_cmp(&scores[k + b]).unwrap())
-            .unwrap();
+            .max_by(|&a, &b| scores[k + a].partial_cmp(&scores[k + b]).expect("scores are finite"))
+            .expect("every task item has at least one choice");
         if best == item.answer {
             correct += 1;
         }

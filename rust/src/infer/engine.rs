@@ -108,6 +108,26 @@ impl NativeEngine {
         self
     }
 
+    /// Audit every slot's KV ring and, when attached (and not poisoned
+    /// or held elsewhere), the shared prefix cache.  Test suites call
+    /// this between decode steps; see `docs/INVARIANTS.md` for the
+    /// invariant catalogue.
+    pub fn assert_invariants(&self) {
+        assert_eq!(
+            self.slot_pins.len(),
+            self.caches.len(),
+            "pin table and cache table disagree on slot count"
+        );
+        for c in &self.caches {
+            c.assert_invariants();
+        }
+        if let Some(pc) = &self.prefix {
+            if let Ok(g) = pc.try_lock() {
+                g.assert_invariants();
+            }
+        }
+    }
+
     /// Unpin every prefix block `slot` was holding.
     fn release_pins(&mut self, slot: usize) {
         let Some(pins) = self.slot_pins.get_mut(slot) else { return };
@@ -116,8 +136,12 @@ impl NativeEngine {
         }
         let pins = std::mem::take(pins);
         if let Some(pc) = &self.prefix {
-            if let Ok(mut g) = pc.lock() {
-                g.release(&pins);
+            match pc.lock() {
+                Ok(mut g) => g.release(&pins),
+                // poisoned: the pins leak (the cache keeps those blocks
+                // pinned), but decode stays up — and the event is
+                // counted instead of silently degrading the hit rate
+                Err(_) => self.prefix_counters.lock_poisoned += 1,
             }
         }
     }
@@ -149,10 +173,15 @@ impl NativeEngine {
         let mut pins = Vec::new();
         let mut matched = 0usize;
         let mut blocks: Vec<Arc<KvBlock>> = Vec::new();
-        if let Ok(mut g) = pc.lock() {
-            let (p, m) = g.acquire(prompt);
-            blocks.extend(p.iter().map(|h| g.block(*h).expect("pinned block vanished")));
-            (pins, matched) = (p, m);
+        match pc.lock() {
+            Ok(mut g) => {
+                let (p, m) = g.acquire(prompt);
+                blocks.extend(p.iter().map(|h| g.block(*h).expect("pinned block vanished")));
+                (pins, matched) = (p, m);
+            }
+            // poisoned: count the event and degrade to a cold prefill
+            // (the whole prompt is a miss) rather than skip silently
+            Err(_) => self.prefix_counters.lock_poisoned += 1,
         }
         // the bulk K/V copy-in runs *outside* the shared cache lock
         // (the Arcs keep the rows alive): one worker's warm admission
@@ -163,8 +192,11 @@ impl NativeEngine {
         self.prefix_counters.hit_tokens += matched as u64;
         self.prefix_counters.miss_tokens += (prompt.len() - matched) as u64;
         let logits = self.model.prefill_suffix(&mut self.caches[slot], &prompt[matched..]);
-        if let Ok(mut g) = pc.lock() {
-            self.prefix_counters.evictions += g.publish(prompt, &self.caches[slot]);
+        match pc.lock() {
+            Ok(mut g) => {
+                self.prefix_counters.evictions += g.publish(prompt, &self.caches[slot]);
+            }
+            Err(_) => self.prefix_counters.lock_poisoned += 1,
         }
         self.slot_pins[slot] = pins;
         logits
@@ -506,5 +538,32 @@ mod tests {
         }
         // an empty batch is a no-op
         assert!(fus.step_slots(&[]).unwrap().is_empty());
+    }
+
+    /// A poisoned prefix-cache lock degrades to a cold prefill and is
+    /// *counted*, never silently swallowed: the acquire and publish
+    /// sites each record the event in `PrefixCounters.lock_poisoned`.
+    #[test]
+    fn poisoned_prefix_lock_is_counted_not_silent() {
+        let pc = Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20)));
+        let mut cold = engine(33).with_slots(1);
+        let mut warm = engine(33).with_slots(1).with_prefix_cache(pc.clone());
+        // poison the mutex: a thread panics while holding the guard
+        let pc2 = pc.clone();
+        std::thread::spawn(move || {
+            let _g = pc2.lock().unwrap();
+            panic!("poison the prefix lock");
+        })
+        .join()
+        .unwrap_err();
+        assert!(pc.lock().is_err(), "mutex should be poisoned");
+        let prompt: Vec<u32> = (0..9u32).collect();
+        let a = cold.prefill_slot(0, &prompt).unwrap();
+        let b = warm.prefill_slot(0, &prompt).unwrap();
+        assert_eq!(a, b, "poisoned-lock prefill must fall back to a cold prefill");
+        let ctr = SlotEngine::prefix_counters(&warm).unwrap();
+        assert_eq!(ctr.lock_poisoned, 2, "acquire + publish each count: {ctr:?}");
+        assert_eq!(ctr.hit_tokens, 0, "no hits through a poisoned lock");
+        assert_eq!(ctr.miss_tokens, prompt.len() as u64);
     }
 }

@@ -128,6 +128,8 @@ impl KvCache {
         self.len = 0;
         self.start = 0;
         self.next_pos = 0;
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
     }
 
     /// Reserve the ring slot for the next position, evicting the oldest
@@ -141,7 +143,47 @@ impl KvCache {
             self.len += 1;
         }
         self.next_pos += 1;
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
         slot
+    }
+
+    /// Audit the ring/window bookkeeping.  Debug builds run this after
+    /// every mutating call; test suites call it directly.  Panics on
+    /// the first violation:
+    ///
+    /// * `len ≤ window` (the ring never claims more than it holds),
+    /// * `start < window` (the oldest-position index stays in range),
+    /// * `next_pos ≥ len` (absolute chronology is never behind the
+    ///   resident count — their difference is the evicted-prefix
+    ///   length), and
+    /// * every layer's K and V storage spans exactly `window × width`
+    ///   floats (geometry never drifts after construction).
+    pub fn assert_invariants(&self) {
+        assert!(
+            self.len <= self.window,
+            "kv ring holds {} positions but the window is {}",
+            self.len,
+            self.window
+        );
+        assert!(
+            self.start < self.window,
+            "kv ring start {} outside window {}",
+            self.start,
+            self.window
+        );
+        assert!(
+            self.next_pos >= self.len,
+            "kv chronology behind resident count ({} < {})",
+            self.next_pos,
+            self.len
+        );
+        for (i, l) in self.layers.iter().enumerate() {
+            assert!(
+                l.k.len() == self.window * self.width && l.v.len() == l.k.len(),
+                "layer {i} K/V storage drifted from window x width"
+            );
+        }
     }
 
     /// Write one layer's K/V rows for the slot returned by `advance`.
@@ -207,6 +249,8 @@ impl KvCache {
                 self.write(l, slot, &k[i * w..(i + 1) * w], &v[i * w..(i + 1) * w]);
             }
         }
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
     }
 }
 

@@ -224,6 +224,8 @@ impl PrefixCache {
                 _ => break,
             }
         }
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
         (pins, matched)
     }
 
@@ -242,6 +244,8 @@ impl PrefixCache {
                 e.refs = e.refs.saturating_sub(1);
             }
         }
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
     }
 
     /// Publish the full blocks of a freshly prefilled `prompt` whose
@@ -310,6 +314,8 @@ impl PrefixCache {
             start += b;
         }
         self.release(&walked);
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
         evicted
     }
 
@@ -337,6 +343,71 @@ impl PrefixCache {
             evicted += 1;
         }
         evicted
+    }
+
+    /// Audit the cache's structural invariants.  Debug builds run this
+    /// after every mutating call; the test suites call it directly so
+    /// release-mode CI checks them too.  Panics on the first violation:
+    ///
+    /// * **byte accounting** — `used_bytes` equals the sum of resident
+    ///   block bytes and never exceeds the budget,
+    /// * **chain integrity** — every entry's key is the chain hash of
+    ///   its `(parent, tokens)`, its parent is resident, and it holds a
+    ///   full block (leaf-first eviction keeps chains walkable),
+    /// * **child counts** — every entry's `children` equals the number
+    ///   of resident entries naming it as parent (the leaf test
+    ///   `children == 0` depends on this),
+    /// * **clock monotonicity** — no entry was touched "in the future".
+    ///
+    /// External pins cannot be audited from inside the cache; the
+    /// pinned-never-evicted rule is enforced structurally by
+    /// `evict_for`'s `refs == 0` victim filter.
+    pub fn assert_invariants(&self) {
+        let mut bytes = 0usize;
+        let mut child_counts: HashMap<u64, usize> = HashMap::new();
+        for (&h, e) in &self.entries {
+            bytes += e.block.bytes();
+            assert_eq!(
+                chain_hash(e.parent, &e.tokens),
+                h,
+                "prefix-cache entry keyed by a hash that is not its own chain hash"
+            );
+            assert_eq!(
+                e.tokens.len(),
+                self.block_tokens,
+                "prefix-cache entry holds a partial block"
+            );
+            assert!(
+                e.last_used <= self.clock,
+                "prefix-cache entry touched in the future (last_used {} > clock {})",
+                e.last_used,
+                self.clock
+            );
+            if let Some(p) = e.parent {
+                assert!(
+                    self.entries.contains_key(&p),
+                    "prefix-cache chain broken: parent {p:#x} of {h:#x} is not resident"
+                );
+                *child_counts.entry(p).or_insert(0) += 1;
+            }
+        }
+        assert_eq!(
+            bytes, self.used_bytes,
+            "prefix-cache byte accounting drifted from the resident blocks"
+        );
+        assert!(
+            self.used_bytes <= self.budget_bytes,
+            "prefix-cache overshot its byte budget ({} > {})",
+            self.used_bytes,
+            self.budget_bytes
+        );
+        for (&h, e) in &self.entries {
+            assert_eq!(
+                e.children,
+                child_counts.get(&h).copied().unwrap_or(0),
+                "prefix-cache child count drifted for entry {h:#x}"
+            );
+        }
     }
 }
 

@@ -27,7 +27,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::model::native::{attend_one, rmsnorm_row, rope_pos, rope_pos_into, rope_row, silu};
+use crate::model::native::{attend_one, rmsnorm_row, rope_pos_into, rope_row, silu};
 use crate::model::{ModelConfig, Weights};
 use crate::quant::kernel::{FdbExec, FdbScratch};
 use crate::quant::FdbLinear;
@@ -178,10 +178,14 @@ struct StepScratch {
     act: Vec<f32>,
     down: Vec<f32>,
     scores: Vec<f64>,
+    /// (cos, sin) half-rows at the stepped position — filled in place
+    /// each step so the hot path never allocates for RoPE
+    cos: Vec<f32>,
+    sin: Vec<f32>,
 }
 
 impl StepScratch {
-    fn new(d: usize, d_ff: usize) -> StepScratch {
+    fn new(d: usize, d_ff: usize, half: usize) -> StepScratch {
         StepScratch {
             x: vec![0.0; d],
             hn: vec![0.0; d],
@@ -195,6 +199,8 @@ impl StepScratch {
             act: vec![0.0; d_ff],
             down: vec![0.0; d],
             scores: Vec::new(),
+            cos: vec![0.0; half],
+            sin: vec![0.0; half],
         }
     }
 }
@@ -309,7 +315,7 @@ impl IncrementalForward {
                 }
             })
             .collect();
-        let scratch = StepScratch::new(cfg.d_model, cfg.d_ff);
+        let scratch = StepScratch::new(cfg.d_model, cfg.d_ff, cfg.head_dim() / 2);
         IncrementalForward {
             tok_emb: mats.remove("tok_emb").expect("tok_emb"),
             head: mats.remove("head").expect("head"),
@@ -491,12 +497,21 @@ impl IncrementalForward {
     /// return the next-token logits.  Cost is O(window), independent of
     /// how many tokens were decoded before — the tentpole property.
     pub fn step(&mut self, cache: &mut KvCache, token: u32) -> Vec<f32> {
+        // tidy:no-alloc(start): the per-token decode hot path — every
+        // buffer is reused scratch; only the returned logits row
+        // allocates (annotated below).
         let cfg = &self.cfg;
         let (h, hd) = (cfg.n_heads, cfg.head_dim());
         assert!((token as usize) < cfg.vocab, "token {token} out of vocab");
         assert_eq!(cache.width, cfg.d_model, "cache width != d_model");
 
-        let (cos, sin) = rope_pos(cache.next_pos(), hd, cfg.rope_theta);
+        rope_pos_into(
+            cache.next_pos(),
+            hd,
+            cfg.rope_theta,
+            &mut self.scratch.cos,
+            &mut self.scratch.sin,
+        );
         let slot = cache.advance();
         self.scratch.x.copy_from_slice(self.tok_emb.row(token as usize));
 
@@ -506,8 +521,8 @@ impl IncrementalForward {
             layer.wq.matvec(&self.scratch.hn, &mut self.scratch.q);
             layer.wk.matvec(&self.scratch.hn, &mut self.scratch.k);
             layer.wv.matvec(&self.scratch.hn, &mut self.scratch.v);
-            rope_row(&mut self.scratch.q, h, hd, &cos, &sin);
-            rope_row(&mut self.scratch.k, h, hd, &cos, &sin);
+            rope_row(&mut self.scratch.q, h, hd, &self.scratch.cos, &self.scratch.sin);
+            rope_row(&mut self.scratch.k, h, hd, &self.scratch.cos, &self.scratch.sin);
             cache.write(l, slot, &self.scratch.k, &self.scratch.v);
             let n = cache.len();
             attend_one(
@@ -538,9 +553,10 @@ impl IncrementalForward {
         }
 
         rmsnorm_row(&self.scratch.x, &self.final_norm, cfg.rmsnorm_eps, &mut self.scratch.hn);
-        let mut logits = vec![0.0f32; cfg.vocab];
+        let mut logits = vec![0.0f32; cfg.vocab]; // tidy:allow(no-alloc): the returned row
         dense_matvec(&self.head, &self.scratch.hn, &mut logits);
         logits
+        // tidy:no-alloc(end)
     }
 
     /// Fused multi-slot decode: advance `rows` — (cache index, token)
@@ -557,6 +573,10 @@ impl IncrementalForward {
     /// as [`step`](Self::step), so fused and sequential decode agree
     /// bit-for-bit (`tests/fused_decode.rs` pins this).
     pub fn step_rows(&mut self, caches: &mut [KvCache], rows: &[(usize, u32)]) -> Vec<Vec<f32>> {
+        // tidy:no-alloc(start): the fused decode hot path — buffers are
+        // pre-sized by `reserve_rows` and reused across ticks; only the
+        // debug audit and the returned logits rows allocate (annotated
+        // per line).
         let m = rows.len();
         if m == 0 {
             return Vec::new();
@@ -567,7 +587,7 @@ impl IncrementalForward {
         let half = hd / 2;
         #[cfg(debug_assertions)]
         {
-            let mut seen = vec![false; caches.len()];
+            let mut seen = vec![false; caches.len()]; // tidy:allow(no-alloc): debug-only audit
             for &(slot, token) in rows {
                 debug_assert!(slot < caches.len(), "cache index {slot} out of range");
                 debug_assert!(!seen[slot], "cache index {slot} listed twice in one fused step");
@@ -647,7 +667,8 @@ impl IncrementalForward {
         rmsnorm_rows(&s.x, &self.final_norm, cfg.rmsnorm_eps, &mut s.hn);
         set_shape(&mut s.logits, m, cfg.vocab);
         dense_matmul_rows(&self.head, &s.hn, &mut s.logits.data);
-        (0..m).map(|i| s.logits.row(i).to_vec()).collect()
+        (0..m).map(|i| s.logits.row(i).to_vec()).collect() // tidy:allow(no-alloc): returned rows
+        // tidy:no-alloc(end)
     }
 }
 

@@ -12,6 +12,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod data;
 pub mod infer;
+pub mod lint;
 pub mod model;
 pub mod quant;
 pub mod runtime;

@@ -1,0 +1,1067 @@
+//! Repo-native tidy lints (`db-llm-tidy`), modeled on rustc's
+//! `src/tools/tidy`: zero-dependency static checks for the invariants a
+//! generic clippy cannot see because they are *this repo's* contracts.
+//!
+//! Rules (see `docs/INVARIANTS.md` for the contracts they enforce):
+//! * **lock-order** — the `PrefixCache` mutex is a leaf lock: it must
+//!   never be held across a model forward, a prefill, or a
+//!   `KvCache::append_block` copy-in (the PR-5 "outside the cache lock"
+//!   rule).  Escape hatch: `tidy:allow(lock-order)` on the line.
+//! * **no-alloc** — regions bracketed by `tidy:no-alloc` start/end
+//!   comments must not contain heap-allocating
+//!   calls (`vec![`, `to_vec`, `clone`, `collect`, `with_capacity`,
+//!   `format!`, `Box::new`, `Matrix::zeros`, ...).  `Vec::new()` and
+//!   `String::new()` are *not* denied — they are allocation-free — and
+//!   `push`/`extend` into pre-reserved scratch is the sanctioned
+//!   steady-state idiom.  Escape hatch: `tidy:allow(no-alloc): reason`.
+//! * **unwrap-ban** — `.unwrap()` is banned outside `#[cfg(test)]`;
+//!   production code uses `.expect("message naming the invariant")` or
+//!   propagates the error.  (`expect` is deliberately permitted: the
+//!   message *is* the machine-checked documentation of why the value
+//!   cannot be absent.)
+//! * **missing-docs-attr** — the serving/quant/codec surfaces
+//!   (`coordinator`, `infer`, `quant`, `codec`) must carry
+//!   `#![warn(missing_docs)]` so the CI doc gate keeps them documented.
+//! * **bench-schema** — every repo-root `BENCH_*.json` must parse, carry
+//!   its declared fields for its `bench` id, and contain no `null`
+//!   values (in particular no null `wall_ns_*`: speed claims stay
+//!   pinned to committed numbers).
+//!
+//! The analysis is deliberately line/token-textual — a comment- and
+//! string-aware scanner with brace-depth scope tracking — not a full
+//! parser.  That keeps the binary dependency-free and the rules cheap
+//! and predictable; the escape comments cover the rare false positive.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+/// One lint finding, anchored to a `file:line`.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Repo-relative path of the offending file.
+    pub file: String,
+    /// 1-indexed line.
+    pub line: usize,
+    /// Rule identifier (also the `tidy:allow(..)` key where applicable).
+    pub rule: &'static str,
+    /// Human-readable diagnostic.
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Pre-processed view of one Rust source file: raw lines, comment- and
+/// string-stripped lines (so patterns inside literals or comments never
+/// fire), running brace depth, and `#[cfg(test)]` region membership.
+pub struct FileCx {
+    /// Repo-relative display name.
+    pub name: String,
+    /// Raw source lines (used for `tidy:` escape comments).
+    pub raw: Vec<String>,
+    /// Comment-stripped, string-blanked lines (used for rule patterns).
+    pub code: Vec<String>,
+    /// Brace depth after each line (strings/comments excluded).
+    pub depth_after: Vec<i32>,
+    /// Whether the line sits inside a `#[cfg(test)]` item.
+    pub in_test: Vec<bool>,
+}
+
+impl FileCx {
+    /// Build the per-line view for `text`.
+    pub fn new(name: &str, text: &str) -> FileCx {
+        let raw: Vec<String> = text.lines().map(str::to_string).collect();
+        let stripped = strip_comments_and_strings(text);
+        let mut code: Vec<String> = stripped.lines().map(str::to_string).collect();
+        while code.len() < raw.len() {
+            code.push(String::new());
+        }
+        code.truncate(raw.len());
+
+        let mut depth = 0i32;
+        let mut depth_after = Vec::with_capacity(code.len());
+        for line in &code {
+            for ch in line.chars() {
+                match ch {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            depth_after.push(depth);
+        }
+
+        let n = raw.len();
+        let mut in_test = vec![false; n];
+        let mut i = 0;
+        while i < n {
+            if code[i].trim_start().starts_with("#[cfg(test)]") {
+                let d = if i == 0 { 0 } else { depth_after[i - 1] };
+                // find where the annotated item's block opens ...
+                let mut open = i;
+                while open < n && depth_after[open] <= d {
+                    open += 1;
+                }
+                if open >= n {
+                    // attribute on a braceless item (e.g. `mod tests;`)
+                    in_test[i] = true;
+                    i += 1;
+                    continue;
+                }
+                // ... and where it closes again
+                let mut close = open;
+                while close < n && depth_after[close] > d {
+                    close += 1;
+                }
+                let end = close.min(n - 1);
+                for t in i..=end {
+                    in_test[t] = true;
+                }
+                i = end + 1;
+            } else {
+                i += 1;
+            }
+        }
+
+        FileCx { name: name.to_string(), raw, code, depth_after, in_test }
+    }
+
+    /// Does line `i` carry a `tidy:allow(rule)` escape comment?
+    pub fn allows(&self, i: usize, rule: &str) -> bool {
+        let needle = format!("tidy:allow({rule})");
+        self.raw.get(i).map(|l| l.contains(&needle)).unwrap_or(false)
+    }
+}
+
+/// Blank out comments (line, nested block, doc) and the *contents* of
+/// string/char literals, preserving newlines so line numbers survive.
+/// Handles raw strings (`r"..."`, `r#"..."#`) and byte strings; treats
+/// `'x'` as a char literal but leaves lifetimes (`'a`) alone.
+fn strip_comments_and_strings(text: &str) -> String {
+    let b: Vec<char> = text.chars().collect();
+    let n = b.len();
+    let mut out = String::with_capacity(n);
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        // line comment
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // (nested) block comment
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        out.push('\n');
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte string prefixes: r".."  r#".."#  b".."  br".."
+        if (c == 'r' || c == 'b') && !prev_is_ident(&b, i) {
+            let mut j = i;
+            if b[j] == 'b' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            if j < n && b[j] == 'r' {
+                j += 1;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    i = skip_raw_string(&b, j + 1, hashes, &mut out);
+                    continue;
+                }
+            } else if j < n && b[j] == '"' {
+                i = skip_plain_string(&b, j + 1, &mut out);
+                continue;
+            } else if j < n && b[j] == '\'' {
+                // byte char literal b'x'
+                i = skip_char_literal(&b, j + 1);
+                continue;
+            }
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        if c == '"' {
+            i = skip_plain_string(&b, i + 1, &mut out);
+            continue;
+        }
+        if c == '\'' {
+            // char literal vs lifetime
+            if i + 1 < n && b[i + 1] == '\\' {
+                i = skip_char_literal(&b, i + 1);
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                i += 3; // 'x'
+                continue;
+            }
+            // lifetime: drop the quote, keep scanning
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// Skip a non-raw string body starting just past the opening quote;
+/// newlines are preserved, contents blanked.  Returns the next index.
+fn skip_plain_string(b: &[char], mut i: usize, out: &mut String) -> usize {
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '"' => return i + 1,
+            '\n' => {
+                out.push('\n');
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip a raw string body (`hashes` trailing `#`s close it).
+fn skip_raw_string(b: &[char], mut i: usize, hashes: usize, out: &mut String) -> usize {
+    while i < b.len() {
+        if b[i] == '"' {
+            let close = (1..=hashes).all(|k| i + k < b.len() && b[i + k] == '#');
+            if close {
+                return i + 1 + hashes;
+            }
+        }
+        if b[i] == '\n' {
+            out.push('\n');
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Skip a (possibly escaped) char literal body starting just past the
+/// opening quote.  Returns the next index after the closing quote.
+fn skip_char_literal(b: &[char], mut i: usize) -> usize {
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\'' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+// ---------------------------------------------------------------------------
+// rule: unwrap-ban
+// ---------------------------------------------------------------------------
+
+/// `.unwrap()` outside `#[cfg(test)]` — production code must `.expect()`
+/// with a message naming the invariant, or propagate the error.
+pub fn rule_unwrap_ban(cx: &FileCx) -> Vec<Violation> {
+    let mut v = Vec::new();
+    for i in 0..cx.code.len() {
+        if cx.in_test[i] || cx.allows(i, "unwrap") {
+            continue;
+        }
+        if cx.code[i].contains(".unwrap()") {
+            v.push(Violation {
+                file: cx.name.clone(),
+                line: i + 1,
+                rule: "unwrap-ban",
+                msg: "`.unwrap()` outside #[cfg(test)]; use `.expect(\"<invariant>\")` \
+                      or propagate the error"
+                    .into(),
+            });
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// rule: lock-order
+// ---------------------------------------------------------------------------
+
+/// Receivers whose `.lock()` opens a PrefixCache critical section.
+const LOCK_RECV: &[&str] = &["pc.lock()", "prefix.lock()", "prefix_cache.lock()"];
+
+/// Calls that must never run while the PrefixCache mutex is held: model
+/// forwards, prefills, steps, and the bulk K/V copy-in.
+const LOCK_DENY: &[&str] = &[
+    ".prefill",
+    ".step(",
+    ".step_slot",
+    ".step_rows",
+    ".generate(",
+    ".append_block(",
+    ".matmul",
+    ".forward(",
+    ".run(",
+];
+
+/// The PrefixCache mutex is a leaf lock: inside its guard scope only
+/// cache bookkeeping (`acquire`/`release`/`publish`/`block`) may run.
+/// The guard scope is taken to extend to the end of the enclosing block
+/// (or a `drop(..)` of the guard, whichever comes first).
+pub fn rule_lock_order(cx: &FileCx) -> Vec<Violation> {
+    let mut v = Vec::new();
+    for i in 0..cx.code.len() {
+        let line = &cx.code[i];
+        if !LOCK_RECV.iter().any(|r| line.contains(r)) {
+            continue;
+        }
+        if cx.in_test[i] || cx.allows(i, "lock-order") {
+            continue;
+        }
+        let d = cx.depth_after[i];
+        let mut end = cx.code.len();
+        for k in (i + 1)..cx.code.len() {
+            if cx.code[k].contains("drop(") {
+                end = k;
+                break;
+            }
+            if cx.depth_after[k] < d {
+                end = k + 1; // include the closing-brace line
+                break;
+            }
+        }
+        for k in i..end.min(cx.code.len()) {
+            if cx.in_test[k] || cx.allows(k, "lock-order") {
+                continue;
+            }
+            for pat in LOCK_DENY {
+                if cx.code[k].contains(pat) {
+                    v.push(Violation {
+                        file: cx.name.clone(),
+                        line: k + 1,
+                        rule: "lock-order",
+                        msg: format!(
+                            "`{pat}` while the PrefixCache mutex (locked at line {}) may \
+                             still be held; forwards and K/V copy-ins run outside the \
+                             cache lock",
+                            i + 1
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// rule: no-alloc
+// ---------------------------------------------------------------------------
+
+/// Heap-allocating patterns denied inside `tidy:no-alloc` regions.
+/// `Vec::new()`/`String::new()` are allocation-free and therefore
+/// allowed; `push`/`extend` into pre-reserved scratch is the sanctioned
+/// steady-state idiom (capacity is paid once, outside the hot loop).
+const NO_ALLOC_DENY: &[&str] = &[
+    "vec![",
+    ".to_vec()",
+    ".clone()",
+    ".collect",
+    "with_capacity(",
+    "Box::new(",
+    "format!(",
+    ".to_string()",
+    ".to_owned()",
+    "String::from(",
+    "Matrix::zeros(",
+];
+
+/// Region-marker needles, assembled with `concat!` so that this file's
+/// own source (which `run_all` walks like any other) never contains the
+/// contiguous marker text and trips the rule on itself.
+const NO_ALLOC_START: &str = concat!("tidy:no-alloc", "(start");
+/// See [`NO_ALLOC_START`].
+const NO_ALLOC_END: &str = concat!("tidy:no-alloc", "(end");
+
+/// Steady-state hot paths bracketed by `tidy:no-alloc` start/end
+/// comments must not heap-allocate.
+pub fn rule_no_alloc(cx: &FileCx) -> Vec<Violation> {
+    let mut v = Vec::new();
+    let mut region_start: Option<usize> = None;
+    for i in 0..cx.raw.len() {
+        // Test modules are exempt wholesale — including from marker
+        // tracking, so lint-fixture strings containing marker text
+        // (this file's own unit tests) cannot open phantom regions.
+        if cx.in_test[i] {
+            continue;
+        }
+        let raw = &cx.raw[i];
+        if raw.contains(NO_ALLOC_START) {
+            if let Some(s) = region_start {
+                v.push(Violation {
+                    file: cx.name.clone(),
+                    line: i + 1,
+                    rule: "no-alloc",
+                    msg: format!(
+                        "nested no-alloc start marker (previous region opened at line {})",
+                        s + 1,
+                    ),
+                });
+            }
+            region_start = Some(i);
+            continue;
+        }
+        if raw.contains(NO_ALLOC_END) {
+            if region_start.is_none() {
+                v.push(Violation {
+                    file: cx.name.clone(),
+                    line: i + 1,
+                    rule: "no-alloc",
+                    msg: "no-alloc end marker without a matching start".into(),
+                });
+            }
+            region_start = None;
+            continue;
+        }
+        if region_start.is_none() || cx.allows(i, "no-alloc") {
+            continue;
+        }
+        for pat in NO_ALLOC_DENY {
+            if cx.code[i].contains(pat) {
+                v.push(Violation {
+                    file: cx.name.clone(),
+                    line: i + 1,
+                    rule: "no-alloc",
+                    msg: format!(
+                        "`{pat}` inside a tidy:no-alloc region; steady-state hot paths \
+                         must reuse pre-sized scratch (see docs/INVARIANTS.md)"
+                    ),
+                });
+            }
+        }
+    }
+    if let Some(s) = region_start {
+        v.push(Violation {
+            file: cx.name.clone(),
+            line: s + 1,
+            rule: "no-alloc",
+            msg: "unclosed no-alloc region (missing end marker)".into(),
+        });
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// rule: missing-docs-attr
+// ---------------------------------------------------------------------------
+
+/// Modules whose `mod.rs` must opt into `#![warn(missing_docs)]`.
+const DOCUMENTED_SURFACES: &[&str] = &["coordinator", "infer", "quant", "codec"];
+
+/// The serving, quantization, and codec surfaces stay documented: their
+/// `mod.rs` files must carry `#![warn(missing_docs)]` (the CI doc gate
+/// promotes the warnings to errors).
+pub fn rule_missing_docs_attr(src_root: &Path) -> Vec<Violation> {
+    let mut v = Vec::new();
+    for m in DOCUMENTED_SURFACES {
+        let p = src_root.join(m).join("mod.rs");
+        let file = p.display().to_string();
+        match fs::read_to_string(&p) {
+            Ok(text) => {
+                if !text.contains("#![warn(missing_docs)]") {
+                    v.push(Violation {
+                        file,
+                        line: 1,
+                        rule: "missing-docs-attr",
+                        msg: format!("module `{m}` must carry #![warn(missing_docs)]"),
+                    });
+                }
+            }
+            Err(e) => v.push(Violation {
+                file,
+                line: 1,
+                rule: "missing-docs-attr",
+                msg: format!("cannot read module root: {e}"),
+            }),
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// rule: bench-schema
+// ---------------------------------------------------------------------------
+
+/// Declared top-level fields per bench id (beyond `bench` itself).
+/// A committed `BENCH_*.json` whose id is unknown, whose declared fields
+/// are absent, or which contains any `null` fails the gate.
+fn bench_required_keys(bench: &str) -> Option<&'static [&'static str]> {
+    match bench {
+        "fused_step_slots" => {
+            Some(&["model", "d_model", "n_layers", "window", "slots_sweep", "sweep", "note"])
+        }
+        "scheduler_mixed_lengths" => Some(&[
+            "slots",
+            "requests",
+            "lengths_cycle",
+            "tokens",
+            "ticks_static",
+            "ticks_continuous",
+            "stalled_row_steps_static",
+            "stalled_row_steps_continuous",
+            "lockstep_speedup",
+            "slot_occupancy_continuous",
+            "wall_ns_per_drain_continuous",
+            "wall_ns_per_drain_static",
+            "wall_tokens_per_sec_continuous",
+            "wall_tokens_per_sec_static",
+            "note",
+        ]),
+        "prefix_cache_shared_prefill" => Some(&[
+            "model",
+            "d_model",
+            "n_layers",
+            "window",
+            "block_tokens",
+            "sweep",
+            "note",
+        ]),
+        _ => None,
+    }
+}
+
+fn scan_nulls(j: &Json, path: &str, out: &mut Vec<String>) {
+    match j {
+        Json::Null => out.push(path.to_string()),
+        Json::Arr(a) => {
+            for (i, x) in a.iter().enumerate() {
+                scan_nulls(x, &format!("{path}[{i}]"), out);
+            }
+        }
+        Json::Obj(m) => {
+            for (k, x) in m {
+                scan_nulls(x, &format!("{path}.{k}"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// List the repo-root `BENCH_*.json` files, sorted.
+fn bench_files(repo_root: &Path) -> Result<Vec<PathBuf>, String> {
+    let entries = fs::read_dir(repo_root)
+        .map_err(|e| format!("cannot read repo root {}: {e}", repo_root.display()))?;
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    paths.sort();
+    Ok(paths)
+}
+
+/// Every committed `BENCH_*.json` parses, matches its declared schema,
+/// and carries no `null` values — so the repo's speed claims stay
+/// pinned to real committed numbers.
+pub fn rule_bench_schema(repo_root: &Path) -> Vec<Violation> {
+    let mut v = Vec::new();
+    let paths = match bench_files(repo_root) {
+        Ok(p) => p,
+        Err(msg) => {
+            v.push(Violation { file: repo_root.display().to_string(), line: 1, rule: "bench-schema", msg });
+            return v;
+        }
+    };
+    if paths.is_empty() {
+        v.push(Violation {
+            file: repo_root.display().to_string(),
+            line: 1,
+            rule: "bench-schema",
+            msg: "no BENCH_*.json found at the repo root (wrong --root?)".into(),
+        });
+        return v;
+    }
+    for p in paths {
+        let file = p.display().to_string();
+        let text = match fs::read_to_string(&p) {
+            Ok(t) => t,
+            Err(e) => {
+                v.push(Violation {
+                    file,
+                    line: 1,
+                    rule: "bench-schema",
+                    msg: format!("cannot read: {e}"),
+                });
+                continue;
+            }
+        };
+        let json = match Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => {
+                v.push(Violation {
+                    file,
+                    line: 1,
+                    rule: "bench-schema",
+                    msg: format!("does not parse as JSON: {e}"),
+                });
+                continue;
+            }
+        };
+        let bench_id = json.opt("bench").and_then(|b| b.as_str().ok()).map(str::to_string);
+        match bench_id.as_deref().and_then(bench_required_keys) {
+            Some(required) => {
+                for key in required {
+                    if json.opt(key).is_none() {
+                        v.push(Violation {
+                            file: file.clone(),
+                            line: 1,
+                            rule: "bench-schema",
+                            msg: format!("missing declared field `{key}`"),
+                        });
+                    }
+                }
+            }
+            None => v.push(Violation {
+                file: file.clone(),
+                line: 1,
+                rule: "bench-schema",
+                msg: match bench_id {
+                    Some(id) => format!(
+                        "unknown bench id {id:?}; declare its schema in lint::bench_required_keys"
+                    ),
+                    None => "missing string field `bench`".into(),
+                },
+            }),
+        }
+        let mut nulls = Vec::new();
+        scan_nulls(&json, "$", &mut nulls);
+        for path in nulls {
+            v.push(Violation {
+                file: file.clone(),
+                line: 1,
+                rule: "bench-schema",
+                msg: format!(
+                    "null value at {path}; run `cargo bench --bench decode` and commit \
+                     real numbers (wall fields must never be null)"
+                ),
+            });
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// perf-regression check (tidy --perf-check)
+// ---------------------------------------------------------------------------
+
+/// Collect `(json-path, value)` for every numeric key starting with
+/// `wall_ns` (lower is better; throughput keys are excluded on purpose).
+fn scan_wall_ns(j: &Json, path: &str, out: &mut Vec<(String, f64)>) {
+    match j {
+        Json::Arr(a) => {
+            for (i, x) in a.iter().enumerate() {
+                scan_wall_ns(x, &format!("{path}[{i}]"), out);
+            }
+        }
+        Json::Obj(m) => {
+            for (k, x) in m {
+                let sub = format!("{path}.{k}");
+                if k.starts_with("wall_ns") {
+                    if let Json::Num(n) = x {
+                        out.push((sub.clone(), *n));
+                    }
+                }
+                scan_wall_ns(x, &sub, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Compare the repo's current `BENCH_*.json` wall-clock numbers against
+/// baseline copies in `baseline_dir`: any `wall_ns_*` field more than
+/// `tolerance`× slower than its baseline is a regression.  Fields absent
+/// from the baseline (new bench cases) are skipped.
+pub fn perf_check(repo_root: &Path, baseline_dir: &Path, tolerance: f64) -> Vec<Violation> {
+    let mut v = Vec::new();
+    let paths = match bench_files(repo_root) {
+        Ok(p) => p,
+        Err(msg) => {
+            v.push(Violation { file: repo_root.display().to_string(), line: 1, rule: "perf-regression", msg });
+            return v;
+        }
+    };
+    for p in paths {
+        let file = p.display().to_string();
+        let name = match p.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        let base_path = baseline_dir.join(&name);
+        let (cur, base) = match (fs::read_to_string(&p), fs::read_to_string(&base_path)) {
+            (Ok(c), Ok(b)) => (c, b),
+            (_, Err(e)) => {
+                v.push(Violation {
+                    file,
+                    line: 1,
+                    rule: "perf-regression",
+                    msg: format!("no baseline {}: {e}", base_path.display()),
+                });
+                continue;
+            }
+            (Err(e), _) => {
+                v.push(Violation {
+                    file,
+                    line: 1,
+                    rule: "perf-regression",
+                    msg: format!("cannot read: {e}"),
+                });
+                continue;
+            }
+        };
+        let (cur, base) = match (Json::parse(&cur), Json::parse(&base)) {
+            (Ok(c), Ok(b)) => (c, b),
+            (c, b) => {
+                let e = c.err().or(b.err()).map(|e| e.to_string()).unwrap_or_default();
+                v.push(Violation {
+                    file,
+                    line: 1,
+                    rule: "perf-regression",
+                    msg: format!("bench json does not parse: {e}"),
+                });
+                continue;
+            }
+        };
+        let mut cur_walls = Vec::new();
+        let mut base_walls = Vec::new();
+        scan_wall_ns(&cur, "$", &mut cur_walls);
+        scan_wall_ns(&base, "$", &mut base_walls);
+        for (path, c) in &cur_walls {
+            let Some((_, b)) = base_walls.iter().find(|(bp, _)| bp == path) else {
+                continue;
+            };
+            if *b > 0.0 && *c > *b * tolerance {
+                v.push(Violation {
+                    file: file.clone(),
+                    line: 1,
+                    rule: "perf-regression",
+                    msg: format!(
+                        "{path}: {c:.0} ns vs baseline {b:.0} ns exceeds the {tolerance}x \
+                         tolerance band"
+                    ),
+                });
+            }
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// driver
+// ---------------------------------------------------------------------------
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable output.
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            walk_rs(&p, out);
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Run every rule over the repo rooted at `repo_root` (the directory
+/// holding `rust/` and the `BENCH_*.json` files).
+pub fn run_all(repo_root: &Path) -> Vec<Violation> {
+    let src_root = repo_root.join("rust").join("src");
+    let mut violations = Vec::new();
+    let mut files = Vec::new();
+    walk_rs(&src_root, &mut files);
+    if files.is_empty() {
+        violations.push(Violation {
+            file: src_root.display().to_string(),
+            line: 1,
+            rule: "tidy",
+            msg: "no .rs files found under rust/src (wrong --root?)".into(),
+        });
+        return violations;
+    }
+    for path in &files {
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                violations.push(Violation {
+                    file: path.display().to_string(),
+                    line: 1,
+                    rule: "tidy",
+                    msg: format!("cannot read: {e}"),
+                });
+                continue;
+            }
+        };
+        let name = path
+            .strip_prefix(repo_root)
+            .map(|p| p.display().to_string())
+            .unwrap_or_else(|_| path.display().to_string());
+        let cx = FileCx::new(&name, &text);
+        violations.extend(rule_unwrap_ban(&cx));
+        violations.extend(rule_lock_order(&cx));
+        violations.extend(rule_no_alloc(&cx));
+    }
+    violations.extend(rule_missing_docs_attr(&src_root));
+    violations.extend(rule_bench_schema(repo_root));
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cx(text: &str) -> FileCx {
+        FileCx::new("fixture.rs", text)
+    }
+
+    #[test]
+    fn stripper_blanks_strings_and_comments() {
+        let text = concat!(
+            "let a = \"contains .unwrap() and { braces\"; // trailing .unwrap()\n",
+            "/* block .unwrap()\n",
+            "   spanning lines */ let b = 1;\n",
+            "let c = '{';\n",
+        );
+        let f = cx(text);
+        assert_eq!(f.code.len(), 4);
+        assert!(!f.code[0].contains(".unwrap()"));
+        assert!(!f.code[1].contains(".unwrap()"));
+        assert!(f.code[2].contains("let b"));
+        // brace inside string and char literal must not affect depth
+        assert_eq!(f.depth_after[3], 0);
+    }
+
+    #[test]
+    fn stripper_handles_raw_strings() {
+        let text = "let s = r#\"has \"quotes\" and .unwrap()\"#;\nlet t = 2;\n";
+        let f = cx(text);
+        assert!(!f.code[0].contains(".unwrap()"));
+        assert!(f.code[1].contains("let t"));
+    }
+
+    #[test]
+    fn test_regions_are_tracked() {
+        let text = concat!(
+            "fn prod() {\n",
+            "    work();\n",
+            "}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t() { x.unwrap(); }\n",
+            "}\n",
+            "fn prod2() { y.unwrap(); }\n",
+        );
+        let f = cx(text);
+        assert!(!f.in_test[1]);
+        assert!(f.in_test[4] && f.in_test[5] && f.in_test[6]);
+        assert!(!f.in_test[7]);
+        let v = rule_unwrap_ban(&f);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 8);
+    }
+
+    #[test]
+    fn unwrap_ban_fires_with_file_line() {
+        let f = cx("fn f() {\n    let x = o.unwrap();\n}\n");
+        let v = rule_unwrap_ban(&f);
+        assert_eq!(v.len(), 1);
+        assert_eq!((v[0].file.as_str(), v[0].line), ("fixture.rs", 2));
+        assert!(v[0].to_string().contains("fixture.rs:2"));
+    }
+
+    #[test]
+    fn unwrap_ban_permits_expect_and_allow() {
+        let text = concat!(
+            "fn f() {\n",
+            "    let x = o.expect(\"pinned block vanished\");\n",
+            "    let y = p.unwrap(); // tidy:allow(unwrap): fixture\n",
+            "}\n",
+        );
+        assert!(rule_unwrap_ban(&cx(text)).is_empty());
+    }
+
+    #[test]
+    fn lock_order_flags_forward_under_guard() {
+        let text = concat!(
+            "fn f(&mut self) {\n",
+            "    if let Ok(mut g) = pc.lock() {\n",
+            "        let h = g.acquire(prompt);\n",
+            "        self.engine.prefill(&toks);\n",
+            "    }\n",
+            "    self.engine.prefill(&toks); // outside: fine\n",
+            "}\n",
+        );
+        let v = rule_lock_order(&cx(text));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 4);
+        assert!(v[0].msg.contains("outside the cache lock"));
+    }
+
+    #[test]
+    fn lock_order_flags_copy_in_after_plain_let_guard() {
+        let text = concat!(
+            "fn f(&mut self) {\n",
+            "    let mut g = pc.lock().expect(\"prefix mutex\");\n",
+            "    cache.append_block(&blk);\n",
+            "}\n",
+        );
+        let v = rule_lock_order(&cx(text));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn lock_order_respects_drop_and_allow() {
+        let dropped = concat!(
+            "fn f(&mut self) {\n",
+            "    let mut g = pc.lock().expect(\"prefix mutex\");\n",
+            "    let pins = g.acquire(prompt);\n",
+            "    drop(g);\n",
+            "    cache.append_block(&blk);\n",
+            "}\n",
+        );
+        assert!(rule_lock_order(&cx(dropped)).is_empty());
+        let allowed = concat!(
+            "fn f(&mut self) {\n",
+            "    if let Ok(mut g) = pc.lock() {\n",
+            "        cache.append_block(&blk); // tidy:allow(lock-order): fixture\n",
+            "    }\n",
+            "}\n",
+        );
+        assert!(rule_lock_order(&cx(allowed)).is_empty());
+    }
+
+    #[test]
+    fn no_alloc_region_flags_allocations() {
+        let text = concat!(
+            "fn hot(&mut self) {\n",
+            "    // tidy:no-alloc(start): steady-state decode\n",
+            "    let a = Vec::new();\n",           // alloc-free: fine
+            "    self.scratch.buf.push(x);\n",     // reuse idiom: fine
+            "    let b = xs.to_vec();\n",          // line 5: flagged
+            "    let c = vec![0.0; n]; // tidy:allow(no-alloc): fixture\n",
+            "    // tidy:no-alloc(end)\n",
+            "    let d = ys.to_vec();\n",          // outside: fine
+            "}\n",
+        );
+        let v = rule_no_alloc(&cx(text));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 5);
+        assert!(v[0].msg.contains("to_vec"));
+    }
+
+    #[test]
+    fn no_alloc_unclosed_region_is_flagged() {
+        let text = "fn hot() {\n    // tidy:no-alloc(start)\n    work();\n}\n";
+        let v = rule_no_alloc(&cx(text));
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("unclosed"));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "touches the real filesystem")]
+    fn bench_schema_catches_nulls_and_unknown_ids() {
+        let dir = std::env::temp_dir().join(format!("tidy-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("BENCH_x.json"),
+            "{\"bench\": \"fused_step_slots\", \"model\": \"m\", \"d_model\": 1, \
+             \"n_layers\": 1, \"window\": 8, \"slots_sweep\": [1], \
+             \"sweep\": [{\"wall_ns_per_tick_fused\": null}], \"note\": \"n\"}",
+        )
+        .unwrap();
+        std::fs::write(dir.join("BENCH_y.json"), "{\"bench\": \"mystery\"}").unwrap();
+        let v = rule_bench_schema(&dir);
+        assert!(
+            v.iter().any(|x| x.msg.contains("null value at $.sweep[0].wall_ns_per_tick_fused")),
+            "{v:?}"
+        );
+        assert!(v.iter().any(|x| x.msg.contains("unknown bench id")), "{v:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "touches the real filesystem")]
+    fn perf_check_flags_only_out_of_band_walls() {
+        let root = std::env::temp_dir().join(format!("tidy-perf-{}", std::process::id()));
+        let base = root.join("baseline");
+        std::fs::create_dir_all(&base).unwrap();
+        std::fs::write(
+            root.join("BENCH_x.json"),
+            "{\"bench\": \"b\", \"wall_ns_a\": 900, \"wall_ns_b\": 5000}",
+        )
+        .unwrap();
+        std::fs::write(
+            base.join("BENCH_x.json"),
+            "{\"bench\": \"b\", \"wall_ns_a\": 1000, \"wall_ns_b\": 1000}",
+        )
+        .unwrap();
+        let v = perf_check(&root, &base, 4.0);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("wall_ns_b"), "{v:?}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "walks the real repo tree")]
+    fn run_all_is_clean_on_this_repo() {
+        // the tree itself must satisfy its own lints; this is the same
+        // check CI runs via `cargo run --bin db-llm-tidy`
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ lives inside the repo root")
+            .to_path_buf();
+        let v = run_all(&root);
+        assert!(v.is_empty(), "tidy violations:\n{}", {
+            let mut s = String::new();
+            for x in &v {
+                s.push_str(&x.to_string());
+                s.push('\n');
+            }
+            s
+        });
+    }
+}

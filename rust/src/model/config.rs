@@ -99,7 +99,7 @@ impl ModelConfig {
 
     /// `[in, out]` shape of a linear by name.
     pub fn linear_shape(&self, name: &str) -> (usize, usize) {
-        let base = name.rsplit('.').next().unwrap();
+        let base = name.rsplit('.').next().expect("rsplit yields at least one part");
         let (d, f) = (self.d_model, self.d_ff);
         match base {
             "wq" | "wk" | "wv" | "wo" => (d, d),

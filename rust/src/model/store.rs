@@ -58,7 +58,7 @@ impl Dbw {
             );
             let mut data = vec![0.0f32; n];
             for (i, chunk) in blob[start..start + nbytes].chunks_exact(4).enumerate() {
-                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+                data[i] = f32::from_le_bytes(chunk.try_into().expect("chunks_exact(4) yields 4"));
             }
             tensors.insert(name, (shape, data));
         }

@@ -11,8 +11,12 @@ use super::rtn::Rtn;
 use super::{scale_overhead_bits, Calib, Quantized, Quantizer};
 use crate::tensor::Matrix;
 
+/// AWQ: activation-aware weight quantization (per-channel scale + clip
+/// search against the layer's output MSE).
 pub struct Awq {
+    /// target weight bits
     pub bits: u32,
+    /// quantization group size along the in-dimension
     pub group: usize,
     /// β grid resolution (reference uses 20 points on [0,1]).
     pub beta_steps: usize,
@@ -21,6 +25,7 @@ pub struct Awq {
 }
 
 impl Awq {
+    /// Reference-default search grids for `bits`-bit, group-`group` AWQ.
     pub fn new(bits: u32, group: usize) -> Self {
         Awq {
             bits,
@@ -109,7 +114,7 @@ impl Quantizer for Awq {
             }
         }
         Quantized {
-            w_hat: best.unwrap().1,
+            w_hat: best.expect("grid search visits at least one candidate").1,
             bits_per_weight: bits,
             method: self.name(),
             fdb: None,

@@ -7,10 +7,12 @@ use crate::tensor::{linalg, Matrix};
 
 /// Activation sample for one linear layer: `x` is `[n_samples, in]`.
 pub struct Calib {
+    /// sampled input activations, `[n_samples, in]`
     pub x: Matrix,
 }
 
 impl Calib {
+    /// Wrap an `[n_samples, in]` activation sample.
     pub fn new(x: Matrix) -> Self {
         Calib { x }
     }
@@ -20,10 +22,12 @@ impl Calib {
         Calib { x: Matrix::zeros(0, din) }
     }
 
+    /// True when no activations were sampled (data-free path).
     pub fn is_empty(&self) -> bool {
         self.x.rows == 0
     }
 
+    /// The layer's input width.
     pub fn din(&self) -> usize {
         self.x.cols
     }

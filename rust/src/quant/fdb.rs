@@ -20,14 +20,19 @@ use crate::tensor::Matrix;
 /// One FDB-quantized linear layer.
 #[derive(Clone, Debug)]
 pub struct FdbLinear {
+    /// input width (rows of the logical weight matrix)
     pub din: usize,
+    /// output width (columns of the logical weight matrix)
     pub dout: usize,
+    /// quantization group size along the in-dimension
     pub group: usize,
-    /// Packed binary planes.
+    /// Packed binary plane b₁ (the α₁ carrier).
     pub b1: BitPlane,
+    /// Packed binary plane b₂ (the α₂ carrier).
     pub b2: BitPlane,
-    /// Per-group scales `[g, out]`.
+    /// Per-group α₁ scales `[g, out]`.
     pub a1: Matrix,
+    /// Per-group α₂ scales `[g, out]`.
     pub a2: Matrix,
 }
 
@@ -301,6 +306,7 @@ pub fn mse_refine_scales(w: &Matrix, group: usize) -> (Matrix, Matrix) {
 /// The FDB quantizer (init only; DAD fine-tuning happens in
 /// `coordinator::finetune` on top of this).
 pub struct Fdb {
+    /// quantization group size along the in-dimension
     pub group: usize,
 }
 

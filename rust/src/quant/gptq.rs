@@ -12,14 +12,18 @@
 use super::{scale_overhead_bits, Calib, Quantized, Quantizer};
 use crate::tensor::Matrix;
 
+/// GPTQ: Hessian-guided sequential rounding with error feedback.
 pub struct Gptq {
+    /// target weight bits
     pub bits: u32,
+    /// quantization group size along the in-dimension
     pub group: usize,
     /// Dampening fraction λ of mean diag (reference default 0.01).
     pub damp: f64,
 }
 
 impl Gptq {
+    /// `bits`-bit, group-`group` GPTQ with the reference dampening.
     pub fn new(bits: u32, group: usize) -> Self {
         Gptq { bits, group, damp: 0.01 }
     }

@@ -11,17 +11,22 @@
 /// A searched format.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Format {
+    /// binarization: levels {-α, +α}
     Binary,
+    /// 2-bit uniform: levels {-2, -1, 0, 1}·s
     Int2,
+    /// dual binarization: levels {α₂, 0, α₁+α₂, α₁}
     Fdb,
 }
 
 /// Result of a grid search on one weight slice.
 #[derive(Clone, Debug)]
 pub struct GridResult {
+    /// the format searched
     pub format: Format,
     /// The four (or two) representable levels, ascending.
     pub levels: Vec<f32>,
+    /// mean squared error of the slice under the best levels
     pub mse: f64,
     /// max(level) - min(level): the "expression span" Fig. 3 annotates.
     pub span: f32,
@@ -93,7 +98,7 @@ pub fn search(w: &[f32], format: Format, steps: usize) -> GridResult {
             }
             let (_, a1, a2) = best;
             let mut levels = vec![a2, 0.0, a1 + a2, a1];
-            levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            levels.sort_by(|a, b| a.partial_cmp(b).expect("levels are finite"));
             GridResult {
                 format,
                 levels,

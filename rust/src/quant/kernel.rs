@@ -55,7 +55,9 @@ pub fn warm_thread_scratch(m: usize, din: usize, dout: usize) {
 
 /// Compiled FDB layer: combined-level CSC.
 pub struct FdbExec {
+    /// input width (rows of the logical weight matrix)
     pub din: usize,
+    /// output width (columns of the logical weight matrix)
     pub dout: usize,
     /// column start offsets into (row_idx, val), length dout+1
     col_ptr: Vec<u32>,
@@ -180,6 +182,9 @@ impl FdbExec {
     /// the same CSC order as [`matvec`](Self::matvec), which keeps
     /// fused and sequential decode bit-identical.
     pub fn matmul_rows(&self, x: &Matrix, y: &mut [f32], scratch: &mut FdbScratch) {
+        // tidy:no-alloc(start): fused-decode kernel — writes into the
+        // caller's buffer; the transpose scratch only grows until the
+        // shapes stabilize (reserve_rows pre-sizes it).
         assert_eq!(x.cols, self.din);
         let m = x.rows;
         assert_eq!(y.len(), m * self.dout, "output buffer is not [m, dout]");
@@ -216,10 +221,13 @@ impl FdbExec {
             }
             r0 += TILE;
         }
+        // tidy:no-alloc(end)
     }
 
     /// Single-vector product (decode-cached v2 path).
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        // tidy:no-alloc(start): the sequential decode-step kernel —
+        // pure reads over the CSC stream into the caller's buffer.
         assert_eq!(x.len(), self.din);
         for c in 0..self.dout {
             let s = self.col_ptr[c] as usize;
@@ -230,8 +238,10 @@ impl FdbExec {
             }
             y[c] = acc;
         }
+        // tidy:no-alloc(end)
     }
 
+    /// Number of stored non-zero combined levels (CSC entries).
     pub fn nnz(&self) -> usize {
         self.row_idx.len()
     }

@@ -8,20 +8,34 @@
 //!   default, the paper's W2A16 g64 headline setting),
 //! * per-group scales have shape `[in/group, out]`.
 
+#![warn(missing_docs)]
+
+/// AWQ baseline: activation-aware per-channel scale search.
 pub mod awq;
+/// Per-layer activation statistics shared by the data-aware methods.
 pub mod calib;
+/// The paper's FDB layer: dual binary planes with per-group scales.
 pub mod fdb;
+/// GPTQ baseline: Hessian-guided sequential rounding.
 pub mod gptq;
+/// Compiled execution forms of the FDB layer (CSC level stream).
 pub mod kernel;
+/// Shared 2-bit grid search utilities and format taxonomy.
 pub mod grid;
+/// OmniQuant-style baseline: learnable weight clipping.
 pub mod omniquant;
+/// u64 bit-plane packing shared by FDB storage and the codec.
 pub mod packing;
+/// PB-LLM baseline: salient weights kept dense, the rest binarized.
 pub mod pbllm;
+/// Round-to-nearest baseline (data-free).
 pub mod rtn;
 
 use crate::tensor::Matrix;
 
+/// Re-export: the activation-statistics carrier.
 pub use calib::Calib;
+/// Re-export: the packed dual-binary layer.
 pub use fdb::FdbLinear;
 
 /// Default group size (paper: W2A16 with group 64).
@@ -42,6 +56,7 @@ pub struct Quantized {
 
 /// A weight-only quantization method.
 pub trait Quantizer {
+    /// Method label for reporting (table/figure row names).
     fn name(&self) -> String;
     /// Quantize one `[in, out]` linear. `calib` carries this layer's
     /// activation sample (may be empty for data-free methods like RTN).

@@ -11,8 +11,12 @@
 use super::{scale_overhead_bits, Calib, Quantized, Quantizer};
 use crate::tensor::Matrix;
 
+/// OmniQuant-style learnable weight clipping (per-group clip search by
+/// coordinate descent on output MSE).
 pub struct OmniQuant {
+    /// target weight bits
     pub bits: u32,
+    /// quantization group size along the in-dimension
     pub group: usize,
     /// candidate clip fractions for the per-group search
     pub grid: Vec<f32>,
@@ -21,6 +25,7 @@ pub struct OmniQuant {
 }
 
 impl OmniQuant {
+    /// `bits`-bit, group-`group` LWC with the reference clip grid.
     pub fn new(bits: u32, group: usize) -> Self {
         OmniQuant {
             bits,

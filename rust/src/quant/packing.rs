@@ -9,17 +9,22 @@
 
 use crate::tensor::Matrix;
 
+/// Bits per packed word (one group of one column at group size 64).
 pub const WORD_BITS: usize = 64;
 
 /// A packed binary plane.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BitPlane {
+    /// input width (rows of the plane; must be a multiple of 64)
     pub din: usize,
+    /// output width (columns of the plane)
     pub dout: usize,
+    /// column-major packed words: `words[col * g_count + g]`
     pub words: Vec<u64>,
 }
 
 impl BitPlane {
+    /// Packed words per column (`din / 64`).
     pub fn g_count(&self) -> usize {
         self.din / WORD_BITS
     }
@@ -63,6 +68,7 @@ impl BitPlane {
         m
     }
 
+    /// The packed word for group `g` of column `col`.
     #[inline]
     pub fn word(&self, col: usize, g: usize) -> u64 {
         self.words[col * self.g_count() + g]

@@ -9,12 +9,17 @@
 use super::{scale_overhead_bits, Calib, Quantized, Quantizer};
 use crate::tensor::Matrix;
 
+/// PB-LLM: the salient fraction of weights kept at 8 bits, the rest
+/// binarized — the paper's partial-binarization baseline.
 pub struct PbLlm {
+    /// fraction of weights kept high-precision (reference: 1/7)
     pub salient_frac: f64,
+    /// quantization group size along the in-dimension
     pub group: usize,
 }
 
 impl PbLlm {
+    /// Group-`group` PB-LLM with the reference 1/7 salient fraction.
     pub fn new(group: usize) -> Self {
         PbLlm { salient_frac: 1.0 / 7.0, group }
     }
@@ -49,7 +54,7 @@ impl Quantizer for PbLlm {
             })
             .collect();
         let n_salient = ((w.data.len() as f64) * self.salient_frac).round() as usize;
-        scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scores.sort_by(|a, b| b.0.partial_cmp(&a.0).expect("saliency scores are finite"));
         let mut salient = vec![false; w.data.len()];
         for &(_, i) in scores.iter().take(n_salient) {
             salient[i] = true;

@@ -10,11 +10,14 @@ use crate::tensor::Matrix;
 
 /// k-bit RTN with per-group scales.
 pub struct Rtn {
+    /// target weight bits (1 = XNOR-style binarization)
     pub bits: u32,
+    /// quantization group size along the in-dimension
     pub group: usize,
 }
 
 impl Rtn {
+    /// `bits`-bit, group-`group` RTN (`bits` must be in 1..=8).
     pub fn new(bits: u32, group: usize) -> Self {
         assert!(bits >= 1 && bits <= 8);
         Rtn { bits, group }

@@ -84,7 +84,7 @@ pub fn pack_batch(windows: &[Vec<u32>], batch: usize, width: usize) -> Result<Ve
     ensure!(!windows.is_empty(), "empty batch");
     let mut out = Vec::with_capacity(batch * width);
     for i in 0..batch {
-        let w = windows.get(i).unwrap_or_else(|| windows.last().unwrap());
+        let w = windows.get(i).unwrap_or_else(|| windows.last().expect("batch checked non-empty"));
         ensure!(w.len() == width, "window width {} != {width}", w.len());
         out.extend(w.iter().map(|&t| t as i32));
     }
@@ -123,7 +123,7 @@ pub fn pack_decode_windows(
             toks[r * width + i] = tok as i32;
         }
         for i in window.len()..width {
-            toks[r * width + i] = *window.last().unwrap() as i32;
+            toks[r * width + i] = *window.last().expect("windows checked non-empty") as i32;
         }
         pos[r] = window.len() - 1;
     }

@@ -24,7 +24,7 @@ pub struct Case {
 impl Case {
     fn stats(&self) -> (f64, f64, f64) {
         let mut s = self.samples_ns.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.partial_cmp(b).expect("sample times are finite"));
         let mean = s.iter().sum::<f64>() / s.len() as f64;
         let p50 = s[s.len() / 2];
         let idx95 = ((s.len() as f64 * 0.95) as usize).min(s.len() - 1);

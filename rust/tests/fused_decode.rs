@@ -67,6 +67,8 @@ fn step_both(
         reference.push(seq.step_slot(slot, token).unwrap());
     }
     let fused = fus.step_slots(&steps).unwrap();
+    seq.assert_invariants();
+    fus.assert_invariants();
     assert_eq!(fused.len(), steps.len());
     for (i, &slot) in active.iter().enumerate() {
         assert_eq!(
@@ -148,6 +150,8 @@ fn fused_batch_survives_mid_flight_refill() {
     fus.reset_slot(1);
     let a = seq.prefill_slot(1, &[42, 17]).unwrap();
     let b = fus.prefill_slot(1, &[42, 17]).unwrap();
+    seq.assert_invariants();
+    fus.assert_invariants();
     assert_eq!(a, b, "refill prefill diverged");
     last[1] = argmax(&b) as u32;
     for _ in 0..4 {

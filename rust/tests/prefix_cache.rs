@@ -72,6 +72,7 @@ fn run_sched(
     let mut out = vec![Vec::new(); jobs.len()];
     let mut guard = 0;
     while !core.is_idle() {
+        core.assert_invariants();
         for c in core.tick() {
             assert_eq!(c.reason, FinishReason::Done, "unexpected completion {:?}", c.reason);
             let idx = ids.iter().position(|&i| i == c.id).unwrap();
@@ -121,6 +122,7 @@ fn warm_vs_cold_greedy_streams_are_bit_identical() {
     );
     assert!(warm_stats.prefix_miss_tokens > 0, "suffixes still pay prefill");
     let g = pc.lock().unwrap();
+    g.assert_invariants();
     assert!(g.entries() >= 3, "the shared prefix's blocks are resident");
     assert!(g.used_bytes() <= 1 << 20);
 }
@@ -189,6 +191,7 @@ fn budget_pressure_mid_decode_spares_pinned_blocks() {
     e.prefill_slot(1, &prompt_b).unwrap();
     {
         let mut g = pc.lock().unwrap();
+        g.assert_invariants();
         assert!(g.used_bytes() <= 2 * block_bytes, "budget overshot");
         assert!(g.stats().rejected_inserts >= 1, "B's overflow publish should be refused");
         assert!(g.stats().evictions <= 1, "only the unpinned A leaf may evict");
@@ -261,6 +264,7 @@ fn racing_cold_prefix_is_stored_once_and_streams_match() {
         assert_eq!(h.join().unwrap(), reference, "racing stream diverges from cold");
     }
     let g = pc.lock().unwrap();
+    g.assert_invariants();
     // 12 tokens / block 4 = 3 blocks (the chain may stop one short if
     // one racer matched the other's freshly published blocks), stored
     // exactly once

@@ -116,6 +116,7 @@ fn drain<E: SlotEngine, C: Clock>(core: &mut Scheduler<E, C>) -> Vec<Completion>
     let mut guard = 0;
     while !core.is_idle() {
         out.extend(core.tick());
+        core.assert_invariants();
         guard += 1;
         assert!(guard < 100_000, "scheduler failed to drain");
     }
@@ -212,6 +213,7 @@ fn seeded_random_sims_hold_invariants() {
             let free_before = core.free_slots();
             let before = core.stats.admissions;
             completions.extend(core.tick());
+            core.assert_invariants();
             // refill-before-idle: admission must fill min(free, queued)
             // slots — nothing here is expired or zero-budget
             let admitted = (core.stats.admissions - before) as usize;
