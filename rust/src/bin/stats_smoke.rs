@@ -1,0 +1,209 @@
+//! `stats-smoke` — boots the continuous-batching server on a loopback
+//! port with a tiny synthetic model, drives one generate request plus
+//! two `{"cmd": "stats"}` control requests over the wire, and validates
+//! the live stats surface end to end:
+//!
+//! - the stats reply is a single JSON line carrying both the full
+//!   metrics object (`stats`) and a Prometheus text exposition
+//!   (`prometheus`),
+//! - the Prometheus text is well-formed (exactly one `# TYPE` per
+//!   metric family, every sample belongs to a declared family) and
+//!   includes the required serving families,
+//! - counters are monotone across two stats calls separated by a
+//!   generate request.
+//!
+//! CI runs this as a named gate (`cargo run --release --bin
+//! stats-smoke`, wrapped by `scripts/stats_smoke.sh`); it needs no
+//! artifacts and exits 0 on success, 1 with a diagnostic on failure.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::ExitCode;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+use db_llm::coordinator::metrics::Metrics;
+use db_llm::coordinator::scheduler::{serve_continuous, SchedulerConfig};
+use db_llm::infer::NativeEngine;
+use db_llm::model::{ModelConfig, Weights};
+use db_llm::util::Json;
+
+/// Metric families the serving stack must always export.
+const REQUIRED_FAMILIES: &[&str] = &[
+    "dbllm_requests_total",
+    "dbllm_responses_total",
+    "dbllm_ttft_us",
+    "dbllm_itl_us",
+    "dbllm_queue_wait_us",
+    "dbllm_prefill_us",
+    "dbllm_tick_us",
+    "dbllm_prefix_hit_rate",
+    "dbllm_slot_occ",
+    "dbllm_mean_decode_batch",
+];
+
+fn tiny() -> ModelConfig {
+    ModelConfig {
+        name: "smoke".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 192,
+        vocab: 96,
+        seq_len: 32,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    }
+}
+
+/// One request/one reply over the newline-delimited wire protocol.
+fn ask(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> Result<Json> {
+    writeln!(stream, "{req}").context("writing request")?;
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading reply")?;
+    ensure!(!line.trim().is_empty(), "server closed the connection");
+    Json::parse(line.trim()).with_context(|| format!("parsing reply {line:?}"))
+}
+
+/// Validate a Prometheus text exposition: one `# TYPE` per family and
+/// no samples outside a declared family.  Returns the declared family
+/// names.
+fn check_prometheus(text: &str) -> Result<Vec<String>> {
+    let mut families: Vec<String> = Vec::new();
+    for l in text.lines() {
+        if let Some(rest) = l.strip_prefix("# TYPE ") {
+            let name = rest
+                .split(' ')
+                .next()
+                .context("empty # TYPE line")?
+                .to_string();
+            ensure!(!families.contains(&name), "duplicate # TYPE for {name}");
+            families.push(name);
+        }
+    }
+    for l in text.lines() {
+        if l.starts_with('#') || l.trim().is_empty() {
+            continue;
+        }
+        let sample = l
+            .split(|c: char| c == ' ' || c == '{')
+            .next()
+            .context("empty sample line")?;
+        let base = sample
+            .strip_suffix("_sum")
+            .or_else(|| sample.strip_suffix("_count"))
+            .unwrap_or(sample);
+        ensure!(
+            families.iter().any(|f| f == base),
+            "sample {sample} has no # TYPE family"
+        );
+    }
+    Ok(families)
+}
+
+fn counter(stats: &Json, name: &str) -> Result<f64> {
+    stats.get("counters")?.get(name)?.as_f64()
+}
+
+fn run() -> Result<()> {
+    let cfg = tiny();
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+    let factory_cfg = cfg.clone();
+    let addr = serve_continuous(
+        move || {
+            let weights = Weights::synthetic(&factory_cfg, 23);
+            Ok(NativeEngine::new(weights, &BTreeMap::new(), factory_cfg.seq_len, 7)
+                .with_slots(2))
+        },
+        "127.0.0.1:0",
+        64,
+        SchedulerConfig { slots: 2, trace: true, profile_every: 1, ..Default::default() },
+        1,
+        metrics.clone(),
+        running.clone(),
+    )
+    .context("starting server")?;
+
+    let mut stream = {
+        let mut tries = 0u32;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    tries += 1;
+                    ensure!(tries < 250, "server never came up: {e}");
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+            }
+        }
+    };
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+
+    // one real decode so the phase histograms have samples
+    let gen = ask(&mut stream, &mut reader, "{\"prompt\": [5, 10, 15], \"max_tokens\": 6}")?;
+    ensure!(gen.opt("error").is_none(), "generate failed: {gen}");
+    ensure!(gen.usize_list("tokens")?.len() == 6, "wrong token count: {gen}");
+
+    // stats call #1: JSON shape + Prometheus well-formedness
+    let reply = ask(&mut stream, &mut reader, "{\"cmd\": \"stats\"}")?;
+    let stats = reply.get("stats").context("stats reply missing 'stats'")?;
+    let prom = reply.get("prometheus")?.as_str().context("'prometheus' not a string")?;
+    let requests = counter(stats, "requests")?;
+    let responses = counter(stats, "responses")?;
+    ensure!(requests >= 1.0 && responses >= 1.0, "no traffic counted: {reply}");
+    let ttft_count = stats.get("histograms")?.get("ttft_us")?.get("count")?.as_f64()?;
+    ensure!(ttft_count >= 1.0, "TTFT histogram is empty");
+    for g in ["prefix_hit_rate", "slot_occ", "mean_decode_batch", "queue_depth"] {
+        stats
+            .get("gauges")?
+            .get(g)?
+            .as_f64()
+            .with_context(|| format!("gauge {g} missing or non-numeric"))?;
+    }
+    let families = check_prometheus(prom)?;
+    for f in REQUIRED_FAMILIES {
+        ensure!(families.iter().any(|have| have == f), "missing family {f}");
+    }
+
+    // stats call #2 after another request: counters are monotone
+    let gen2 = ask(&mut stream, &mut reader, "{\"prompt\": [7], \"max_tokens\": 4}")?;
+    ensure!(gen2.opt("error").is_none(), "second generate failed: {gen2}");
+    let reply2 = ask(&mut stream, &mut reader, "{\"cmd\": \"stats\"}")?;
+    let stats2 = reply2.get("stats")?;
+    ensure!(
+        counter(stats2, "requests")? > requests,
+        "requests counter did not advance"
+    );
+    ensure!(
+        counter(stats2, "responses")? > responses,
+        "responses counter did not advance"
+    );
+
+    // unknown control commands get an error reply, not a hang
+    let bad = ask(&mut stream, &mut reader, "{\"cmd\": \"reboot\"}")?;
+    match bad.opt("error").map(Json::to_string) {
+        Some(msg) if msg.contains("unknown cmd") => {}
+        other => bail!("expected unknown-cmd error, got {other:?}"),
+    }
+
+    running.store(false, Ordering::Relaxed);
+    println!(
+        "stats-smoke OK: {} prometheus families, {} requests counted",
+        families.len(),
+        counter(stats2, "requests")?
+    );
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("stats-smoke FAILED: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

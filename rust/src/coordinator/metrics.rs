@@ -1,10 +1,184 @@
-//! Serving metrics: counters + log-bucketed latency histogram with
-//! p50/p95/p99 estimation, printable as a one-line snapshot.
+//! Serving metrics: counters, derived gauges, and log₂-bucketed phase
+//! histograms — end-to-end latency, time-to-first-token (TTFT),
+//! inter-token latency (ITL), queue wait, prefill duration, and
+//! scheduler tick duration — each with p50/p95/p99 estimation.
+//!
+//! Three export surfaces:
+//! * [`Metrics::snapshot`] — the one-line human dump `db-llm serve`
+//!   logs every `--metrics-interval-ms`.
+//! * [`Metrics::to_json`] — machine-readable JSON (the `"cmd":"stats"`
+//!   wire reply).
+//! * [`Metrics::to_prometheus`] — Prometheus text exposition (one
+//!   `# TYPE` line per metric family; histograms as summaries).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-const BUCKETS: usize = 40;
+use crate::util::Json;
+
+/// Number of log₂ buckets per histogram: bucket `i` covers
+/// `[2^i, 2^(i+1))` microseconds, so 40 buckets reach ≈ 2^40 µs
+/// (~12.7 days) before the last bucket saturates.
+pub const BUCKETS: usize = 40;
+
+/// Log₂ bucket index for a microsecond value (values clamp to ≥ 1 µs,
+/// so bucket 0 is "at most 1 µs").
+pub fn bucket_index(us: u64) -> usize {
+    let us = us.max(1);
+    (63 - us.leading_zeros() as usize).min(BUCKETS - 1)
+}
+
+/// Representative microsecond value reported for bucket `i`: the
+/// geometric mean `2^i · √2` of the bucket's `[2^i, 2^(i+1))` range.
+///
+/// The previous convention returned the bucket's *upper edge*, which
+/// overstated every quantile by up to 2× (a steady 100 µs workload
+/// reported p50 = 128 µs… as 256 µs).  The geometric mean is the
+/// unbiased point estimate for log-uniform samples within a bucket.
+pub fn bucket_value_us(i: usize) -> u64 {
+    ((1u64 << i) as f64 * std::f64::consts::SQRT_2).round() as u64
+}
+
+/// Shared percentile walk over a bucket-count array: returns the
+/// geometric mean of the bucket holding the `p`-quantile sample, or 0
+/// when the histogram is empty.
+fn percentile_of(counts: &[u64; BUCKETS], p: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = (total as f64 * p).ceil().max(1.0) as u64;
+    let mut acc = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            return bucket_value_us(i);
+        }
+    }
+    bucket_value_us(BUCKETS - 1)
+}
+
+/// Plain (non-atomic) log₂ histogram for single-threaded owners.
+///
+/// The scheduler core records phase timings into `LocalHist`s so
+/// deterministic `ManualClock` sims can assert on exact bucket
+/// contents; `scheduler_loop` flushes bucket *deltas* into the shared
+/// atomic [`Histogram`]s via [`Histogram::merge_delta`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LocalHist {
+    /// Per-bucket sample counts (bucket `i` = `[2^i, 2^(i+1))` µs).
+    pub buckets: [u64; BUCKETS],
+    /// Total samples recorded.
+    pub count: u64,
+    /// Sum of recorded values in microseconds.
+    pub sum_us: u64,
+}
+
+impl Default for LocalHist {
+    fn default() -> Self {
+        LocalHist { buckets: [0; BUCKETS], count: 0, sum_us: 0 }
+    }
+}
+
+impl LocalHist {
+    /// Record one value in microseconds (clamped to ≥ 1 µs).
+    pub fn record_us(&mut self, us: u64) {
+        let us = us.max(1);
+        self.buckets[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+    }
+
+    /// Percentile estimate (bucket geometric mean; 0 when empty).
+    pub fn percentile(&self, p: f64) -> u64 {
+        percentile_of(&self.buckets, p)
+    }
+
+    /// Mean of recorded values in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+}
+
+/// Thread-safe log₂ histogram over microsecond values.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one value in microseconds (clamped to ≥ 1 µs).
+    pub fn record_us(&self, us: u64) {
+        let us = us.max(1);
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Record one `Duration`.
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded values in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Mean of recorded values in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us() as f64 / n as f64
+        }
+    }
+
+    /// Percentile estimate (bucket geometric mean; 0 when empty).
+    pub fn percentile(&self, p: f64) -> u64 {
+        let counts: [u64; BUCKETS] = std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed));
+        percentile_of(&counts, p)
+    }
+
+    /// Flush the monotonic delta between two [`LocalHist`] snapshots
+    /// into this shared histogram (the scheduler loop's per-tick
+    /// delta-flush pattern; only touched buckets pay an atomic add).
+    pub fn merge_delta(&self, cur: &LocalHist, last: &LocalHist) {
+        for i in 0..BUCKETS {
+            let d = cur.buckets[i] - last.buckets[i];
+            if d > 0 {
+                self.buckets[i].fetch_add(d, Ordering::Relaxed);
+            }
+        }
+        if cur.count > last.count {
+            self.count.fetch_add(cur.count - last.count, Ordering::Relaxed);
+        }
+        if cur.sum_us > last.sum_us {
+            self.sum_us.fetch_add(cur.sum_us - last.sum_us, Ordering::Relaxed);
+        }
+    }
+}
 
 /// Thread-safe metrics registry.
 pub struct Metrics {
@@ -66,8 +240,52 @@ pub struct Metrics {
     /// cache's mutex poisoned and degraded to the cold (uncached) path
     /// — counted, never silently swallowed
     pub prefix_lock_poisoned: AtomicU64,
-    /// log₂-bucketed latencies, bucket i = [2^i, 2^(i+1)) microseconds
-    lat_buckets: [AtomicU64; BUCKETS],
+    /// trace/span ring-buffer entries overwritten before anyone read
+    /// them (the bounded-ring drop counter; see `coordinator/trace.rs`)
+    pub trace_dropped: AtomicU64,
+    /// scheduler ticks that ran with phase timers on (the 1-in-N
+    /// sampled profiling denominator)
+    pub profiled_ticks: AtomicU64,
+    /// summed wall nanoseconds the sampled ticks spent in queue-expiry
+    /// + EDF admission (incl. prefill)
+    pub sched_admit_ns: AtomicU64,
+    /// summed wall nanoseconds the sampled ticks spent in the fused
+    /// decode step
+    pub sched_step_ns: AtomicU64,
+    /// summed wall nanoseconds the sampled ticks spent expiring /
+    /// finishing active slots
+    pub sched_expire_ns: AtomicU64,
+    /// summed wall nanoseconds of whole sampled ticks
+    pub sched_tick_ns: AtomicU64,
+    /// engine prefill calls timed (every prefill is timed — prefill is
+    /// rare and heavy)
+    pub engine_prefill_calls: AtomicU64,
+    /// summed wall nanoseconds inside engine prefill (cache walk +
+    /// block copy-in + suffix forward)
+    pub engine_prefill_ns: AtomicU64,
+    /// engine `step_slots` calls that were wall-timed (1-in-N sampled)
+    pub engine_step_sampled: AtomicU64,
+    /// summed wall nanoseconds of the sampled `step_slots` calls
+    pub engine_step_ns: AtomicU64,
+    /// scheduler-loop reply flushes timed (ticks that sent ≥ 1 reply)
+    pub reply_calls: AtomicU64,
+    /// summed wall nanoseconds rendering + sending those replies
+    pub reply_ns: AtomicU64,
+    /// end-to-end request latency (receipt → reply rendered), µs
+    pub latency: Histogram,
+    /// time-to-first-token: queue wait + prefill (the first token is
+    /// sampled from prefill logits), µs
+    pub ttft: Histogram,
+    /// inter-token latency: gap between consecutive decoded tokens of
+    /// one request, µs
+    pub itl: Histogram,
+    /// queue wait: request arrival (incl. upstream shared-queue time)
+    /// → slot admission, µs
+    pub queue_wait: Histogram,
+    /// prefill duration (wall time inside `prefill_slot`), µs
+    pub prefill: Histogram,
+    /// scheduler tick duration (sampled ticks only), µs
+    pub tick: Histogram,
 }
 
 impl Default for Metrics {
@@ -94,7 +312,24 @@ impl Default for Metrics {
             prefix_miss_tokens: AtomicU64::new(0),
             prefix_evictions: AtomicU64::new(0),
             prefix_lock_poisoned: AtomicU64::new(0),
-            lat_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            trace_dropped: AtomicU64::new(0),
+            profiled_ticks: AtomicU64::new(0),
+            sched_admit_ns: AtomicU64::new(0),
+            sched_step_ns: AtomicU64::new(0),
+            sched_expire_ns: AtomicU64::new(0),
+            sched_tick_ns: AtomicU64::new(0),
+            engine_prefill_calls: AtomicU64::new(0),
+            engine_prefill_ns: AtomicU64::new(0),
+            engine_step_sampled: AtomicU64::new(0),
+            engine_step_ns: AtomicU64::new(0),
+            reply_calls: AtomicU64::new(0),
+            reply_ns: AtomicU64::new(0),
+            latency: Histogram::default(),
+            ttft: Histogram::default(),
+            itl: Histogram::default(),
+            queue_wait: Histogram::default(),
+            prefill: Histogram::default(),
+            tick: Histogram::default(),
         }
     }
 }
@@ -102,9 +337,7 @@ impl Default for Metrics {
 impl Metrics {
     /// Record one request's end-to-end latency into the log₂ histogram.
     pub fn record_latency(&self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
-        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
-        self.lat_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.latency.record(d);
     }
 
     /// Record one collected static batch and its row count.
@@ -113,22 +346,10 @@ impl Metrics {
         self.batch_occupancy_sum.fetch_add(occupancy as u64, Ordering::Relaxed);
     }
 
-    /// Approximate latency percentile (upper bucket edge, microseconds).
+    /// Approximate end-to-end latency percentile in microseconds
+    /// (geometric mean of the quantile's log₂ bucket; 0 when empty).
     pub fn latency_percentile(&self, p: f64) -> u64 {
-        let counts: Vec<u64> = self.lat_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (total as f64 * p).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, &c) in counts.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        1u64 << BUCKETS
+        self.latency.percentile(p)
     }
 
     /// Mean rows per collected static batch (0 before any batch).
@@ -173,15 +394,28 @@ impl Metrics {
         hit as f64 / (hit + miss) as f64
     }
 
-    /// One-line human-readable dump of every counter (the `[metrics]`
-    /// line `db-llm serve` prints every 10 s).
+    /// One-line human-readable dump of every counter plus per-phase
+    /// p50/p95/p99 (the `[metrics]` line `db-llm serve` prints every
+    /// `--metrics-interval-ms`).
     pub fn snapshot(&self) -> String {
+        let q3 = |h: &Histogram| (h.percentile(0.50), h.percentile(0.95), h.percentile(0.99));
+        let (e50, e95, e99) = q3(&self.latency);
+        let (t50, t95, t99) = q3(&self.ttft);
+        let (i50, i95, i99) = q3(&self.itl);
+        let (q50, q95, q99) = q3(&self.queue_wait);
+        let (f50, f95, f99) = q3(&self.prefill);
+        let (k50, k95, k99) = q3(&self.tick);
         format!(
             "req={} resp={} err={} rejected={} tokens={} batches={} occ={:.2} queue={} \
              saved_steps={} stalled={} slot_occ={:.2} refills={} timeouts={} \
              fused_rows={} decode_batch={:.2} prefix_hit={} prefix_miss={} \
              prefix_hit_rate={:.2} prefix_evict={} prefix_poisoned={} \
-             p50={}us p95={}us p99={}us",
+             p50={}us p95={}us p99={}us \
+             ttft_p50={}us ttft_p95={}us ttft_p99={}us \
+             itl_p50={}us itl_p95={}us itl_p99={}us \
+             qwait_p50={}us qwait_p95={}us qwait_p99={}us \
+             prefill_p50={}us prefill_p95={}us prefill_p99={}us \
+             tick_p50={}us tick_p95={}us tick_p99={}us trace_dropped={}",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -202,11 +436,189 @@ impl Metrics {
             self.prefix_hit_rate(),
             self.prefix_evictions.load(Ordering::Relaxed),
             self.prefix_lock_poisoned.load(Ordering::Relaxed),
-            self.latency_percentile(0.50),
-            self.latency_percentile(0.95),
-            self.latency_percentile(0.99),
+            e50,
+            e95,
+            e99,
+            t50,
+            t95,
+            t99,
+            i50,
+            i95,
+            i99,
+            q50,
+            q95,
+            q99,
+            f50,
+            f95,
+            f99,
+            k50,
+            k95,
+            k99,
+            self.trace_dropped.load(Ordering::Relaxed),
         )
     }
+
+    /// Machine-readable export: every counter, the derived gauges
+    /// (`prefix_hit_rate`, `mean_decode_batch`, `slot_occ`, …) as
+    /// first-class values, each histogram as
+    /// `{count, mean_us, p50_us, p95_us, p99_us}`, and the sampled
+    /// profiling breakdown.  This is the `"stats"` object in the
+    /// `{"cmd":"stats"}` wire reply.
+    pub fn to_json(&self) -> Json {
+        let c = |a: &AtomicU64| Json::num(a.load(Ordering::Relaxed) as f64);
+        let hist = |h: &Histogram| {
+            Json::obj(vec![
+                ("count", Json::num(h.count() as f64)),
+                ("mean_us", Json::num(h.mean_us())),
+                ("p50_us", Json::num(h.percentile(0.50) as f64)),
+                ("p95_us", Json::num(h.percentile(0.95) as f64)),
+                ("p99_us", Json::num(h.percentile(0.99) as f64)),
+            ])
+        };
+        Json::obj(vec![
+            (
+                "counters",
+                Json::obj(vec![
+                    ("requests", c(&self.requests)),
+                    ("responses", c(&self.responses)),
+                    ("errors", c(&self.errors)),
+                    ("rejected", c(&self.rejected)),
+                    ("tokens_out", c(&self.tokens_out)),
+                    ("batches", c(&self.batches)),
+                    ("batch_occupancy_sum", c(&self.batch_occupancy_sum)),
+                    ("early_exit_steps", c(&self.early_exit_steps)),
+                    ("stalled_row_steps", c(&self.stalled_row_steps)),
+                    ("slot_busy_ticks", c(&self.slot_busy_ticks)),
+                    ("slot_ticks", c(&self.slot_ticks)),
+                    ("refills", c(&self.refills)),
+                    ("timeouts", c(&self.timeouts)),
+                    ("decode_batches", c(&self.decode_batches)),
+                    ("decode_batch_rows", c(&self.decode_batch_rows)),
+                    ("fused_rows", c(&self.fused_rows)),
+                    ("prefix_hit_tokens", c(&self.prefix_hit_tokens)),
+                    ("prefix_miss_tokens", c(&self.prefix_miss_tokens)),
+                    ("prefix_evictions", c(&self.prefix_evictions)),
+                    ("prefix_lock_poisoned", c(&self.prefix_lock_poisoned)),
+                    ("trace_dropped", c(&self.trace_dropped)),
+                ]),
+            ),
+            (
+                "gauges",
+                Json::obj(vec![
+                    ("queue_depth", c(&self.queue_depth)),
+                    ("slot_occ", Json::num(self.slot_occupancy())),
+                    ("prefix_hit_rate", Json::num(self.prefix_hit_rate())),
+                    ("mean_decode_batch", Json::num(self.mean_decode_batch())),
+                    ("mean_batch_occupancy", Json::num(self.mean_batch_occupancy())),
+                ]),
+            ),
+            (
+                "histograms",
+                Json::obj(vec![
+                    ("latency_us", hist(&self.latency)),
+                    ("ttft_us", hist(&self.ttft)),
+                    ("itl_us", hist(&self.itl)),
+                    ("queue_wait_us", hist(&self.queue_wait)),
+                    ("prefill_us", hist(&self.prefill)),
+                    ("tick_us", hist(&self.tick)),
+                ]),
+            ),
+            (
+                "profile",
+                Json::obj(vec![
+                    ("profiled_ticks", c(&self.profiled_ticks)),
+                    ("sched_admit_ns", c(&self.sched_admit_ns)),
+                    ("sched_step_ns", c(&self.sched_step_ns)),
+                    ("sched_expire_ns", c(&self.sched_expire_ns)),
+                    ("sched_tick_ns", c(&self.sched_tick_ns)),
+                    ("engine_prefill_calls", c(&self.engine_prefill_calls)),
+                    ("engine_prefill_ns", c(&self.engine_prefill_ns)),
+                    ("engine_step_sampled", c(&self.engine_step_sampled)),
+                    ("engine_step_ns", c(&self.engine_step_ns)),
+                    ("reply_calls", c(&self.reply_calls)),
+                    ("reply_ns", c(&self.reply_ns)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Prometheus text-exposition rendering: one `# TYPE` line per
+    /// metric family; counters carry the `_total` suffix, derived
+    /// ratios are gauges, histograms are summaries with
+    /// `quantile="0.5|0.95|0.99"` labels plus `_sum`/`_count`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let l = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        for (name, v) in [
+            ("requests", l(&self.requests)),
+            ("responses", l(&self.responses)),
+            ("errors", l(&self.errors)),
+            ("rejected", l(&self.rejected)),
+            ("tokens_out", l(&self.tokens_out)),
+            ("batches", l(&self.batches)),
+            ("early_exit_steps", l(&self.early_exit_steps)),
+            ("stalled_row_steps", l(&self.stalled_row_steps)),
+            ("slot_busy_ticks", l(&self.slot_busy_ticks)),
+            ("slot_ticks", l(&self.slot_ticks)),
+            ("refills", l(&self.refills)),
+            ("timeouts", l(&self.timeouts)),
+            ("decode_batches", l(&self.decode_batches)),
+            ("decode_batch_rows", l(&self.decode_batch_rows)),
+            ("fused_rows", l(&self.fused_rows)),
+            ("prefix_hit_tokens", l(&self.prefix_hit_tokens)),
+            ("prefix_miss_tokens", l(&self.prefix_miss_tokens)),
+            ("prefix_evictions", l(&self.prefix_evictions)),
+            ("prefix_lock_poisoned", l(&self.prefix_lock_poisoned)),
+            ("trace_dropped", l(&self.trace_dropped)),
+            ("profiled_ticks", l(&self.profiled_ticks)),
+            ("sched_admit_ns", l(&self.sched_admit_ns)),
+            ("sched_step_ns", l(&self.sched_step_ns)),
+            ("sched_expire_ns", l(&self.sched_expire_ns)),
+            ("sched_tick_ns", l(&self.sched_tick_ns)),
+            ("engine_prefill_calls", l(&self.engine_prefill_calls)),
+            ("engine_prefill_ns", l(&self.engine_prefill_ns)),
+            ("engine_step_sampled", l(&self.engine_step_sampled)),
+            ("engine_step_ns", l(&self.engine_step_ns)),
+            ("reply_calls", l(&self.reply_calls)),
+            ("reply_ns", l(&self.reply_ns)),
+        ] {
+            prom_counter(&mut out, name, v);
+        }
+        prom_gauge(&mut out, "queue_depth", l(&self.queue_depth) as f64);
+        prom_gauge(&mut out, "slot_occ", self.slot_occupancy());
+        prom_gauge(&mut out, "prefix_hit_rate", self.prefix_hit_rate());
+        prom_gauge(&mut out, "mean_decode_batch", self.mean_decode_batch());
+        prom_gauge(&mut out, "mean_batch_occupancy", self.mean_batch_occupancy());
+        prom_summary(&mut out, "latency_us", &self.latency);
+        prom_summary(&mut out, "ttft_us", &self.ttft);
+        prom_summary(&mut out, "itl_us", &self.itl);
+        prom_summary(&mut out, "queue_wait_us", &self.queue_wait);
+        prom_summary(&mut out, "prefill_us", &self.prefill);
+        prom_summary(&mut out, "tick_us", &self.tick);
+        out
+    }
+}
+
+fn prom_counter(out: &mut String, name: &str, v: u64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# TYPE dbllm_{name}_total counter");
+    let _ = writeln!(out, "dbllm_{name}_total {v}");
+}
+
+fn prom_gauge(out: &mut String, name: &str, v: f64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# TYPE dbllm_{name} gauge");
+    let _ = writeln!(out, "dbllm_{name} {v}");
+}
+
+fn prom_summary(out: &mut String, name: &str, h: &Histogram) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# TYPE dbllm_{name} summary");
+    for (q, label) in [(0.50, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+        let _ = writeln!(out, "dbllm_{name}{{quantile=\"{label}\"}} {}", h.percentile(q));
+    }
+    let _ = writeln!(out, "dbllm_{name}_sum {}", h.sum_us());
+    let _ = writeln!(out, "dbllm_{name}_count {}", h.count());
 }
 
 #[cfg(test)]
@@ -223,6 +635,47 @@ mod tests {
         let p99 = m.latency_percentile(0.99);
         assert!(p50 <= p99);
         assert!(p50 >= 128 && p99 <= 8192, "{p50} {p99}");
+    }
+
+    #[test]
+    fn percentile_reports_bucket_geometric_mean() {
+        // The old convention returned the bucket's upper edge: a
+        // steady 100 µs stream landed in bucket [64,128) and reported
+        // p50 = 128 — and a 65 µs stream would too, overstating ~2×.
+        // The geometric mean of bucket [64,128) is 64·√2 ≈ 91.
+        let m = Metrics::default();
+        for _ in 0..10 {
+            m.record_latency(Duration::from_micros(100));
+        }
+        assert_eq!(m.latency_percentile(0.5), 91, "geometric mean of [64,128)");
+        assert_eq!(m.latency_percentile(0.99), 91);
+
+        // Mixed stream: 100,200,400,800,1600,3200 µs (one each).
+        let m = Metrics::default();
+        for us in [100u64, 200, 400, 800, 1600, 3200] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        // p50 target = 3rd sample → 400 µs → bucket [256,512) → 362.
+        assert_eq!(m.latency_percentile(0.5), 362);
+        // p99 target = 6th sample → 3200 µs → bucket [2048,4096) → 2896.
+        assert_eq!(m.latency_percentile(0.99), 2896);
+    }
+
+    #[test]
+    fn local_hist_matches_atomic_after_merge() {
+        let mut local = LocalHist::default();
+        let shared = Histogram::default();
+        let mut last = LocalHist::default();
+        for us in [5u64, 50, 500, 5000] {
+            local.record_us(us);
+            shared.merge_delta(&local, &last);
+            last = local;
+        }
+        assert_eq!(shared.count(), 4);
+        assert_eq!(shared.sum_us(), local.sum_us);
+        for p in [0.5, 0.95, 0.99] {
+            assert_eq!(shared.percentile(p), local.percentile(p));
+        }
     }
 
     #[test]
@@ -245,6 +698,9 @@ mod tests {
         assert!(m.snapshot().contains("timeouts=0"));
         assert!(m.snapshot().contains("fused_rows=0"));
         assert!(m.snapshot().contains("decode_batch=0.00"));
+        assert!(m.snapshot().contains("ttft_p50=0us"));
+        assert!(m.snapshot().contains("itl_p99=0us"));
+        assert!(m.snapshot().contains("trace_dropped=0"));
         assert_eq!(m.slot_occupancy(), 0.0, "no scheduler ticks -> 0, not NaN");
         assert_eq!(m.mean_decode_batch(), 0.0, "no decode ticks -> 0, not NaN");
     }
@@ -311,5 +767,57 @@ mod tests {
         assert!(s.contains("saved_steps=7"), "{s}");
         assert!(s.contains("err=1"), "{s}");
         assert!(s.contains("rejected=2"), "{s}");
+    }
+
+    #[test]
+    fn json_export_roundtrips_with_first_class_gauges() {
+        let m = Metrics::default();
+        m.requests.fetch_add(7, Ordering::Relaxed);
+        m.prefix_hit_tokens.fetch_add(30, Ordering::Relaxed);
+        m.prefix_miss_tokens.fetch_add(10, Ordering::Relaxed);
+        m.decode_batches.fetch_add(5, Ordering::Relaxed);
+        m.decode_batch_rows.fetch_add(15, Ordering::Relaxed);
+        m.slot_ticks.fetch_add(40, Ordering::Relaxed);
+        m.slot_busy_ticks.fetch_add(29, Ordering::Relaxed);
+        m.ttft.record_us(1000);
+        let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+        let gauges = parsed.get("gauges").unwrap();
+        assert!((gauges.get("prefix_hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-12);
+        assert!((gauges.get("mean_decode_batch").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-12);
+        assert!((gauges.get("slot_occ").unwrap().as_f64().unwrap() - 0.725).abs() < 1e-12);
+        let counters = parsed.get("counters").unwrap();
+        assert_eq!(counters.get("requests").unwrap().as_f64().unwrap(), 7.0);
+        let ttft = parsed.get("histograms").unwrap().get("ttft_us").unwrap();
+        assert_eq!(ttft.get("count").unwrap().as_f64().unwrap(), 1.0);
+        // 1000 µs → bucket [512,1024) → geometric mean 724
+        assert_eq!(ttft.get("p50_us").unwrap().as_f64().unwrap(), 724.0);
+    }
+
+    #[test]
+    fn prometheus_has_one_type_line_per_family() {
+        let m = Metrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.ttft.record_us(1000);
+        let text = m.to_prometheus();
+        let mut families = std::collections::BTreeSet::new();
+        for line in text.lines().filter(|l| l.starts_with("# TYPE ")) {
+            let name = line.split_whitespace().nth(2).unwrap();
+            assert!(families.insert(name.to_string()), "duplicate # TYPE for {name}");
+        }
+        // every sample line's family (strip labels and summary
+        // suffixes) must have exactly one TYPE declaration
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let name = line.split(['{', ' ']).next().unwrap();
+            let base = name.strip_suffix("_sum").unwrap_or(name);
+            let base = base.strip_suffix("_count").unwrap_or(base);
+            assert!(
+                families.contains(base) || families.contains(name),
+                "sample {name} has no # TYPE line"
+            );
+        }
+        assert!(text.contains("# TYPE dbllm_ttft_us summary"));
+        assert!(text.contains("dbllm_ttft_us{quantile=\"0.5\"} 724"));
+        assert!(text.contains("dbllm_requests_total 3"));
+        assert!(text.contains("# TYPE dbllm_prefix_hit_rate gauge"));
     }
 }

@@ -14,5 +14,6 @@ pub mod finetune;
 pub mod metrics;
 pub mod scheduler;
 pub mod serve;
+pub mod trace;
 
 pub use finetune::{DadConfig, DadTrainer};

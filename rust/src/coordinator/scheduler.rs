@@ -38,7 +38,8 @@ use anyhow::{Context, Result};
 
 use crate::util::Pcg32;
 
-use super::metrics::Metrics;
+use super::metrics::{LocalHist, Metrics};
+use super::trace::{RequestSpan, TraceRing};
 use super::serve::{
     argmax, bind_listener, sample, spawn_accept_loop, DecodeParams, Request, Response,
 };
@@ -54,6 +55,15 @@ const SHUTDOWN_POLL: Duration = Duration::from_millis(50);
 pub trait Clock {
     /// Milliseconds since this clock's (arbitrary) origin.
     fn now_ms(&self) -> u64;
+
+    /// Microseconds since the origin.  The default derives µs from
+    /// [`now_ms`](Clock::now_ms) — exact for scripted clocks, which
+    /// advance in whole milliseconds — while `WallClock` overrides it
+    /// with native µs resolution so sub-millisecond TTFT and
+    /// inter-token gaps are not rounded away.
+    fn now_us(&self) -> u64 {
+        self.now_ms().saturating_mul(1000)
+    }
 }
 
 /// Real time, measured from construction.
@@ -70,6 +80,10 @@ impl Default for WallClock {
 impl Clock for WallClock {
     fn now_ms(&self) -> u64 {
         self.origin.elapsed().as_millis() as u64
+    }
+
+    fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
     }
 }
 
@@ -174,6 +188,17 @@ pub trait SlotEngine {
     fn prefix_counters(&self) -> Option<PrefixCounters> {
         None
     }
+
+    /// Cumulative wall-clock phase timers this engine accumulated, or
+    /// `None` when the engine does not time itself (the default).
+    /// Engines that do (like `infer::NativeEngine`) time every prefill
+    /// — rare and heavy — and sample decode steps 1-in-N so the hot
+    /// loop stays untouched between samples.  The scheduler snapshots
+    /// these into [`SchedStats`] every tick; the serving loop flushes
+    /// deltas into the shared [`Metrics`].
+    fn phase_timers(&self) -> Option<EngineTimers> {
+        None
+    }
 }
 
 /// Cumulative prefix-cache counters one engine accumulated (see
@@ -195,6 +220,21 @@ pub struct PrefixCounters {
     pub lock_poisoned: u64,
 }
 
+/// Cumulative wall-clock phase timers one engine accumulated (see
+/// [`SlotEngine::phase_timers`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineTimers {
+    /// prefill calls wall-timed (every prefill: rare and heavy)
+    pub prefill_calls: u64,
+    /// summed wall nanoseconds inside those prefill calls (cache walk
+    /// + block copy-in + suffix forward)
+    pub prefill_ns: u64,
+    /// batched decode (`step_slots`) calls sampled for timing (1-in-N)
+    pub step_sampled: u64,
+    /// summed wall nanoseconds inside the sampled calls
+    pub step_ns: u64,
+}
+
 /// Scheduler policy knobs.
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
@@ -208,14 +248,32 @@ pub struct SchedulerConfig {
     pub default_timeout_ms: Option<u64>,
     /// base seed for the per-request sampling streams
     pub seed: u64,
-    /// record [`TraceEvent`]s (simulation/testing only — the trace
-    /// grows without bound, so the serving loop leaves it off)
+    /// record [`TraceEvent`]s into the bounded trace ring.  Safe to
+    /// leave on while serving: the ring overwrites its oldest entry
+    /// when full and counts the drops ([`SchedStats::trace_dropped`]);
+    /// [`Scheduler::take_trace`] keeps its draining semantics for the
+    /// simulation tests
     pub trace: bool,
+    /// capacity (entries) of the trace and request-span ring buffers —
+    /// memory is paid once at construction (see `coordinator/trace.rs`)
+    pub trace_capacity: usize,
+    /// wall-time a full per-phase tick breakdown every N ticks
+    /// (1 = every tick, 0 = never); sampling keeps the steady-state
+    /// decode loop free of timer overhead between samples
+    pub profile_every: u64,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { slots: 4, refill: true, default_timeout_ms: None, seed: 42, trace: false }
+        SchedulerConfig {
+            slots: 4,
+            refill: true,
+            default_timeout_ms: None,
+            seed: 42,
+            trace: false,
+            trace_capacity: 4096,
+            profile_every: 64,
+        }
     }
 }
 
@@ -306,6 +364,48 @@ pub struct SchedStats {
     /// poisoned prefix-lock events this engine degraded through (see
     /// [`PrefixCounters::lock_poisoned`])
     pub prefix_lock_poisoned: u64,
+    /// ticks that ran with the sampled phase timers on
+    /// (`SchedulerConfig::profile_every`)
+    pub profiled_ticks: u64,
+    /// wall ns the sampled ticks spent in queue-expiry + EDF admission
+    /// (prefill included)
+    pub admit_ns: u64,
+    /// wall ns the sampled ticks spent in the decode-step phase
+    pub step_ns: u64,
+    /// wall ns the sampled ticks spent expiring deadline-passed rows
+    pub expire_ns: u64,
+    /// total wall ns of the sampled ticks
+    pub tick_ns: u64,
+    /// snapshot of [`EngineTimers::prefill_calls`] (0 without timers)
+    pub engine_prefill_calls: u64,
+    /// snapshot of [`EngineTimers::prefill_ns`]
+    pub engine_prefill_ns: u64,
+    /// snapshot of [`EngineTimers::step_sampled`]
+    pub engine_step_sampled: u64,
+    /// snapshot of [`EngineTimers::step_ns`]
+    pub engine_step_ns: u64,
+    /// trace + span ring entries overwritten before being read
+    pub trace_dropped: u64,
+}
+
+/// Per-phase latency histograms the scheduler core records locally —
+/// plain counters, so deterministic `ManualClock` sims can assert
+/// exact bucket contents.  The serving loop flushes bucket deltas into
+/// the shared atomic [`Metrics`] histograms after every tick.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedHists {
+    /// time-to-first-token: queue wait + prefill, µs (one sample per
+    /// admission — the first token is sampled from prefill logits)
+    pub ttft_us: LocalHist,
+    /// inter-token gap between consecutive decoded tokens, µs (one
+    /// sample per decode-stepped row)
+    pub itl_us: LocalHist,
+    /// request arrival (incl. upstream queue time) → slot admission, µs
+    pub queue_wait_us: LocalHist,
+    /// wall time inside `prefill_slot`, µs
+    pub prefill_us: LocalHist,
+    /// whole-tick wall duration, µs (sampled ticks only)
+    pub tick_us: LocalHist,
 }
 
 struct Queued {
@@ -313,6 +413,10 @@ struct Queued {
     prompt: Vec<u32>,
     params: DecodeParams,
     deadline_ms: Option<u64>,
+    /// clock stamp when `submit` saw the job (queue-wait start)
+    submitted_at_us: u64,
+    /// time already spent in the upstream shared queue, µs
+    upstream_us: u64,
 }
 
 struct Active {
@@ -325,6 +429,18 @@ struct Active {
     last: u32,
     /// admitted this tick: its token came from the prefill logits
     fresh: bool,
+    /// clock stamp at admission (span decode_us start)
+    admitted_at_us: u64,
+    /// arrival → admission, µs (upstream queue time included)
+    queue_wait_us: u64,
+    /// wall time the admission prefill took, µs
+    prefill_us: u64,
+    /// prompt tokens served from the shared prefix cache
+    prefix_hit: u32,
+    /// prompt tokens that paid prefill
+    prefix_miss: u32,
+    /// clock stamp of the last accepted token (ITL numerator)
+    last_token_at_us: u64,
 }
 
 /// The continuous-batching core: a fixed slot set over a [`SlotEngine`]
@@ -340,7 +456,13 @@ pub struct Scheduler<E: SlotEngine, C: Clock> {
     next_id: u64,
     /// cumulative counters (see [`SchedStats`])
     pub stats: SchedStats,
-    trace: Vec<TraceEvent>,
+    /// per-phase latency histograms (see [`SchedHists`])
+    pub hists: SchedHists,
+    trace: TraceRing<TraceEvent>,
+    /// always-on phase-timed lifecycle record per finished request
+    spans: TraceRing<RequestSpan>,
+    /// monotonic tick counter driving the 1-in-N profile sampling
+    tick_seq: u64,
     /// per-tick step list, reused across ticks so the steady-state
     /// decode loop stops allocating once it has grown to the slot count
     steps_buf: Vec<(usize, u32)>,
@@ -351,6 +473,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
     /// engine's actual capacity.
     pub fn new(engine: E, clock: C, cfg: SchedulerConfig) -> Scheduler<E, C> {
         let slots = cfg.slots.clamp(1, engine.slots().max(1));
+        let trace_cap = cfg.trace_capacity;
         Scheduler {
             engine,
             clock,
@@ -359,7 +482,10 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             queue: VecDeque::new(),
             next_id: 0,
             stats: SchedStats::default(),
-            trace: Vec::new(),
+            hists: SchedHists::default(),
+            trace: TraceRing::new(trace_cap),
+            spans: TraceRing::new(trace_cap),
+            tick_seq: 0,
             steps_buf: Vec::with_capacity(slots),
         }
     }
@@ -375,7 +501,14 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
         let deadline_ms = timeout.map(|t| {
             self.clock.now_ms().saturating_add(t.saturating_sub(job.queued_for_ms))
         });
-        self.queue.push_back(Queued { id, prompt: job.prompt, params: job.params, deadline_ms });
+        self.queue.push_back(Queued {
+            id,
+            prompt: job.prompt,
+            params: job.params,
+            deadline_ms,
+            submitted_at_us: self.clock.now_us(),
+            upstream_us: job.queued_for_ms.saturating_mul(1000),
+        });
         id
     }
 
@@ -404,14 +537,35 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
         &self.engine
     }
 
-    /// The decision log recorded so far (`SchedulerConfig::trace`).
-    pub fn trace(&self) -> &[TraceEvent] {
-        &self.trace
+    /// The retained decision log, oldest first (`SchedulerConfig::trace`).
+    /// Takes `&mut self` because the backing ring may need to be made
+    /// contiguous in place (no allocation).
+    pub fn trace(&mut self) -> &[TraceEvent] {
+        self.trace.as_slice()
     }
 
-    /// Take ownership of the decision log, leaving it empty.
+    /// Drain the decision log, oldest first, leaving it empty (the
+    /// simulation tests' snapshot-and-reset semantics).
     pub fn take_trace(&mut self) -> Vec<TraceEvent> {
-        std::mem::take(&mut self.trace)
+        self.trace.take()
+    }
+
+    /// Phase-timed lifecycle spans of finished requests, oldest first.
+    /// Always on — the ring is bounded by
+    /// `SchedulerConfig::trace_capacity`, so long-running servers pay
+    /// fixed memory.
+    pub fn spans(&mut self) -> &[RequestSpan] {
+        self.spans.as_slice()
+    }
+
+    /// Drain the span ring, oldest first.
+    pub fn take_spans(&mut self) -> Vec<RequestSpan> {
+        self.spans.take()
+    }
+
+    /// Trace + span ring entries overwritten before anyone read them.
+    pub fn trace_dropped(&self) -> u64 {
+        self.trace.dropped() + self.spans.dropped()
     }
 
     /// One scheduler iteration: expire queued requests, refill free
@@ -466,7 +620,12 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
     pub fn tick(&mut self) -> Vec<Completion> {
         // tidy:no-alloc(start): the tick frame itself only reuses
         // state — admission/expiry allocate in their own (cold-path)
-        // bodies, and the completions vec starts empty.
+        // bodies, and the completions vec starts empty.  The sampled
+        // phase timers are Instant reads + integer adds into
+        // pre-sized histograms: allocation-free by construction.
+        let sampled = self.cfg.profile_every > 0 && self.tick_seq % self.cfg.profile_every == 0;
+        self.tick_seq += 1;
+        let t_frame = if sampled { Some(Instant::now()) } else { None };
         let mut done = Vec::new();
         self.expire_queued(&mut done);
         self.admit(&mut done);
@@ -479,6 +638,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             self.stats.prefix_evictions = p.evictions;
             self.stats.prefix_lock_poisoned = p.lock_poisoned;
         }
+        let t_admit = t_frame.map(|t0| t0.elapsed());
         // a tick that decodes nothing (e.g. it only expired queued
         // requests) must not count slot-ticks, or slot_occ deflates
         let active = (self.active.len() - self.free_slots()) as u64;
@@ -487,7 +647,26 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             self.stats.ticks += 1;
         }
         self.step_active(&mut done);
+        let t_step = t_frame.map(|t0| t0.elapsed());
         self.expire_active(&mut done);
+        if let (Some(t0), Some(admit), Some(step)) = (t_frame, t_admit, t_step) {
+            let total = t0.elapsed();
+            self.stats.profiled_ticks += 1;
+            self.stats.admit_ns += admit.as_nanos() as u64;
+            self.stats.step_ns += (step - admit).as_nanos() as u64;
+            self.stats.expire_ns += (total - step).as_nanos() as u64;
+            self.stats.tick_ns += total.as_nanos() as u64;
+            self.hists.tick_us.record_us(total.as_micros() as u64);
+        }
+        // timers accumulate inside the engine; snapshot like the prefix
+        // counters (assignment of monotonic totals)
+        if let Some(t) = self.engine.phase_timers() {
+            self.stats.engine_prefill_calls = t.prefill_calls;
+            self.stats.engine_prefill_ns = t.prefill_ns;
+            self.stats.engine_step_sampled = t.step_sampled;
+            self.stats.engine_step_ns = t.step_ns;
+        }
+        self.stats.trace_dropped = self.trace.dropped() + self.spans.dropped();
         // tidy:no-alloc(end)
         #[cfg(debug_assertions)]
         self.assert_invariants();
@@ -546,6 +725,12 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             self.steps_buf.len() <= slots,
             "step scratch holds more rows than slots exist"
         );
+        let h = &self.hists;
+        assert_eq!(h.ttft_us.count, s.admissions, "one TTFT sample per admission");
+        assert_eq!(h.queue_wait_us.count, s.admissions, "one queue-wait sample per admission");
+        assert_eq!(h.prefill_us.count, s.admissions, "one prefill sample per admission");
+        assert_eq!(h.itl_us.count, s.stepped_rows, "one ITL sample per stepped row");
+        assert_eq!(h.tick_us.count, s.profiled_ticks, "one tick sample per profiled tick");
     }
 
     /// Shutdown: answer everything still queued or in flight with an
@@ -575,6 +760,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
         if !self.queue.iter().any(|q| q.deadline_ms.is_some_and(|d| now >= d)) {
             return;
         }
+        let now_us = self.clock.now_us();
         let mut keep = VecDeque::with_capacity(self.queue.len());
         while let Some(q) = self.queue.pop_front() {
             if q.deadline_ms.is_some_and(|d| now >= d) {
@@ -582,6 +768,19 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                 if self.cfg.trace {
                     self.trace.push(TraceEvent::Expire { id: q.id, at_ms: now });
                 }
+                // a request that dies in queue still gets a lifecycle
+                // span: its whole life was queue wait
+                self.spans.push(RequestSpan {
+                    id: q.id,
+                    queue_wait_us: now_us.saturating_sub(q.submitted_at_us) + q.upstream_us,
+                    admitted_at_us: 0,
+                    prefill_us: 0,
+                    prefix_hit_tokens: 0,
+                    prefix_miss_tokens: 0,
+                    decoded: 0,
+                    decode_us: 0,
+                    reason: "expired",
+                });
                 done.push(Completion {
                     id: q.id,
                     tokens: Vec::new(),
@@ -625,6 +824,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             return;
         }
         let now = self.clock.now_ms();
+        let now_us = self.clock.now_us();
         for slot in 0..self.active.len() {
             if self.active[slot].is_some() {
                 continue;
@@ -639,8 +839,21 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                     });
                     continue;
                 }
+                // wall-time the prefill and attribute its prefix
+                // hit/miss split via the engine counter delta
+                let prefix_before = self.engine.prefix_counters().unwrap_or_default();
+                let t_prefill = Instant::now();
                 match self.engine.prefill_slot(slot, &q.prompt) {
                     Ok(logits) => {
+                        let prefill_us = t_prefill.elapsed().as_micros() as u64;
+                        let prefix_after = self.engine.prefix_counters().unwrap_or_default();
+                        let queue_wait_us =
+                            now_us.saturating_sub(q.submitted_at_us) + q.upstream_us;
+                        self.hists.queue_wait_us.record_us(queue_wait_us);
+                        self.hists.prefill_us.record_us(prefill_us);
+                        // TTFT: the first token is sampled from these
+                        // prefill logits, so it is ready right now
+                        self.hists.ttft_us.record_us(queue_wait_us + prefill_us);
                         // sampling stream derived from (seed, id) only:
                         // no shared RNG draw, so the fate of earlier
                         // requests never shifts this request's stream
@@ -664,6 +877,14 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                             rng,
                             last: tok,
                             fresh: true,
+                            admitted_at_us: now_us,
+                            queue_wait_us,
+                            prefill_us,
+                            prefix_hit: (prefix_after.hit_tokens - prefix_before.hit_tokens)
+                                as u32,
+                            prefix_miss: (prefix_after.miss_tokens - prefix_before.miss_tokens)
+                                as u32,
+                            last_token_at_us: now_us,
                         });
                         break;
                     }
@@ -710,6 +931,9 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
         let mut failures: Vec<(usize, String)> = Vec::new();
         if !self.steps_buf.is_empty() {
             let m = self.steps_buf.len();
+            // one clock read per tick: every row accepted this tick
+            // shares the same inter-token-latency endpoint
+            let now_us = self.clock.now_us();
             // rows that actually advanced this tick (accounted only
             // after the engine calls resolve — a failed fused call must
             // not masquerade as fused throughput in the metrics)
@@ -721,7 +945,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                     Ok(rows) if rows.len() == m => {
                         for (i, logits) in rows.iter().enumerate() {
                             let slot = self.steps_buf[i].0;
-                            self.accept_token(slot, logits);
+                            self.accept_token(slot, logits, now_us);
                         }
                         advanced = m as u64;
                         if m > 1 {
@@ -752,7 +976,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                     let (slot, last) = self.steps_buf[i];
                     match self.engine.step_slot(slot, last) {
                         Ok(logits) => {
-                            self.accept_token(slot, &logits);
+                            self.accept_token(slot, &logits, now_us);
                             advanced += 1;
                         }
                         Err(e) => failures.push((slot, format!("{e:#}"))), // tidy:allow(no-alloc): error path
@@ -788,13 +1012,16 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
     }
 
     /// Record one decoded logits row for `slot`: sample under the
-    /// slot's own params/stream, append, and remember the token for the
-    /// next step.
-    fn accept_token(&mut self, slot: usize, logits: &[f32]) {
+    /// slot's own params/stream, append, remember the token for the
+    /// next step, and record the inter-token gap since the slot's
+    /// previous token.
+    fn accept_token(&mut self, slot: usize, logits: &[f32], now_us: u64) {
         let a = self.active[slot].as_mut().expect("stepped slot emptied mid-tick");
         let tok = pick(logits, a.params, &mut a.rng);
         a.out.push(tok);
         a.last = tok;
+        self.hists.itl_us.record_us(now_us.saturating_sub(a.last_token_at_us));
+        a.last_token_at_us = now_us;
     }
 
     /// Evict rows whose deadline passed, carrying the tokens decoded so
@@ -817,12 +1044,12 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
         if matches!(reason, FinishReason::Timeout) {
             self.stats.timeouts += 1;
         }
+        let label = match &reason {
+            FinishReason::Done => "done",
+            FinishReason::Timeout => "timeout",
+            FinishReason::Error(_) => "error",
+        };
         if self.cfg.trace {
-            let label = match &reason {
-                FinishReason::Done => "done",
-                FinishReason::Timeout => "timeout",
-                FinishReason::Error(_) => "error",
-            };
             self.trace.push(TraceEvent::Finish {
                 id: a.id,
                 slot,
@@ -831,6 +1058,19 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                 decoded: a.out.len(),
             });
         }
+        // the always-on lifecycle span: one phase-timed record per
+        // request that held a slot
+        self.spans.push(RequestSpan {
+            id: a.id,
+            queue_wait_us: a.queue_wait_us,
+            admitted_at_us: a.admitted_at_us,
+            prefill_us: a.prefill_us,
+            prefix_hit_tokens: a.prefix_hit,
+            prefix_miss_tokens: a.prefix_miss,
+            decoded: a.out.len() as u32,
+            decode_us: self.clock.now_us().saturating_sub(a.admitted_at_us),
+            reason: label,
+        });
         done.push(Completion { id: a.id, tokens: a.out, reason });
     }
 }
@@ -866,6 +1106,7 @@ pub fn scheduler_loop<E: SlotEngine>(
     let mut core = Scheduler::new(engine, WallClock::default(), cfg);
     let mut pending: HashMap<u64, PendingReply> = HashMap::new();
     let mut last = SchedStats::default();
+    let mut last_hists = SchedHists::default();
     loop {
         if !running.load(Ordering::Relaxed) {
             fail_pending(&mut core, &mut pending, &metrics, "server shutting down");
@@ -966,9 +1207,42 @@ pub fn scheduler_loop<E: SlotEngine>(
         metrics
             .prefix_lock_poisoned
             .fetch_add(s.prefix_lock_poisoned - last.prefix_lock_poisoned, Ordering::Relaxed);
+        metrics.trace_dropped.fetch_add(s.trace_dropped - last.trace_dropped, Ordering::Relaxed);
+        metrics.profiled_ticks.fetch_add(s.profiled_ticks - last.profiled_ticks, Ordering::Relaxed);
+        metrics.sched_admit_ns.fetch_add(s.admit_ns - last.admit_ns, Ordering::Relaxed);
+        metrics.sched_step_ns.fetch_add(s.step_ns - last.step_ns, Ordering::Relaxed);
+        metrics.sched_expire_ns.fetch_add(s.expire_ns - last.expire_ns, Ordering::Relaxed);
+        metrics.sched_tick_ns.fetch_add(s.tick_ns - last.tick_ns, Ordering::Relaxed);
+        metrics
+            .engine_prefill_calls
+            .fetch_add(s.engine_prefill_calls - last.engine_prefill_calls, Ordering::Relaxed);
+        metrics
+            .engine_prefill_ns
+            .fetch_add(s.engine_prefill_ns - last.engine_prefill_ns, Ordering::Relaxed);
+        metrics
+            .engine_step_sampled
+            .fetch_add(s.engine_step_sampled - last.engine_step_sampled, Ordering::Relaxed);
+        metrics
+            .engine_step_ns
+            .fetch_add(s.engine_step_ns - last.engine_step_ns, Ordering::Relaxed);
         last = s;
-        for c in completions {
-            respond(&metrics, &mut pending, c);
+        // same delta-flush pattern for the phase histograms: only
+        // buckets touched this tick pay an atomic add
+        let h = core.hists;
+        metrics.ttft.merge_delta(&h.ttft_us, &last_hists.ttft_us);
+        metrics.itl.merge_delta(&h.itl_us, &last_hists.itl_us);
+        metrics.queue_wait.merge_delta(&h.queue_wait_us, &last_hists.queue_wait_us);
+        metrics.prefill.merge_delta(&h.prefill_us, &last_hists.prefill_us);
+        metrics.tick.merge_delta(&h.tick_us, &last_hists.tick_us);
+        last_hists = h;
+        if !completions.is_empty() {
+            // reply phase: render + send every completion of this tick
+            let t_reply = Instant::now();
+            for c in completions {
+                respond(&metrics, &mut pending, c);
+            }
+            metrics.reply_calls.fetch_add(1, Ordering::Relaxed);
+            metrics.reply_ns.fetch_add(t_reply.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
     }
 }

@@ -28,6 +28,12 @@
 //!   response: {"tokens": [int, ...], "latency_us": int}
 //!   timeout:  {"tokens": [int, ...], "latency_us": int, "timeout": true}
 //!   error:    {"error": str, "latency_us": int}
+//!   control:  {"cmd": "stats"} — answered inline by the connection
+//!             thread (never queued behind decode work) with
+//!             {"stats": {...}, "prometheus": str}: the full metrics
+//!             JSON (`Metrics::to_json`) plus a Prometheus text
+//!             exposition rendering.  Unknown commands get an error
+//!             line back.
 //!
 //! `timeout_ms` is a per-request deadline honored by the continuous
 //! scheduler (`--backend native`); a deadline-expired request gets the
@@ -459,6 +465,39 @@ pub fn render_response(resp: &Response) -> String {
     }
 }
 
+/// Render the one-line `{"cmd": "stats"}` reply: the full metrics JSON
+/// under `"stats"` plus a Prometheus text exposition rendering under
+/// `"prometheus"` (the multi-line text is escaped into one JSON string
+/// by `Json`'s writer, so the line protocol is preserved).
+pub fn render_stats(metrics: &Metrics) -> String {
+    Json::obj(vec![
+        ("prometheus", Json::str(metrics.to_prometheus())),
+        ("stats", metrics.to_json()),
+    ])
+    .to_string()
+}
+
+/// Intercept a `{"cmd": ...}` control line and build its reply;
+/// `None` means the line is not a control line (no `"cmd"` key) and
+/// should be parsed as a generate request.  Control lines are answered
+/// by the connection thread itself — a stats probe never queues behind
+/// decode work, so it stays responsive under full load.
+pub fn command_response(line: &str, metrics: &Metrics) -> Option<String> {
+    // cheap reject: generate requests carry "prompt"/"max_tokens" only,
+    // so most lines skip the parse entirely
+    if !line.contains("\"cmd\"") {
+        return None;
+    }
+    let j = Json::parse(line).ok()?;
+    let cmd = j.opt("cmd")?.as_str().ok()?;
+    Some(match cmd {
+        "stats" => render_stats(metrics),
+        other => {
+            Json::obj(vec![("error", Json::str(format!("unknown cmd {other:?}")))]).to_string()
+        }
+    })
+}
+
 /// Admission control (backpressure): a request only enters the shared
 /// queue while its depth is below `queue_cap`; beyond that the client
 /// gets an immediate `"server overloaded"` error line instead of an
@@ -485,6 +524,10 @@ fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>, qu
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(reply) = command_response(&line, &metrics) {
+            let _ = writeln!(writer, "{reply}");
             continue;
         }
         match parse_request(&line) {
@@ -828,6 +871,37 @@ mod tests {
         assert!(admit(&m, 2), "below cap again: admit");
         assert_eq!(m.queue_depth.load(ord), 2);
         assert_eq!(m.rejected.load(ord), 2);
+    }
+
+    #[test]
+    fn stats_command_is_intercepted_with_json_and_prometheus() {
+        let m = Metrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.ttft.record_us(1000);
+        let line = command_response(r#"{"cmd": "stats"}"#, &m).expect("stats is a control line");
+        assert!(!line.contains('\n'), "reply must stay a single protocol line");
+        let j = Json::parse(&line).unwrap();
+        let stats = j.get("stats").unwrap();
+        assert_eq!(
+            stats.get("counters").unwrap().get("requests").unwrap().as_usize().unwrap(),
+            3
+        );
+        let prom = j.get("prometheus").unwrap().as_str().unwrap();
+        assert!(prom.contains("# TYPE dbllm_requests_total counter"), "{prom}");
+        assert!(prom.contains("dbllm_ttft_us{quantile=\"0.5\"}"), "{prom}");
+    }
+
+    #[test]
+    fn non_command_lines_fall_through_and_unknown_cmds_error() {
+        let m = Metrics::default();
+        // generate requests and garbage are not control lines
+        assert!(command_response(r#"{"prompt": [1], "max_tokens": 4}"#, &m).is_none());
+        assert!(command_response("not json", &m).is_none());
+        // a non-string cmd is not a control line either
+        assert!(command_response(r#"{"cmd": 7}"#, &m).is_none());
+        let line = command_response(r#"{"cmd": "reboot"}"#, &m).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("unknown cmd"), "{line}");
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Request-lifecycle tracing: a bounded overwrite-oldest ring buffer
+//! and the per-request phase-timing span it stores.
+//!
+//! The scheduler's original `trace: Vec<TraceEvent>` was explicitly
+//! simulation-only — unbounded growth made it unsafe to leave on in a
+//! long-running server.  [`TraceRing`] fixes that: capacity is paid
+//! once at construction, `push` never allocates (safe to call next to
+//! `tidy:no-alloc` hot regions), and when full the *oldest* entry is
+//! overwritten while a drop counter records the loss.  The scheduler
+//! keeps two rings: the fine-grained `TraceEvent` log (admissions,
+//! finishes, expiries) and the always-on [`RequestSpan`] ring with one
+//! phase-timed record per finished request
+//! (queue-wait → admission → prefill → decode → reply; see
+//! `docs/ARCHITECTURE.md` for the span lifecycle diagram).
+
+use std::collections::VecDeque;
+
+/// Fixed-capacity ring buffer that overwrites its oldest entry when
+/// full and counts every overwritten (dropped) entry.
+///
+/// The backing `VecDeque` is reserved once in [`TraceRing::new`];
+/// `push` is allocation-free for the lifetime of the ring, so tracing
+/// can stay enabled inside the serving hot path.
+#[derive(Debug)]
+pub struct TraceRing<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl<T> TraceRing<T> {
+    /// Create a ring holding at most `cap` entries (`cap` is clamped
+    /// to ≥ 1 so `push` always retains the newest entry).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        TraceRing { buf: VecDeque::with_capacity(cap), cap, dropped: 0 }
+    }
+
+    /// Append an entry; when the ring is full the oldest entry is
+    /// discarded and the drop counter incremented.  Never allocates.
+    pub fn push(&mut self, item: T) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(item);
+    }
+
+    /// Number of entries currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when the ring holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Maximum number of entries the ring retains.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total entries overwritten before being read (monotonic).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The retained entries, oldest first, as one contiguous slice.
+    /// Takes `&mut self` because the two halves of the deque may need
+    /// to be made contiguous in place (no allocation).
+    pub fn as_slice(&mut self) -> &[T] {
+        self.buf.make_contiguous();
+        self.buf.as_slices().0
+    }
+
+    /// Drain every retained entry, oldest first, leaving the ring
+    /// empty (capacity and drop counter are kept).
+    pub fn take(&mut self) -> Vec<T> {
+        self.buf.drain(..).collect()
+    }
+}
+
+/// One finished request's phase-timed lifecycle record.
+///
+/// Stamped by the scheduler as the request leaves its slot (or expires
+/// in queue) and retained in the span ring for the stats surface and
+/// post-hoc debugging.  All timings are microseconds on the
+/// scheduler's `Clock` (wall in production, scripted in sims) except
+/// `prefill_us`, which is wall time inside the engine's prefill call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestSpan {
+    /// Scheduler-assigned request id (matches `TraceEvent` ids).
+    pub id: u64,
+    /// Arrival → slot admission, µs — includes time spent in the
+    /// upstream shared request queue before `submit` saw it.
+    pub queue_wait_us: u64,
+    /// Clock stamp (µs since scheduler start) when the request was
+    /// admitted to a slot; 0 for requests that expired in queue.
+    pub admitted_at_us: u64,
+    /// Wall time inside `prefill_slot` (cache walk + block copy-in +
+    /// suffix forward), µs; 0 for requests that expired in queue.
+    pub prefill_us: u64,
+    /// Prompt tokens served from the shared prefix cache during this
+    /// request's prefill.
+    pub prefix_hit_tokens: u32,
+    /// Prompt tokens that paid prefill (uncached suffix, or the whole
+    /// prompt on a cache miss/bypass).
+    pub prefix_miss_tokens: u32,
+    /// Tokens decoded into the reply.
+    pub decoded: u32,
+    /// Slot admission → finish, µs (covers prefill + every decode
+    /// tick); 0 for requests that expired in queue.
+    pub decode_us: u64,
+    /// Why the request left: `"done"` (budget/stop token), `"timeout"`
+    /// (deadline eviction), `"expired"` (deadline passed while still
+    /// queued), or `"error"`.
+    pub reason: &'static str,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let mut r = TraceRing::new(3);
+        for i in 0..7u32 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.capacity(), 3);
+        assert_eq!(r.dropped(), 4);
+        assert_eq!(r.as_slice(), &[4, 5, 6], "oldest first, newest retained");
+    }
+
+    #[test]
+    fn take_drains_in_order_and_preserves_drop_counter() {
+        let mut r = TraceRing::new(2);
+        r.push("a");
+        r.push("b");
+        r.push("c");
+        assert_eq!(r.take(), vec!["b", "c"]);
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 1, "drop counter survives take()");
+        r.push("d");
+        assert_eq!(r.as_slice(), &["d"], "ring is reusable after take()");
+    }
+
+    #[test]
+    fn push_never_allocates_after_construction() {
+        let mut r = TraceRing::new(8);
+        let cap_before = r.buf.capacity();
+        for i in 0..1000u64 {
+            r.push(i);
+        }
+        assert_eq!(r.buf.capacity(), cap_before, "push must not grow the backing deque");
+        assert_eq!(r.len(), 8);
+        assert_eq!(r.dropped(), 992);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut r = TraceRing::new(0);
+        r.push(1u8);
+        r.push(2u8);
+        assert_eq!(r.as_slice(), &[2]);
+        assert_eq!(r.dropped(), 1);
+    }
+}

@@ -22,7 +22,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::coordinator::scheduler::{PrefixCounters, SlotEngine};
+use crate::coordinator::scheduler::{EngineTimers, PrefixCounters, SlotEngine};
 use crate::coordinator::serve::{argmax, sample, DecodeParams, Generation, Generator};
 use crate::model::Weights;
 use crate::quant::FdbLinear;
@@ -31,6 +31,12 @@ use crate::util::Pcg32;
 use super::kv::{KvBlock, KvCache};
 use super::prefix::PrefixCache;
 use super::step::IncrementalForward;
+
+/// Sample one fused decode step in this many for the engine-side phase
+/// timer (`EngineTimers::step_ns`).  Prefills are timed on every call —
+/// they are rare and expensive — while steps run per tick, so sampling
+/// keeps the two `Instant` reads off all but 1-in-64 hot-path calls.
+const ENGINE_PROFILE_EVERY: u64 = 64;
 
 /// Native incremental generation engine.
 pub struct NativeEngine {
@@ -46,6 +52,10 @@ pub struct NativeEngine {
     /// this engine's cumulative hit/miss/eviction tally (per-engine so
     /// per-worker metric deltas never double-count the shared cache)
     prefix_counters: PrefixCounters,
+    /// engine-side phase timers: every prefill, 1-in-N fused steps
+    timers: EngineTimers,
+    /// fused-step call counter driving the 1-in-N timer sample
+    step_seq: u64,
     rng: Pcg32,
 }
 
@@ -75,6 +85,8 @@ impl NativeEngine {
             prefix: None,
             slot_pins: vec![Vec::new()],
             prefix_counters: PrefixCounters::default(),
+            timers: EngineTimers::default(),
+            step_seq: 0,
             rng: Pcg32::seeded(seed),
         }
     }
@@ -160,6 +172,17 @@ impl NativeEngine {
     /// truncation relabels positions, so those prompts never share),
     /// or the cache lock is poisoned.
     fn prefill_cached(&mut self, slot: usize, prompt: &[u32]) -> Vec<f32> {
+        // every prefill is timed: admissions are rare relative to decode
+        // ticks and dominate TTFT, so full coverage is worth two
+        // `Instant` reads per request
+        let t0 = std::time::Instant::now();
+        let logits = self.prefill_cached_inner(slot, prompt);
+        self.timers.prefill_calls += 1;
+        self.timers.prefill_ns += t0.elapsed().as_nanos() as u64;
+        logits
+    }
+
+    fn prefill_cached_inner(&mut self, slot: usize, prompt: &[u32]) -> Vec<f32> {
         self.release_pins(slot);
         self.caches[slot].clear();
         let window = self.caches[slot].window;
@@ -200,6 +223,27 @@ impl NativeEngine {
         }
         self.slot_pins[slot] = pins;
         logits
+    }
+
+    /// The fused multi-slot step body; `SlotEngine::step_slots` wraps
+    /// it with the 1-in-N phase timer.
+    fn step_slots_inner(&mut self, steps: &[(usize, u32)]) -> Result<Vec<Vec<f32>>> {
+        let vocab = self.model.vocab();
+        let mut seen = vec![false; self.caches.len()];
+        for &(slot, token) in steps {
+            anyhow::ensure!(slot < self.caches.len(), "slot {slot} out of range");
+            anyhow::ensure!(!seen[slot], "slot {slot} listed twice in one fused step");
+            seen[slot] = true;
+            anyhow::ensure!(!self.caches[slot].is_empty(), "step on a slot without prefill");
+            anyhow::ensure!((token as usize) < vocab, "token {token} out of vocab {vocab}");
+        }
+        if steps.len() == 1 {
+            // one active row: the allocation-free single-row kernel
+            // beats the batched path (no transpose staging)
+            let (slot, token) = steps[0];
+            return Ok(vec![self.model.step(&mut self.caches[slot], token)]);
+        }
+        Ok(self.model.step_rows(&mut self.caches, steps))
     }
 
     /// Number of FDB-compiled linears (diagnostics / startup log).
@@ -289,24 +333,20 @@ impl SlotEngine for NativeEngine {
     /// as a batched product over the active rows instead of once per
     /// slot.  The whole batch is validated *before* any slot advances,
     /// so an `Err` means no state changed — the contract the
-    /// scheduler's per-row fallback depends on.
+    /// scheduler's per-row fallback depends on.  1-in-N calls are
+    /// timed into [`EngineTimers`] (`ENGINE_PROFILE_EVERY`); the timer
+    /// reads are outside the decode math, so sampled and unsampled
+    /// ticks produce bit-identical logits.
     fn step_slots(&mut self, steps: &[(usize, u32)]) -> Result<Vec<Vec<f32>>> {
-        let vocab = self.model.vocab();
-        let mut seen = vec![false; self.caches.len()];
-        for &(slot, token) in steps {
-            anyhow::ensure!(slot < self.caches.len(), "slot {slot} out of range");
-            anyhow::ensure!(!seen[slot], "slot {slot} listed twice in one fused step");
-            seen[slot] = true;
-            anyhow::ensure!(!self.caches[slot].is_empty(), "step on a slot without prefill");
-            anyhow::ensure!((token as usize) < vocab, "token {token} out of vocab {vocab}");
+        let sampled = self.step_seq % ENGINE_PROFILE_EVERY == 0;
+        self.step_seq += 1;
+        let t0 = if sampled { Some(std::time::Instant::now()) } else { None };
+        let out = self.step_slots_inner(steps);
+        if let (Some(t0), Ok(_)) = (t0, &out) {
+            self.timers.step_sampled += 1;
+            self.timers.step_ns += t0.elapsed().as_nanos() as u64;
         }
-        if steps.len() == 1 {
-            // one active row: the allocation-free single-row kernel
-            // beats the batched path (no transpose staging)
-            let (slot, token) = steps[0];
-            return Ok(vec![self.model.step(&mut self.caches[slot], token)]);
-        }
-        Ok(self.model.step_rows(&mut self.caches, steps))
+        out
     }
 
     /// `step_slots` validates the whole batch before mutating any
@@ -329,6 +369,12 @@ impl SlotEngine for NativeEngine {
     /// reporting all-miss traffic.
     fn prefix_counters(&self) -> Option<PrefixCounters> {
         self.prefix.as_ref().map(|_| self.prefix_counters)
+    }
+
+    /// Monotonic engine-side phase totals: every prefill timed, fused
+    /// steps sampled 1-in-`ENGINE_PROFILE_EVERY`.
+    fn phase_timers(&self) -> Option<EngineTimers> {
+        Some(self.timers)
     }
 }
 
@@ -538,6 +584,28 @@ mod tests {
         }
         // an empty batch is a no-op
         assert!(fus.step_slots(&[]).unwrap().is_empty());
+    }
+
+    /// Engine phase timers: every prefill is counted, fused steps are
+    /// sampled 1-in-`ENGINE_PROFILE_EVERY` (the first call lands on the
+    /// sample), and a failed fused call is never timed as work done.
+    #[test]
+    fn phase_timers_cover_prefills_and_sample_steps() {
+        let mut e = engine(5).with_slots(2);
+        assert_eq!(SlotEngine::phase_timers(&e).unwrap(), EngineTimers::default());
+        e.prefill_slot(0, &[1, 2]).unwrap();
+        e.prefill_slot(1, &[3]).unwrap();
+        for _ in 0..3 {
+            e.step_slots(&[(0, 4), (1, 5)]).unwrap();
+        }
+        let t = SlotEngine::phase_timers(&e).unwrap();
+        assert_eq!(t.prefill_calls, 2, "every prefill timed");
+        assert!(t.prefill_ns > 0, "prefill wall time recorded");
+        assert_eq!(t.step_sampled, 1, "calls 2..64 skip the sample");
+        assert!(t.step_ns > 0, "sampled step wall time recorded");
+        assert!(e.step_slots(&[(0, 9999)]).is_err());
+        let t2 = SlotEngine::phase_timers(&e).unwrap();
+        assert_eq!(t2.step_sampled, t.step_sampled, "failed steps are not timed");
     }
 
     /// A poisoned prefix-cache lock degrades to a cold prefill and is

@@ -550,6 +550,29 @@ fn bench_required_keys(bench: &str) -> Option<&'static [&'static str]> {
             "sweep",
             "note",
         ]),
+        "serving_trace" => Some(&[
+            "model",
+            "d_model",
+            "n_layers",
+            "window",
+            "slots",
+            "requests",
+            "decode_tokens",
+            "ttft_p50_us",
+            "ttft_p95_us",
+            "ttft_p99_us",
+            "itl_p50_us",
+            "itl_p95_us",
+            "itl_p99_us",
+            "queue_wait_p50_us",
+            "prefill_p50_us",
+            "wall_ns_per_token_decode",
+            "wall_ns_per_prefill",
+            "trace_events",
+            "trace_dropped",
+            "profiled_ticks",
+            "note",
+        ]),
         _ => None,
     }
 }

@@ -10,9 +10,10 @@
 //!             [--backend native|xla] [--workers 2] [--max-batch 4]
 //!             [--linger-ms 20] [--queue-cap 1024] [--window T]
 //!             [--slots 4] [--timeout-ms N] [--no-refill]
-//!             [--prefix-cache-mb 64]
+//!             [--prefix-cache-mb 64] [--metrics-interval-ms 10000]
 //!   client    --addr 127.0.0.1:7878 --prompt 1,2,3 --max-tokens 8
 //!             [--temperature 0.7] [--stop 0] [--timeout-ms N]
+//!             (or --stats to fetch the live metrics/Prometheus line)
 //!
 //! Argument parsing is hand-rolled (offline build, no clap); every flag
 //! is `--name value`.
@@ -158,9 +159,10 @@ fn print_help() {
                     [--backend native|xla] [--workers N] [--max-batch N]\n\
                     [--linger-ms N] [--queue-cap N] [--window T]\n\
                     [--slots N] [--timeout-ms N] [--no-refill]\n\
-                    [--prefix-cache-mb N]\n\
+                    [--prefix-cache-mb N] [--metrics-interval-ms N]\n\
            client   --addr A --prompt 1,2,3 --max-tokens 8\n\
                     [--temperature T] [--stop TOKEN] [--timeout-ms N]\n\
+                    --addr A --stats    fetch live metrics + Prometheus\n\
          \n\
          common flags: --artifacts DIR --windows N --dad-batches N\n\
                        --teachers S,M,L --zs-items N --out-dir results\n\
@@ -324,6 +326,10 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     // shared across every scheduler worker); 0 disables sharing
     let prefix_cache_mb: usize =
         flags.get("prefix-cache-mb").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    // periodic snapshot logger cadence; 0 disables the log line (the
+    // wire-level {"cmd":"stats"} surface stays available either way)
+    let metrics_interval_ms: u64 =
+        flags.get("metrics-interval-ms").map(|s| s.parse()).transpose()?.unwrap_or(10_000);
     let opts = opts_from_flags(flags);
     let metrics = Arc::new(Metrics::default());
     let running = Arc::new(AtomicBool::new(true));
@@ -409,7 +415,11 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
                     refill,
                     default_timeout_ms: timeout_ms,
                     seed: 42,
-                    trace: false,
+                    // tracing is production-safe now that the event and
+                    // span logs are bounded rings (default capacity /
+                    // 1-in-64 profiling sample from Default)
+                    trace: true,
+                    ..SchedulerConfig::default()
                 },
                 workers,
                 m2,
@@ -425,8 +435,15 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
         "  {{\"prompt\": [1,2,3], \"max_tokens\": 8, \"temperature\": 0.7, \"stop\": 0, \
          \"timeout_ms\": 500}}"
     );
+    println!("  {{\"cmd\": \"stats\"}}  — live metrics JSON + Prometheus text");
+    if metrics_interval_ms == 0 {
+        // logging disabled: park the main thread, serve until killed
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(10));
+        std::thread::sleep(std::time::Duration::from_millis(metrics_interval_ms));
         println!("[metrics] {}", metrics.snapshot());
     }
 }
@@ -434,23 +451,30 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
 fn cmd_client(flags: &BTreeMap<String, String>) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
-    let prompt = flags.get("prompt").context("--prompt 1,2,3 required")?;
-    let max_tokens: usize = flags.get("max-tokens").map(|s| s.parse()).transpose()?.unwrap_or(8);
     let mut stream = std::net::TcpStream::connect(&addr)?;
-    let mut req = format!("{{\"prompt\": [{prompt}], \"max_tokens\": {max_tokens}");
-    if let Some(t) = flags.get("temperature") {
-        let t: f64 = t.parse()?;
-        req.push_str(&format!(", \"temperature\": {t}"));
-    }
-    if let Some(s) = flags.get("stop") {
-        let s: usize = s.parse()?;
-        req.push_str(&format!(", \"stop\": {s}"));
-    }
-    if let Some(t) = flags.get("timeout-ms") {
-        let t: u64 = t.parse()?;
-        req.push_str(&format!(", \"timeout_ms\": {t}"));
-    }
-    req.push('}');
+    let req = if flags.contains_key("stats") {
+        // control line: fetch the live metrics JSON + Prometheus text
+        "{\"cmd\": \"stats\"}".to_string()
+    } else {
+        let prompt = flags.get("prompt").context("--prompt 1,2,3 required (or --stats)")?;
+        let max_tokens: usize =
+            flags.get("max-tokens").map(|s| s.parse()).transpose()?.unwrap_or(8);
+        let mut req = format!("{{\"prompt\": [{prompt}], \"max_tokens\": {max_tokens}");
+        if let Some(t) = flags.get("temperature") {
+            let t: f64 = t.parse()?;
+            req.push_str(&format!(", \"temperature\": {t}"));
+        }
+        if let Some(s) = flags.get("stop") {
+            let s: usize = s.parse()?;
+            req.push_str(&format!(", \"stop\": {s}"));
+        }
+        if let Some(t) = flags.get("timeout-ms") {
+            let t: u64 = t.parse()?;
+            req.push_str(&format!(", \"timeout_ms\": {t}"));
+        }
+        req.push('}');
+        req
+    };
     writeln!(stream, "{req}")?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();

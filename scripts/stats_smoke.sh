@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Observability smoke gate: build and run the stats-smoke binary, which
+# boots the continuous-batching server on a loopback port, sends a
+# generate request plus `{"cmd": "stats"}` control requests, and
+# validates the JSON + Prometheus stats surface (required metric
+# families, one `# TYPE` per family, monotone counters).  Exits
+# non-zero with a diagnostic on any failure.
+#
+# Usage: scripts/stats_smoke.sh   (from the repo root or anywhere)
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+exec cargo run --release --quiet --bin stats-smoke
