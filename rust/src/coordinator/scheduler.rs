@@ -179,6 +179,21 @@ pub trait SlotEngine {
     /// Drop `slot`'s sequence state (eviction / completion).
     fn reset_slot(&mut self, slot: usize);
 
+    /// Whether the engine can take a request with `prompt_tokens` of
+    /// prompt right now without overcommitting its KV block pool
+    /// (worst-case reservation: the prompt's blocks plus one decode
+    /// tail block).  The scheduler consults this before every
+    /// admission while another slot is active; engines without a
+    /// bounded pool (the default) always accept.  `false` *defers*
+    /// the request — it is re-tried next tick, never dropped — and
+    /// the gate is bypassed when every slot is idle, so one oversized
+    /// prompt can never wedge the queue (`infer::KvPool::alloc` stays
+    /// infallible past the budget, it just over-commits).
+    fn can_admit(&self, prompt_tokens: usize) -> bool {
+        let _ = prompt_tokens;
+        true
+    }
+
     /// Cumulative cross-request prefix-cache counters for *this*
     /// engine, or `None` when the engine has no prefix sharing (the
     /// default).  Counters are per-engine (not cache-global) so the
@@ -343,6 +358,11 @@ pub struct SchedStats {
     pub refills: u64,
     /// requests finished by deadline (evicted or expired in queue)
     pub timeouts: u64,
+    /// admissions deferred because the engine's KV block pool could
+    /// not reserve the prompt's worst-case block count while other
+    /// slots were active ([`SlotEngine::can_admit`]); the request
+    /// stays queued and is re-tried next tick
+    pub admit_deferred: u64,
     /// ticks that ran at least one decode step (mean decode batch
     /// denominator; fresh slots consume their prefill token instead of
     /// stepping, so this can trail `ticks`)
@@ -838,6 +858,21 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                         reason: FinishReason::Done,
                     });
                     continue;
+                }
+                // block-pool admission gate: a prompt whose worst-case
+                // block reservation does not fit the pool's free set
+                // would force every later decode step to over-commit
+                // the budget.  Defer it (push back to the queue front:
+                // EDF rescans the whole queue, and front keeps it the
+                // FCFS tie-winner) — unless every slot is idle, in
+                // which case it runs anyway so one oversized request
+                // can never deadlock the scheduler.
+                if self.active.iter().any(Option::is_some)
+                    && !self.engine.can_admit(q.prompt.len())
+                {
+                    self.stats.admit_deferred += 1;
+                    self.queue.push_front(q);
+                    return;
                 }
                 // wall-time the prefill and attribute its prefix
                 // hit/miss split via the engine counter delta
@@ -1574,6 +1609,49 @@ mod tests {
         assert_eq!(core.stats.step_ticks, 4);
         assert_eq!(core.stats.stepped_rows, 4);
         assert_eq!(core.stats.fused_rows, 0, "single-row ticks are not fused");
+    }
+
+    /// The block-pool admission gate defers a queued request while the
+    /// engine reports no headroom ([`SlotEngine::can_admit`]) — but
+    /// never when every slot is idle, so the queue always drains even
+    /// against an engine that claims permanent exhaustion.
+    #[test]
+    fn pool_gate_defers_but_never_wedges() {
+        struct Gated(TinyGen);
+        impl SlotEngine for Gated {
+            fn slots(&self) -> usize {
+                self.0.slots()
+            }
+            fn prefill_slot(&mut self, s: usize, p: &[u32]) -> Result<Vec<f32>> {
+                self.0.prefill_slot(s, p)
+            }
+            fn step_slot(&mut self, s: usize, t: u32) -> Result<Vec<f32>> {
+                self.0.step_slot(s, t)
+            }
+            fn reset_slot(&mut self, s: usize) {
+                self.0.reset_slot(s)
+            }
+            fn can_admit(&self, _prompt_tokens: usize) -> bool {
+                // pool permanently "full": only the all-idle bypass
+                // lets anything through
+                false
+            }
+        }
+        let eos = 63;
+        let gen = Gated(TinyGen::new(2, eos, vec![(1, 2), (2, 2)]));
+        let cfg = SchedulerConfig { slots: 2, ..Default::default() };
+        let mut core = Scheduler::new(gen, ManualClock::default(), cfg);
+        core.submit(job(1, greedy_stop(8, eos)));
+        core.submit(job(2, greedy_stop(8, eos)));
+        let done = drain(&mut core);
+        assert_eq!(done.len(), 2, "deferred request still completes");
+        assert_eq!(done[0].tokens, vec![1, 1, eos]);
+        assert_eq!(done[1].tokens, vec![2, 2, eos]);
+        // ticks 1-3 carry request 1; request 2 is popped and pushed
+        // back each of those ticks, then admitted into the idle engine
+        assert_eq!(core.stats.admit_deferred, 3);
+        assert_eq!(core.stats.refills, 0, "gate blocked every mid-flight refill");
+        assert_eq!(core.stats.admissions, 2);
     }
 
     /// EDF admission: with both queued, the tighter deadline wins the

@@ -429,7 +429,21 @@ pub fn parse_request(line: &str) -> Result<(Vec<u32>, DecodeParams, Option<u64>)
         max_tokens <= MAX_TOKENS_CAP,
         "max_tokens {max_tokens} exceeds cap {MAX_TOKENS_CAP}"
     );
-    let temperature = j.opt("temperature").map(|t| t.as_f64().unwrap_or(0.0)).unwrap_or(0.0) as f32;
+    // a present-but-bad temperature is a client error, not "greedy":
+    // coercing `"temperature": "hot"` (or NaN/negative) to 0.0 would
+    // silently decode a different distribution than the client asked
+    // for — reject it on the request line instead
+    let temperature = match j.opt("temperature") {
+        Some(v) => {
+            let t = v.as_f64().context("temperature must be a number")?;
+            anyhow::ensure!(
+                t.is_finite() && t >= 0.0,
+                "temperature {t} out of range (must be finite and >= 0)"
+            );
+            t as f32
+        }
+        None => 0.0,
+    };
     let stop = match j.opt("stop") {
         Some(v) => {
             let s = v.as_usize()?;
@@ -519,7 +533,16 @@ pub fn admit(metrics: &Metrics, queue_cap: usize) -> bool {
 
 fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>, queue_cap: usize) {
     let peer = stream.peer_addr().ok();
-    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    // a failed dup (fd exhaustion, peer already reset) is a
+    // per-connection condition a client can trigger at will — log and
+    // close this connection instead of panicking the thread
+    let reader = match stream.try_clone() {
+        Ok(read_half) => BufReader::new(read_half),
+        Err(e) => {
+            eprintln!("dropping connection from {peer:?}: cannot clone stream: {e}");
+            return;
+        }
+    };
     let mut writer = stream;
     for line in reader.lines() {
         let Ok(line) = line else { break };
@@ -697,6 +720,30 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_bad_temperature() {
+        // a non-numeric temperature must be an error line, not a
+        // silent coercion to greedy decoding
+        let err = parse_request(r#"{"prompt": [1], "max_tokens": 4, "temperature": "hot"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("temperature"), "{err}");
+        assert!(
+            parse_request(r#"{"prompt": [1], "max_tokens": 4, "temperature": -0.5}"#).is_err()
+        );
+        // overflowing exponent parses to +inf — also out of range
+        assert!(
+            parse_request(r#"{"prompt": [1], "max_tokens": 4, "temperature": 1e400}"#).is_err()
+        );
+        // boundary values stay accepted
+        let (_, d, _) =
+            parse_request(r#"{"prompt": [1], "max_tokens": 4, "temperature": 0.0}"#).unwrap();
+        assert_eq!(d.temperature, 0.0);
+        let (_, d, _) =
+            parse_request(r#"{"prompt": [1], "max_tokens": 4, "temperature": 2}"#).unwrap();
+        assert!((d.temperature - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
     fn parse_rejects_out_of_range_stop() {
         // 2^32 must not silently truncate to stop token 0
         let req = r#"{"prompt": [1], "max_tokens": 4, "stop": 4294967296}"#;
@@ -714,6 +761,23 @@ mod tests {
             r#"{{"prompt": [1], "max_tokens": {MAX_TOKENS_CAP}}}"#
         ))
         .is_ok());
+    }
+
+    /// A peer that vanishes (or a stream whose read half cannot be
+    /// set up) must drop the connection cleanly: `handle_conn` logs
+    /// and returns instead of panicking the connection thread — the
+    /// old `try_clone().expect(...)` was a client-reachable panic.
+    #[test]
+    fn handle_conn_survives_vanished_peer() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        // peer resets before the server reads a single line
+        drop(client);
+        let (tx, _rx) = channel::<Request>();
+        // must return (EOF/error -> close), not panic
+        handle_conn(server_side, tx, Arc::new(Metrics::default()), 4);
     }
 
     #[test]

@@ -14,8 +14,13 @@
 //!   `step_slot(i)` / `reset_slot(i)` touch slot `i`'s state only and
 //!   a freed row can be refilled while its neighbours keep decoding.
 //!
-//! Cache allocations are made once (`with_slots`) and reused (`clear`)
-//! across requests.
+//! Every slot cache is a block-table view into one engine-owned
+//! [`KvPool`]: KV bytes are pooled across slots, prefix-cache hits
+//! splice shared block handles in with zero row copies, decoded blocks
+//! publish back into the prefix chain at block boundaries (multi-turn
+//! conversations re-enter warm), and the scheduler's admission gate
+//! ([`SlotEngine::can_admit`]) runs on the pool's free-block count
+//! instead of worst-case per-slot reservations.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -28,7 +33,7 @@ use crate::model::Weights;
 use crate::quant::FdbLinear;
 use crate::util::Pcg32;
 
-use super::kv::{KvBlock, KvCache};
+use super::kv::{KvCache, KvPool, KvPoolBlock, DEFAULT_BLOCK_TOKENS};
 use super::prefix::PrefixCache;
 use super::step::IncrementalForward;
 
@@ -41,7 +46,14 @@ const ENGINE_PROFILE_EVERY: u64 = 64;
 /// Native incremental generation engine.
 pub struct NativeEngine {
     model: IncrementalForward,
-    /// one KV cache per decode slot; `new` starts with a single slot
+    /// shared block allocator every slot cache draws from
+    pool: Arc<KvPool>,
+    /// operator-configured soft KV budget in bytes (`None` = unbounded);
+    /// kept in bytes so a pool rebuild under a different block size
+    /// preserves the operator's intent
+    pool_budget_bytes: Option<usize>,
+    /// one KV cache (block-table view) per decode slot; `new` starts
+    /// with a single slot
     caches: Vec<KvCache>,
     /// cross-request prefix sharing, usually one cache shared across
     /// every worker's engine (`with_prefix_cache`); `None` = every
@@ -49,6 +61,13 @@ pub struct NativeEngine {
     prefix: Option<Arc<Mutex<PrefixCache>>>,
     /// per-slot pinned prefix blocks (released on reset / re-prefill)
     slot_pins: Vec<Vec<u64>>,
+    /// per-slot cached-token history (prompt + decoded tokens fed back
+    /// in), the key under which decoded blocks publish back into the
+    /// prefix chain
+    slot_tokens: Vec<Vec<u32>>,
+    /// per-slot publish-back eligibility; cleared once a slot's window
+    /// slides (absolute labels gone) or its lifecycle left the slot API
+    slot_share: Vec<bool>,
     /// this engine's cumulative hit/miss/eviction tally (per-engine so
     /// per-worker metric deltas never double-count the shared cache)
     prefix_counters: PrefixCounters,
@@ -79,11 +98,17 @@ impl NativeEngine {
         // nothing
         crate::quant::kernel::warm_thread_scratch(window, wide, wide);
         let model = IncrementalForward::new(weights, fdb);
+        let pool = Arc::new(KvPool::new(DEFAULT_BLOCK_TOKENS, n_layers, d, KvPool::UNBOUNDED));
+        let caches = vec![KvCache::new_in_pool(&pool, window)];
         NativeEngine {
             model,
-            caches: vec![KvCache::new(n_layers, window, d)],
+            pool,
+            pool_budget_bytes: None,
+            caches,
             prefix: None,
             slot_pins: vec![Vec::new()],
+            slot_tokens: vec![Vec::new()],
+            slot_share: vec![false],
             prefix_counters: PrefixCounters::default(),
             timers: EngineTimers::default(),
             step_seq: 0,
@@ -91,48 +116,137 @@ impl NativeEngine {
         }
     }
 
-    /// Resize to `slots` independent decode slots (each with its own KV
-    /// cache of the same geometry) for the continuous scheduler.  Slot
-    /// state is dropped; call before serving, not mid-request.
+    /// Soft block budget for the current configuration: the operator's
+    /// byte budget translated to blocks, floored so a single request
+    /// can always prefill a full window and decode one block past it —
+    /// the budget bounds *concurrency*, never a lone request.
+    fn budget_blocks(&self, block_tokens: usize) -> usize {
+        let window = self.caches[0].window;
+        match self.pool_budget_bytes {
+            None => KvPool::UNBOUNDED,
+            Some(bytes) => {
+                let block_bytes = 2 * self.pool.n_layers() * block_tokens * self.pool.width() * 4;
+                let floor = window.div_ceil(block_tokens) + 2;
+                (bytes / block_bytes.max(1)).max(floor)
+            }
+        }
+    }
+
+    /// Replace the pool (new block size and/or budget) and rebuild
+    /// every slot cache as a view into it.  Slot state is dropped.
+    fn rebuild_pool(&mut self, block_tokens: usize) {
+        self.release_all_pins();
+        let window = self.caches[0].window;
+        let slots = self.caches.len();
+        let max_blocks = self.budget_blocks(block_tokens);
+        self.pool = Arc::new(KvPool::new(
+            block_tokens,
+            self.pool.n_layers(),
+            self.pool.width(),
+            max_blocks,
+        ));
+        self.caches = (0..slots).map(|_| KvCache::new_in_pool(&self.pool, window)).collect();
+        self.slot_pins = (0..slots).map(|_| Vec::new()).collect();
+        self.slot_tokens = (0..slots).map(|_| Vec::new()).collect();
+        self.slot_share = vec![false; slots];
+    }
+
+    /// Resize to `slots` independent decode slots (each a fresh view
+    /// into the shared pool) for the continuous scheduler.  Slot state
+    /// is dropped; call before serving, not mid-request.
     pub fn with_slots(mut self, slots: usize) -> NativeEngine {
         self.release_all_pins();
-        let (n_layers, window, width) = {
-            let c = &self.caches[0];
-            (c.n_layers(), c.window, c.width)
-        };
-        self.caches = (0..slots.max(1)).map(|_| KvCache::new(n_layers, window, width)).collect();
-        self.slot_pins = (0..self.caches.len()).map(|_| Vec::new()).collect();
+        let window = self.caches[0].window;
+        let slots = slots.max(1);
+        self.caches = (0..slots).map(|_| KvCache::new_in_pool(&self.pool, window)).collect();
+        self.slot_pins = (0..slots).map(|_| Vec::new()).collect();
+        self.slot_tokens = (0..slots).map(|_| Vec::new()).collect();
+        self.slot_share = vec![false; slots];
         // a fused tick can batch every slot at once: pre-size the row
         // scratch so the first decode tick pays no allocation
         self.model.reserve_rows(self.caches.len(), window);
         self
     }
 
-    /// Attach a shared cross-request prefix cache: prefills first copy
-    /// the longest cached prefix match into the slot's `KvCache` and
-    /// only run the model over the uncached suffix, then publish the
-    /// prompt's full blocks back.  Every engine sharing one cache must
-    /// share model geometry (same factory) — block shapes are asserted
-    /// on copy-in.  Warm and cold prefills emit bit-identical logits
+    /// Cap the engine's KV pool at (roughly) `bytes` of block storage.
+    /// The cap is a *soft* admission budget: allocation never fails,
+    /// the scheduler just stops admitting once
+    /// [`KvPool::free_blocks`] can't cover a new prompt (see
+    /// [`SlotEngine::can_admit`]).  Zero means unbounded.  Slot state
+    /// is dropped; call before serving.
+    pub fn with_kv_pool_bytes(mut self, bytes: usize) -> NativeEngine {
+        self.pool_budget_bytes = if bytes == 0 { None } else { Some(bytes) };
+        self.rebuild_pool(self.pool.block_tokens());
+        self
+    }
+
+    /// The shared block pool (stats surface for benches and tests).
+    pub fn kv_pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    /// Attach a shared cross-request prefix cache: prefills splice the
+    /// longest cached prefix match into the slot's block table (zero
+    /// row copies), run the model over the uncached suffix only, and
+    /// publish the prompt's full blocks back; decoded blocks also
+    /// publish at block boundaries so multi-turn conversations re-enter
+    /// warm.  Every engine sharing one cache must share model geometry
+    /// (same factory) — block shapes are asserted on splice-in.  The
+    /// engine's pool is rebuilt to the cache's block size when they
+    /// differ.  Warm and cold prefills emit bit-identical logits
     /// (`tests/prefix_cache.rs`).
     pub fn with_prefix_cache(mut self, cache: Arc<Mutex<PrefixCache>>) -> NativeEngine {
+        let bt = match cache.lock() {
+            Ok(g) => g.block_tokens(),
+            // poisoned at attach time: keep the current block size (a
+            // poisoned cache degrades every prefill to cold anyway)
+            Err(_) => self.pool.block_tokens(),
+        };
+        if bt != self.pool.block_tokens() {
+            self.rebuild_pool(bt);
+        }
         self.prefix = Some(cache);
         self
     }
 
-    /// Audit every slot's KV ring and, when attached (and not poisoned
-    /// or held elsewhere), the shared prefix cache.  Test suites call
-    /// this between decode steps; see `docs/INVARIANTS.md` for the
-    /// invariant catalogue.
+    /// Audit every slot's block table, the shared pool's accounting,
+    /// and, when attached (and not poisoned or held elsewhere), the
+    /// shared prefix cache.  Test suites call this between decode
+    /// steps; see `docs/INVARIANTS.md` for the invariant catalogue.
     pub fn assert_invariants(&self) {
         assert_eq!(
             self.slot_pins.len(),
             self.caches.len(),
             "pin table and cache table disagree on slot count"
         );
-        for c in &self.caches {
+        assert_eq!(
+            self.slot_tokens.len(),
+            self.caches.len(),
+            "token-history table and cache table disagree on slot count"
+        );
+        assert_eq!(
+            self.slot_share.len(),
+            self.caches.len(),
+            "share table and cache table disagree on slot count"
+        );
+        for (slot, c) in self.caches.iter().enumerate() {
             c.assert_invariants();
+            assert_eq!(
+                c.block_tokens(),
+                self.pool.block_tokens(),
+                "slot {slot} cache drifted from the engine pool's block size"
+            );
+            // a share-eligible slot's token history names exactly the
+            // positions its cache holds rows for
+            if self.slot_share[slot] {
+                assert_eq!(
+                    self.slot_tokens[slot].len(),
+                    c.next_pos(),
+                    "slot {slot} token history out of step with its cache"
+                );
+            }
         }
+        self.pool.assert_invariants();
         if let Some(pc) = &self.prefix {
             if let Ok(g) = pc.try_lock() {
                 g.assert_invariants();
@@ -165,7 +279,8 @@ impl NativeEngine {
     }
 
     /// Prefill `slot` through the prefix cache when one is attached:
-    /// walk the longest cached prefix, copy its K/V blocks in, run
+    /// walk the longest cached prefix, splice its block handles in
+    /// (zero row copies), run
     /// [`IncrementalForward::prefill_suffix`] over the rest, publish
     /// the prompt's blocks back.  Falls back to a cold prefill when
     /// sharing is off, the prompt overflows the window (sliding-window
@@ -185,6 +300,8 @@ impl NativeEngine {
     fn prefill_cached_inner(&mut self, slot: usize, prompt: &[u32]) -> Vec<f32> {
         self.release_pins(slot);
         self.caches[slot].clear();
+        self.slot_tokens[slot].clear();
+        self.slot_share[slot] = false;
         let window = self.caches[slot].window;
         let Some(pc) = self.prefix.clone() else {
             return self.model.prefill(&mut self.caches[slot], prompt);
@@ -195,7 +312,7 @@ impl NativeEngine {
         }
         let mut pins = Vec::new();
         let mut matched = 0usize;
-        let mut blocks: Vec<Arc<KvBlock>> = Vec::new();
+        let mut blocks: Vec<Arc<KvPoolBlock>> = Vec::new();
         match pc.lock() {
             Ok(mut g) => {
                 let (p, m) = g.acquire(prompt);
@@ -206,11 +323,13 @@ impl NativeEngine {
             // (the whole prompt is a miss) rather than skip silently
             Err(_) => self.prefix_counters.lock_poisoned += 1,
         }
-        // the bulk K/V copy-in runs *outside* the shared cache lock
-        // (the Arcs keep the rows alive): one worker's warm admission
-        // never stalls another worker's behind a memcpy
+        // zero-copy import *outside* the shared cache lock: every
+        // matched block enters the slot's table as an `Arc` clone — no
+        // K/V row moves, so a warm admission costs
+        // O(matched / block_tokens) handle pushes instead of an
+        // O(matched) memcpy (and never stalls another worker behind it)
         for block in &blocks {
-            self.caches[slot].append_block(block);
+            self.caches[slot].append_shared(block);
         }
         self.prefix_counters.hit_tokens += matched as u64;
         self.prefix_counters.miss_tokens += (prompt.len() - matched) as u64;
@@ -222,7 +341,52 @@ impl NativeEngine {
             Err(_) => self.prefix_counters.lock_poisoned += 1,
         }
         self.slot_pins[slot] = pins;
+        // decoded tokens extend this history; publish-back at block
+        // boundaries keeps multi-turn conversations warm
+        self.slot_tokens[slot].extend_from_slice(prompt);
+        self.slot_share[slot] = true;
         logits
+    }
+
+    /// Publish `slot`'s full blocks (prompt *and* decoded positions)
+    /// back into the prefix chain once its cached-token count crosses a
+    /// block boundary — the re-entry path for multi-turn conversations,
+    /// whose next request's prompt is this request's prompt + reply.
+    /// Stops for good once the slot's window slides (absolute position
+    /// labels are gone) or its token history fell out of step with the
+    /// cache (the static path stepping outside the slot lifecycle).
+    fn maybe_publish_decoded(&mut self, slot: usize) {
+        if !self.slot_share[slot] {
+            return;
+        }
+        let n = self.slot_tokens[slot].len();
+        {
+            let cache = &self.caches[slot];
+            if cache.next_pos() != cache.len() || n != cache.next_pos() {
+                self.slot_share[slot] = false;
+                return;
+            }
+            if n % cache.block_tokens() != 0 {
+                return;
+            }
+        }
+        let Some(pc) = self.prefix.clone() else { return };
+        match pc.lock() {
+            Ok(mut g) => {
+                let evicted = g.publish(&self.slot_tokens[slot], &self.caches[slot]);
+                self.prefix_counters.evictions += evicted;
+            }
+            Err(_) => self.prefix_counters.lock_poisoned += 1,
+        }
+    }
+
+    /// Record a decoded token fed back into `slot` and publish at block
+    /// boundaries.  Called after every successful slot step.
+    fn note_step(&mut self, slot: usize, token: u32) {
+        if self.slot_share[slot] {
+            self.slot_tokens[slot].push(token);
+            self.maybe_publish_decoded(slot);
+        }
     }
 
     /// The fused multi-slot step body; `SlotEngine::step_slots` wraps
@@ -280,8 +444,11 @@ impl Generator for NativeEngine {
                 continue;
             }
             // the static path decodes every row on slot 0's cache
-            // (prefix-shared when a cache is attached)
+            // (prefix-shared when a cache is attached); it steps the
+            // model directly below, outside the slot lifecycle that
+            // tracks decoded-token history, so publish-back is off
             let mut logits = self.prefill_cached(0, prompt);
+            self.slot_share[0] = false;
             let out = &mut outputs[r];
             loop {
                 let idx = if p.temperature <= 0.0 {
@@ -326,7 +493,9 @@ impl SlotEngine for NativeEngine {
         anyhow::ensure!(!self.caches[slot].is_empty(), "step on a slot without prefill");
         let vocab = self.model.vocab();
         anyhow::ensure!((token as usize) < vocab, "token {token} out of vocab {vocab}");
-        Ok(self.model.step(&mut self.caches[slot], token))
+        let logits = self.model.step(&mut self.caches[slot], token);
+        self.note_step(slot, token);
+        Ok(logits)
     }
 
     /// Fused multi-slot step: every linear (and the LM head) runs once
@@ -342,6 +511,14 @@ impl SlotEngine for NativeEngine {
         self.step_seq += 1;
         let t0 = if sampled { Some(std::time::Instant::now()) } else { None };
         let out = self.step_slots_inner(steps);
+        if out.is_ok() {
+            // publish-back bookkeeping happens outside the timed decode
+            // math, and mutates only the shared prefix chain — never a
+            // logit — so fused and sequential streams stay bit-identical
+            for &(slot, token) in steps {
+                self.note_step(slot, token);
+            }
+        }
         if let (Some(t0), Ok(_)) = (t0, &out) {
             self.timers.step_sampled += 1;
             self.timers.step_ns += t0.elapsed().as_nanos() as u64;
@@ -362,6 +539,23 @@ impl SlotEngine for NativeEngine {
         if let Some(cache) = self.caches.get_mut(slot) {
             cache.clear();
         }
+        if let Some(tokens) = self.slot_tokens.get_mut(slot) {
+            tokens.clear();
+        }
+        if let Some(share) = self.slot_share.get_mut(slot) {
+            *share = false;
+        }
+    }
+
+    /// Admission gate on the shared pool: a prompt needs
+    /// `⌈min(prompt, window) / block_tokens⌉` blocks to prefill plus
+    /// one block of decode headroom.  An unbounded pool (no
+    /// `--kv-pool-mb`) always admits — slot count alone gates, exactly
+    /// the pre-pool behavior.
+    fn can_admit(&self, prompt_tokens: usize) -> bool {
+        let window = self.caches[0].window;
+        let need = self.pool.blocks_for(prompt_tokens.min(window)) + 1;
+        self.pool.free_blocks() >= need
     }
 
     /// Present only when a prefix cache is attached, so backends
@@ -633,5 +827,84 @@ mod tests {
         assert_eq!(ctr.lock_poisoned, 2, "acquire + publish each count: {ctr:?}");
         assert_eq!(ctr.hit_tokens, 0, "no hits through a poisoned lock");
         assert_eq!(ctr.miss_tokens, prompt.len() as u64);
+    }
+
+    /// The acceptance property of the paged pool: a prefix-cache hit
+    /// copies zero K/V rows.  The pool's `copied_rows` counter is
+    /// bumped by every row memcpy (legacy imports, COW) — after a warm
+    /// prefill that reuses 8 cached tokens it must still read zero,
+    /// and the warm slot's table must alias the published blocks.
+    #[test]
+    fn warm_prefill_copies_zero_kv_rows() {
+        let pc = Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20)));
+        let mut e = engine(40).with_slots(2).with_prefix_cache(pc.clone());
+        assert_eq!(e.kv_pool().block_tokens(), 4, "pool rebuilt to the cache's block size");
+        let prompt: Vec<u32> = (0..9u32).collect();
+        e.prefill_slot(0, &prompt).unwrap();
+        e.prefill_slot(1, &prompt).unwrap();
+        let ctr = SlotEngine::prefix_counters(&e).unwrap();
+        assert_eq!(ctr.hit_tokens, 8, "second prefill reuses both full blocks");
+        let stats = e.kv_pool().stats();
+        assert_eq!(stats.copied_rows, 0, "prefix hit must copy zero K/V rows");
+        assert_eq!(stats.cow_copies, 0, "nothing mutated a shared block");
+        // the two slots literally share storage for the matched prefix
+        let a = e.caches[0].share_block(0).expect("slot 0 block 0");
+        let b = e.caches[1].share_block(0).expect("slot 1 block 0");
+        assert!(Arc::ptr_eq(&a, &b), "warm slot must alias, not copy");
+        e.assert_invariants();
+    }
+
+    /// Decoded blocks publish back into the prefix chain: after a
+    /// request decodes past a block boundary, a follow-up whose prompt
+    /// is the previous prompt + reply (the multi-turn shape) re-enters
+    /// warm across the *decoded* tokens too, not just the old prompt.
+    #[test]
+    fn decoded_blocks_publish_back_for_multiturn() {
+        let pc = Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20)));
+        let mut e = engine(41).with_slots(2).with_prefix_cache(pc.clone());
+        let prompt: Vec<u32> = (0..4u32).collect();
+        e.prefill_slot(0, &prompt).unwrap();
+        assert_eq!(pc.lock().unwrap().entries(), 1, "prompt block published");
+        // feed 4 decoded tokens: history [0..8) crosses a block
+        // boundary, so block [4..8) publishes mid-decode
+        for tok in [10u32, 11, 12, 13] {
+            e.step_slot(0, tok).unwrap();
+        }
+        assert_eq!(pc.lock().unwrap().entries(), 2, "decoded block published");
+        // the multi-turn follow-up: old prompt + reply + new user turn
+        let turn2: Vec<u32> = vec![0, 1, 2, 3, 10, 11, 12, 13, 20];
+        e.prefill_slot(1, &turn2).unwrap();
+        let ctr = SlotEngine::prefix_counters(&e).unwrap();
+        assert_eq!(ctr.hit_tokens, 8, "both prompt and decoded blocks hit");
+        assert_eq!(e.kv_pool().stats().copied_rows, 0);
+        e.assert_invariants();
+    }
+
+    /// The pool budget gates admission, not allocation: `can_admit`
+    /// goes false once free blocks can't cover a new prompt plus
+    /// decode headroom, while the already-admitted slots keep stepping
+    /// (soft budget).
+    #[test]
+    fn pool_budget_gates_admission_softly() {
+        // window 32, default 16-token blocks; budget = 4 blocks' bytes
+        let cfg = tiny();
+        let block_bytes = 2 * cfg.n_layers * 16 * cfg.d_model * 4;
+        let mut e = NativeEngine::new(Weights::synthetic(&cfg, 5), &BTreeMap::new(), 32, 42)
+            .with_kv_pool_bytes(4 * block_bytes)
+            .with_slots(4);
+        assert_eq!(e.kv_pool().max_blocks(), 4);
+        assert!(e.can_admit(8), "empty pool admits");
+        e.prefill_slot(0, &[1, 2, 3]).unwrap(); // 1 block resident
+        assert!(e.can_admit(8), "3 free ≥ 1 needed + 1 headroom");
+        e.prefill_slot(1, &[4, 5, 6]).unwrap(); // 2 blocks resident
+        assert!(e.can_admit(8), "2 free ≥ 2");
+        e.prefill_slot(2, &[7, 8, 9]).unwrap(); // 3 blocks resident
+        assert!(!e.can_admit(8), "1 free < 2: admission deferred");
+        // the budget is soft: resident slots decode on regardless
+        e.step_slot(0, 1).unwrap();
+        e.step_slot(2, 1).unwrap();
+        e.reset_slot(1);
+        assert!(e.can_admit(8), "freed blocks re-open admission");
+        e.assert_invariants();
     }
 }

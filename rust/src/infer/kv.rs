@@ -1,37 +1,409 @@
-//! Per-request KV cache: per-layer K/V ring buffers over a sliding
-//! window of the last `window` positions — the state that turns the
-//! O(T²) full-recompute decode loop into an O(T) incremental one.
+//! Paged KV cache: slot caches are block-table views into a shared
+//! [`KvPool`] of fixed-size K/V blocks — the vLLM/PagedAttention move
+//! that makes KV memory proportional to *tokens actually resident*
+//! instead of a worst-case `window × layers × width` reservation per
+//! slot, and makes prefix-cache hits zero-copy (shared block handles
+//! instead of row memcpys).
 //!
-//! Window semantics match `runtime::session::recent_window` (and thus
-//! `pack_decode_windows` / the XLA decode loop): the cache always holds
-//! the *most recent* `window` positions; once full, appending a
-//! position evicts the oldest.  Keys are stored RoPE'd at their
-//! *absolute* position — RoPE attention scores depend only on relative
-//! position, so evicting the head of the window never requires
-//! re-rotating the survivors.
+//! Window semantics are unchanged from the ring era and still match
+//! `runtime::session::recent_window` (and thus `pack_decode_windows` /
+//! the XLA decode loop): the cache always exposes the *most recent*
+//! `window` positions; once full, appending a position retires the
+//! oldest.  Keys are stored RoPE'd at their *absolute* position — RoPE
+//! attention scores depend only on relative position, so sliding the
+//! window never requires re-rotating the survivors.
 //!
-//! Memory: `2 (K,V) · n_layers · window · d_model · 4` bytes per
-//! request, allocated once and reused (`clear`) across requests.
+//! # Sharing protocol
+//!
+//! A block handle is an `Arc<KvPoolBlock>`: the ref count IS the Arc
+//! strong count.  The prefix cache retains published blocks, and
+//! [`KvCache::append_shared`] splices the same handles into another
+//! slot's table with **zero** K/V row copies.  Mutation goes through
+//! `Arc::get_mut`, so a slot can only write a block it uniquely owns;
+//! when a slot would append into a shared tail, [`KvCache::advance`]
+//! first clones it into a private block (copy-on-write, counted in
+//! [`KvPoolStats::cow_copies`]).  Dropping the last handle retires the
+//! block's storage into the pool's recycle list.
+//!
+//! # Memory
+//!
+//! A block holds `2 (K,V) · n_layers · block_tokens · width` floats.
+//! A slot holding `len` positions pins `⌈covered / block_tokens⌉`
+//! blocks where `covered < len + block_tokens` — i.e. at most one
+//! partially-dead head block plus a partially-filled tail of slack,
+//! versus the full-window reservation of the old design.
+//!
+//! # Lock discipline
+//!
+//! The pool's only mutex guards the recycle free list (`recycled`), a
+//! leaf lock held for a single push/pop — never while running a model
+//! forward, touching a cache, or calling into the prefix cache.  All
+//! other pool state is atomic counters.
 //!
 //! The fused multi-slot decode advances several independent caches per
 //! tick; [`advance_rows`] / [`write_rows`] are its batched append
 //! primitives (one chronology bump per row, then one per-layer scatter
-//! of the batched K/V matrices into each row's own ring).
+//! of the batched K/V matrices into each row's own block table).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::tensor::Matrix;
 
-/// One layer's K and V ring storage, `[window, width]` row-major each.
-struct LayerKv {
-    k: Vec<f32>,
-    v: Vec<f32>,
+/// Default tokens per pool block (and thus the prefix-cache publish
+/// granularity).  16 balances sharing granularity (shorter common
+/// prefixes still match a block) against per-block bookkeeping;
+/// `PrefixCache::new` takes the block size explicitly, and the engine
+/// rebuilds its pool to match whatever cache it attaches.
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// Retired block storage kept for reuse before falling back to fresh
+/// heap allocations.  Bounds the free list so a transient burst of
+/// slots doesn't pin its high-water mark forever.
+const RECYCLE_CAP: usize = 256;
+
+/// Shared fixed-size K/V block allocator: the engine owns one pool and
+/// every slot cache (plus the prefix cache's retained blocks) draws
+/// from it.  `max_blocks` is a *soft* admission budget: [`KvPool::alloc`]
+/// never fails — mid-decode appends must always succeed — and the
+/// scheduler instead gates new admissions on [`KvPool::free_blocks`].
+///
+/// # Examples
+///
+/// ```
+/// use std::sync::Arc;
+/// use db_llm::infer::KvPool;
+///
+/// // 2 layers, rows of width 4, 8-token blocks, budget of 3 blocks
+/// let pool = Arc::new(KvPool::new(8, 2, 4, 3));
+/// let a = pool.alloc();
+/// assert_eq!(pool.free_blocks(), 2);
+/// drop(a); // retiring the handle returns the block to the free list
+/// assert_eq!(pool.free_blocks(), 3);
+/// assert_eq!(pool.blocks_for(17), 3); // ⌈17 / 8⌉
+/// ```
+pub struct KvPool {
+    /// positions per block (the sharing granularity)
+    block_tokens: usize,
+    /// layers each block carries K/V rows for
+    n_layers: usize,
+    /// row width (`n_heads * head_dim`)
+    width: usize,
+    /// soft block budget gating admission (`usize::MAX` = unbounded)
+    max_blocks: usize,
+    /// blocks currently alive (allocated, not yet retired)
+    live: AtomicUsize,
+    /// high-water mark of `live`
+    peak_live: AtomicUsize,
+    /// blocks allocated from fresh heap storage
+    fresh_allocs: AtomicUsize,
+    /// blocks allocated from the recycle free list
+    recycle_hits: AtomicUsize,
+    /// blocks retired (last handle dropped)
+    retired: AtomicUsize,
+    /// copy-on-write clones (a slot mutated a shared block)
+    cow_copies: AtomicUsize,
+    /// cached positions whose K/V rows were memcpy'd (legacy
+    /// `append_block` imports + COW clones); zero-copy sharing never
+    /// bumps this — the warm-prefill tests assert it stays flat
+    copied_rows: AtomicUsize,
+    /// retired storage awaiting reuse — the pool's only lock, a leaf
+    /// held for one push/pop
+    recycled: Mutex<Vec<Vec<f32>>>,
+}
+
+impl KvPool {
+    /// Soft budget value meaning "never gate admission on blocks".
+    pub const UNBOUNDED: usize = usize::MAX;
+
+    /// Build a pool of `block_tokens`-position blocks for `n_layers`
+    /// layers of `width`-float rows, with a soft budget of
+    /// `max_blocks` ([`KvPool::UNBOUNDED`] to disable gating).
+    pub fn new(block_tokens: usize, n_layers: usize, width: usize, max_blocks: usize) -> KvPool {
+        assert!(block_tokens > 0, "block size must be positive");
+        assert!(width > 0, "row width must be positive");
+        KvPool {
+            block_tokens,
+            n_layers,
+            width,
+            max_blocks,
+            live: AtomicUsize::new(0),
+            peak_live: AtomicUsize::new(0),
+            fresh_allocs: AtomicUsize::new(0),
+            recycle_hits: AtomicUsize::new(0),
+            retired: AtomicUsize::new(0),
+            cow_copies: AtomicUsize::new(0),
+            copied_rows: AtomicUsize::new(0),
+            recycled: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Positions per block.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Layers each block carries K/V rows for.
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Row width in floats.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Soft block budget (`usize::MAX` when unbounded).
+    pub fn max_blocks(&self) -> usize {
+        self.max_blocks
+    }
+
+    /// Floats per block: `2 (K,V) · n_layers · block_tokens · width`.
+    fn block_floats(&self) -> usize {
+        2 * self.n_layers * self.block_tokens * self.width
+    }
+
+    /// Heap bytes one block pins.
+    pub fn block_bytes(&self) -> usize {
+        self.block_floats() * 4
+    }
+
+    /// Blocks needed to hold `tokens` positions: `⌈tokens / block_tokens⌉`.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Blocks still under the soft budget.  Saturates at zero; an
+    /// unbounded pool reports `usize::MAX - live`.
+    pub fn free_blocks(&self) -> usize {
+        self.max_blocks.saturating_sub(self.live.load(Ordering::Relaxed))
+    }
+
+    /// Pop recycled storage or heap-allocate fresh, and account for it.
+    /// Recycled storage is *not* re-zeroed: cache rows are always
+    /// written before they are read, and the window/table bookkeeping
+    /// never exposes unwritten rows.
+    fn raw_data(self: &Arc<Self>) -> Vec<f32> {
+        let reused = match self.recycled.lock() {
+            Ok(mut free) => free.pop(),
+            // poisoned free list: fall through to a fresh allocation
+            Err(_) => None,
+        };
+        match reused {
+            Some(data) => {
+                self.recycle_hits.fetch_add(1, Ordering::Relaxed);
+                data
+            }
+            None => {
+                self.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; self.block_floats()]
+            }
+        }
+    }
+
+    /// Allocate an empty block.  Never fails: the budget is enforced at
+    /// admission time ([`KvPool::free_blocks`]), not allocation time,
+    /// so a mid-decode append can't panic a request that was admitted.
+    pub fn alloc(self: &Arc<Self>) -> Arc<KvPoolBlock> {
+        let data = self.raw_data();
+        let live = self.live.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_live.fetch_max(live, Ordering::Relaxed);
+        Arc::new(KvPoolBlock { len: 0, data, pool: Arc::clone(self) })
+    }
+
+    /// Copy-on-write clone: a private block carrying the same rows as
+    /// `src`, for a slot that must mutate a block another holder still
+    /// pins.
+    fn alloc_cow(self: &Arc<Self>, src: &KvPoolBlock) -> Arc<KvPoolBlock> {
+        let mut data = self.raw_data();
+        data.copy_from_slice(&src.data);
+        let live = self.live.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_live.fetch_max(live, Ordering::Relaxed);
+        self.cow_copies.fetch_add(1, Ordering::Relaxed);
+        self.copied_rows.fetch_add(src.len, Ordering::Relaxed);
+        Arc::new(KvPoolBlock { len: src.len, data, pool: Arc::clone(self) })
+    }
+
+    /// Account `n` positions copied row-by-row (the legacy
+    /// [`KvCache::append_block`] import path).
+    fn note_copied(&self, n: usize) {
+        self.copied_rows.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Return retired storage to the free list (called from block
+    /// `Drop`).  Past [`RECYCLE_CAP`] the storage is simply freed.
+    fn retire(&self, data: Vec<f32>) {
+        self.live.fetch_sub(1, Ordering::Relaxed);
+        self.retired.fetch_add(1, Ordering::Relaxed);
+        if let Ok(mut free) = self.recycled.lock() {
+            if free.len() < RECYCLE_CAP {
+                free.push(data);
+            }
+        }
+    }
+
+    /// Snapshot the pool's counters.
+    pub fn stats(&self) -> KvPoolStats {
+        KvPoolStats {
+            block_tokens: self.block_tokens,
+            block_bytes: self.block_bytes(),
+            max_blocks: self.max_blocks,
+            live_blocks: self.live.load(Ordering::Relaxed),
+            peak_blocks: self.peak_live.load(Ordering::Relaxed),
+            fresh_allocs: self.fresh_allocs.load(Ordering::Relaxed),
+            recycle_hits: self.recycle_hits.load(Ordering::Relaxed),
+            retired: self.retired.load(Ordering::Relaxed),
+            cow_copies: self.cow_copies.load(Ordering::Relaxed),
+            copied_rows: self.copied_rows.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Audit the pool's accounting.  Panics on the first violation:
+    ///
+    /// * retired blocks never exceed allocated blocks,
+    /// * live blocks never exceed allocated blocks,
+    /// * every recycled storage buffer spans exactly one block, and
+    /// * the recycle list respects its cap.
+    ///
+    /// Counter loads are ordered (retired, then live, then allocs) so
+    /// the audit is sound even while other threads allocate/retire.
+    pub fn assert_invariants(&self) {
+        let retired = self.retired.load(Ordering::Relaxed);
+        let live = self.live.load(Ordering::Relaxed);
+        // COW clones draw through raw_data, so fresh + recycled covers
+        // every allocation
+        let allocs =
+            self.fresh_allocs.load(Ordering::Relaxed) + self.recycle_hits.load(Ordering::Relaxed);
+        assert!(retired <= allocs, "pool retired {retired} blocks but only allocated {allocs}");
+        assert!(live <= allocs, "pool claims {live} live blocks but only allocated {allocs}");
+        if let Ok(free) = self.recycled.lock() {
+            assert!(free.len() <= RECYCLE_CAP, "recycle list over its cap");
+            for (i, data) in free.iter().enumerate() {
+                assert_eq!(
+                    data.len(),
+                    self.block_floats(),
+                    "recycled storage {i} drifted from block geometry"
+                );
+            }
+        }
+    }
+}
+
+/// Point-in-time snapshot of a [`KvPool`]'s accounting counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvPoolStats {
+    /// positions per block
+    pub block_tokens: usize,
+    /// heap bytes per block
+    pub block_bytes: usize,
+    /// soft admission budget in blocks (`usize::MAX` = unbounded)
+    pub max_blocks: usize,
+    /// blocks currently alive
+    pub live_blocks: usize,
+    /// high-water mark of live blocks
+    pub peak_blocks: usize,
+    /// blocks served from fresh heap allocations
+    pub fresh_allocs: usize,
+    /// blocks served from the recycle free list
+    pub recycle_hits: usize,
+    /// blocks retired (last handle dropped)
+    pub retired: usize,
+    /// copy-on-write clones of shared blocks
+    pub cow_copies: usize,
+    /// cached positions whose rows were memcpy'd (legacy import + COW);
+    /// zero on a pure zero-copy warm path
+    pub copied_rows: usize,
+}
+
+/// One fixed-size block of K/V rows for every layer, allocated from a
+/// [`KvPool`].  Shared immutably via `Arc` (the strong count is the ref
+/// count); mutated only through `Arc::get_mut` by the uniquely-owning
+/// slot.  Dropping the last handle retires the storage to the pool.
+///
+/// Layout: one flat buffer; layer `l`'s K row `r` at
+/// `((2l)·block_tokens + r)·width`, its V row at
+/// `((2l+1)·block_tokens + r)·width`.
+pub struct KvPoolBlock {
+    /// filled positions (≤ `block_tokens`)
+    len: usize,
+    /// flat K/V storage, `2 · n_layers · block_tokens · width` floats
+    data: Vec<f32>,
+    /// owning pool (retire target)
+    pool: Arc<KvPool>,
+}
+
+impl KvPoolBlock {
+    /// Filled positions in this block.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no position is filled.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when every position is filled (only full blocks are shared
+    /// through the prefix chain).
+    pub fn is_full(&self) -> bool {
+        self.len == self.pool.block_tokens
+    }
+
+    /// Heap bytes this block pins (the budget unit for
+    /// [`super::prefix::PrefixCache`] eviction).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    fn k_off(&self, layer: usize, row: usize) -> usize {
+        (2 * layer * self.pool.block_tokens + row) * self.pool.width
+    }
+
+    fn v_off(&self, layer: usize, row: usize) -> usize {
+        ((2 * layer + 1) * self.pool.block_tokens + row) * self.pool.width
+    }
+
+    /// Layer `layer`'s key row at block-local index `row`.
+    pub fn k_row(&self, layer: usize, row: usize) -> &[f32] {
+        debug_assert!(row < self.len, "read of unwritten block row");
+        let o = self.k_off(layer, row);
+        &self.data[o..o + self.pool.width]
+    }
+
+    /// Layer `layer`'s value row at block-local index `row`.
+    pub fn v_row(&self, layer: usize, row: usize) -> &[f32] {
+        debug_assert!(row < self.len, "read of unwritten block row");
+        let o = self.v_off(layer, row);
+        &self.data[o..o + self.pool.width]
+    }
+
+    fn k_row_mut(&mut self, layer: usize, row: usize) -> &mut [f32] {
+        let o = self.k_off(layer, row);
+        let w = self.pool.width;
+        &mut self.data[o..o + w]
+    }
+
+    fn v_row_mut(&mut self, layer: usize, row: usize) -> &mut [f32] {
+        let o = self.v_off(layer, row);
+        let w = self.pool.width;
+        &mut self.data[o..o + w]
+    }
+}
+
+impl Drop for KvPoolBlock {
+    fn drop(&mut self) {
+        self.pool.retire(std::mem::take(&mut self.data));
+    }
 }
 
 /// A contiguous run of prefilled positions, exported from one
-/// [`KvCache`] so another cache (or the shared
-/// [`super::prefix::PrefixCache`]) can reuse the K/V rows without
-/// re-running the model.  Layout: `layers[l]` holds that layer's
-/// `(k, v)` rows as `[len, width]` row-major, row `i` being the
-/// block's `i`-th position in chronological order.
+/// [`KvCache`] by value — the legacy copy-based interchange format,
+/// kept for callers that need an owned snapshot (the zero-copy path is
+/// [`KvCache::share_block`] / [`KvCache::append_shared`]).  Layout:
+/// `layers[l]` holds that layer's `(k, v)` rows as `[len, width]`
+/// row-major, row `i` being the block's `i`-th position in
+/// chronological order.
 #[derive(Clone, Debug, PartialEq)]
 pub struct KvBlock {
     /// positions in this block
@@ -43,16 +415,16 @@ pub struct KvBlock {
 }
 
 impl KvBlock {
-    /// Heap bytes this block pins (the budget unit for
-    /// [`super::prefix::PrefixCache`] eviction).
+    /// Heap bytes this block pins.
     pub fn bytes(&self) -> usize {
         self.layers.iter().map(|(k, v)| (k.len() + v.len()) * 4).sum()
     }
 }
 
-/// Ring-buffered K/V for every layer of one sequence.  All layers share
-/// one chronology: `advance()` reserves the slot for the next position
-/// once, then every layer writes its rows into that slot.
+/// Paged K/V for every layer of one sequence: a table of pool-block
+/// handles plus window bookkeeping.  All layers share one chronology:
+/// `advance()` reserves the row for the next position once, then every
+/// layer writes its K/V into that row.
 ///
 /// # Examples
 ///
@@ -62,7 +434,7 @@ impl KvBlock {
 /// // 1 layer, a 2-position window, rows of width 2
 /// let mut cache = KvCache::new(1, 2, 2);
 /// for t in 0..3u32 {
-///     let slot = cache.advance(); // reserve the ring slot once …
+///     let slot = cache.advance(); // reserve the table row once …
 ///     let row = [t as f32, -(t as f32)];
 ///     cache.write(0, slot, &row, &row); // … then write each layer
 /// }
@@ -76,24 +448,53 @@ pub struct KvCache {
     pub window: usize,
     /// row width = n_heads * head_dim (= d_model here)
     pub width: usize,
-    layers: Vec<LayerKv>,
-    /// filled positions (≤ window)
+    /// block allocator this cache draws from
+    pool: Arc<KvPool>,
+    /// resident blocks in chronological order (front = oldest)
+    blocks: VecDeque<Arc<KvPoolBlock>>,
+    /// absolute position of the front block's first row (multiple of
+    /// `block_tokens`; rows below the window's oldest position are
+    /// stale-but-present block slack)
+    base: usize,
+    /// filled positions exposed by the window (≤ window)
     len: usize,
-    /// ring index of the oldest cached position
-    start: usize,
     /// absolute position of the next appended token (monotonic)
     next_pos: usize,
 }
 
 impl KvCache {
-    /// Allocate a cache of `window` positions × `width` floats per row
-    /// for each of `n_layers` layers (K and V each), zero-filled.
+    /// Cache over a private, unbounded pool with the default block
+    /// size — the drop-in constructor for standalone use (tests, the
+    /// static path).  Engines build their slots with
+    /// [`KvCache::new_in_pool`] so all slots share one budget.
     pub fn new(n_layers: usize, window: usize, width: usize) -> KvCache {
+        KvCache::with_block_tokens(n_layers, window, width, DEFAULT_BLOCK_TOKENS)
+    }
+
+    /// Like [`KvCache::new`] with an explicit block size (must match
+    /// the prefix cache it will exchange blocks with).
+    pub fn with_block_tokens(
+        n_layers: usize,
+        window: usize,
+        width: usize,
+        block_tokens: usize,
+    ) -> KvCache {
+        let pool = Arc::new(KvPool::new(block_tokens, n_layers, width, KvPool::UNBOUNDED));
+        KvCache::new_in_pool(&pool, window)
+    }
+
+    /// Cache drawing its blocks from a shared pool.
+    pub fn new_in_pool(pool: &Arc<KvPool>, window: usize) -> KvCache {
         assert!(window > 0, "window must be positive");
-        let layers = (0..n_layers)
-            .map(|_| LayerKv { k: vec![0.0; window * width], v: vec![0.0; window * width] })
-            .collect();
-        KvCache { window, width, layers, len: 0, start: 0, next_pos: 0 }
+        KvCache {
+            window,
+            width: pool.width,
+            pool: Arc::clone(pool),
+            blocks: VecDeque::new(),
+            base: 0,
+            len: 0,
+            next_pos: 0,
+        }
     }
 
     /// Cached positions (chronological indices run `0..len()`).
@@ -104,7 +505,17 @@ impl KvCache {
     /// Number of layers this cache holds K/V rows for (lets callers
     /// clone a cache's geometry without carrying the model config).
     pub fn n_layers(&self) -> usize {
-        self.layers.len()
+        self.pool.n_layers
+    }
+
+    /// Positions per block in the backing pool.
+    pub fn block_tokens(&self) -> usize {
+        self.pool.block_tokens
+    }
+
+    /// The pool this cache draws blocks from.
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
     }
 
     /// True when no position is cached (fresh or just cleared).
@@ -123,53 +534,85 @@ impl KvCache {
         self.next_pos - self.len + i
     }
 
-    /// Reset for a new request without touching the allocations.
+    /// Reset for a new request.  Releases every block handle (retiring
+    /// uniquely-owned blocks into the pool's recycle list, so the next
+    /// request reuses their storage without fresh heap allocations).
     pub fn clear(&mut self) {
+        self.blocks.clear();
+        self.base = 0;
         self.len = 0;
-        self.start = 0;
         self.next_pos = 0;
         #[cfg(debug_assertions)]
         self.assert_invariants();
     }
 
-    /// Reserve the ring slot for the next position, evicting the oldest
-    /// when the window is full.  Returns the slot to pass to `write`.
-    /// Call exactly once per position, before the per-layer writes.
+    /// Make the tail block writable, cloning it first if another holder
+    /// (prefix cache, other slot, audit pin) still shares it — the
+    /// copy-on-write half of the sharing protocol.
+    fn ensure_tail_writable(&mut self) {
+        let tail = self.blocks.back_mut().expect("tail block exists");
+        if Arc::get_mut(tail).is_some() {
+            return;
+        }
+        let private = KvPool::alloc_cow(&self.pool, tail);
+        *tail = private;
+    }
+
+    /// Reserve the table row for the next position, retiring head
+    /// blocks that slid entirely out of the window.  Returns the
+    /// table-local row index to pass to `write`.  Call exactly once per
+    /// position, before the per-layer writes.  Allocates a fresh block
+    /// only every `block_tokens` appends (amortized, and usually a
+    /// recycle-list hit).
     pub fn advance(&mut self) -> usize {
-        let slot = (self.start + self.len) % self.window;
-        if self.len == self.window {
-            self.start = (self.start + 1) % self.window;
+        let pos = self.next_pos;
+        let bt = self.pool.block_tokens;
+        let tail_full = self.blocks.back().is_none_or(|b| b.len == bt);
+        if tail_full {
+            let fresh = self.pool.alloc();
+            self.blocks.push_back(fresh);
         } else {
+            self.ensure_tail_writable();
+        }
+        {
+            let tail = self.blocks.back_mut().expect("tail block exists after push");
+            let tail = Arc::get_mut(tail).expect("tail uniquely owned after copy-on-write");
+            tail.len += 1;
+        }
+        if self.len < self.window {
             self.len += 1;
         }
         self.next_pos += 1;
+        // release head blocks whose every row is older than the window
+        while self.base + bt <= self.next_pos - self.len {
+            self.blocks.pop_front();
+            self.base += bt;
+        }
         #[cfg(debug_assertions)]
         self.assert_invariants();
-        slot
+        pos - self.base
     }
 
-    /// Audit the ring/window bookkeeping.  Debug builds run this after
-    /// every mutating call; test suites call it directly.  Panics on
-    /// the first violation:
+    /// Audit the block-table/window bookkeeping.  Debug builds run this
+    /// after every mutating call; test suites call it directly.  Panics
+    /// on the first violation:
     ///
-    /// * `len ≤ window` (the ring never claims more than it holds),
-    /// * `start < window` (the oldest-position index stays in range),
+    /// * `len ≤ window` (the view never claims more than the window),
     /// * `next_pos ≥ len` (absolute chronology is never behind the
     ///   resident count — their difference is the evicted-prefix
-    ///   length), and
-    /// * every layer's K and V storage spans exactly `window × width`
-    ///   floats (geometry never drifts after construction).
+    ///   length),
+    /// * `base` is block-aligned and the oldest resident position lies
+    ///   inside the front block (head blocks are released eagerly),
+    /// * the blocks cover exactly positions `[base, next_pos)`, every
+    ///   non-tail block full,
+    /// * every block's storage spans exactly one pool block, and
+    /// * the pool's own accounting holds ([`KvPool::assert_invariants`]).
     pub fn assert_invariants(&self) {
+        let bt = self.pool.block_tokens;
         assert!(
             self.len <= self.window,
-            "kv ring holds {} positions but the window is {}",
+            "kv table holds {} positions but the window is {}",
             self.len,
-            self.window
-        );
-        assert!(
-            self.start < self.window,
-            "kv ring start {} outside window {}",
-            self.start,
             self.window
         );
         assert!(
@@ -178,46 +621,82 @@ impl KvCache {
             self.next_pos,
             self.len
         );
-        for (i, l) in self.layers.iter().enumerate() {
+        assert_eq!(self.base % bt, 0, "table base {} not block-aligned", self.base);
+        let covered: usize = self.blocks.iter().map(|b| b.len).sum();
+        assert_eq!(
+            self.base + covered,
+            self.next_pos,
+            "blocks cover [{}, {}) but chronology is at {}",
+            self.base,
+            self.base + covered,
+            self.next_pos
+        );
+        if self.len > 0 {
+            let oldest = self.next_pos - self.len;
             assert!(
-                l.k.len() == self.window * self.width && l.v.len() == l.k.len(),
-                "layer {i} K/V storage drifted from window x width"
+                self.base <= oldest && oldest < self.base + bt,
+                "front block [{}, {}) does not contain the oldest position {}",
+                self.base,
+                self.base + bt,
+                oldest
             );
         }
+        for (i, b) in self.blocks.iter().enumerate() {
+            assert_eq!(
+                b.data.len(),
+                self.pool.block_floats(),
+                "block {i} storage drifted from pool geometry"
+            );
+            if i + 1 < self.blocks.len() {
+                assert_eq!(b.len, bt, "non-tail block {i} is not full");
+            }
+        }
+        self.pool.assert_invariants();
     }
 
-    /// Write one layer's K/V rows for the slot returned by `advance`.
+    /// Write one layer's K/V rows for the row returned by `advance`.
+    /// The target block is always the uniquely-owned tail (`advance`
+    /// runs copy-on-write first), so this is a plain in-place store.
     pub fn write(&mut self, layer: usize, slot: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert_eq!(k_row.len(), self.width);
         debug_assert_eq!(v_row.len(), self.width);
-        let l = &mut self.layers[layer];
-        l.k[slot * self.width..(slot + 1) * self.width].copy_from_slice(k_row);
-        l.v[slot * self.width..(slot + 1) * self.width].copy_from_slice(v_row);
+        let bt = self.pool.block_tokens;
+        let block = Arc::get_mut(&mut self.blocks[slot / bt])
+            .expect("written block uniquely owned (advance runs copy-on-write first)");
+        block.k_row_mut(layer, slot % bt).copy_from_slice(k_row);
+        block.v_row_mut(layer, slot % bt).copy_from_slice(v_row);
     }
 
     /// Layer `layer`'s key row at chronological index `i` (0 = oldest).
     pub fn k_row(&self, layer: usize, i: usize) -> &[f32] {
         debug_assert!(i < self.len);
-        let slot = (self.start + i) % self.window;
-        &self.layers[layer].k[slot * self.width..(slot + 1) * self.width]
+        let idx = self.next_pos - self.len + i - self.base;
+        let bt = self.pool.block_tokens;
+        self.blocks[idx / bt].k_row(layer, idx % bt)
     }
 
     /// Layer `layer`'s value row at chronological index `i`.
     pub fn v_row(&self, layer: usize, i: usize) -> &[f32] {
         debug_assert!(i < self.len);
-        let slot = (self.start + i) % self.window;
-        &self.layers[layer].v[slot * self.width..(slot + 1) * self.width]
+        let idx = self.next_pos - self.len + i - self.base;
+        let bt = self.pool.block_tokens;
+        self.blocks[idx / bt].v_row(layer, idx % bt)
     }
 
     /// Copy chronological positions `[start, start + len)` out as a
-    /// [`KvBlock`] — the publish half of cross-request prefix sharing.
-    /// Callers must only export positions whose absolute position
-    /// equals their chronological index (i.e. before the window ever
-    /// slid), or the block would be mislabeled; `prefill` never slides
-    /// within one pass, so prompt blocks always qualify.
+    /// [`KvBlock`] — the legacy by-value export.  Positions must still
+    /// carry their original absolute labels, i.e. the window must not
+    /// have slid (`pos_of(start) == start`); `prefill` never slides
+    /// within one pass, so prompt blocks always qualify.  A mislabeled
+    /// export fails fast here instead of poisoning the prefix cache.
     pub fn export_block(&self, start: usize, len: usize) -> KvBlock {
         assert!(start + len <= self.len, "export range outside cached positions");
-        let layers = (0..self.layers.len())
+        assert_eq!(
+            self.next_pos - self.len + start,
+            start,
+            "export after the window slid would mislabel the block"
+        );
+        let layers = (0..self.pool.n_layers)
             .map(|l| {
                 let mut k = Vec::with_capacity(len * self.width);
                 let mut v = Vec::with_capacity(len * self.width);
@@ -231,13 +710,14 @@ impl KvCache {
         KvBlock { len, width: self.width, layers }
     }
 
-    /// Append an exported block's positions — the copy-in half of
-    /// prefix sharing.  The block's rows are appended in chronological
-    /// order exactly as `advance` + `write` would have, so a warm
-    /// cache is byte-identical to one that prefilled the same tokens.
+    /// Append an exported block's positions row by row — the legacy
+    /// copy-in path (each position memcpy'd, counted in
+    /// [`KvPoolStats::copied_rows`]).  The zero-copy equivalent is
+    /// [`KvCache::append_shared`].  A warm cache built either way is
+    /// byte-identical to one that prefilled the same tokens.
     pub fn append_block(&mut self, block: &KvBlock) {
         assert_eq!(block.width, self.width, "block width != cache width");
-        assert_eq!(block.layers.len(), self.layers.len(), "block layer count");
+        assert_eq!(block.layers.len(), self.pool.n_layers, "block layer count");
         assert!(
             self.len + block.len <= self.window && self.len == self.next_pos,
             "prefix import must fit the window before any slide"
@@ -249,15 +729,60 @@ impl KvCache {
                 self.write(l, slot, &k[i * w..(i + 1) * w], &v[i * w..(i + 1) * w]);
             }
         }
+        self.pool.note_copied(block.len);
         #[cfg(debug_assertions)]
         self.assert_invariants();
     }
+
+    /// Splice a shared pool block into this cache's table with zero
+    /// row copies — the warm-prefill import.  The handle is an `Arc`
+    /// clone; this slot will copy-on-write only if it ever had to
+    /// mutate the block (it never does: shared blocks are full, and
+    /// appends go to a fresh tail).  Requires geometry match, a full
+    /// block, a block-aligned unslid cache, and room in the window.
+    pub fn append_shared(&mut self, block: &Arc<KvPoolBlock>) {
+        let bt = self.pool.block_tokens;
+        assert_eq!(block.pool.width, self.width, "block width != cache width");
+        assert_eq!(block.pool.n_layers, self.pool.n_layers, "block layer count");
+        assert_eq!(block.pool.block_tokens, bt, "block size != cache block size");
+        assert!(block.is_full(), "only full blocks are shared");
+        assert!(
+            self.len + bt <= self.window && self.len == self.next_pos,
+            "prefix import must fit the window before any slide"
+        );
+        assert_eq!(self.len % bt, 0, "zero-copy import must land on a block boundary");
+        self.blocks.push_back(Arc::clone(block));
+        self.len += bt;
+        self.next_pos += bt;
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
+    }
+
+    /// Share block `chunk` (covering absolute positions
+    /// `[chunk·block_tokens, (chunk+1)·block_tokens)`) by handle — the
+    /// zero-copy publish half of prefix sharing.  Returns `None` if the
+    /// head of the table was already released (absolute labels would no
+    /// longer equal block-local chronology) or the block isn't full.
+    pub fn share_block(&self, chunk: usize) -> Option<Arc<KvPoolBlock>> {
+        if self.base != 0 {
+            return None;
+        }
+        self.blocks.get(chunk).filter(|b| b.is_full()).map(Arc::clone)
+    }
+
+    /// Clone the tail block's handle with no alignment or fullness
+    /// checks — an audit surface for the copy-on-write soak tests,
+    /// which use it to pin the exact block a slot is about to mutate.
+    /// Production sharing goes through [`KvCache::share_block`].
+    pub fn share_tail_for_audit(&self) -> Option<Arc<KvPoolBlock>> {
+        self.blocks.back().map(Arc::clone)
+    }
 }
 
-/// Batched append across independent caches: reserve the next ring slot
+/// Batched append across independent caches: reserve the next table row
 /// in each listed cache (exactly one [`KvCache::advance`] per row).
 /// `slots[i]` names the cache row `i` appends to — slots must be
-/// distinct — and the reserved ring slot per row lands in `ring`
+/// distinct — and the reserved row index per cache lands in `ring`
 /// (cleared first), to be passed to [`write_rows`] for every layer.
 pub fn advance_rows(caches: &mut [KvCache], slots: &[usize], ring: &mut Vec<usize>) {
     ring.clear();
@@ -267,8 +792,8 @@ pub fn advance_rows(caches: &mut [KvCache], slots: &[usize], ring: &mut Vec<usiz
 }
 
 /// Write one layer's batched K/V rows (`k`, `v` are `[m, width]`
-/// row-major, row `i` belonging to `caches[slots[i]]`) into the ring
-/// slots reserved by [`advance_rows`].
+/// row-major, row `i` belonging to `caches[slots[i]]`) into the table
+/// rows reserved by [`advance_rows`].
 pub fn write_rows(
     caches: &mut [KvCache],
     slots: &[usize],
@@ -324,7 +849,7 @@ mod tests {
     #[test]
     fn batched_append_matches_sequential_appends() {
         // two caches at different occupancies: the batched helpers must
-        // land the same rows in the same ring slots as per-cache
+        // land the same rows in the same table rows as per-cache
         // advance+write
         let build = || {
             let mut a = KvCache::new(2, 3, 2);
@@ -409,6 +934,8 @@ mod tests {
                 assert_eq!(dst.v_row(l, i), src.v_row(l, i), "layer {l} row {i}");
             }
         }
+        // the copy-in path is the one that bumps the copy counter
+        assert_eq!(dst.pool().stats().copied_rows, 3);
         // appending continues the chronology exactly where the block ends
         let slot = dst.advance();
         dst.write(0, slot, &[9.0, 9.0], &[9.0, 9.0]);
@@ -429,6 +956,20 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "window slid")]
+    fn export_after_slide_panics() {
+        // 5 appends over a window of 3: positions 0 and 1 were evicted,
+        // so chronological index 0 is absolute position 2 — exporting
+        // it as "position 0" must fail fast
+        let mut c = KvCache::new(1, 3, 1);
+        for _ in 0..5 {
+            let s = c.advance();
+            c.write(0, s, &[1.0], &[1.0]);
+        }
+        let _ = c.export_block(0, 1);
+    }
+
+    #[test]
     fn clear_resets_without_reallocating() {
         let mut c = KvCache::new(1, 2, 1);
         for _ in 0..3 {
@@ -442,5 +983,112 @@ mod tests {
         c.write(0, s, &[9.0], &[9.0]);
         assert_eq!(c.k_row(0, 0), &[9.0]);
         assert_eq!(c.pos_of(0), 0);
+        // the cleared block came back from the pool's recycle list
+        let s = c.pool().stats();
+        assert_eq!(s.recycle_hits, 1, "clear retires storage for reuse, not for free()");
+    }
+
+    #[test]
+    fn shared_append_is_zero_copy() {
+        // one pool, two caches: publishing a full block from `src` and
+        // splicing it into `dst` must exchange a handle, not rows
+        let pool = Arc::new(KvPool::new(2, 1, 2, KvPool::UNBOUNDED));
+        let mut src = KvCache::new_in_pool(&pool, 8);
+        for t in 0..4u32 {
+            let s = src.advance();
+            let row = [t as f32, t as f32 + 0.5];
+            src.write(0, s, &row, &row);
+        }
+        let shared = src.share_block(0).expect("first block is full");
+        assert!(shared.is_full());
+
+        let mut dst = KvCache::new_in_pool(&pool, 8);
+        dst.append_shared(&shared);
+        assert_eq!(dst.len(), 2);
+        assert_eq!(dst.next_pos(), 2);
+        for i in 0..2 {
+            assert_eq!(dst.k_row(0, i), src.k_row(0, i));
+        }
+        // same storage, zero rows copied
+        let again = dst.share_block(0).expect("imported block is sharable");
+        assert!(Arc::ptr_eq(&shared, &again), "import must alias, not copy");
+        assert_eq!(pool.stats().copied_rows, 0);
+
+        // decode continues into a fresh tail; the shared block is never
+        // mutated, so no copy-on-write fires either
+        let s = dst.advance();
+        dst.write(0, s, &[9.0, 9.0], &[9.0, 9.0]);
+        assert_eq!(dst.pos_of(2), 2);
+        assert_eq!(pool.stats().cow_copies, 0);
+    }
+
+    #[test]
+    fn mutating_a_shared_tail_copies_on_write() {
+        let pool = Arc::new(KvPool::new(4, 1, 1, KvPool::UNBOUNDED));
+        let mut c = KvCache::new_in_pool(&pool, 8);
+        for _ in 0..2 {
+            let s = c.advance();
+            c.write(0, s, &[1.0], &[1.0]);
+        }
+        // pin the partially-filled tail, then keep decoding into it
+        let pinned = c.share_tail_for_audit().expect("tail exists");
+        assert_eq!(pinned.len(), 2);
+        let s = c.advance();
+        c.write(0, s, &[7.0], &[7.0]);
+
+        let stats = pool.stats();
+        assert_eq!(stats.cow_copies, 1, "shared tail must be cloned before mutation");
+        assert_eq!(stats.copied_rows, 2, "the clone carries the 2 already-written rows");
+        // the pinned snapshot is untouched; the cache sees the new row
+        assert_eq!(pinned.len(), 2);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.k_row(0, 2), &[7.0]);
+        assert_eq!(c.k_row(0, 0), pinned.k_row(0, 0), "pre-COW rows match");
+        c.assert_invariants();
+    }
+
+    #[test]
+    fn window_slide_releases_head_blocks() {
+        // bt=2, window=4: after 9 appends positions 5..9 are resident;
+        // blocks [0,2) and [2,4) must have been returned to the pool
+        let pool = Arc::new(KvPool::new(2, 1, 1, KvPool::UNBOUNDED));
+        let mut c = KvCache::new_in_pool(&pool, 4);
+        for t in 0..9u32 {
+            let s = c.advance();
+            c.write(0, s, &[t as f32], &[t as f32]);
+        }
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.next_pos(), 9);
+        for (i, expect) in [5.0f32, 6.0, 7.0, 8.0].iter().enumerate() {
+            assert_eq!(c.k_row(0, i), &[*expect]);
+        }
+        let s = pool.stats();
+        // resident span [4, 9) covers blocks 2,3,4 — the rest retired
+        assert_eq!(s.live_blocks, 3);
+        assert_eq!(s.retired, 2);
+        assert!(s.recycle_hits >= 1, "later blocks reuse retired storage");
+        // once the head released, blocks lose their absolute labels
+        assert!(c.share_block(0).is_none(), "slid cache must not publish");
+        c.assert_invariants();
+    }
+
+    #[test]
+    fn pool_budget_gates_admission_not_allocation() {
+        let pool = Arc::new(KvPool::new(2, 1, 1, 2));
+        assert_eq!(pool.free_blocks(), 2);
+        assert_eq!(pool.blocks_for(3), 2);
+        let a = pool.alloc();
+        let b = pool.alloc();
+        assert_eq!(pool.free_blocks(), 0);
+        // over budget: allocation still succeeds (soft budget), the
+        // free count just stays pinned at zero
+        let c = pool.alloc();
+        assert_eq!(pool.free_blocks(), 0);
+        assert_eq!(pool.stats().live_blocks, 3);
+        assert_eq!(pool.stats().peak_blocks, 3);
+        drop((a, b, c));
+        assert_eq!(pool.free_blocks(), 2);
+        assert_eq!(pool.stats().retired, 3);
+        pool.assert_invariants();
     }
 }

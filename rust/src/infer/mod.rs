@@ -2,8 +2,12 @@
 //! `serve --backend native`.
 //!
 //! Four pieces:
-//! - [`kv::KvCache`] — per-layer K/V ring buffers over a sliding
-//!   window (`runtime::session::recent_window` semantics);
+//! - [`kv::KvPool`] + [`kv::KvCache`] — a shared pool of fixed-size
+//!   K/V blocks (vLLM/PagedAttention-style: free list, Arc ref counts,
+//!   copy-on-write) with per-slot caches as block-table views over a
+//!   sliding window (`runtime::session::recent_window` semantics);
+//!   admission gates on free blocks, and prefix reuse exchanges block
+//!   handles instead of copying rows;
 //! - [`step::IncrementalForward`] — prefill (one batched pass) +
 //!   O(window) single-position decode steps, every linear dispatched
 //!   through [`step::LinearOp`] (dense, or the compiled FDB sparse
@@ -34,6 +38,6 @@ pub mod prefix;
 pub mod step;
 
 pub use engine::NativeEngine;
-pub use kv::{KvBlock, KvCache};
-pub use prefix::{DEFAULT_BLOCK_TOKENS, PrefixCache, PrefixCacheStats};
+pub use kv::{DEFAULT_BLOCK_TOKENS, KvBlock, KvCache, KvPool, KvPoolBlock, KvPoolStats};
+pub use prefix::{PrefixCache, PrefixCacheStats};
 pub use step::{IncrementalForward, LinearOp};

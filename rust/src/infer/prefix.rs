@@ -17,9 +17,17 @@
 //!   the whole prefix, not just the block's own tokens.  Entries also
 //!   store their tokens and verify them on lookup — a hash collision
 //!   degrades to a miss, never to wrong K/V.
-//! - **Ref-counting.** A decode slot that copies cached blocks pins
+//! - **Zero-copy blocks.** Entries hold [`super::KvPoolBlock`] handles
+//!   — the same `Arc`s a slot's block table holds.  Publishing shares
+//!   the slot's handle ([`KvCache::share_block`]), and a warm request
+//!   splices the handle straight into its own table
+//!   ([`KvCache::append_shared`]): no K/V row is ever copied in either
+//!   direction.
+//! - **Ref-counting.** A decode slot that splices cached blocks pins
 //!   them ([`PrefixCache::acquire`] increments `refs`, the engine
-//!   releases on slot reset).  Pinned blocks are never evicted.
+//!   releases on slot reset).  Pinned blocks are never evicted, and
+//!   the `Arc` keeps the bytes alive even across an eviction that
+//!   races a release.
 //! - **LRU eviction under a byte budget.** Publishing past
 //!   `budget_bytes` evicts least-recently-used *unpinned leaf* blocks
 //!   (no cached extension, no active reader).  Evicting leaves first
@@ -47,8 +55,9 @@
 //! let mut cache = PrefixCache::new(2, 1 << 20); // 2-token blocks, 1 MiB
 //! let prompt = [10u32, 11, 12, 13, 14];
 //!
-//! // a cold request prefilled `prompt` into its slot's KvCache …
-//! let mut slot = KvCache::new(1, 8, 4);
+//! // a cold request prefilled `prompt` into its slot's KvCache
+//! // (built with a matching block size) …
+//! let mut slot = KvCache::with_block_tokens(1, 8, 4, 2);
 //! for _ in 0..prompt.len() {
 //!     let s = slot.advance();
 //!     slot.write(0, s, &[1.0; 4], &[2.0; 4]);
@@ -60,11 +69,12 @@
 //! // a second request with the same prompt matches both blocks …
 //! let (pins, matched) = cache.acquire(&prompt);
 //! assert_eq!(matched, 4);
-//! // … copies the cached rows instead of recomputing them (the
-//! // returned `Arc` lets real engines copy outside the cache lock) …
-//! let mut warm = KvCache::new(1, 8, 4);
+//! // … and splices the shared handles straight into its own table —
+//! // zero K/V rows copied (the returned `Arc` lets real engines do
+//! // this outside the cache lock) …
+//! let mut warm = KvCache::with_block_tokens(1, 8, 4, 2);
 //! for pin in &pins {
-//!     warm.append_block(&cache.block(*pin).unwrap());
+//!     warm.append_shared(&cache.block(*pin).unwrap());
 //! }
 //! assert_eq!(warm.len(), 4);
 //! // … and unpins them once its slot is reset
@@ -74,12 +84,9 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use super::kv::{KvBlock, KvCache};
+use super::kv::{KvCache, KvPoolBlock};
 
-/// Default tokens per prefix block: small enough that short shared
-/// system prompts still produce full blocks, large enough that the
-/// per-block map overhead stays negligible.
-pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+pub use super::kv::DEFAULT_BLOCK_TOKENS;
 
 /// Cache-wide introspection counters (monotonic except the gauges).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -102,10 +109,12 @@ struct Entry {
     tokens: Vec<u32>,
     /// chain hash of the parent block (`None` for block 0)
     parent: Option<u64>,
-    /// shared so readers clone the `Arc` under the cache lock and do
-    /// the bulk K/V copy-in *outside* it (pins keep the entry alive,
-    /// and the `Arc` keeps the bytes alive even across an eviction)
-    block: Arc<KvBlock>,
+    /// the pool block holding this prefix chunk's K/V rows — the very
+    /// handle the publishing slot's block table held, so readers splice
+    /// it into their own table with zero row copies (pins keep the
+    /// entry alive, and the `Arc` keeps the bytes alive even across an
+    /// eviction)
+    block: Arc<KvPoolBlock>,
     /// active readers (slots mid-copy or mid-decode); pinned blocks
     /// are never evicted
     refs: usize,
@@ -229,12 +238,13 @@ impl PrefixCache {
         (pins, matched)
     }
 
-    /// The K/V rows behind a pinned chain hash.  Returns a clone of
+    /// The pool block behind a pinned chain hash.  Returns a clone of
     /// the entry's `Arc` so the caller can drop the cache lock before
-    /// copying the rows into a slot's `KvCache` — one worker's bulk
-    /// copy-in must not stall every other worker's admission.
-    pub fn block(&self, hash: u64) -> Option<Arc<KvBlock>> {
-        self.entries.get(&hash).map(|e| e.block.clone())
+    /// splicing the handle into a slot's `KvCache`
+    /// ([`KvCache::append_shared`]) — no bulk copy happens under (or
+    /// after) the lock.
+    pub fn block(&self, hash: u64) -> Option<Arc<KvPoolBlock>> {
+        self.entries.get(&hash).map(|e| Arc::clone(&e.block))
     }
 
     /// Unpin blocks previously pinned by [`acquire`](Self::acquire).
@@ -248,14 +258,21 @@ impl PrefixCache {
         self.assert_invariants();
     }
 
-    /// Publish the full blocks of a freshly prefilled `prompt` whose
-    /// K/V rows sit in `cache` (chronological row `i` = prompt position
-    /// `i`).  Existing blocks are refreshed (LRU) and deduplicated —
-    /// two requests racing the same cold prefix store its bytes once.
-    /// Returns the number of evictions the inserts forced.
+    /// Publish the full blocks of a freshly prefilled (or decoded)
+    /// `prompt` whose K/V rows sit in `cache` (chronological row `i` =
+    /// prompt position `i`).  Zero-copy: the cache's own block handles
+    /// are retained ([`KvCache::share_block`]), no rows move.  Existing
+    /// blocks are refreshed (LRU) and deduplicated — two requests
+    /// racing the same cold prefix store its handle once.  Returns the
+    /// number of evictions the inserts forced.
     pub fn publish(&mut self, prompt: &[u32], cache: &KvCache) -> u64 {
         self.clock += 1;
         let b = self.block_tokens;
+        assert_eq!(
+            cache.block_tokens(),
+            b,
+            "publishing cache's block size must match the prefix cache"
+        );
         let mut parent = None;
         let mut start = 0usize;
         let mut evicted = 0u64;
@@ -279,7 +296,10 @@ impl PrefixCache {
                     break;
                 }
                 None => {
-                    let block = cache.export_block(start, b);
+                    // share the slot's own handle; `None` (slid head or
+                    // partial block) can't happen for the engine's
+                    // unslid publishes but ends the walk defensively
+                    let Some(block) = cache.share_block(start / b) else { break };
                     let need = block.bytes();
                     evicted += self.evict_for(need);
                     if self.used_bytes + need > self.budget_bytes {
@@ -301,7 +321,7 @@ impl PrefixCache {
                         Entry {
                             tokens: tokens.to_vec(),
                             parent,
-                            block: Arc::new(block),
+                            block,
                             refs: 1,
                             children: 0,
                             last_used: self.clock,
@@ -419,7 +439,8 @@ mod tests {
     /// row starts with `seed + i`, so block contents are position- and
     /// request-distinguishable.
     fn filled(n: usize, seed: f32) -> KvCache {
-        let mut c = KvCache::new(1, 32, 2);
+        // block size 2 to match the 2-token PrefixCaches below
+        let mut c = KvCache::with_block_tokens(1, 32, 2, 2);
         for i in 0..n {
             let s = c.advance();
             let row = [seed + i as f32, 1.0];

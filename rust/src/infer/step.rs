@@ -391,10 +391,10 @@ impl IncrementalForward {
     /// Batched prefill of a *suffix*: append `tokens` to the sequence
     /// already cached (possibly none), attending over the cached prefix
     /// rows plus the in-pass suffix rows.  This is the entry the
-    /// cross-request prefix cache uses — the matched prefix's K/V
-    /// blocks are copied in ([`KvCache::append_block`]) and only the
-    /// uncached suffix pays model work.  Returns the logits at the last
-    /// suffix position.
+    /// cross-request prefix cache uses — the matched prefix's pool
+    /// blocks are spliced in by handle ([`KvCache::append_shared`],
+    /// zero row copies) and only the uncached suffix pays model work.
+    /// Returns the logits at the last suffix position.
     ///
     /// Requirements: the cache must not have slid (`next_pos == len`,
     /// always true for imported prefixes) and prefix + suffix must fit
@@ -424,7 +424,7 @@ impl IncrementalForward {
         let s = &mut self.rows_scratch;
         s.ensure(ts, d, half);
         // embeddings + per-position RoPE at absolute positions
-        // base..base+ts, then reserve the ring slots (no eviction: the
+        // base..base+ts, then reserve the cache rows (no eviction: the
         // whole sequence fits the window)
         for (i, &tok) in tokens.iter().enumerate() {
             rope_pos_into(

@@ -311,10 +311,13 @@ pub fn rule_unwrap_ban(cx: &FileCx) -> Vec<Violation> {
 // rule: lock-order
 // ---------------------------------------------------------------------------
 
-/// Receivers whose `.lock()` opens a PrefixCache critical section.
-const LOCK_RECV: &[&str] = &["pc.lock()", "prefix.lock()", "prefix_cache.lock()"];
+/// Receivers whose `.lock()` opens a cache-layer critical section: the
+/// PrefixCache mutex and the KvPool recycle-list mutex.  Both are leaf
+/// locks in the documented lock DAG (docs/INVARIANTS.md).
+const LOCK_RECV: &[&str] =
+    &["pc.lock()", "prefix.lock()", "prefix_cache.lock()", "recycled.lock()"];
 
-/// Calls that must never run while the PrefixCache mutex is held: model
+/// Calls that must never run while a cache-layer mutex is held: model
 /// forwards, prefills, steps, and the bulk K/V copy-in.
 const LOCK_DENY: &[&str] = &[
     ".prefill",
@@ -328,10 +331,12 @@ const LOCK_DENY: &[&str] = &[
     ".run(",
 ];
 
-/// The PrefixCache mutex is a leaf lock: inside its guard scope only
-/// cache bookkeeping (`acquire`/`release`/`publish`/`block`) may run.
-/// The guard scope is taken to extend to the end of the enclosing block
-/// (or a `drop(..)` of the guard, whichever comes first).
+/// The PrefixCache mutex and the KvPool recycle mutex are leaf locks:
+/// inside their guard scopes only cache bookkeeping may run (for the
+/// prefix cache `acquire`/`release`/`publish`/`block`; for the pool a
+/// single free-list push/pop).  The guard scope is taken to extend to
+/// the end of the enclosing block (or a `drop(..)` of the guard,
+/// whichever comes first).
 pub fn rule_lock_order(cx: &FileCx) -> Vec<Violation> {
     let mut v = Vec::new();
     for i in 0..cx.code.len() {
@@ -365,7 +370,7 @@ pub fn rule_lock_order(cx: &FileCx) -> Vec<Violation> {
                         line: k + 1,
                         rule: "lock-order",
                         msg: format!(
-                            "`{pat}` while the PrefixCache mutex (locked at line {}) may \
+                            "`{pat}` while a cache-layer mutex (locked at line {}) may \
                              still be held; forwards and K/V copy-ins run outside the \
                              cache lock",
                             i + 1
@@ -539,6 +544,24 @@ fn bench_required_keys(bench: &str) -> Option<&'static [&'static str]> {
             "wall_ns_per_drain_static",
             "wall_tokens_per_sec_continuous",
             "wall_tokens_per_sec_static",
+            "note",
+        ]),
+        "kv_pool" => Some(&[
+            "model",
+            "d_model",
+            "n_layers",
+            "window",
+            "block_tokens",
+            "budget_bytes",
+            "block_bytes",
+            "worst_case_bytes_per_slot",
+            "requests_resident_worst_case",
+            "requests_resident_paged",
+            "hit_tokens",
+            "warm_copy_bytes_worst_case",
+            "warm_copy_bytes_paged",
+            "wall_ns_per_warm_prefill",
+            "wall_ns_per_cold_prefill",
             "note",
         ]),
         "prefix_cache_shared_prefill" => Some(&[
@@ -974,6 +997,30 @@ mod tests {
         let v = rule_lock_order(&cx(text));
         assert_eq!(v.len(), 1, "{v:?}");
         assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn lock_order_covers_pool_recycle_mutex() {
+        let text = concat!(
+            "fn retire(&self) {\n",
+            "    if let Ok(mut free) = self.recycled.lock() {\n",
+            "        free.push(data);\n",
+            "        cache.append_block(&blk);\n",
+            "    }\n",
+            "}\n",
+        );
+        let v = rule_lock_order(&cx(text));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 4);
+        let clean = concat!(
+            "fn retire(&self) {\n",
+            "    if let Ok(mut free) = self.recycled.lock() {\n",
+            "        free.push(data);\n",
+            "    }\n",
+            "    cache.append_block(&blk); // outside the leaf lock: fine\n",
+            "}\n",
+        );
+        assert!(rule_lock_order(&cx(clean)).is_empty());
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //!             [--backend native|xla] [--workers 2] [--max-batch 4]
 //!             [--linger-ms 20] [--queue-cap 1024] [--window T]
 //!             [--slots 4] [--timeout-ms N] [--no-refill]
-//!             [--prefix-cache-mb 64] [--metrics-interval-ms 10000]
+//!             [--prefix-cache-mb 64] [--kv-pool-mb 0]
+//!             [--metrics-interval-ms 10000]
 //!   client    --addr 127.0.0.1:7878 --prompt 1,2,3 --max-tokens 8
 //!             [--temperature 0.7] [--stop 0] [--timeout-ms N]
 //!             (or --stats to fetch the live metrics/Prometheus line)
@@ -159,7 +160,8 @@ fn print_help() {
                     [--backend native|xla] [--workers N] [--max-batch N]\n\
                     [--linger-ms N] [--queue-cap N] [--window T]\n\
                     [--slots N] [--timeout-ms N] [--no-refill]\n\
-                    [--prefix-cache-mb N] [--metrics-interval-ms N]\n\
+                    [--prefix-cache-mb N] [--kv-pool-mb N]\n\
+                    [--metrics-interval-ms N]\n\
            client   --addr A --prompt 1,2,3 --max-tokens 8\n\
                     [--temperature T] [--stop TOKEN] [--timeout-ms N]\n\
                     --addr A --stats    fetch live metrics + Prometheus\n\
@@ -326,6 +328,11 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     // shared across every scheduler worker); 0 disables sharing
     let prefix_cache_mb: usize =
         flags.get("prefix-cache-mb").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    // soft per-worker KV block-pool budget (MiB); admission defers new
+    // requests once the pool cannot reserve a prompt's worst-case block
+    // count, and 0 leaves the pool unbounded
+    let kv_pool_mb: usize =
+        flags.get("kv-pool-mb").map(|s| s.parse()).transpose()?.unwrap_or(0);
     // periodic snapshot logger cadence; 0 disables the log line (the
     // wire-level {"cmd":"stats"} surface stays available either way)
     let metrics_interval_ms: u64 =
@@ -348,6 +355,10 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             eprintln!("warning: --prefix-cache-mb only applies to --backend native \
                        (the xla executable recomputes the full window every step and \
                        has no KV cache to share); ignored");
+        }
+        if flags.contains_key("kv-pool-mb") {
+            eprintln!("warning: --kv-pool-mb only applies to --backend native (the xla \
+                       executable has no KV block pool to budget); ignored");
         }
     } else if flags.contains_key("max-batch") || flags.contains_key("linger-ms") {
         eprintln!("warning: --max-batch/--linger-ms only apply to the static batcher \
@@ -392,18 +403,24 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
                     let window = window_override.unwrap_or_else(|| rt.manifest.seq_len());
                     let mut engine =
                         NativeEngine::new(student.weights, &student.fdb_layers, window, 42)
-                            .with_slots(slots);
+                            .with_slots(slots)
+                            .with_kv_pool_bytes(kv_pool_mb << 20);
                     if let Some(pc) = &prefix {
                         engine = engine.with_prefix_cache(pc.clone());
                     }
                     eprintln!(
                         "native engine ready (window {window}, {slots} slots, {} \
-                         FDB-compiled linears, prefix cache {})",
+                         FDB-compiled linears, prefix cache {}, KV pool {})",
                         engine.n_fdb_ops(),
                         if prefix_cache_mb > 0 {
                             format!("{prefix_cache_mb} MiB shared")
                         } else {
                             "off".to_string()
+                        },
+                        if kv_pool_mb > 0 {
+                            format!("{kv_pool_mb} MiB soft budget")
+                        } else {
+                            "unbounded".to_string()
                         },
                     );
                     Ok(engine)

@@ -1,0 +1,351 @@
+//! Paged KV block-pool property soaks: ref-count/COW protocol, racing
+//! acquires, eviction under pinned pressure, and decoded publish-back
+//! — the concurrency surface of the shared [`KvPool`].
+//!
+//! Everything here is artifact-free and deliberately thread-heavy with
+//! *small* iteration counts: CI's ThreadSanitizer lane runs this file
+//! as a named suite (`--test kv_pool`), so the goal is to exercise
+//! every cross-thread edge (Arc clone/drop racing retire, the recycle
+//! mutex, pinned-block reads racing a COW mutation, prefix-cache
+//! publish/acquire/evict interleavings) rather than to grind.
+//!
+//! The single-threaded protocol tests live with the code
+//! (`src/infer/kv.rs`, Miri-checked); the engine-level equivalence
+//! gates live in `tests/prefix_cache.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Barrier, Mutex};
+
+use db_llm::coordinator::scheduler::SlotEngine;
+use db_llm::coordinator::serve::argmax;
+use db_llm::infer::{KvCache, KvPool, NativeEngine, PrefixCache};
+use db_llm::model::{ModelConfig, Weights};
+
+fn tiny() -> ModelConfig {
+    ModelConfig {
+        name: "t".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 192,
+        vocab: 96,
+        seq_len: 32,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    }
+}
+
+/// Concurrent alloc/retire keeps the pool's books sound: counters are
+/// audited *while* other threads allocate and drop, every thread sees
+/// recycled storage, and the end state balances to zero live blocks.
+#[test]
+fn pool_accounting_sound_under_concurrent_alloc_retire() {
+    let pool = Arc::new(KvPool::new(4, 2, 8, KvPool::UNBOUNDED));
+    let barrier = Arc::new(Barrier::new(4));
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let pool = Arc::clone(&pool);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                for i in 0..200 {
+                    let a = pool.alloc();
+                    let b = pool.alloc();
+                    drop(a);
+                    if i % 16 == 0 {
+                        // mid-churn audit: sound against racing threads
+                        pool.assert_invariants();
+                    }
+                    drop(b);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = pool.stats();
+    assert_eq!(s.live_blocks, 0, "every handle dropped");
+    assert_eq!(s.retired, s.fresh_allocs + s.recycle_hits, "retire balances alloc");
+    assert!(s.recycle_hits > 0, "churn must reuse retired storage");
+    assert!(s.peak_blocks <= 8, "4 threads x 2 handles bounds the peak");
+    pool.assert_invariants();
+}
+
+/// Racing acquires over one published prefix: every reader splices the
+/// same shared handles into its own table, sees the publisher's exact
+/// rows, and the pool's copy counters stay at zero — the zero-copy
+/// guarantee holds under contention, not just single-threaded.
+#[test]
+fn racing_acquires_are_zero_copy() {
+    let pool = Arc::new(KvPool::new(4, 2, 4, KvPool::UNBOUNDED));
+    let pc = Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20)));
+    let prompt: Vec<u32> = (0..8u32).collect();
+
+    // the "cold request": prefilled rows with position-derived values,
+    // published as 2 full blocks
+    let mut src = KvCache::new_in_pool(&pool, 32);
+    for t in 0..8 {
+        let s = src.advance();
+        let row = [t as f32; 4];
+        for l in 0..2 {
+            src.write(l, s, &row, &row);
+        }
+    }
+    pc.lock().unwrap().publish(&prompt, &src);
+    assert_eq!(pc.lock().unwrap().entries(), 2);
+
+    // lookups carry a suffix token: `acquire` never matches an entire
+    // prompt (the model always runs >= 1 position), so a bare 8-token
+    // lookup would deliberately stop at one block
+    let lookup: Vec<u32> = prompt.iter().copied().chain([99]).collect();
+    let barrier = Arc::new(Barrier::new(4));
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let pool = Arc::clone(&pool);
+            let pc = Arc::clone(&pc);
+            let lookup = lookup.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                for _ in 0..16 {
+                    // lock only to walk + pin; the splice runs outside
+                    let (pins, matched, blocks) = {
+                        let mut g = pc.lock().unwrap();
+                        let (pins, matched) = g.acquire(&lookup);
+                        let blocks: Vec<_> =
+                            pins.iter().map(|h| g.block(*h).expect("pinned")).collect();
+                        (pins, matched, blocks)
+                    };
+                    assert_eq!(matched, 8, "full prefix short of nothing (8 = 2 blocks)");
+                    let mut warm = KvCache::new_in_pool(&pool, 32);
+                    for b in &blocks {
+                        warm.append_shared(b);
+                    }
+                    assert_eq!(warm.len(), 8);
+                    for i in 0..8 {
+                        assert_eq!(warm.k_row(0, i)[0], i as f32, "imported row diverged");
+                    }
+                    warm.assert_invariants();
+                    pc.lock().unwrap().release(&pins);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = pool.stats();
+    assert_eq!(s.copied_rows, 0, "racing warm imports must copy zero K/V rows");
+    assert_eq!(s.cow_copies, 0, "nobody mutated a shared block");
+    pc.lock().unwrap().assert_invariants();
+    pool.assert_invariants();
+}
+
+/// Copy-on-write isolates a pinned snapshot from the decoding slot:
+/// reader threads hold the tail handle and re-read its rows while the
+/// owner keeps appending — the pin's bytes never move (the owner wrote
+/// into a private clone), which is exactly the no-data-race property
+/// TSan checks here.
+#[test]
+fn cow_isolates_pinned_readers_from_decode() {
+    let pool = Arc::new(KvPool::new(4, 1, 2, KvPool::UNBOUNDED));
+    let mut c = KvCache::new_in_pool(&pool, 64);
+    for t in 0..2 {
+        let s = c.advance();
+        let row = [t as f32, -(t as f32)];
+        c.write(0, s, &row, &row);
+    }
+    let pinned = c.share_tail_for_audit().expect("tail exists");
+    assert_eq!(pinned.len(), 2);
+
+    let readers: Vec<_> = (0..2)
+        .map(|_| {
+            let pinned = Arc::clone(&pinned);
+            std::thread::spawn(move || {
+                for _ in 0..500 {
+                    for i in 0..2 {
+                        assert_eq!(pinned.k_row(0, i)[0], i as f32, "pinned snapshot moved");
+                        assert_eq!(pinned.v_row(0, i)[1], -(i as f32));
+                    }
+                }
+            })
+        })
+        .collect();
+    // the owner decodes on, concurrently with the readers
+    for t in 2..32 {
+        let s = c.advance();
+        let row = [100.0 + t as f32, 0.0];
+        c.write(0, s, &row, &row);
+    }
+    for h in readers {
+        h.join().unwrap();
+    }
+    let s = pool.stats();
+    assert_eq!(s.cow_copies, 1, "first append into the pinned tail clones it once");
+    assert_eq!(s.copied_rows, 2, "the clone carries the 2 pre-pin rows");
+    assert_eq!(pinned.len(), 2, "the pin never grows");
+    assert_eq!(c.len(), 32);
+    c.assert_invariants();
+}
+
+/// Eviction under pinned pressure: a held chain survives arbitrary
+/// publish pressure (pins are never victims), the cache never
+/// overshoots its budget, and a slot that spliced a block *keeps its
+/// rows* even after the cache entry is evicted — the `Arc` outlives
+/// the eviction.
+#[test]
+fn eviction_under_pinned_pressure() {
+    // 1 layer, width 2, 2-token blocks: 2*1*2*2*4 = 32 bytes per block
+    let pool = Arc::new(KvPool::new(2, 1, 2, KvPool::UNBOUNDED));
+    let block_bytes = pool.block_bytes();
+    let pc = Arc::new(Mutex::new(PrefixCache::new(2, 4 * block_bytes)));
+
+    let fill = |tokens: &[u32]| {
+        let mut c = KvCache::new_in_pool(&pool, 32);
+        for &t in tokens {
+            let s = c.advance();
+            let row = [t as f32, t as f32 + 0.5];
+            c.write(0, s, &row, &row);
+        }
+        c
+    };
+
+    // chain A: 2 blocks, pinned for the whole soak
+    let chain: Vec<u32> = vec![1, 2, 3, 4];
+    pc.lock().unwrap().publish(&chain, &fill(&chain));
+    let (pins, matched) = pc.lock().unwrap().acquire(&[1, 2, 3, 4, 9]);
+    assert_eq!(matched, 4);
+
+    // a transient reader splices chain A and immediately unpins: its
+    // rows must survive even if the entries are later evicted
+    let mut orphan = KvCache::new_in_pool(&pool, 32);
+    let (p, blocks) = {
+        let mut g = pc.lock().unwrap();
+        let (p, m) = g.acquire(&[1, 2, 3, 4, 9]);
+        assert_eq!(m, 4);
+        let blocks: Vec<_> = p.iter().map(|h| g.block(*h).expect("pinned")).collect();
+        (p, blocks)
+    };
+    for b in &blocks {
+        orphan.append_shared(b);
+    }
+    pc.lock().unwrap().release(&p);
+    drop(blocks);
+
+    let barrier = Arc::new(Barrier::new(4));
+    let handles: Vec<_> = (0..4u32)
+        .map(|tid| {
+            let pool = Arc::clone(&pool);
+            let pc = Arc::clone(&pc);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                for it in 0..16u32 {
+                    // distinct 2-token prefix per (thread, iteration):
+                    // every publish lands a fresh block and squeezes
+                    // the budget
+                    let base = 1000 + tid * 100 + it * 2;
+                    let tokens = vec![base, base + 1];
+                    let mut c = KvCache::new_in_pool(&pool, 32);
+                    for &t in &tokens {
+                        let s = c.advance();
+                        let row = [t as f32, 0.0];
+                        c.write(0, s, &row, &row);
+                    }
+                    let mut g = pc.lock().unwrap();
+                    g.publish(&tokens, &c);
+                    g.assert_invariants();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let mut g = pc.lock().unwrap();
+    assert!(g.used_bytes() <= 4 * block_bytes, "budget overshot under pressure");
+    let (still, m) = g.acquire(&[1, 2, 3, 4, 9]);
+    assert_eq!(m, 4, "pinned chain evicted under pressure");
+    g.release(&still);
+    g.release(&pins);
+    g.assert_invariants();
+    drop(g);
+
+    // the orphan's spliced rows are intact regardless of what the LRU
+    // did to the entries behind them
+    assert_eq!(orphan.len(), 4);
+    for (i, &t) in chain.iter().enumerate() {
+        assert_eq!(orphan.k_row(0, i), &[t as f32, t as f32 + 0.5], "row {i} lost to eviction");
+    }
+    orphan.assert_invariants();
+    pool.assert_invariants();
+}
+
+/// Racing engines over one shared prefix cache: both decode streams
+/// stay bit-identical to a cold engine's, neither pool copies a K/V
+/// row, and the decoded blocks published back at block boundaries warm
+/// a third engine across prompt *and* reply — the multi-turn shape.
+#[test]
+fn racing_engines_stay_bit_identical_and_publish_back() {
+    let cfg = tiny();
+    let w = Weights::synthetic(&cfg, 77);
+    let pc = Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20)));
+    let prompt: Vec<u32> = (0..4u32).collect();
+
+    // cold reference stream (no sharing anywhere)
+    let mut cold =
+        NativeEngine::new(w.clone(), &BTreeMap::new(), cfg.seq_len, 42).with_slots(1);
+    let mut logits = cold.prefill_slot(0, &prompt).unwrap();
+    let mut expect = Vec::new();
+    for _ in 0..4 {
+        let t = argmax(&logits) as u32;
+        expect.push(t);
+        logits = cold.step_slot(0, t).unwrap();
+    }
+
+    let barrier = Arc::new(Barrier::new(2));
+    let handles: Vec<_> = (0..2)
+        .map(|_| {
+            let pc = Arc::clone(&pc);
+            let w = w.clone();
+            let prompt = prompt.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut e = NativeEngine::new(w, &BTreeMap::new(), 32, 42)
+                    .with_slots(1)
+                    .with_prefix_cache(pc);
+                barrier.wait();
+                let mut logits = e.prefill_slot(0, &prompt).unwrap();
+                let mut out = Vec::new();
+                for _ in 0..4 {
+                    let t = argmax(&logits) as u32;
+                    out.push(t);
+                    logits = e.step_slot(0, t).unwrap();
+                }
+                e.assert_invariants();
+                (out, e.kv_pool().stats().copied_rows)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (out, copied) = h.join().unwrap();
+        assert_eq!(out, expect, "shared-cache stream diverged from cold");
+        assert_eq!(copied, 0, "warm or racing-cold prefill copied K/V rows");
+    }
+
+    // 4 prompt + 4 decoded tokens crossed the 4-token block boundary,
+    // so both blocks are in the chain: turn 2 re-enters warm over the
+    // decoded tokens too
+    let turn2: Vec<u32> = prompt.iter().copied().chain(expect.iter().copied()).chain([20]).collect();
+    let mut e2 = NativeEngine::new(w, &BTreeMap::new(), 32, 42)
+        .with_slots(1)
+        .with_prefix_cache(Arc::clone(&pc));
+    e2.prefill_slot(0, &turn2).unwrap();
+    let ctr = SlotEngine::prefix_counters(&e2).unwrap();
+    assert_eq!(ctr.hit_tokens, 8, "prompt and decoded blocks both warm turn 2");
+    assert_eq!(e2.kv_pool().stats().copied_rows, 0);
+    e2.assert_invariants();
+    pc.lock().unwrap().assert_invariants();
+}
