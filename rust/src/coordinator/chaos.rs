@@ -1,0 +1,298 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] scripts engine-boundary faults by **call ordinal**:
+//! the N-th prefill (or row-step) an engine executes fails, panics, or
+//! stalls, regardless of wall time or thread interleaving.  Ordinals
+//! make multi-seed chaos soaks reproducible — the same plan over the
+//! same request set injects the same faults — which is what lets
+//! `tests/chaos.rs` assert exactly-one-reply and bit-identical
+//! uninjected streams across runs.
+//!
+//! [`ChaosEngine`] wraps any [`SlotEngine`] and applies a plan at the
+//! engine boundary.  It deliberately does **not** override
+//! [`SlotEngine::step_slots`] and keeps the default
+//! `step_slots_atomic() == false`, which forces the scheduler onto its
+//! row-by-row stepping path — exactly one [`SlotEngine::step_slot`]
+//! ordinal per advanced row, so a plan names individual row-steps, not
+//! whole fused batches.  Counters live behind an `Arc` so a test can
+//! keep observing them after the engine moves into a worker thread,
+//! and they accumulate across supervisor respawns (the engine survives
+//! inside the scheduler core).
+//!
+//! Faults at the *connection* boundary (oversized lines, mid-line
+//! disconnects, stalls) need no engine hook — the chaos and
+//! failure-injection suites drive those directly over a socket — and
+//! queue-lock poisoning is injected with
+//! [`super::serve::SharedQueue::poison_for_chaos`].
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::util::Pcg32;
+
+use super::scheduler::{EngineTimers, PrefixCounters, SlotEngine};
+
+/// Scripted faults, keyed by engine-call ordinal (0-based: the first
+/// prefill an engine runs is prefill ordinal 0).  Sets are `BTreeSet`s
+/// so plans print deterministically in test failure output.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// prefill ordinals that return an injected error (the scheduler
+    /// answers that request with an error reply; the slot stays free)
+    pub prefill_fail: BTreeSet<u64>,
+    /// row-step ordinals that return an injected error (that row alone
+    /// degrades to an error reply with its partial tokens)
+    pub step_fail: BTreeSet<u64>,
+    /// prefill ordinals that panic the worker (supervisor territory)
+    pub panic_at_prefill: BTreeSet<u64>,
+    /// row-step ordinals that panic the worker
+    pub panic_at_step: BTreeSet<u64>,
+    /// admission-check ordinals forced to report "no pool headroom"
+    /// (the scheduler defers the request, re-trying next tick)
+    pub admit_deny: BTreeSet<u64>,
+    /// row-step ordinals that stall for [`slow_step_ms`](Self::slow_step_ms)
+    /// before stepping — slow-tick injection for deadline/shed paths
+    pub slow_steps: BTreeSet<u64>,
+    /// stall duration for [`slow_steps`](Self::slow_steps) ordinals
+    pub slow_step_ms: u64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing — the fault-free control run.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Seeded random plan: roughly `faults` injections of each flavor
+    /// scattered over call ordinals `0..horizon`.  The same
+    /// `(seed, horizon, faults)` always yields the same plan.
+    pub fn random(seed: u64, horizon: u64, faults: usize) -> FaultPlan {
+        let mut rng = Pcg32::new(seed, 0xC4A0_5);
+        let mut draw = |n: usize| -> BTreeSet<u64> {
+            (0..n).map(|_| rng.next_u64() % horizon.max(1)).collect()
+        };
+        FaultPlan {
+            prefill_fail: draw(faults),
+            step_fail: draw(faults),
+            panic_at_prefill: draw(faults.div_ceil(2)),
+            panic_at_step: draw(faults.div_ceil(2)),
+            admit_deny: draw(faults),
+            slow_steps: draw(faults),
+            slow_step_ms: 1,
+        }
+    }
+}
+
+/// What a [`ChaosEngine`] actually did — call tallies and injection
+/// counts, shared out through an `Arc` so tests observe them after the
+/// engine moves into a worker thread.  Injection counters let a soak
+/// assert its respawn/error totals against the plan as *executed*
+/// (ordinals past the workload's natural length never fire).
+#[derive(Debug, Default)]
+pub struct ChaosCounters {
+    /// prefill calls that reached the chaos boundary
+    pub prefills: AtomicU64,
+    /// row-step calls that reached the chaos boundary
+    pub steps: AtomicU64,
+    /// admission checks that reached the chaos boundary
+    pub admission_checks: AtomicU64,
+    /// prefill errors injected
+    pub injected_prefill_failures: AtomicU64,
+    /// row-step errors injected
+    pub injected_step_failures: AtomicU64,
+    /// worker panics injected (prefill + step)
+    pub injected_panics: AtomicU64,
+    /// admissions denied by the scripted pool-exhaustion fault
+    pub denied_admissions: AtomicU64,
+    /// row-steps stalled by the slow-tick fault
+    pub injected_slow_steps: AtomicU64,
+}
+
+/// A [`SlotEngine`] wrapper that executes a [`FaultPlan`] at the
+/// engine boundary.  Everything not named by the plan delegates to the
+/// wrapped engine unchanged, so uninjected requests decode
+/// bit-identically to a run without the wrapper.
+pub struct ChaosEngine<E: SlotEngine> {
+    inner: E,
+    plan: FaultPlan,
+    counters: Arc<ChaosCounters>,
+}
+
+impl<E: SlotEngine> ChaosEngine<E> {
+    /// Wrap `inner`, injecting per `plan`.
+    pub fn new(inner: E, plan: FaultPlan) -> ChaosEngine<E> {
+        ChaosEngine { inner, plan, counters: Arc::new(ChaosCounters::default()) }
+    }
+
+    /// Shared handle to the execution tally (clone before moving the
+    /// engine into a worker).
+    pub fn counters(&self) -> Arc<ChaosCounters> {
+        Arc::clone(&self.counters)
+    }
+
+    /// The wrapped engine.
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+}
+
+impl<E: SlotEngine> SlotEngine for ChaosEngine<E> {
+    fn slots(&self) -> usize {
+        self.inner.slots()
+    }
+
+    fn prefill_slot(&mut self, slot: usize, prompt: &[u32]) -> Result<Vec<f32>> {
+        let n = self.counters.prefills.fetch_add(1, Ordering::Relaxed);
+        if self.plan.panic_at_prefill.contains(&n) {
+            self.counters.injected_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("chaos: scripted prefill panic at ordinal {n}");
+        }
+        if self.plan.prefill_fail.contains(&n) {
+            self.counters.injected_prefill_failures.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("chaos: scripted prefill failure at ordinal {n}");
+        }
+        self.inner.prefill_slot(slot, prompt)
+    }
+
+    fn step_slot(&mut self, slot: usize, token: u32) -> Result<Vec<f32>> {
+        let n = self.counters.steps.fetch_add(1, Ordering::Relaxed);
+        if self.plan.slow_steps.contains(&n) {
+            self.counters.injected_slow_steps.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(self.plan.slow_step_ms));
+        }
+        if self.plan.panic_at_step.contains(&n) {
+            self.counters.injected_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("chaos: scripted step panic at ordinal {n}");
+        }
+        if self.plan.step_fail.contains(&n) {
+            self.counters.injected_step_failures.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("chaos: scripted step failure at ordinal {n}");
+        }
+        self.inner.step_slot(slot, token)
+    }
+
+    // no `step_slots` override and the default `step_slots_atomic()`
+    // (false): the scheduler steps row by row through `step_slot`, so
+    // fault ordinals map 1:1 onto advanced rows — deterministic
+    // regardless of how requests pack into ticks
+
+    fn reset_slot(&mut self, slot: usize) {
+        self.inner.reset_slot(slot)
+    }
+
+    fn quarantine_slot(&mut self, slot: usize) {
+        self.inner.quarantine_slot(slot)
+    }
+
+    fn recover(&mut self) -> Result<()> {
+        self.inner.recover()
+    }
+
+    fn can_admit(&self, prompt_tokens: usize) -> bool {
+        let n = self.counters.admission_checks.fetch_add(1, Ordering::Relaxed);
+        if self.plan.admit_deny.contains(&n) {
+            self.counters.denied_admissions.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        self.inner.can_admit(prompt_tokens)
+    }
+
+    fn prefix_counters(&self) -> Option<PrefixCounters> {
+        self.inner.prefix_counters()
+    }
+
+    fn phase_timers(&self) -> Option<EngineTimers> {
+        self.inner.phase_timers()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_plans_are_reproducible_and_seed_sensitive() {
+        let a = FaultPlan::random(7, 100, 4);
+        let b = FaultPlan::random(7, 100, 4);
+        assert_eq!(a.step_fail, b.step_fail);
+        assert_eq!(a.panic_at_step, b.panic_at_step);
+        assert_eq!(a.admit_deny, b.admit_deny);
+        let c = FaultPlan::random(8, 100, 4);
+        assert!(
+            a.step_fail != c.step_fail
+                || a.prefill_fail != c.prefill_fail
+                || a.admit_deny != c.admit_deny,
+            "different seeds produced identical plans"
+        );
+        assert!(a.step_fail.iter().all(|&n| n < 100), "ordinal past the horizon");
+    }
+
+    /// A minimal scripted engine for boundary checks.
+    struct Echo;
+    impl SlotEngine for Echo {
+        fn slots(&self) -> usize {
+            1
+        }
+        fn prefill_slot(&mut self, _s: usize, _p: &[u32]) -> Result<Vec<f32>> {
+            Ok(vec![1.0, 0.0])
+        }
+        fn step_slot(&mut self, _s: usize, _t: u32) -> Result<Vec<f32>> {
+            Ok(vec![0.0, 1.0])
+        }
+        fn reset_slot(&mut self, _s: usize) {}
+    }
+
+    #[test]
+    fn ordinals_script_failures_exactly() {
+        let plan = FaultPlan {
+            prefill_fail: [1].into_iter().collect(),
+            step_fail: [0, 2].into_iter().collect(),
+            ..FaultPlan::none()
+        };
+        let mut e = ChaosEngine::new(Echo, plan);
+        let ctr = e.counters();
+        assert!(e.prefill_slot(0, &[1]).is_ok(), "ordinal 0 clean");
+        assert!(e.prefill_slot(0, &[1]).is_err(), "ordinal 1 injected");
+        assert!(e.prefill_slot(0, &[1]).is_ok(), "ordinal 2 clean");
+        assert!(e.step_slot(0, 1).is_err());
+        assert!(e.step_slot(0, 1).is_ok());
+        assert!(e.step_slot(0, 1).is_err());
+        assert_eq!(ctr.prefills.load(Ordering::Relaxed), 3);
+        assert_eq!(ctr.steps.load(Ordering::Relaxed), 3);
+        assert_eq!(ctr.injected_prefill_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(ctr.injected_step_failures.load(Ordering::Relaxed), 2);
+        assert_eq!(ctr.injected_panics.load(Ordering::Relaxed), 0);
+        assert!(!e.step_slots_atomic(), "chaos must force the per-row scheduler path");
+    }
+
+    #[test]
+    fn scripted_panic_fires_at_its_ordinal() {
+        let plan =
+            FaultPlan { panic_at_step: [1].into_iter().collect(), ..FaultPlan::none() };
+        let mut e = ChaosEngine::new(Echo, plan);
+        let ctr = e.counters();
+        assert!(e.step_slot(0, 1).is_ok());
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = e.step_slot(0, 1);
+        }));
+        assert!(caught.is_err(), "ordinal 1 must panic");
+        assert_eq!(ctr.injected_panics.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn admission_denials_follow_the_plan() {
+        let plan = FaultPlan { admit_deny: [0, 2].into_iter().collect(), ..FaultPlan::none() };
+        let e = ChaosEngine::new(Echo, plan);
+        let ctr = e.counters();
+        assert!(!e.can_admit(4));
+        assert!(e.can_admit(4));
+        assert!(!e.can_admit(4));
+        assert!(e.can_admit(4));
+        assert_eq!(ctr.denied_admissions.load(Ordering::Relaxed), 2);
+        assert_eq!(ctr.admission_checks.load(Ordering::Relaxed), 4);
+    }
+}

@@ -271,6 +271,27 @@ pub struct Metrics {
     pub reply_calls: AtomicU64,
     /// summed wall nanoseconds rendering + sending those replies
     pub reply_ns: AtomicU64,
+    /// scheduler-worker panics caught by the supervisor (each one
+    /// answered its in-flight requests with error replies)
+    pub worker_panics: AtomicU64,
+    /// supervised workers rebuilt after a panic (`respawns <
+    /// worker_panics` means a worker retired: respawn cap hit or
+    /// engine recovery failed)
+    pub respawns: AtomicU64,
+    /// engine slots quarantined during panic recovery (KV state
+    /// dropped, pool blocks released, prefix pins unpinned)
+    pub quarantined_slots: AtomicU64,
+    /// poisoned shared-queue-lock recoveries absorbed by the
+    /// supervised worker pool (mirrors `prefix_lock_poisoned`)
+    pub queue_lock_poisoned: AtomicU64,
+    /// request lines rejected for exceeding `--max-line-bytes` (the
+    /// connection is closed after the error reply)
+    pub oversize_lines: AtomicU64,
+    /// connections closed by the idle reaper (`--idle-timeout-ms`)
+    pub conn_reaped: AtomicU64,
+    /// requests shed by the deadline-aware overload policy before
+    /// queueing (each reply carried a `retry_after_ms` hint)
+    pub shed_requests: AtomicU64,
     /// end-to-end request latency (receipt → reply rendered), µs
     pub latency: Histogram,
     /// time-to-first-token: queue wait + prefill (the first token is
@@ -324,6 +345,13 @@ impl Default for Metrics {
             engine_step_ns: AtomicU64::new(0),
             reply_calls: AtomicU64::new(0),
             reply_ns: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            quarantined_slots: AtomicU64::new(0),
+            queue_lock_poisoned: AtomicU64::new(0),
+            oversize_lines: AtomicU64::new(0),
+            conn_reaped: AtomicU64::new(0),
+            shed_requests: AtomicU64::new(0),
             latency: Histogram::default(),
             ttft: Histogram::default(),
             itl: Histogram::default(),
@@ -410,6 +438,8 @@ impl Metrics {
              saved_steps={} stalled={} slot_occ={:.2} refills={} timeouts={} \
              fused_rows={} decode_batch={:.2} prefix_hit={} prefix_miss={} \
              prefix_hit_rate={:.2} prefix_evict={} prefix_poisoned={} \
+             panics={} respawns={} quarantined={} queue_poisoned={} \
+             oversize={} reaped={} shed={} \
              p50={}us p95={}us p99={}us \
              ttft_p50={}us ttft_p95={}us ttft_p99={}us \
              itl_p50={}us itl_p95={}us itl_p99={}us \
@@ -436,6 +466,13 @@ impl Metrics {
             self.prefix_hit_rate(),
             self.prefix_evictions.load(Ordering::Relaxed),
             self.prefix_lock_poisoned.load(Ordering::Relaxed),
+            self.worker_panics.load(Ordering::Relaxed),
+            self.respawns.load(Ordering::Relaxed),
+            self.quarantined_slots.load(Ordering::Relaxed),
+            self.queue_lock_poisoned.load(Ordering::Relaxed),
+            self.oversize_lines.load(Ordering::Relaxed),
+            self.conn_reaped.load(Ordering::Relaxed),
+            self.shed_requests.load(Ordering::Relaxed),
             e50,
             e95,
             e99,
@@ -500,6 +537,13 @@ impl Metrics {
                     ("prefix_evictions", c(&self.prefix_evictions)),
                     ("prefix_lock_poisoned", c(&self.prefix_lock_poisoned)),
                     ("trace_dropped", c(&self.trace_dropped)),
+                    ("worker_panics", c(&self.worker_panics)),
+                    ("respawns", c(&self.respawns)),
+                    ("quarantined_slots", c(&self.quarantined_slots)),
+                    ("queue_lock_poisoned", c(&self.queue_lock_poisoned)),
+                    ("oversize_lines", c(&self.oversize_lines)),
+                    ("conn_reaped", c(&self.conn_reaped)),
+                    ("shed_requests", c(&self.shed_requests)),
                 ]),
             ),
             (
@@ -581,6 +625,13 @@ impl Metrics {
             ("engine_step_ns", l(&self.engine_step_ns)),
             ("reply_calls", l(&self.reply_calls)),
             ("reply_ns", l(&self.reply_ns)),
+            ("worker_panics", l(&self.worker_panics)),
+            ("respawns", l(&self.respawns)),
+            ("quarantined_slots", l(&self.quarantined_slots)),
+            ("queue_lock_poisoned", l(&self.queue_lock_poisoned)),
+            ("oversize_lines", l(&self.oversize_lines)),
+            ("conn_reaped", l(&self.conn_reaped)),
+            ("shed_requests", l(&self.shed_requests)),
         ] {
             prom_counter(&mut out, name, v);
         }
@@ -752,6 +803,37 @@ mod tests {
         assert!(s.contains("prefix_hit_rate=0.75"), "{s}");
         assert!(s.contains("prefix_evict=2"), "{s}");
         assert!(s.contains("prefix_poisoned=1"), "{s}");
+    }
+
+    #[test]
+    fn supervision_counters_surface() {
+        let m = Metrics::default();
+        m.worker_panics.fetch_add(3, Ordering::Relaxed);
+        m.respawns.fetch_add(2, Ordering::Relaxed);
+        m.quarantined_slots.fetch_add(5, Ordering::Relaxed);
+        m.queue_lock_poisoned.fetch_add(1, Ordering::Relaxed);
+        m.oversize_lines.fetch_add(4, Ordering::Relaxed);
+        m.conn_reaped.fetch_add(6, Ordering::Relaxed);
+        m.shed_requests.fetch_add(7, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!(s.contains("panics=3"), "{s}");
+        assert!(s.contains("respawns=2"), "{s}");
+        assert!(s.contains("quarantined=5"), "{s}");
+        assert!(s.contains("queue_poisoned=1"), "{s}");
+        assert!(s.contains("oversize=4"), "{s}");
+        assert!(s.contains("reaped=6"), "{s}");
+        assert!(s.contains("shed=7"), "{s}");
+        let prom = m.to_prometheus();
+        assert!(prom.contains("dbllm_worker_panics_total 3"), "{prom}");
+        assert!(prom.contains("dbllm_respawns_total 2"), "{prom}");
+        assert!(prom.contains("dbllm_quarantined_slots_total 5"), "{prom}");
+        assert!(prom.contains("dbllm_queue_lock_poisoned_total 1"), "{prom}");
+        assert!(prom.contains("dbllm_oversize_lines_total 4"), "{prom}");
+        assert!(prom.contains("dbllm_conn_reaped_total 6"), "{prom}");
+        assert!(prom.contains("dbllm_shed_requests_total 7"), "{prom}");
+        let json = m.to_json().to_string();
+        assert!(json.contains("\"worker_panics\":3"), "{json}");
+        assert!(json.contains("\"shed_requests\":7"), "{json}");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 #![warn(missing_docs)]
 
 pub mod batcher;
+pub mod chaos;
 pub mod finetune;
 pub mod metrics;
 pub mod scheduler;

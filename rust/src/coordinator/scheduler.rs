@@ -29,8 +29,9 @@
 //! the static path.
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex, TryLockError};
 use std::time::{Duration, Instant};
 
@@ -41,8 +42,16 @@ use crate::util::Pcg32;
 use super::metrics::{LocalHist, Metrics};
 use super::trace::{RequestSpan, TraceRing};
 use super::serve::{
-    argmax, bind_listener, sample, spawn_accept_loop, DecodeParams, Request, Response,
+    argmax, bind_listener, sample, spawn_accept_loop, ConnConfig, DecodeParams, Request,
+    Response, SharedQueue,
 };
+
+/// Default cap on how many times one supervised worker is rebuilt after
+/// a panic before the supervisor gives up on it (see
+/// [`supervised_scheduler_loop`]).  High enough that a rare
+/// engine-state corruption never takes a worker down for good, low
+/// enough that a deterministic crash loop cannot spin forever.
+pub const DEFAULT_MAX_RESPAWNS: u64 = 8;
 
 /// How long an idle scheduler worker waits for a first request before
 /// re-checking the shutdown flag (mirrors the static batcher).
@@ -178,6 +187,33 @@ pub trait SlotEngine {
 
     /// Drop `slot`'s sequence state (eviction / completion).
     fn reset_slot(&mut self, slot: usize);
+
+    /// Reclaim `slot` after its worker *panicked* mid-operation.  The
+    /// slot's sequence state must be dropped like
+    /// [`reset_slot`](Self::reset_slot) — KV rows freed, pool block
+    /// handles released, pinned prefix refs unpinned — but under the
+    /// weaker precondition that the slot may have been left half-way
+    /// through a prefill or step.  Implementations must make this
+    /// panic-free on any reachable slot state: the supervisor calls it
+    /// from the recovery path, where a second panic would strand the
+    /// worker's whole request set.  The default delegates to
+    /// `reset_slot`, which is already total for the scripted test
+    /// engines.
+    fn quarantine_slot(&mut self, slot: usize) {
+        self.reset_slot(slot);
+    }
+
+    /// Engine-wide audit + repair after every slot has been
+    /// quarantined, before the supervisor re-enters the serving loop.
+    /// Implementations verify shared structures survived the panic
+    /// (e.g. `infer::NativeEngine` clears a poisoned prefix-cache lock
+    /// and runs `KvPool::assert_invariants`) and return `Err` when the
+    /// engine cannot be trusted to serve again — the supervisor then
+    /// retires the worker instead of respawning it.  The default is
+    /// `Ok(())`: stateless scripted engines are always recoverable.
+    fn recover(&mut self) -> Result<()> {
+        Ok(())
+    }
 
     /// Whether the engine can take a request with `prompt_tokens` of
     /// prompt right now without overcommitting its KV block pool
@@ -337,7 +373,7 @@ pub enum TraceEvent {
     /// request placed into a slot (its prefill ran this tick);
     /// `refill` marks admissions into a batch already mid-flight
     Admit { id: u64, slot: usize, at_ms: u64, refill: bool },
-    /// request left its slot ("done" | "timeout" | "error")
+    /// request left its slot ("done" | "timeout" | "error" | "supervisor")
     Finish { id: u64, slot: usize, at_ms: u64, reason: &'static str, decoded: usize },
     /// deadline expired while still queued — never occupied a slot
     Expire { id: u64, at_ms: u64 },
@@ -384,6 +420,11 @@ pub struct SchedStats {
     /// poisoned prefix-lock events this engine degraded through (see
     /// [`PrefixCounters::lock_poisoned`])
     pub prefix_lock_poisoned: u64,
+    /// poisoned shared-queue-lock recoveries this worker absorbed
+    /// (mirrors `prefix_lock_poisoned`): each one is a sibling worker
+    /// panicking while holding the queue lock, which the supervised
+    /// queue recovers from instead of wedging on
+    pub queue_lock_poisoned: u64,
     /// ticks that ran with the sampled phase timers on
     /// (`SchedulerConfig::profile_every`)
     pub profiled_ticks: u64,
@@ -555,6 +596,12 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
     /// The wrapped engine (tests inspect scripted-engine state).
     pub fn engine(&self) -> &E {
         &self.engine
+    }
+
+    /// Mutable access to the wrapped engine (the supervisor runs
+    /// [`SlotEngine::recover`] through this after a panic).
+    pub fn engine_mut(&mut self) -> &mut E {
+        &mut self.engine
     }
 
     /// The retained decision log, oldest first (`SchedulerConfig::trace`).
@@ -770,6 +817,99 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             }
         }
         done
+    }
+
+    /// Post-panic recovery: quarantine every active slot
+    /// ([`SlotEngine::quarantine_slot`] — the panic may have left it
+    /// half-prefilled or half-stepped, so the ordinary `reset_slot`
+    /// contract is not enough), answer every owed request with an
+    /// error completion (partial tokens for rows that held a slot,
+    /// empty for queued ones), and re-arm the bookkeeping so the
+    /// worker can keep serving.  Finished requests are recorded with
+    /// the `"supervisor"` span/trace reason.  Returns the completions
+    /// plus the number of slots quarantined.
+    ///
+    /// Stats and histograms are reset *together*: the panic may have
+    /// struck mid-tick, between updates [`assert_invariants`] requires
+    /// to move in lockstep (e.g. one TTFT sample per admission).
+    /// Assignment-style snapshots of monotonic totals (prefix
+    /// counters, engine timers, trace drops) are then re-seeded from
+    /// their sources so the serving loop's next delta flush does not
+    /// re-count totals it already flushed before the panic.
+    ///
+    /// [`assert_invariants`]: Scheduler::assert_invariants
+    pub fn recover_after_panic(&mut self, msg: &str) -> (Vec<Completion>, usize) {
+        let mut done = Vec::new();
+        let now_ms = self.clock.now_ms();
+        let now_us = self.clock.now_us();
+        let mut quarantined = 0usize;
+        for slot in 0..self.active.len() {
+            let Some(a) = self.active[slot].take() else { continue };
+            self.engine.quarantine_slot(slot);
+            quarantined += 1;
+            if self.cfg.trace {
+                self.trace.push(TraceEvent::Finish {
+                    id: a.id,
+                    slot,
+                    at_ms: now_ms,
+                    reason: "supervisor",
+                    decoded: a.out.len(),
+                });
+            }
+            self.spans.push(RequestSpan {
+                id: a.id,
+                queue_wait_us: a.queue_wait_us,
+                admitted_at_us: a.admitted_at_us,
+                prefill_us: a.prefill_us,
+                prefix_hit_tokens: a.prefix_hit,
+                prefix_miss_tokens: a.prefix_miss,
+                decoded: a.out.len() as u32,
+                decode_us: now_us.saturating_sub(a.admitted_at_us),
+                reason: "supervisor",
+            });
+            done.push(Completion {
+                id: a.id,
+                tokens: a.out,
+                reason: FinishReason::Error(msg.to_string()),
+            });
+        }
+        while let Some(q) = self.queue.pop_front() {
+            self.spans.push(RequestSpan {
+                id: q.id,
+                queue_wait_us: now_us.saturating_sub(q.submitted_at_us) + q.upstream_us,
+                admitted_at_us: 0,
+                prefill_us: 0,
+                prefix_hit_tokens: 0,
+                prefix_miss_tokens: 0,
+                decoded: 0,
+                decode_us: 0,
+                reason: "supervisor",
+            });
+            done.push(Completion {
+                id: q.id,
+                tokens: Vec::new(),
+                reason: FinishReason::Error(msg.to_string()),
+            });
+        }
+        self.stats = SchedStats::default();
+        self.hists = SchedHists::default();
+        self.steps_buf.clear();
+        if let Some(p) = self.engine.prefix_counters() {
+            self.stats.prefix_hit_tokens = p.hit_tokens;
+            self.stats.prefix_miss_tokens = p.miss_tokens;
+            self.stats.prefix_evictions = p.evictions;
+            self.stats.prefix_lock_poisoned = p.lock_poisoned;
+        }
+        if let Some(t) = self.engine.phase_timers() {
+            self.stats.engine_prefill_calls = t.prefill_calls;
+            self.stats.engine_prefill_ns = t.prefill_ns;
+            self.stats.engine_step_sampled = t.step_sampled;
+            self.stats.engine_step_ns = t.step_ns;
+        }
+        self.stats.trace_dropped = self.trace.dropped() + self.spans.dropped();
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
+        (done, quarantined)
     }
 
     /// Drop queued requests whose deadline already passed: they are
@@ -1162,7 +1302,10 @@ pub fn scheduler_loop<E: SlotEngine>(
             // one wave of lookahead while the lock is already held
             let Ok(guard) = rx.lock() else {
                 // poisoned pool lock: answer what this worker owes
-                // before bailing — never a silent drop
+                // before bailing — never a silent drop, never a
+                // silent count (the loop exits before the next stats
+                // flush, so the counter is bumped directly)
+                metrics.queue_lock_poisoned.fetch_add(1, Ordering::Relaxed);
                 fail_pending(&mut core, &mut pending, &metrics, "server worker pool failed");
                 break;
             };
@@ -1201,6 +1344,7 @@ pub fn scheduler_loop<E: SlotEngine>(
                 }
                 Err(TryLockError::WouldBlock) => {}
                 Err(TryLockError::Poisoned(_)) => {
+                    metrics.queue_lock_poisoned.fetch_add(1, Ordering::Relaxed);
                     fail_pending(&mut core, &mut pending, &metrics, "server worker pool failed");
                     break;
                 }
@@ -1217,59 +1361,7 @@ pub fn scheduler_loop<E: SlotEngine>(
         // flush this tick's counter deltas *before* the replies go out:
         // a client that just read its reply must observe the metrics
         // that include its own decode
-        let s = core.stats;
-        let slots = core.slots() as u64;
-        metrics.slot_ticks.fetch_add((s.ticks - last.ticks) * slots, Ordering::Relaxed);
-        metrics
-            .slot_busy_ticks
-            .fetch_add(s.busy_slot_ticks - last.busy_slot_ticks, Ordering::Relaxed);
-        metrics.refills.fetch_add(s.refills - last.refills, Ordering::Relaxed);
-        metrics.timeouts.fetch_add(s.timeouts - last.timeouts, Ordering::Relaxed);
-        metrics.decode_batches.fetch_add(s.step_ticks - last.step_ticks, Ordering::Relaxed);
-        metrics
-            .decode_batch_rows
-            .fetch_add(s.stepped_rows - last.stepped_rows, Ordering::Relaxed);
-        metrics.fused_rows.fetch_add(s.fused_rows - last.fused_rows, Ordering::Relaxed);
-        metrics
-            .prefix_hit_tokens
-            .fetch_add(s.prefix_hit_tokens - last.prefix_hit_tokens, Ordering::Relaxed);
-        metrics
-            .prefix_miss_tokens
-            .fetch_add(s.prefix_miss_tokens - last.prefix_miss_tokens, Ordering::Relaxed);
-        metrics
-            .prefix_evictions
-            .fetch_add(s.prefix_evictions - last.prefix_evictions, Ordering::Relaxed);
-        metrics
-            .prefix_lock_poisoned
-            .fetch_add(s.prefix_lock_poisoned - last.prefix_lock_poisoned, Ordering::Relaxed);
-        metrics.trace_dropped.fetch_add(s.trace_dropped - last.trace_dropped, Ordering::Relaxed);
-        metrics.profiled_ticks.fetch_add(s.profiled_ticks - last.profiled_ticks, Ordering::Relaxed);
-        metrics.sched_admit_ns.fetch_add(s.admit_ns - last.admit_ns, Ordering::Relaxed);
-        metrics.sched_step_ns.fetch_add(s.step_ns - last.step_ns, Ordering::Relaxed);
-        metrics.sched_expire_ns.fetch_add(s.expire_ns - last.expire_ns, Ordering::Relaxed);
-        metrics.sched_tick_ns.fetch_add(s.tick_ns - last.tick_ns, Ordering::Relaxed);
-        metrics
-            .engine_prefill_calls
-            .fetch_add(s.engine_prefill_calls - last.engine_prefill_calls, Ordering::Relaxed);
-        metrics
-            .engine_prefill_ns
-            .fetch_add(s.engine_prefill_ns - last.engine_prefill_ns, Ordering::Relaxed);
-        metrics
-            .engine_step_sampled
-            .fetch_add(s.engine_step_sampled - last.engine_step_sampled, Ordering::Relaxed);
-        metrics
-            .engine_step_ns
-            .fetch_add(s.engine_step_ns - last.engine_step_ns, Ordering::Relaxed);
-        last = s;
-        // same delta-flush pattern for the phase histograms: only
-        // buckets touched this tick pay an atomic add
-        let h = core.hists;
-        metrics.ttft.merge_delta(&h.ttft_us, &last_hists.ttft_us);
-        metrics.itl.merge_delta(&h.itl_us, &last_hists.itl_us);
-        metrics.queue_wait.merge_delta(&h.queue_wait_us, &last_hists.queue_wait_us);
-        metrics.prefill.merge_delta(&h.prefill_us, &last_hists.prefill_us);
-        metrics.tick.merge_delta(&h.tick_us, &last_hists.tick_us);
-        last_hists = h;
+        flush_sched_metrics(&core, &metrics, &mut last, &mut last_hists);
         if !completions.is_empty() {
             // reply phase: render + send every completion of this tick
             let t_reply = Instant::now();
@@ -1280,6 +1372,75 @@ pub fn scheduler_loop<E: SlotEngine>(
             metrics.reply_ns.fetch_add(t_reply.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
     }
+}
+
+/// Flush the core's cumulative counters and histogram buckets into the
+/// shared [`Metrics`] as deltas against the previous flush (`last` /
+/// `last_hists`, updated in place).  Shared by [`scheduler_loop`] and
+/// [`supervised_scheduler_loop`]: only counters that moved this tick
+/// pay an atomic add.
+fn flush_sched_metrics<E: SlotEngine, C: Clock>(
+    core: &Scheduler<E, C>,
+    metrics: &Metrics,
+    last: &mut SchedStats,
+    last_hists: &mut SchedHists,
+) {
+    let s = core.stats;
+    let slots = core.slots() as u64;
+    metrics.slot_ticks.fetch_add((s.ticks - last.ticks) * slots, Ordering::Relaxed);
+    metrics
+        .slot_busy_ticks
+        .fetch_add(s.busy_slot_ticks - last.busy_slot_ticks, Ordering::Relaxed);
+    metrics.refills.fetch_add(s.refills - last.refills, Ordering::Relaxed);
+    metrics.timeouts.fetch_add(s.timeouts - last.timeouts, Ordering::Relaxed);
+    metrics.decode_batches.fetch_add(s.step_ticks - last.step_ticks, Ordering::Relaxed);
+    metrics
+        .decode_batch_rows
+        .fetch_add(s.stepped_rows - last.stepped_rows, Ordering::Relaxed);
+    metrics.fused_rows.fetch_add(s.fused_rows - last.fused_rows, Ordering::Relaxed);
+    metrics
+        .prefix_hit_tokens
+        .fetch_add(s.prefix_hit_tokens - last.prefix_hit_tokens, Ordering::Relaxed);
+    metrics
+        .prefix_miss_tokens
+        .fetch_add(s.prefix_miss_tokens - last.prefix_miss_tokens, Ordering::Relaxed);
+    metrics
+        .prefix_evictions
+        .fetch_add(s.prefix_evictions - last.prefix_evictions, Ordering::Relaxed);
+    metrics
+        .prefix_lock_poisoned
+        .fetch_add(s.prefix_lock_poisoned - last.prefix_lock_poisoned, Ordering::Relaxed);
+    metrics
+        .queue_lock_poisoned
+        .fetch_add(s.queue_lock_poisoned - last.queue_lock_poisoned, Ordering::Relaxed);
+    metrics.trace_dropped.fetch_add(s.trace_dropped - last.trace_dropped, Ordering::Relaxed);
+    metrics.profiled_ticks.fetch_add(s.profiled_ticks - last.profiled_ticks, Ordering::Relaxed);
+    metrics.sched_admit_ns.fetch_add(s.admit_ns - last.admit_ns, Ordering::Relaxed);
+    metrics.sched_step_ns.fetch_add(s.step_ns - last.step_ns, Ordering::Relaxed);
+    metrics.sched_expire_ns.fetch_add(s.expire_ns - last.expire_ns, Ordering::Relaxed);
+    metrics.sched_tick_ns.fetch_add(s.tick_ns - last.tick_ns, Ordering::Relaxed);
+    metrics
+        .engine_prefill_calls
+        .fetch_add(s.engine_prefill_calls - last.engine_prefill_calls, Ordering::Relaxed);
+    metrics
+        .engine_prefill_ns
+        .fetch_add(s.engine_prefill_ns - last.engine_prefill_ns, Ordering::Relaxed);
+    metrics
+        .engine_step_sampled
+        .fetch_add(s.engine_step_sampled - last.engine_step_sampled, Ordering::Relaxed);
+    metrics
+        .engine_step_ns
+        .fetch_add(s.engine_step_ns - last.engine_step_ns, Ordering::Relaxed);
+    *last = s;
+    // same delta-flush pattern for the phase histograms: only buckets
+    // touched this tick pay an atomic add
+    let h = core.hists;
+    metrics.ttft.merge_delta(&h.ttft_us, &last_hists.ttft_us);
+    metrics.itl.merge_delta(&h.itl_us, &last_hists.itl_us);
+    metrics.queue_wait.merge_delta(&h.queue_wait_us, &last_hists.queue_wait_us);
+    metrics.prefill.merge_delta(&h.prefill_us, &last_hists.prefill_us);
+    metrics.tick.merge_delta(&h.tick_us, &last_hists.tick_us);
+    *last_hists = h;
 }
 
 /// Answer everything this worker still owes — in-flight rows and
@@ -1343,11 +1504,190 @@ fn respond(metrics: &Metrics, pending: &mut HashMap<u64, PendingReply>, c: Compl
     let _ = p.reply.send(resp);
 }
 
+/// Best-effort human-readable panic payload: in practice panics carry
+/// a `&str` or a `String`; anything else is reported opaquely.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "opaque panic payload"
+    }
+}
+
+/// One supervised serving epoch: pull requests off the shared queue
+/// into the core, drive `tick()`, flush metric deltas, reply per
+/// completion.  Returns on shutdown or on queue closure with the queue
+/// drained; a panic anywhere inside (engine, sampling, bookkeeping)
+/// unwinds to [`supervised_scheduler_loop`], which recovers and calls
+/// back in.
+fn pump<E: SlotEngine>(
+    core: &mut Scheduler<E, WallClock>,
+    pending: &mut HashMap<u64, PendingReply>,
+    last: &mut SchedStats,
+    last_hists: &mut SchedHists,
+    queue: &SharedQueue,
+    metrics: &Metrics,
+    running: &AtomicBool,
+) {
+    loop {
+        // a sibling worker panicking while holding the queue lock is
+        // absorbed by SharedQueue and surfaced here as a counter, not
+        // as this worker's death
+        core.stats.queue_lock_poisoned += queue.take_recovered();
+        if !running.load(Ordering::Relaxed) {
+            fail_pending(core, pending, metrics, "server shutting down");
+            while let Some(req) = queue.try_pop() {
+                metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let us = req.arrived.elapsed().as_micros() as u64;
+                let _ = req.reply.send(Response::err("server shutting down", us));
+            }
+            // counters folded since the last tick (idle-phase poison
+            // recoveries) must not die with the loop
+            flush_sched_metrics(core, metrics, last, last_hists);
+            return;
+        }
+        if core.is_idle() {
+            // idle: block (bounded) for the first request so shutdown
+            // stays responsive
+            match queue.pop_timeout(SHUTDOWN_POLL) {
+                Some(req) => submit_request(core, pending, metrics, req),
+                None => {
+                    if queue.is_closed() && queue.is_empty() {
+                        flush_sched_metrics(core, metrics, last, last_hists);
+                        return;
+                    }
+                    continue;
+                }
+            }
+        }
+        // top up one wave of lookahead, bounded by *free* slots: a
+        // fully-busy worker pulls nothing, so a request is never
+        // stranded behind this worker's long decodes while an idle
+        // neighbour could admit it at once
+        while core.queue_len() < core.free_slots() {
+            match queue.try_pop() {
+                Some(req) => submit_request(core, pending, metrics, req),
+                None => break,
+            }
+        }
+        if core.is_idle() {
+            continue;
+        }
+        let completions = core.tick();
+        // flush this tick's counter deltas *before* the replies go
+        // out: a client that just read its reply must observe the
+        // metrics that include its own decode
+        flush_sched_metrics(core, metrics, last, last_hists);
+        if !completions.is_empty() {
+            // reply phase: render + send every completion of this tick
+            let t_reply = Instant::now();
+            for c in completions {
+                respond(metrics, pending, c);
+            }
+            metrics.reply_calls.fetch_add(1, Ordering::Relaxed);
+            metrics.reply_ns.fetch_add(t_reply.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The panic-isolated worker loop: [`pump`] runs under `catch_unwind`,
+/// and a panic anywhere inside it — a poisoned engine assertion, a
+/// scripted chaos fault, a bug — is contained to *this* worker.  The
+/// supervisor then:
+///
+/// 1. answers every request this worker owes with an error reply
+///    ([`Scheduler::recover_after_panic`] — active rows carry their
+///    partial tokens; the `"supervisor"` reason lands in the span
+///    ring) and quarantines every active slot
+///    ([`SlotEngine::quarantine_slot`]);
+/// 2. runs the engine-wide repair hook ([`SlotEngine::recover`]),
+///    itself under `catch_unwind` — a failed or panicking repair
+///    retires the worker instead of looping on a corrupt engine;
+/// 3. re-enters the serving loop, up to `max_respawns` times
+///    ([`DEFAULT_MAX_RESPAWNS`]), so a crash loop cannot spin forever.
+///
+/// Siblings on the same [`SharedQueue`] are unaffected throughout —
+/// the queue recovers from poisoning instead of propagating it.
+/// `worker_panics` / `respawns` / `quarantined_slots` count each stage
+/// in [`Metrics`].
+pub fn supervised_scheduler_loop<E: SlotEngine>(
+    engine: E,
+    queue: Arc<SharedQueue>,
+    cfg: SchedulerConfig,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+    max_respawns: u64,
+) {
+    let mut core = Scheduler::new(engine, WallClock::default(), cfg);
+    let mut pending: HashMap<u64, PendingReply> = HashMap::new();
+    let mut last = SchedStats::default();
+    let mut last_hists = SchedHists::default();
+    let mut respawns = 0u64;
+    loop {
+        let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
+            pump(&mut core, &mut pending, &mut last, &mut last_hists, &queue, &metrics, &running)
+        }));
+        let payload = match outcome {
+            Ok(()) => break, // clean exit: shutdown or queue closed
+            Err(payload) => payload,
+        };
+        let what = panic_message(payload.as_ref());
+        metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+        let (completions, quarantined) =
+            core.recover_after_panic(&format!("worker panicked: {what}"));
+        metrics.quarantined_slots.fetch_add(quarantined as u64, Ordering::Relaxed);
+        for c in completions {
+            respond(&metrics, &mut pending, c);
+        }
+        // completions computed before the panic but not yet sent died
+        // on pump's stack; their pending entries are all that is left
+        // of them — the reply contract is absolute, so answer those
+        // too
+        for (_, p) in pending.drain() {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let us = p.arrived.elapsed().as_micros() as u64;
+            let _ = p.reply.send(Response::err(format!("worker panicked: {what}"), us));
+        }
+        // recover_after_panic reset the core's stats/hists in place:
+        // re-anchor the delta baselines or the next flush re-counts
+        // history
+        last = core.stats;
+        last_hists = core.hists;
+        if respawns >= max_respawns {
+            eprintln!("scheduler worker exceeded {max_respawns} respawns; retiring");
+            break;
+        }
+        // engine-wide repair, itself guarded: recovery code that
+        // panics (e.g. a pool invariant audit failing) must retire
+        // the worker, not kill the supervisor
+        match panic::catch_unwind(AssertUnwindSafe(|| core.engine_mut().recover())) {
+            Ok(Ok(())) => {
+                respawns += 1;
+                metrics.respawns.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(Err(e)) => {
+                eprintln!("scheduler worker engine unrecoverable: {e:#}");
+                break;
+            }
+            Err(_) => {
+                eprintln!("scheduler worker engine recovery panicked; retiring");
+                break;
+            }
+        }
+    }
+    // safety net for the retirement paths: everything still owed gets
+    // an error reply (no-op after a clean pump exit)
+    fail_pending(&mut core, &mut pending, &metrics, "server worker pool failed");
+}
+
 /// Run the server with the continuous-batching scheduler driving every
 /// worker — the native-backend counterpart of [`super::serve::serve`]
-/// (which keeps the static batcher for the XLA path).  Each worker
-/// builds its own engine via `factory` on its own thread and runs
-/// [`scheduler_loop`] against the shared request queue.
+/// (which keeps the static batcher for the XLA path), with default
+/// connection hardening and panic supervision
+/// ([`serve_continuous_with`] exposes the knobs).
 pub fn serve_continuous<E: SlotEngine>(
     factory: impl Fn() -> Result<E> + Send + Sync + 'static,
     addr: &str,
@@ -1357,14 +1697,44 @@ pub fn serve_continuous<E: SlotEngine>(
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
 ) -> Result<std::net::SocketAddr> {
+    serve_continuous_with(
+        factory,
+        addr,
+        queue_cap,
+        cfg,
+        workers,
+        metrics,
+        running,
+        ConnConfig::default(),
+        DEFAULT_MAX_RESPAWNS,
+    )
+}
+
+/// [`serve_continuous`] with explicit connection-hardening and
+/// supervision knobs.  Each worker builds its own engine via `factory`
+/// on its own thread and runs [`supervised_scheduler_loop`] against
+/// one poison-tolerant [`SharedQueue`]; the accept loop applies
+/// `conn`'s read/write timeouts, line cap, and idle reaping to every
+/// connection.
+#[allow(clippy::too_many_arguments)] // a knob bundle, every caller names them in order
+pub fn serve_continuous_with<E: SlotEngine>(
+    factory: impl Fn() -> Result<E> + Send + Sync + 'static,
+    addr: &str,
+    queue_cap: usize,
+    cfg: SchedulerConfig,
+    workers: usize,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+    conn: ConnConfig,
+    max_respawns: u64,
+) -> Result<std::net::SocketAddr> {
     // bind before spawning anything: a bad --addr must fail fast, not
     // after every worker has spent seconds building its engine
     let (listener, local) = bind_listener(addr)?;
-    let (tx, rx) = channel::<Request>();
-    let rx = Arc::new(Mutex::new(rx));
+    let queue = Arc::new(SharedQueue::new());
     let factory = Arc::new(factory);
     for w in 0..workers.max(1) {
-        let rx = rx.clone();
+        let q = queue.clone();
         let cfg = cfg.clone();
         let m = metrics.clone();
         let r = running.clone();
@@ -1377,13 +1747,13 @@ pub fn serve_continuous<E: SlotEngine>(
                     // builds every engine from one factory
                     let mut cfg = cfg;
                     cfg.seed = cfg.seed.wrapping_add(w as u64);
-                    scheduler_loop(engine, rx, cfg, m, r)
+                    supervised_scheduler_loop(engine, q, cfg, m, r, max_respawns)
                 }
                 Err(e) => eprintln!("engine init failed: {e:#}"),
             })
             .context("spawning scheduler worker")?;
     }
-    spawn_accept_loop(listener, tx, metrics, queue_cap, running);
+    spawn_accept_loop(listener, queue, metrics, queue_cap, running, conn);
     Ok(local)
 }
 
@@ -1835,5 +2205,196 @@ mod tests {
         assert_eq!(c.now_ms(), 5);
         c.set(100);
         assert_eq!(c.now_ms(), 100);
+    }
+
+    #[test]
+    fn recover_after_panic_answers_queued_and_active_exactly_once() {
+        let eos = 63;
+        let gen = TinyGen::new(2, eos, vec![(1, 50), (2, 50), (3, 50)]);
+        let cfg = SchedulerConfig { slots: 2, trace: true, ..Default::default() };
+        let mut core = Scheduler::new(gen, ManualClock::default(), cfg);
+        let a = core.submit(job(1, greedy_stop(50, eos)));
+        let b = core.submit(job(2, greedy_stop(50, eos)));
+        let c = core.submit(job(3, greedy_stop(50, eos)));
+        // tick 1 admits a+b (2 slots); c stays queued
+        assert!(core.tick().is_empty());
+        let (done, quarantined) = core.recover_after_panic("worker panicked: boom");
+        assert_eq!(quarantined, 2, "both active slots quarantined");
+        assert_eq!(done.len(), 3, "active and queued all answered");
+        let by_id = |id: u64| done.iter().find(|d| d.id == id).unwrap();
+        assert_eq!(by_id(a).tokens, vec![1], "active row keeps its partial tokens");
+        assert_eq!(by_id(b).tokens, vec![2]);
+        assert!(by_id(c).tokens.is_empty(), "queued request never decoded");
+        assert!(done
+            .iter()
+            .all(|d| matches!(&d.reason, FinishReason::Error(m) if m.contains("boom"))));
+        assert!(core.is_idle());
+        assert!(
+            core.engine().state.iter().all(Option::is_none),
+            "quarantine dropped every slot's engine state"
+        );
+        let spans = core.take_spans();
+        assert_eq!(spans.len(), 3);
+        assert!(spans.iter().all(|s| s.reason == "supervisor"));
+        assert!(core
+            .take_trace()
+            .iter()
+            .any(|ev| matches!(ev, TraceEvent::Finish { reason: "supervisor", .. })));
+        // bookkeeping re-armed: stats reset, fresh work decodes fine
+        assert_eq!(core.stats.ticks, 0);
+        let d = core.submit(job(1, greedy_stop(8, eos)));
+        let done = drain(&mut core);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, d);
+        assert_eq!(done[0].reason, FinishReason::Done);
+    }
+
+    /// Scripted panic injection: panics on the N-th `step_slot` call.
+    struct PanicGen {
+        inner: TinyGen,
+        panic_on_step: usize,
+        steps: usize,
+    }
+
+    impl SlotEngine for PanicGen {
+        fn slots(&self) -> usize {
+            self.inner.slots()
+        }
+        fn prefill_slot(&mut self, slot: usize, prompt: &[u32]) -> Result<Vec<f32>> {
+            self.inner.prefill_slot(slot, prompt)
+        }
+        fn step_slot(&mut self, slot: usize, token: u32) -> Result<Vec<f32>> {
+            self.steps += 1;
+            assert!(self.steps != self.panic_on_step, "scripted panic at step {}", self.steps);
+            self.inner.step_slot(slot, token)
+        }
+        // default step_slots_atomic() == false: the scheduler steps
+        // row by row through step_slot, so the panic ordinal is exact
+        fn reset_slot(&mut self, slot: usize) {
+            self.inner.reset_slot(slot)
+        }
+    }
+
+    fn wire_request(key: u32, params: DecodeParams, metrics: &Metrics) -> (Request, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        // mirrors the accept loop: depth is incremented at admission,
+        // decremented by submit_request
+        metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            prompt: vec![key],
+            params,
+            reply: tx,
+            arrived: Instant::now(),
+            timeout_ms: None,
+        };
+        (req, rx)
+    }
+
+    #[test]
+    fn supervised_loop_survives_panic_and_keeps_serving() {
+        let eos = 63;
+        let queue = Arc::new(SharedQueue::new());
+        let metrics = Arc::new(Metrics::default());
+        let running = Arc::new(AtomicBool::new(true));
+        let cfg = SchedulerConfig { slots: 1, ..Default::default() };
+        let gen = PanicGen {
+            inner: TinyGen::new(1, eos, vec![(1, 5), (2, 2)]),
+            panic_on_step: 1,
+            steps: 0,
+        };
+        let worker = {
+            let (q, m, r) = (queue.clone(), metrics.clone(), running.clone());
+            std::thread::spawn(move || supervised_scheduler_loop(gen, q, cfg, m, r, 4))
+        };
+
+        // the first request's first decode step panics the worker
+        let (req, rx) = wire_request(1, greedy_stop(8, eos), &metrics);
+        assert!(queue.push(req).is_ok());
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("exactly one reply");
+        let err = resp.error.expect("panic degrades to an error reply");
+        assert!(err.contains("worker panicked"), "{err}");
+        assert!(err.contains("scripted panic"), "{err}");
+
+        // the respawned worker serves the next request normally
+        let (req, rx) = wire_request(2, greedy_stop(8, eos), &metrics);
+        assert!(queue.push(req).is_ok());
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("served after respawn");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens, vec![2, 2, eos], "stream identical to a fault-free run");
+
+        assert_eq!(metrics.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.respawns.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.quarantined_slots.load(Ordering::Relaxed), 1);
+
+        running.store(false, Ordering::Relaxed);
+        queue.close();
+        worker.join().expect("supervisor thread exits cleanly");
+    }
+
+    #[test]
+    fn supervisor_retires_the_worker_after_max_respawns() {
+        /// Unservable engine: every prefill panics.
+        struct AlwaysPanic;
+        impl SlotEngine for AlwaysPanic {
+            fn slots(&self) -> usize {
+                1
+            }
+            fn prefill_slot(&mut self, _s: usize, _p: &[u32]) -> Result<Vec<f32>> {
+                panic!("scripted prefill panic")
+            }
+            fn step_slot(&mut self, _s: usize, _t: u32) -> Result<Vec<f32>> {
+                unreachable!()
+            }
+            fn reset_slot(&mut self, _s: usize) {}
+        }
+        let queue = Arc::new(SharedQueue::new());
+        let metrics = Arc::new(Metrics::default());
+        let running = Arc::new(AtomicBool::new(true));
+        let worker = {
+            let (q, m, r) = (queue.clone(), metrics.clone(), running.clone());
+            let cfg = SchedulerConfig { slots: 1, ..Default::default() };
+            std::thread::spawn(move || supervised_scheduler_loop(AlwaysPanic, q, cfg, m, r, 0))
+        };
+        let (req, rx) = wire_request(1, DecodeParams::greedy(4), &metrics);
+        assert!(queue.push(req).is_ok());
+        // the request was popped into the core before the panic, so
+        // only the supervisor's pending drain can still answer it
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("reply before retirement");
+        let err = resp.error.expect("error reply");
+        assert!(err.contains("worker panicked"), "{err}");
+        // max_respawns = 0: the worker retires itself without any
+        // shutdown signal
+        worker.join().expect("worker retired cleanly");
+        assert_eq!(metrics.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.respawns.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn pump_counts_absorbed_queue_poisoning() {
+        let eos = 63;
+        let queue = Arc::new(SharedQueue::new());
+        queue.poison_for_chaos();
+        let metrics = Arc::new(Metrics::default());
+        let running = Arc::new(AtomicBool::new(true));
+        let gen = TinyGen::new(1, eos, vec![(1, 2)]);
+        let worker = {
+            let (q, m, r) = (queue.clone(), metrics.clone(), running.clone());
+            let cfg = SchedulerConfig { slots: 1, ..Default::default() };
+            std::thread::spawn(move || {
+                supervised_scheduler_loop(gen, q, cfg, m, r, DEFAULT_MAX_RESPAWNS)
+            })
+        };
+        let (req, rx) = wire_request(1, greedy_stop(8, eos), &metrics);
+        assert!(queue.push(req).is_ok(), "a poisoned queue still accepts work");
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("reply");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens, vec![1, 1, eos]);
+        running.store(false, Ordering::Relaxed);
+        queue.close();
+        worker.join().expect("worker exits");
+        assert!(
+            metrics.queue_lock_poisoned.load(Ordering::Relaxed) >= 1,
+            "the absorbed poisoning reached the shared metrics"
+        );
     }
 }

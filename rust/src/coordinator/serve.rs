@@ -4,8 +4,11 @@
 //! Topology (std threads; rust owns the event loop — python is never on
 //! this path):
 //!
-//!   client ──TCP──▶ connection thread ──mpsc──▶ shared request queue
-//!                                                 │ (Mutex<Receiver>)
+//!   client ──TCP──▶ connection thread ──sink──▶ shared request queue
+//!                                                 │ (static XLA path:
+//!                                                 │  Mutex<Receiver>;
+//!                                                 │  continuous path:
+//!                                                 │  SharedQueue)
 //!                                   worker 0 ◀────┼────▶ worker N-1
 //!                                   │ fwd_logits (XLA, one engine each)
 //!   client ◀──TCP── response channel ◀┘
@@ -15,6 +18,17 @@
 //! competes for batches on the shared queue: one worker at a time holds
 //! the queue lock while it collects a batch, then releases it and
 //! decodes, so batch collection and decoding pipeline across workers.
+//! The continuous scheduler's workers instead pull single requests from
+//! a poison-tolerant [`SharedQueue`] under a supervisor that catches
+//! worker panics and respawns (`scheduler::supervised_scheduler_loop`);
+//! the connection side is abstracted over both hand-offs by
+//! [`RequestSink`].
+//!
+//! Connections are hardened per [`ConnConfig`]: socket read/write
+//! timeouts, a hard cap on one request line (oversize → structured
+//! error reply, then close), an idle reaper, and a stall policy (a peer
+//! that pauses mid-line is dropped — there is no re-synchronizing a
+//! half-frame stream).
 //!
 //! Decode state is **per request**: every row of a batch carries its
 //! own `max_tokens`, `temperature`, and optional `stop` token, is
@@ -28,6 +42,10 @@
 //!   response: {"tokens": [int, ...], "latency_us": int}
 //!   timeout:  {"tokens": [int, ...], "latency_us": int, "timeout": true}
 //!   error:    {"error": str, "latency_us": int}
+//!   overload: {"error": str, "latency_us": int, "retry_after_ms": int}
+//!             — shed at admission (queue full, or the request's own
+//!             deadline is shorter than the estimated queue wait);
+//!             `retry_after_ms` tells the client when to retry
 //!   control:  {"cmd": "stats"} — answered inline by the connection
 //!             thread (never queued behind decode work) with
 //!             {"stats": {...}, "prometheus": str}: the full metrics
@@ -43,12 +61,13 @@
 //! Errors are *per request*: a failed forward degrades every request of
 //! the batch to an error line, never a dropped connection.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -109,22 +128,43 @@ pub struct Response {
     /// deadline expired: `tokens` holds the partial result decoded
     /// before eviction (rendered as `"timeout": true`)
     pub timeout: bool,
+    /// overload shed: how long the client should back off before
+    /// retrying (rendered as `"retry_after_ms"` on the error line)
+    pub retry_after_ms: Option<u64>,
 }
 
 impl Response {
     /// A successful reply carrying the decoded tokens.
     pub fn ok(tokens: Vec<u32>, latency_us: u64) -> Response {
-        Response { tokens, latency_us, error: None, timeout: false }
+        Response { tokens, latency_us, error: None, timeout: false, retry_after_ms: None }
     }
 
     /// An error reply (rendered as `{"error": ...}`).
     pub fn err(message: impl Into<String>, latency_us: u64) -> Response {
-        Response { tokens: Vec::new(), latency_us, error: Some(message.into()), timeout: false }
+        Response {
+            tokens: Vec::new(),
+            latency_us,
+            error: Some(message.into()),
+            timeout: false,
+            retry_after_ms: None,
+        }
     }
 
     /// A deadline-expired reply carrying the partial result.
     pub fn timed_out(tokens: Vec<u32>, latency_us: u64) -> Response {
-        Response { tokens, latency_us, error: None, timeout: true }
+        Response { tokens, latency_us, error: None, timeout: true, retry_after_ms: None }
+    }
+
+    /// An overload-shed reply: an error line that also tells the
+    /// client when to come back (`retry_after_ms`).
+    pub fn overloaded(message: impl Into<String>, retry_after_ms: u64) -> Response {
+        Response {
+            tokens: Vec::new(),
+            latency_us: 0,
+            error: Some(message.into()),
+            timeout: false,
+            retry_after_ms: Some(retry_after_ms),
+        }
     }
 }
 
@@ -462,11 +502,16 @@ pub fn parse_request(line: &str) -> Result<(Vec<u32>, DecodeParams, Option<u64>)
 /// Render one response (or error) line.
 pub fn render_response(resp: &Response) -> String {
     match &resp.error {
-        Some(msg) => Json::obj(vec![
-            ("error", Json::str(msg.clone())),
-            ("latency_us", Json::num(resp.latency_us as f64)),
-        ])
-        .to_string(),
+        Some(msg) => {
+            let mut pairs = vec![
+                ("error", Json::str(msg.clone())),
+                ("latency_us", Json::num(resp.latency_us as f64)),
+            ];
+            if let Some(ms) = resp.retry_after_ms {
+                pairs.push(("retry_after_ms", Json::num(ms as f64)));
+            }
+            Json::obj(pairs).to_string()
+        }
         None => {
             let toks = Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect());
             let mut pairs =
@@ -531,49 +576,355 @@ pub fn admit(metrics: &Metrics, queue_cap: usize) -> bool {
     true
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>, queue_cap: usize) {
+/// Estimate how long a shed client should wait before retrying, in
+/// milliseconds: the mean end-to-end latency scaled by queue pressure,
+/// clamped to a sane band.  Deliberately coarse — the hint's job is to
+/// spread the retry stampede over time, not to predict the queue.
+pub fn retry_after_hint(metrics: &Metrics, queue_cap: usize) -> u64 {
+    let depth = metrics.queue_depth.load(Ordering::Relaxed) as f64;
+    let cap = queue_cap.max(1) as f64;
+    let mean_ms = metrics.latency.mean_us() / 1000.0;
+    // a cold server has no latency samples yet: assume ~100 ms
+    let base = if mean_ms > 0.0 { mean_ms } else { 100.0 };
+    (base * (1.0 + depth / cap)).clamp(50.0, 5_000.0) as u64
+}
+
+/// Deadline-aware shedding above the high-water mark (¾ of
+/// `queue_cap`): a request whose own `timeout_ms` deadline is shorter
+/// than the estimated queue wait would only be admitted, sit in queue,
+/// and expire — exactly the request the EDF scheduler would pull
+/// first, prefill, and then evict at its deadline.  Shedding it at the
+/// door with a `retry_after_ms` hint keeps queue capacity (and prefill
+/// work) for requests that can still make their deadlines, which is
+/// the same ordering judgment EDF itself applies.  Returns the hint
+/// when the request should be shed.  Call only after a successful
+/// [`admit`]: the caller still owns the `queue_depth` reservation and
+/// must roll it back when shedding.
+pub fn shed_decision(metrics: &Metrics, queue_cap: usize, timeout_ms: Option<u64>) -> Option<u64> {
+    let deadline = timeout_ms?;
+    let depth = metrics.queue_depth.load(Ordering::Relaxed);
+    if (depth as usize).saturating_mul(4) < queue_cap.saturating_mul(3) {
+        return None;
+    }
+    let hint = retry_after_hint(metrics, queue_cap);
+    if deadline < hint {
+        Some(hint)
+    } else {
+        None
+    }
+}
+
+/// Default cap on one request line (see [`ConnConfig::max_line_bytes`]):
+/// generous for token-id prompts, small enough that one malicious line
+/// cannot OOM a connection thread.
+pub const DEFAULT_MAX_LINE_BYTES: usize = 4 << 20;
+
+/// Per-connection hardening knobs: socket timeouts, the request-line
+/// byte cap, and the idle reaper.  `Default` preserves legacy behavior
+/// (no timeouts, no reaper) apart from the line cap, which always
+/// applies.
+#[derive(Clone, Debug)]
+pub struct ConnConfig {
+    /// socket read timeout — also the idle reaper's polling step;
+    /// `None` blocks forever (and disables the reaper)
+    pub read_timeout: Option<Duration>,
+    /// socket write timeout: a peer that stops draining replies errors
+    /// the write instead of wedging the connection thread
+    pub write_timeout: Option<Duration>,
+    /// hard cap on one request line; an oversized line gets a
+    /// structured error reply and the connection is closed
+    pub max_line_bytes: usize,
+    /// reap a connection that sat idle (zero bytes between requests)
+    /// this long; needs `read_timeout` to drive the polling
+    pub idle_timeout: Option<Duration>,
+}
+
+impl Default for ConnConfig {
+    fn default() -> Self {
+        ConnConfig {
+            read_timeout: None,
+            write_timeout: None,
+            max_line_bytes: DEFAULT_MAX_LINE_BYTES,
+            idle_timeout: None,
+        }
+    }
+}
+
+/// Poison-tolerant shared request queue for the supervised continuous
+/// worker pool — the replacement for the old `Mutex<Receiver<Request>>`
+/// hand-off, whose lock a panicking worker poisoned for every sibling.
+/// A caller that finds the mutex poisoned repairs the guard
+/// (`into_inner`) and keeps serving; every recovery is counted and
+/// drained via [`SharedQueue::take_recovered`] into
+/// `SchedStats::queue_lock_poisoned`, so the degradation stays
+/// observable without ever becoming fatal.
+///
+/// Lock discipline: `jobs` is a leaf mutex — guard scopes hold queue
+/// bookkeeping only (push/pop/len), never an engine call.  The
+/// `db-llm-tidy` lock-order rule tracks the `jobs.lock()` receiver
+/// textually, same as the prefix-cache and pool-recycle mutexes.
+pub struct SharedQueue {
+    /// FIFO of requests awaiting a worker (leaf lock; see above)
+    jobs: Mutex<VecDeque<Request>>,
+    /// wakes blocked poppers on push and on close
+    ready: Condvar,
+    /// closed: pushes are refused, idle poppers drain out
+    closed: AtomicBool,
+    /// mutex-poison recoveries not yet drained by `take_recovered`
+    poison_recoveries: AtomicU64,
+}
+
+impl Default for SharedQueue {
+    fn default() -> Self {
+        SharedQueue::new()
+    }
+}
+
+impl SharedQueue {
+    /// An open, empty queue.
+    pub fn new() -> SharedQueue {
+        SharedQueue {
+            jobs: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            closed: AtomicBool::new(false),
+            poison_recoveries: AtomicU64::new(0),
+        }
+    }
+
+    /// Lock `jobs`, repairing (and counting) a poisoned guard instead
+    /// of propagating the poison — the whole point of this queue.
+    fn lock_jobs(&self) -> std::sync::MutexGuard<'_, VecDeque<Request>> {
+        match self.jobs.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                self.poison_recoveries.fetch_add(1, Ordering::Relaxed);
+                // repair, don't just bypass: one count per poisoning
+                // event, not one per subsequent lock of a sticky flag
+                self.jobs.clear_poison();
+                poisoned.into_inner()
+            }
+        }
+    }
+
+    /// Enqueue a request; `Err` hands it back when the queue is closed
+    /// (shutdown) so the caller can answer the client directly.
+    pub fn push(&self, req: Request) -> Result<(), Request> {
+        if self.closed.load(Ordering::Relaxed) {
+            return Err(req);
+        }
+        self.lock_jobs().push_back(req);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking up to `timeout` for a request to arrive.
+    /// `None` on timeout or when the queue is closed and drained —
+    /// callers poll this at shutdown cadence.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<Request> {
+        let mut guard = self.lock_jobs();
+        if let Some(req) = guard.pop_front() {
+            return Some(req);
+        }
+        if self.closed.load(Ordering::Relaxed) {
+            return None;
+        }
+        let mut guard = match self.ready.wait_timeout(guard, timeout) {
+            Ok((guard, _timed_out)) => guard,
+            Err(poisoned) => {
+                self.poison_recoveries.fetch_add(1, Ordering::Relaxed);
+                self.jobs.clear_poison();
+                poisoned.into_inner().0
+            }
+        };
+        guard.pop_front()
+    }
+
+    /// Non-blocking dequeue (the mid-flight refill top-up path).
+    pub fn try_pop(&self) -> Option<Request> {
+        self.lock_jobs().pop_front()
+    }
+
+    /// Requests currently queued.
+    pub fn len(&self) -> usize {
+        self.lock_jobs().len()
+    }
+
+    /// True when no request is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Refuse further pushes and wake every blocked popper so idle
+    /// workers can drain out.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        self.ready.notify_all();
+    }
+
+    /// True once [`close`](Self::close) was called.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Relaxed)
+    }
+
+    /// Drain the poison-recovery tally (swap to 0): each worker folds
+    /// the delta it drained into its own `SchedStats`, so concurrent
+    /// workers never double-count one recovery.
+    pub fn take_recovered(&self) -> u64 {
+        self.poison_recoveries.swap(0, Ordering::Relaxed)
+    }
+
+    /// Poison the queue mutex on purpose: a throwaway thread panics
+    /// while holding the guard.  Fault-injection helper for the chaos
+    /// suite — the next queue operation must repair and count it.
+    pub fn poison_for_chaos(self: &Arc<Self>) {
+        let q = Arc::clone(self);
+        let _ = std::thread::spawn(move || {
+            let _guard = q.jobs.lock().expect("poisoning a healthy queue lock");
+            panic!("chaos: poisoning the shared queue lock");
+        })
+        .join();
+    }
+}
+
+/// Where a connection thread hands an admitted request: the static XLA
+/// pool's mpsc sender, or the supervised continuous pool's
+/// [`SharedQueue`].  `Err` returns the request (workers gone — the
+/// connection answers the client and closes).
+pub trait RequestSink: Clone + Send + 'static {
+    /// Deliver one admitted request to the worker pool.
+    fn deliver(&self, req: Request) -> Result<(), Request>;
+}
+
+impl RequestSink for Sender<Request> {
+    fn deliver(&self, req: Request) -> Result<(), Request> {
+        self.send(req).map_err(|e| e.0)
+    }
+}
+
+impl RequestSink for Arc<SharedQueue> {
+    fn deliver(&self, req: Request) -> Result<(), Request> {
+        self.push(req)
+    }
+}
+
+fn handle_conn<S: RequestSink>(
+    stream: TcpStream,
+    sink: S,
+    metrics: Arc<Metrics>,
+    queue_cap: usize,
+    conn: ConnConfig,
+) {
     let peer = stream.peer_addr().ok();
+    if stream.set_read_timeout(conn.read_timeout).is_err()
+        || stream.set_write_timeout(conn.write_timeout).is_err()
+    {
+        return;
+    }
     // a failed dup (fd exhaustion, peer already reset) is a
     // per-connection condition a client can trigger at will — log and
     // close this connection instead of panicking the thread
-    let reader = match stream.try_clone() {
-        Ok(read_half) => BufReader::new(read_half),
+    let read_half = match stream.try_clone() {
+        Ok(read_half) => read_half,
         Err(e) => {
             eprintln!("dropping connection from {peer:?}: cannot clone stream: {e}");
             return;
         }
     };
+    // the Take bound is re-armed per line with +1 slack so a line of
+    // exactly max_line_bytes plus its newline still parses; anything
+    // past the bound hits the Take's EOF and is detectably oversized
+    let mut reader = BufReader::new(read_half.take(0));
     let mut writer = stream;
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
+    let mut buf: Vec<u8> = Vec::new();
+    'conn: loop {
+        buf.clear();
+        reader.get_mut().set_limit(conn.max_line_bytes as u64 + 1);
+        let mut idle = Duration::ZERO;
+        loop {
+            match reader.read_until(b'\n', &mut buf) {
+                Ok(0) => break 'conn, // peer closed between requests
+                Ok(_) if buf.ends_with(b"\n") => break,
+                Ok(_) => {
+                    if buf.len() > conn.max_line_bytes {
+                        metrics.oversize_lines.fetch_add(1, Ordering::Relaxed);
+                        let resp = Response::err(
+                            format!("request line exceeds {} bytes", conn.max_line_bytes),
+                            0,
+                        );
+                        let _ = writeln!(writer, "{}", render_response(&resp));
+                    }
+                    // oversized, or the peer closed mid-line: close —
+                    // there is no re-synchronizing a half-frame stream
+                    break 'conn;
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if !buf.is_empty() {
+                        // mid-line stall: a peer that pauses inside a
+                        // frame holds no claim on this thread
+                        break 'conn;
+                    }
+                    idle += conn.read_timeout.unwrap_or(Duration::ZERO);
+                    if conn.idle_timeout.is_some_and(|t| idle >= t) {
+                        metrics.conn_reaped.fetch_add(1, Ordering::Relaxed);
+                        break 'conn;
+                    }
+                }
+                Err(_) => break 'conn,
+            }
+        }
+        let Ok(line) = std::str::from_utf8(&buf) else {
+            let resp = Response::err("request line is not valid utf-8", 0);
+            let _ = writeln!(writer, "{}", render_response(&resp));
+            continue;
+        };
+        let line = line.trim();
+        if line.is_empty() {
             continue;
         }
-        if let Some(reply) = command_response(&line, &metrics) {
+        if let Some(reply) = command_response(line, &metrics) {
             let _ = writeln!(writer, "{reply}");
             continue;
         }
-        match parse_request(&line) {
+        match parse_request(line) {
             Ok((prompt, params, timeout_ms)) => {
                 metrics.requests.fetch_add(1, Ordering::Relaxed);
                 // admit() already reserved this request's queue_depth
                 // slot; the worker decrements it when batching
                 if !admit(&metrics, queue_cap) {
-                    let resp = Response::err("server overloaded", 0);
+                    let resp = Response::overloaded(
+                        "server overloaded",
+                        retry_after_hint(&metrics, queue_cap),
+                    );
+                    let _ = writeln!(writer, "{}", render_response(&resp));
+                    continue;
+                }
+                if let Some(hint) = shed_decision(&metrics, queue_cap, timeout_ms) {
+                    // graceful degradation: above the high-water mark a
+                    // deadline shorter than the estimated queue wait
+                    // could only expire in queue — shed it at the door
+                    metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    metrics.shed_requests.fetch_add(1, Ordering::Relaxed);
+                    let resp = Response::overloaded(
+                        "server overloaded: deadline shorter than estimated queue wait",
+                        hint,
+                    );
                     let _ = writeln!(writer, "{}", render_response(&resp));
                     continue;
                 }
                 let (reply_tx, reply_rx) = channel();
-                if tx
-                    .send(Request {
-                        prompt,
-                        params,
-                        reply: reply_tx,
-                        arrived: Instant::now(),
-                        timeout_ms,
-                    })
-                    .is_err()
-                {
+                let req = Request {
+                    prompt,
+                    params,
+                    reply: reply_tx,
+                    arrived: Instant::now(),
+                    timeout_ms,
+                };
+                if sink.deliver(req).is_err() {
                     metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
                     break;
                 }
@@ -606,6 +957,22 @@ pub fn serve<G: Generator>(
     workers: usize,
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
+) -> Result<std::net::SocketAddr> {
+    serve_with(factory, addr, policy, workers, metrics, running, ConnConfig::default())
+}
+
+/// [`serve`] with explicit per-connection hardening knobs (timeouts,
+/// line cap, idle reaper) — what `db-llm serve` calls; the plain
+/// [`serve`] delegates here with [`ConnConfig::default`] so existing
+/// callers keep their behavior.
+pub fn serve_with<G: Generator>(
+    factory: impl Fn() -> Result<G> + Send + Sync + 'static,
+    addr: &str,
+    policy: BatchPolicy,
+    workers: usize,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+    conn: ConnConfig,
 ) -> Result<std::net::SocketAddr> {
     // bind before spawning anything: a bad --addr must fail fast, not
     // after every worker has spent seconds building its engine
@@ -644,7 +1011,7 @@ pub fn serve<G: Generator>(
             .context("spawning engine worker")?;
     }
 
-    spawn_accept_loop(listener, tx, metrics, queue_cap, running);
+    spawn_accept_loop(listener, tx, metrics, queue_cap, running, conn);
     Ok(local)
 }
 
@@ -659,23 +1026,26 @@ pub(crate) fn bind_listener(addr: &str) -> Result<(TcpListener, std::net::Socket
 }
 
 /// Spawn the accept loop over an already-bound listener: one connection
-/// thread per client, requests funneled into `tx`.  Shared by the
-/// static worker pool ([`serve`]) and the continuous scheduler
-/// (`scheduler::serve_continuous`).
-pub(crate) fn spawn_accept_loop(
+/// thread per client, requests funneled into the [`RequestSink`].
+/// Shared by the static worker pool ([`serve`], mpsc sender) and the
+/// supervised continuous scheduler (`scheduler::serve_continuous`,
+/// [`SharedQueue`]).
+pub(crate) fn spawn_accept_loop<S: RequestSink>(
     listener: TcpListener,
-    tx: Sender<Request>,
+    sink: S,
     metrics: Arc<Metrics>,
     queue_cap: usize,
     running: Arc<AtomicBool>,
+    conn: ConnConfig,
 ) {
     std::thread::spawn(move || {
         while running.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, _)) => {
-                    let tx = tx.clone();
+                    let sink = sink.clone();
                     let m = metrics.clone();
-                    std::thread::spawn(move || handle_conn(stream, tx, m, queue_cap));
+                    let c = conn.clone();
+                    std::thread::spawn(move || handle_conn(stream, sink, m, queue_cap, c));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(10));
@@ -777,7 +1147,225 @@ mod tests {
         drop(client);
         let (tx, _rx) = channel::<Request>();
         // must return (EOF/error -> close), not panic
-        handle_conn(server_side, tx, Arc::new(Metrics::default()), 4);
+        handle_conn(server_side, tx, Arc::new(Metrics::default()), 4, ConnConfig::default());
+    }
+
+    /// Spin one `handle_conn` over a fresh loopback pair, returning
+    /// the client half and the join handle for the connection thread.
+    fn conn_pair(
+        sink: impl RequestSink,
+        metrics: Arc<Metrics>,
+        conn: ConnConfig,
+    ) -> (TcpStream, std::thread::JoinHandle<()>) {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let handle = std::thread::spawn(move || handle_conn(server_side, sink, metrics, 4, conn));
+        (client, handle)
+    }
+
+    fn read_line(stream: &mut TcpStream) -> String {
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line
+    }
+
+    #[test]
+    fn oversize_line_gets_error_then_close() {
+        let m = Arc::new(Metrics::default());
+        let (tx, _rx) = channel::<Request>();
+        let cfg = ConnConfig { max_line_bytes: 256, ..ConnConfig::default() };
+        let (mut client, handle) = conn_pair(tx, m.clone(), cfg);
+        client.write_all(&vec![b'x'; 4096]).unwrap();
+        client.write_all(b"\n").unwrap();
+        let line = read_line(&mut client);
+        let j = Json::parse(line.trim()).unwrap();
+        assert!(
+            j.get("error").unwrap().as_str().unwrap().contains("exceeds 256 bytes"),
+            "{line}"
+        );
+        // connection is closed after the error reply
+        let mut rest = String::new();
+        let n = BufReader::new(&client).read_line(&mut rest).unwrap();
+        assert_eq!(n, 0, "server must close after an oversized line");
+        handle.join().unwrap();
+        assert_eq!(m.oversize_lines.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn exact_cap_line_still_parses() {
+        // a request line of exactly max_line_bytes (newline excluded)
+        // must still be served — the +2 Take slack exists for this
+        let m = Arc::new(Metrics::default());
+        let (tx, rx) = channel::<Request>();
+        std::thread::spawn(move || {
+            while let Ok(req) = rx.recv() {
+                let _ = req.reply.send(Response::ok(vec![1], 5));
+            }
+        });
+        let mut line = String::from(r#"{"prompt": [1], "max_tokens": 1}"#);
+        let cap = 128;
+        while line.len() < cap {
+            line.insert(1, ' ');
+        }
+        assert_eq!(line.len(), cap);
+        let cfg = ConnConfig { max_line_bytes: cap, ..ConnConfig::default() };
+        let (mut client, _handle) = conn_pair(tx, m.clone(), cfg);
+        client.write_all(line.as_bytes()).unwrap();
+        client.write_all(b"\n").unwrap();
+        let reply = read_line(&mut client);
+        let j = Json::parse(reply.trim()).unwrap();
+        assert_eq!(j.usize_list("tokens").unwrap(), vec![1], "{reply}");
+        assert_eq!(m.oversize_lines.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn binary_garbage_gets_error_line_not_close() {
+        let m = Arc::new(Metrics::default());
+        let (tx, _rx) = channel::<Request>();
+        let (mut client, _handle) = conn_pair(tx, m, ConnConfig::default());
+        client.write_all(&[0xff, 0xfe, 0x80, b'\n']).unwrap();
+        let line = read_line(&mut client);
+        let j = Json::parse(line.trim()).unwrap();
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("utf-8"), "{line}");
+        // connection survives: a stats probe still answers
+        client.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        let line = read_line(&mut client);
+        assert!(line.contains("\"stats\""), "{line}");
+    }
+
+    #[test]
+    fn idle_connection_is_reaped() {
+        let m = Arc::new(Metrics::default());
+        let (tx, _rx) = channel::<Request>();
+        let cfg = ConnConfig {
+            read_timeout: Some(Duration::from_millis(20)),
+            idle_timeout: Some(Duration::from_millis(60)),
+            ..ConnConfig::default()
+        };
+        let (client, handle) = conn_pair(tx, m.clone(), cfg);
+        // send nothing: the reaper must close the connection
+        handle.join().unwrap();
+        assert_eq!(m.conn_reaped.load(Ordering::Relaxed), 1);
+        drop(client);
+    }
+
+    #[test]
+    fn mid_line_stall_closes_connection() {
+        let m = Arc::new(Metrics::default());
+        let (tx, _rx) = channel::<Request>();
+        let cfg = ConnConfig {
+            read_timeout: Some(Duration::from_millis(20)),
+            ..ConnConfig::default()
+        };
+        let (mut client, handle) = conn_pair(tx, m.clone(), cfg);
+        // half a frame, then silence: the stall policy drops the peer
+        client.write_all(b"{\"prompt\": [1, 2").unwrap();
+        handle.join().unwrap();
+        // a stall is not an idle reap and not an oversize
+        assert_eq!(m.conn_reaped.load(Ordering::Relaxed), 0);
+        assert_eq!(m.oversize_lines.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn shared_queue_fifo_and_close() {
+        let q = SharedQueue::new();
+        let (tx, _rx) = channel();
+        let mk = |id: u32| Request {
+            prompt: vec![id],
+            params: DecodeParams::greedy(1),
+            reply: tx.clone(),
+            arrived: Instant::now(),
+            timeout_ms: None,
+        };
+        assert!(q.is_empty());
+        q.push(mk(1)).map_err(|_| ()).unwrap();
+        q.push(mk(2)).map_err(|_| ()).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop().unwrap().prompt, vec![1]);
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)).unwrap().prompt, vec![2]);
+        assert!(q.pop_timeout(Duration::from_millis(1)).is_none());
+        q.close();
+        assert!(q.is_closed());
+        assert!(q.push(mk(3)).is_err(), "closed queue refuses pushes");
+        assert!(q.pop_timeout(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn shared_queue_recovers_from_poison_and_counts_it() {
+        let q = Arc::new(SharedQueue::new());
+        q.poison_for_chaos();
+        // the queue still works after the poisoning …
+        let (tx, _rx) = channel();
+        let req = Request {
+            prompt: vec![7],
+            params: DecodeParams::greedy(1),
+            reply: tx,
+            arrived: Instant::now(),
+            timeout_ms: None,
+        };
+        q.push(req).map_err(|_| ()).unwrap();
+        assert_eq!(q.try_pop().unwrap().prompt, vec![7]);
+        // … and the recovery is counted exactly once per drain
+        assert!(q.take_recovered() >= 1);
+        assert_eq!(q.take_recovered(), 0, "tally drains to zero");
+    }
+
+    #[test]
+    fn shared_queue_close_wakes_blocked_popper() {
+        let q = Arc::new(SharedQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        // must return promptly (well under the 30 s timeout)
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn overloaded_response_carries_retry_hint() {
+        let r = Response::overloaded("server overloaded", 250);
+        let s = render_response(&r);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "server overloaded");
+        assert_eq!(j.get("retry_after_ms").unwrap().as_usize().unwrap(), 250);
+        // plain errors never carry the key
+        let plain = render_response(&Response::err("boom", 1));
+        assert!(Json::parse(&plain).unwrap().opt("retry_after_ms").is_none());
+    }
+
+    #[test]
+    fn retry_after_hint_is_clamped_and_pressure_scaled() {
+        let m = Metrics::default();
+        // cold server: no samples -> the 100 ms floor assumption
+        assert_eq!(retry_after_hint(&m, 8), 100);
+        // very fast server: clamped up to 50 ms
+        m.record_latency(Duration::from_micros(100));
+        assert_eq!(retry_after_hint(&m, 8), 50);
+        // very slow server: clamped down to 5 s
+        let m = Metrics::default();
+        m.record_latency(Duration::from_secs(60));
+        assert_eq!(retry_after_hint(&m, 8), 5_000);
+    }
+
+    #[test]
+    fn shed_decision_is_deadline_aware_above_high_water() {
+        let m = Metrics::default();
+        m.record_latency(Duration::from_millis(400));
+        let cap = 8;
+        // below the ¾ high-water mark: never shed
+        m.queue_depth.store(2, Ordering::Relaxed);
+        assert!(shed_decision(&m, cap, Some(1)).is_none());
+        // above it: a deadline shorter than the estimated wait sheds …
+        m.queue_depth.store(7, Ordering::Relaxed);
+        let hint = shed_decision(&m, cap, Some(10)).expect("tight deadline sheds");
+        assert!((50..=5_000).contains(&hint), "{hint}");
+        // … a generous deadline is admitted …
+        assert!(shed_decision(&m, cap, Some(60_000)).is_none());
+        // … and no-deadline requests are never shed
+        assert!(shed_decision(&m, cap, None).is_none());
     }
 
     #[test]

@@ -114,7 +114,8 @@ pub struct RequestSpan {
     pub decode_us: u64,
     /// Why the request left: `"done"` (budget/stop token), `"timeout"`
     /// (deadline eviction), `"expired"` (deadline passed while still
-    /// queued), or `"error"`.
+    /// queued), `"error"`, or `"supervisor"` (worker panicked; the
+    /// supervisor answered the request while quarantining its slot).
     pub reason: &'static str,
 }
 

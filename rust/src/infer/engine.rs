@@ -547,6 +547,39 @@ impl SlotEngine for NativeEngine {
         }
     }
 
+    /// Post-panic slot reclamation.  `reset_slot` is already total on
+    /// any reachable slot state — a half-finished prefill or step
+    /// leaves the cache's block table and pin list internally
+    /// consistent, so releasing the pins (a poisoned prefix lock is
+    /// counted, never propagated), clearing the block table (each
+    /// dropped handle returns its pool block), and wiping the token
+    /// history is a complete quarantine with no panic path.
+    fn quarantine_slot(&mut self, slot: usize) {
+        self.reset_slot(slot);
+    }
+
+    /// Engine-wide repair after every slot was quarantined: clear a
+    /// prefix-cache lock the panicking thread may have poisoned, reset
+    /// every slot (now able to release pins the poisoned lock blocked),
+    /// and audit the shared structures.  The audits are asserts — a
+    /// violated pool invariant panics, which the supervisor treats as
+    /// an unrecoverable engine and retires the worker.
+    fn recover(&mut self) -> Result<()> {
+        if let Some(pc) = &self.prefix {
+            pc.clear_poison();
+        }
+        for slot in 0..self.caches.len() {
+            self.reset_slot(slot);
+        }
+        if let Some(pc) = &self.prefix {
+            if let Ok(g) = pc.try_lock() {
+                g.assert_invariants();
+            }
+        }
+        self.pool.assert_invariants();
+        Ok(())
+    }
+
     /// Admission gate on the shared pool: a prompt needs
     /// `⌈min(prompt, window) / block_tokens⌉` blocks to prefill plus
     /// one block of decode headroom.  An unbounded pool (no
@@ -707,6 +740,42 @@ mod tests {
         assert!(e.step_slot(1, 1).is_ok());
         e.reset_slot(1);
         assert!(e.step_slot(1, 1).is_err(), "reset drops the sequence");
+    }
+
+    /// Panic-recovery contract: quarantining a mid-request slot
+    /// returns its pool blocks, releases its prefix pins, and
+    /// `recover` leaves the shared structures audit-clean.
+    #[test]
+    fn quarantine_and_recover_reclaim_blocks_and_pins() {
+        // no prefix cache: every live block belongs to a slot, so a
+        // full quarantine must return the pool to zero live blocks
+        let mut e = engine(31).with_slots(2);
+        e.prefill_slot(0, &(0..9u32).collect::<Vec<_>>()).unwrap();
+        e.prefill_slot(1, &[1u32, 2, 3]).unwrap();
+        e.step_slot(0, 3).unwrap();
+        assert!(e.pool.stats().live_blocks > 0);
+        e.quarantine_slot(0);
+        e.quarantine_slot(1);
+        e.recover().unwrap();
+        assert_eq!(e.pool.stats().live_blocks, 0, "quarantine leaked pool blocks");
+        e.assert_invariants();
+
+        // with a shared prefix cache: quarantine releases the slots'
+        // pins so the cache can evict those blocks again
+        let pc = Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20)));
+        let mut e = engine(31).with_slots(2).with_prefix_cache(pc.clone());
+        let prompt: Vec<u32> = (0..9u32).collect();
+        e.prefill_slot(0, &prompt).unwrap(); // cold: publishes blocks
+        e.prefill_slot(1, &prompt).unwrap(); // warm: pins them
+        assert!(!e.slot_pins[1].is_empty(), "warm prefill pinned cached blocks");
+        e.quarantine_slot(0);
+        e.quarantine_slot(1);
+        assert!(e.slot_pins.iter().all(Vec::is_empty), "quarantine left pins behind");
+        e.recover().unwrap();
+        e.assert_invariants();
+        // decode after recovery starts from a clean slate
+        e.prefill_slot(0, &prompt).unwrap();
+        e.step_slot(0, 1).unwrap();
     }
 
     /// The fused batch is validated before any slot advances: a failed

@@ -312,10 +312,11 @@ pub fn rule_unwrap_ban(cx: &FileCx) -> Vec<Violation> {
 // ---------------------------------------------------------------------------
 
 /// Receivers whose `.lock()` opens a cache-layer critical section: the
-/// PrefixCache mutex and the KvPool recycle-list mutex.  Both are leaf
-/// locks in the documented lock DAG (docs/INVARIANTS.md).
+/// PrefixCache mutex, the KvPool recycle-list mutex, and the shared
+/// request queue's job list.  All are leaf locks in the documented lock
+/// DAG (docs/INVARIANTS.md).
 const LOCK_RECV: &[&str] =
-    &["pc.lock()", "prefix.lock()", "prefix_cache.lock()", "recycled.lock()"];
+    &["pc.lock()", "prefix.lock()", "prefix_cache.lock()", "recycled.lock()", "jobs.lock()"];
 
 /// Calls that must never run while a cache-layer mutex is held: model
 /// forwards, prefills, steps, and the bulk K/V copy-in.
@@ -594,6 +595,20 @@ fn bench_required_keys(bench: &str) -> Option<&'static [&'static str]> {
             "trace_events",
             "trace_dropped",
             "profiled_ticks",
+            "note",
+        ]),
+        // chaos soak outcomes are counts, not timings: deliberately no
+        // wall_ns_* fields (nothing here may gate on wall clock)
+        "chaos_soak" => Some(&[
+            "seeds",
+            "requests_per_seed",
+            "injected_panics",
+            "injected_prefill_faults",
+            "injected_step_faults",
+            "replies_ok",
+            "replies_err",
+            "respawns",
+            "leaked_blocks",
             "note",
         ]),
         _ => None,
@@ -1024,6 +1039,30 @@ mod tests {
     }
 
     #[test]
+    fn lock_order_covers_shared_queue_jobs_mutex() {
+        let text = concat!(
+            "pub fn push(&self, req: Request) {\n",
+            "    if let Ok(mut q) = self.jobs.lock() {\n",
+            "        q.push_back(req);\n",
+            "        engine.generate(&prompts);\n",
+            "    }\n",
+            "}\n",
+        );
+        let v = rule_lock_order(&cx(text));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 4);
+        let clean = concat!(
+            "pub fn push(&self, req: Request) {\n",
+            "    if let Ok(mut q) = self.jobs.lock() {\n",
+            "        q.push_back(req);\n",
+            "    }\n",
+            "    engine.generate(&prompts); // queue lock released: fine\n",
+            "}\n",
+        );
+        assert!(rule_lock_order(&cx(clean)).is_empty());
+    }
+
+    #[test]
     fn lock_order_respects_drop_and_allow() {
         let dropped = concat!(
             "fn f(&mut self) {\n",
@@ -1090,6 +1129,32 @@ mod tests {
             "{v:?}"
         );
         assert!(v.iter().any(|x| x.msg.contains("unknown bench id")), "{v:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "touches the real filesystem")]
+    fn bench_schema_knows_chaos_soak() {
+        let dir = std::env::temp_dir().join(format!("tidy-chaos-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // a complete chaos_soak record passes
+        std::fs::write(
+            dir.join("BENCH_ok.json"),
+            "{\"bench\": \"chaos_soak\", \"seeds\": 6, \"requests_per_seed\": 24, \
+             \"injected_panics\": 4, \"injected_prefill_faults\": 3, \
+             \"injected_step_faults\": 5, \"replies_ok\": 130, \"replies_err\": 14, \
+             \"respawns\": 4, \"leaked_blocks\": 0, \"note\": \"n\"}",
+        )
+        .unwrap();
+        assert!(rule_bench_schema(&dir).is_empty(), "{:?}", rule_bench_schema(&dir));
+        // dropping a declared field fails the gate
+        std::fs::write(
+            dir.join("BENCH_bad.json"),
+            "{\"bench\": \"chaos_soak\", \"seeds\": 6, \"note\": \"n\"}",
+        )
+        .unwrap();
+        let v = rule_bench_schema(&dir);
+        assert!(v.iter().any(|x| x.msg.contains("missing declared field `leaked_blocks`")), "{v:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -12,8 +12,11 @@
 //!             [--slots 4] [--timeout-ms N] [--no-refill]
 //!             [--prefix-cache-mb 64] [--kv-pool-mb 0]
 //!             [--metrics-interval-ms 10000]
+//!             [--read-timeout-ms N] [--idle-timeout-ms N]
+//!             [--max-line-bytes N] [--max-respawns N]
 //!   client    --addr 127.0.0.1:7878 --prompt 1,2,3 --max-tokens 8
 //!             [--temperature 0.7] [--stop 0] [--timeout-ms N]
+//!             [--retries 3]
 //!             (or --stats to fetch the live metrics/Prometheus line)
 //!
 //! Argument parsing is hand-rolled (offline build, no clap); every flag
@@ -27,8 +30,10 @@ use anyhow::{bail, Context, Result};
 
 use db_llm::coordinator::batcher::BatchPolicy;
 use db_llm::coordinator::metrics::Metrics;
-use db_llm::coordinator::scheduler::{serve_continuous, SchedulerConfig};
-use db_llm::coordinator::serve::{serve, Engine, EngineWorker};
+use db_llm::coordinator::scheduler::{
+    serve_continuous_with, SchedulerConfig, DEFAULT_MAX_RESPAWNS,
+};
+use db_llm::coordinator::serve::{serve_with, ConnConfig, Engine, EngineWorker};
 use db_llm::data::TokenStream;
 use db_llm::infer::{NativeEngine, PrefixCache};
 use db_llm::eval::ppl::perplexity;
@@ -162,8 +167,11 @@ fn print_help() {
                     [--slots N] [--timeout-ms N] [--no-refill]\n\
                     [--prefix-cache-mb N] [--kv-pool-mb N]\n\
                     [--metrics-interval-ms N]\n\
+                    [--read-timeout-ms N] [--idle-timeout-ms N]\n\
+                    [--max-line-bytes N] [--max-respawns N]\n\
            client   --addr A --prompt 1,2,3 --max-tokens 8\n\
                     [--temperature T] [--stop TOKEN] [--timeout-ms N]\n\
+                    [--retries N]  exponential backoff on overload\n\
                     --addr A --stats    fetch live metrics + Prometheus\n\
          \n\
          common flags: --artifacts DIR --windows N --dad-batches N\n\
@@ -337,6 +345,27 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     // wire-level {"cmd":"stats"} surface stays available either way)
     let metrics_interval_ms: u64 =
         flags.get("metrics-interval-ms").map(|s| s.parse()).transpose()?.unwrap_or(10_000);
+    // connection hardening: socket timeouts, request-line byte cap,
+    // idle reaper; 0 means "off" for the timeout knobs
+    let mut conn = ConnConfig::default();
+    if let Some(ms) = flags.get("read-timeout-ms").map(|s| s.parse::<u64>()).transpose()? {
+        conn.read_timeout = (ms > 0).then(|| std::time::Duration::from_millis(ms));
+        conn.write_timeout = conn.read_timeout;
+    }
+    if let Some(ms) = flags.get("idle-timeout-ms").map(|s| s.parse::<u64>()).transpose()? {
+        conn.idle_timeout = (ms > 0).then(|| std::time::Duration::from_millis(ms));
+        // the reaper needs a finite read timeout to poll on; give it one
+        if conn.idle_timeout.is_some() && conn.read_timeout.is_none() {
+            conn.read_timeout = Some(std::time::Duration::from_millis(1_000));
+        }
+    }
+    if let Some(b) = flags.get("max-line-bytes").map(|s| s.parse::<usize>()).transpose()? {
+        conn.max_line_bytes = b.max(1);
+    }
+    // supervisor budget: how many times a panicking scheduler worker is
+    // respawned before it is retired for good
+    let max_respawns: u64 =
+        flags.get("max-respawns").map(|s| s.parse()).transpose()?.unwrap_or(DEFAULT_MAX_RESPAWNS);
     let opts = opts_from_flags(flags);
     let metrics = Arc::new(Metrics::default());
     let running = Arc::new(AtomicBool::new(true));
@@ -360,6 +389,10 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             eprintln!("warning: --kv-pool-mb only applies to --backend native (the xla \
                        executable has no KV block pool to budget); ignored");
         }
+        if flags.contains_key("max-respawns") {
+            eprintln!("warning: --max-respawns only applies to the supervised continuous \
+                       scheduler (--backend native); the xla worker pool ignores it");
+        }
     } else if flags.contains_key("max-batch") || flags.contains_key("linger-ms") {
         eprintln!("warning: --max-batch/--linger-ms only apply to the static batcher \
                    (--backend xla); the continuous scheduler admits per slot (--slots) \
@@ -369,7 +402,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let local = match backend.as_str() {
         // the AOT fwd_logits executable: full-window recompute per
         // step, static batches under the dynamic batcher
-        "xla" => serve(
+        "xla" => serve_with(
             move || {
                 let mut rt = Runtime::open(&dir)?;
                 let student = tables::make_student(&mut rt, &teacher, method, &opts, None)?;
@@ -383,6 +416,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             workers,
             m2,
             running.clone(),
+            conn.clone(),
         )?,
         // the KV-cached incremental engine behind the iteration-level
         // continuous-batching scheduler: finished slots refill
@@ -396,7 +430,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
                     prefix_cache_mb << 20,
                 )))
             });
-            serve_continuous(
+            serve_continuous_with(
                 move || {
                     let mut rt = Runtime::open(&dir)?;
                     let student = tables::make_student(&mut rt, &teacher, method, &opts, None)?;
@@ -441,6 +475,8 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
                 workers,
                 m2,
                 running.clone(),
+                conn.clone(),
+                max_respawns,
             )?
         }
         other => bail!("unknown backend {other} (expected native|xla)"),
@@ -465,10 +501,30 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     }
 }
 
-fn cmd_client(flags: &BTreeMap<String, String>) -> Result<()> {
+/// Pull the server's backoff hint off an overload-shed reply line
+/// (compact JSON: `"retry_after_ms":N`).
+fn parse_retry_after_ms(line: &str) -> Option<u64> {
+    let rest = line.split("\"retry_after_ms\":").nth(1)?;
+    let digits: String = rest.chars().take_while(char::is_ascii_digit).collect();
+    digits.parse().ok()
+}
+
+/// One connect → request → reply round trip.
+fn client_round_trip(addr: &str, req: &str) -> Result<String> {
     use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    writeln!(stream, "{req}")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    if line.is_empty() {
+        bail!("server closed the connection without a reply");
+    }
+    Ok(line.trim().to_string())
+}
+
+fn cmd_client(flags: &BTreeMap<String, String>) -> Result<()> {
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
-    let mut stream = std::net::TcpStream::connect(&addr)?;
     let req = if flags.contains_key("stats") {
         // control line: fetch the live metrics JSON + Prometheus text
         "{\"cmd\": \"stats\"}".to_string()
@@ -492,10 +548,32 @@ fn cmd_client(flags: &BTreeMap<String, String>) -> Result<()> {
         req.push('}');
         req
     };
-    writeln!(stream, "{req}")?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    println!("{}", line.trim());
-    Ok(())
+    // bounded exponential backoff over connect failures and overload
+    // sheds; an overload reply's own retry_after_ms hint overrides the
+    // doubling schedule when it is longer
+    let retries: u32 = flags.get("retries").map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let mut backoff_ms: u64 = 100;
+    for attempt in 0..=retries {
+        match client_round_trip(&addr, &req) {
+            Ok(line) => {
+                let shed_hint = parse_retry_after_ms(&line);
+                if shed_hint.is_none() || attempt == retries {
+                    println!("{line}");
+                    return Ok(());
+                }
+                let wait = backoff_ms.max(shed_hint.unwrap_or(0)).min(5_000);
+                eprintln!("overloaded (attempt {}/{}), retrying in {wait}ms", attempt + 1, retries);
+                std::thread::sleep(std::time::Duration::from_millis(wait));
+            }
+            Err(e) if attempt < retries => {
+                let wait = backoff_ms.min(5_000);
+                eprintln!("connect failed: {e} (attempt {}/{}), retrying in {wait}ms",
+                          attempt + 1, retries);
+                std::thread::sleep(std::time::Duration::from_millis(wait));
+            }
+            Err(e) => return Err(e),
+        }
+        backoff_ms = backoff_ms.saturating_mul(2);
+    }
+    unreachable!("retry loop always returns on its final attempt");
 }

@@ -1,0 +1,464 @@
+//! Chaos: deterministic fault injection across the supervised serving
+//! stack.  A seeded [`FaultPlan`] scripts engine failures, worker
+//! panics, admission denials, and slow ticks by call ordinal; these
+//! tests assert the supervision contract under that fire:
+//!
+//!   - every request gets exactly one reply — no hangs, no doubles —
+//!     across multi-seed soaks,
+//!   - uninjected requests decode bit-identically to a fault-free run
+//!     (the scripted engine is a pure function of the prompt),
+//!   - the server survives repeated worker panics: panicking workers
+//!     are respawned, their slots quarantined, and serving continues,
+//!   - a chaos run over a real [`NativeEngine`] leaks zero KV blocks,
+//!   - a poisoned queue lock and dropped reply receivers degrade to
+//!     counters, never to a wedged worker,
+//!
+//! and the same holds end to end over TCP with connection hardening
+//! enabled.  Everything here is deterministic: plans are seeded,
+//! workloads are pre-queued, and decode is greedy.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use db_llm::coordinator::chaos::{ChaosEngine, FaultPlan};
+use db_llm::coordinator::metrics::Metrics;
+use db_llm::coordinator::scheduler::{
+    serve_continuous_with, supervised_scheduler_loop, Job, Scheduler, SchedulerConfig, SlotEngine,
+    WallClock,
+};
+use db_llm::coordinator::serve::{ConnConfig, DecodeParams, Request, Response, SharedQueue};
+use db_llm::infer::NativeEngine;
+use db_llm::model::{ModelConfig, Weights};
+
+const VOCAB: usize = 64;
+
+/// Deterministic scripted engine: logits always peak at
+/// `prompt[0] % VOCAB`, so a greedy request for key `k` decodes exactly
+/// `[k; budget]`.  Output is a pure function of the prompt, which makes
+/// "uninjected requests are bit-identical" assertable with no ordinal
+/// bookkeeping.
+struct ScriptGen {
+    active: Vec<Option<u32>>,
+}
+
+impl ScriptGen {
+    fn new(slots: usize) -> ScriptGen {
+        ScriptGen { active: vec![None; slots] }
+    }
+
+    fn peak(key: u32) -> Vec<f32> {
+        let mut logits = vec![0.0f32; VOCAB];
+        logits[key as usize % VOCAB] = 1.0;
+        logits
+    }
+}
+
+impl SlotEngine for ScriptGen {
+    fn slots(&self) -> usize {
+        self.active.len()
+    }
+
+    fn prefill_slot(&mut self, slot: usize, prompt: &[u32]) -> anyhow::Result<Vec<f32>> {
+        let key = prompt[0];
+        self.active[slot] = Some(key);
+        Ok(Self::peak(key))
+    }
+
+    fn step_slot(&mut self, slot: usize, _token: u32) -> anyhow::Result<Vec<f32>> {
+        let key = self.active[slot].expect("step on an empty slot");
+        Ok(Self::peak(key))
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        self.active[slot] = None;
+    }
+}
+
+/// Build one wire-shaped request (reply channel + queue-depth
+/// reservation, the accept loop's bookkeeping).
+fn wire_request(key: u32, budget: usize, metrics: &Metrics) -> (Request, mpsc::Receiver<Response>) {
+    let (tx, rx) = mpsc::channel();
+    metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+    (
+        Request {
+            prompt: vec![key],
+            params: DecodeParams::greedy(budget),
+            reply: tx,
+            arrived: Instant::now(),
+            timeout_ms: None,
+        },
+        rx,
+    )
+}
+
+/// One full soak under `FaultPlan::random(seed, ..)`: pre-queue 24
+/// requests, run the supervised worker to completion, and return every
+/// reply (keyed, in submit order) plus the supervision counters.
+/// Pre-queuing the whole workload before the worker starts makes the
+/// decode order — and so the fault→request mapping — a pure function of
+/// the plan, which is what lets the caller replay a seed and demand a
+/// bit-identical transcript.
+#[allow(clippy::type_complexity)]
+fn run_soak(seed: u64) -> (Vec<(u32, Result<Vec<u32>, String>)>, u64, u64, u64) {
+    let plan = FaultPlan::random(seed, 160, 3);
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+    let queue = Arc::new(SharedQueue::new());
+    let engine = ChaosEngine::new(ScriptGen::new(2), plan);
+
+    let mut replies = Vec::new();
+    for k in 1..=24u32 {
+        let (req, rx) = wire_request(k, 4, &metrics);
+        assert!(queue.push(req).is_ok(), "queue must be open");
+        replies.push((k, rx));
+    }
+    let worker = {
+        let (q, m, r) = (queue.clone(), metrics.clone(), running.clone());
+        std::thread::spawn(move || {
+            supervised_scheduler_loop(
+                engine,
+                q,
+                SchedulerConfig { slots: 2, seed, trace: true, ..SchedulerConfig::default() },
+                m,
+                r,
+                64,
+            )
+        })
+    };
+
+    let mut transcript = Vec::new();
+    for (k, rx) in replies {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|_| panic!("seed {seed}: request {k} hung or was dropped"));
+        assert!(rx.try_recv().is_err(), "seed {seed}: request {k} answered twice");
+        let summary = match resp.error {
+            Some(e) => Err(e),
+            None => Ok(resp.tokens),
+        };
+        transcript.push((k, summary));
+    }
+
+    running.store(false, Ordering::Relaxed);
+    queue.close();
+    worker.join().expect("the supervised worker must never propagate a panic");
+    let ord = Ordering::Relaxed;
+    (
+        transcript,
+        metrics.worker_panics.load(ord),
+        metrics.respawns.load(ord),
+        metrics.quarantined_slots.load(ord),
+    )
+}
+
+/// ≥6-seed chaos soak: exactly one reply per request, uninjected
+/// requests bit-identical to the fault-free script, and a full replay
+/// of every seed reproduces the identical transcript and supervision
+/// counters.
+#[test]
+fn seeded_soak_exactly_once_and_deterministic() {
+    let mut total_injected = 0u64;
+    for seed in 0..6u64 {
+        let (first, panics, respawns, quarantined) = run_soak(seed);
+        let (replay, panics2, respawns2, quarantined2) = run_soak(seed);
+        assert_eq!(first, replay, "seed {seed}: replay diverged from the first run");
+        assert_eq!(
+            (panics, respawns, quarantined),
+            (panics2, respawns2, quarantined2),
+            "seed {seed}: supervision counters diverged on replay"
+        );
+        // budget 64 is never hit, so every panic earns a respawn
+        assert_eq!(respawns, panics, "seed {seed}: a panic went unrespawned");
+        for (k, reply) in &first {
+            match reply {
+                Ok(tokens) => assert_eq!(
+                    tokens,
+                    &vec![*k; 4],
+                    "seed {seed}: uninjected request {k} must match the fault-free script"
+                ),
+                Err(e) => {
+                    assert!(
+                        e.contains("chaos") || e.contains("panicked"),
+                        "seed {seed}: request {k} failed outside the plan: {e}"
+                    );
+                    total_injected += 1;
+                }
+            }
+        }
+        total_injected += panics;
+    }
+    assert!(total_injected > 0, "six seeds injected nothing — the harness is a no-op");
+}
+
+/// The headline robustness claim: a worker that panics ≥3 times is
+/// respawned each time, each panic quarantines the slot it fired in,
+/// every in-flight request is answered, and the server keeps serving
+/// clean requests afterwards.
+#[test]
+fn survives_repeated_worker_panics_and_keeps_serving() {
+    // ordinals 6 apart: at ≤3 row-steps per 3-token request, no two
+    // panics can land inside the same request
+    let plan = FaultPlan {
+        panic_at_step: [1u64, 7, 13].into_iter().collect(),
+        ..FaultPlan::none()
+    };
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+    let queue = Arc::new(SharedQueue::new());
+    let engine = ChaosEngine::new(ScriptGen::new(1), plan);
+
+    let mut replies = Vec::new();
+    for k in 1..=8u32 {
+        let (req, rx) = wire_request(k, 3, &metrics);
+        assert!(queue.push(req).is_ok());
+        replies.push((k, rx));
+    }
+    let worker = {
+        let (q, m, r) = (queue.clone(), metrics.clone(), running.clone());
+        std::thread::spawn(move || {
+            supervised_scheduler_loop(
+                engine,
+                q,
+                SchedulerConfig { slots: 1, ..SchedulerConfig::default() },
+                m,
+                r,
+                8,
+            )
+        })
+    };
+
+    let mut panicked = 0usize;
+    for (k, rx) in replies {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|_| panic!("request {k} hung across respawns"));
+        assert!(rx.try_recv().is_err(), "request {k} answered twice");
+        match resp.error {
+            Some(e) => {
+                assert!(e.contains("worker panicked"), "request {k}: {e}");
+                panicked += 1;
+            }
+            None => assert_eq!(resp.tokens, vec![k; 3], "request {k} decoded wrong"),
+        }
+    }
+    assert_eq!(panicked, 3, "exactly the three scripted panics may claim victims");
+
+    // still serving after three panics
+    let (req, rx) = wire_request(9, 3, &metrics);
+    assert!(queue.push(req).is_ok());
+    let resp = rx.recv_timeout(Duration::from_secs(30)).expect("post-chaos request hung");
+    assert!(resp.error.is_none(), "post-chaos request failed: {:?}", resp.error);
+    assert_eq!(resp.tokens, vec![9; 3]);
+
+    running.store(false, Ordering::Relaxed);
+    queue.close();
+    worker.join().expect("worker must exit cleanly");
+    let ord = Ordering::Relaxed;
+    assert_eq!(metrics.worker_panics.load(ord), 3);
+    assert_eq!(metrics.respawns.load(ord), 3);
+    assert_eq!(metrics.quarantined_slots.load(ord), 3);
+}
+
+/// Chaos over a real `NativeEngine`: scripted prefill failures, a step
+/// failure, and a mid-decode panic, driven through the scheduler core
+/// with the supervisor's own recovery sequence.  After the storm the
+/// idle engine must hold zero live KV blocks — quarantine and recovery
+/// reclaimed everything — and the pool's internal audit must pass.
+#[test]
+fn native_engine_chaos_reclaims_every_kv_block() {
+    let cfg = ModelConfig {
+        name: "t".into(),
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 192,
+        vocab: 96,
+        seq_len: 32,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    };
+    let native =
+        NativeEngine::new(Weights::synthetic(&cfg, 7), &BTreeMap::new(), cfg.seq_len, 42)
+            .with_slots(2);
+    let pool = native.kv_pool().clone();
+    // the panic ordinal comes last: recovery drains the whole core
+    // queue, so the failure flavors must fire before it to be exercised
+    let plan = FaultPlan {
+        prefill_fail: [1u64].into_iter().collect(),
+        step_fail: [2u64].into_iter().collect(),
+        panic_at_step: [5u64].into_iter().collect(),
+        ..FaultPlan::none()
+    };
+    let mut core = Scheduler::new(
+        ChaosEngine::new(native, plan),
+        WallClock::default(),
+        SchedulerConfig { slots: 2, ..SchedulerConfig::default() },
+    );
+    for k in 0..8u32 {
+        core.submit(Job {
+            prompt: vec![k % 96, (k + 1) % 96, (k + 2) % 96],
+            params: DecodeParams::greedy(2),
+            timeout_ms: None,
+            queued_for_ms: 0,
+        });
+    }
+
+    let (mut done, mut panics) = (0usize, 0usize);
+    for _ in 0..10_000 {
+        if done >= 8 {
+            break;
+        }
+        match catch_unwind(AssertUnwindSafe(|| core.tick())) {
+            Ok(completions) => done += completions.len(),
+            Err(_) => {
+                panics += 1;
+                let (dead, quarantined) = core.recover_after_panic("worker panicked: chaos");
+                assert!(quarantined > 0, "a mid-decode panic must quarantine its slot");
+                done += dead.len();
+                core.engine_mut().recover().expect("engine recovery after a scripted panic");
+            }
+        }
+    }
+    assert_eq!(done, 8, "every submitted job must complete exactly once");
+    assert!(panics >= 1, "the scripted panic never fired");
+    assert_eq!(pool.stats().live_blocks, 0, "chaos leaked KV blocks");
+    pool.assert_invariants();
+}
+
+/// A poisoned queue lock and a client that vanished before its reply
+/// both degrade gracefully: the worker repairs the lock (counted in
+/// `queue_lock_poisoned`), drops the dead reply send, and keeps
+/// serving — no panic, no wedge.
+#[test]
+fn queue_poison_and_dropped_receivers_do_not_wedge_the_worker() {
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+    let queue = Arc::new(SharedQueue::new());
+    queue.poison_for_chaos();
+
+    // this client disconnected before its reply could be delivered
+    let (req, dead_rx) = wire_request(5, 3, &metrics);
+    drop(dead_rx);
+    assert!(queue.push(req).is_ok());
+    let (req, rx) = wire_request(6, 3, &metrics);
+    assert!(queue.push(req).is_ok());
+
+    let worker = {
+        let (q, m, r) = (queue.clone(), metrics.clone(), running.clone());
+        std::thread::spawn(move || {
+            supervised_scheduler_loop(
+                ScriptGen::new(1),
+                q,
+                SchedulerConfig { slots: 1, ..SchedulerConfig::default() },
+                m,
+                r,
+                8,
+            )
+        })
+    };
+    let resp = rx.recv_timeout(Duration::from_secs(30)).expect("live request hung");
+    assert!(resp.error.is_none());
+    assert_eq!(resp.tokens, vec![6; 3]);
+
+    running.store(false, Ordering::Relaxed);
+    queue.close();
+    worker.join().expect("worker must survive poison + dead receivers");
+    let ord = Ordering::Relaxed;
+    assert!(metrics.queue_lock_poisoned.load(ord) >= 1, "poison recovery went uncounted");
+    assert_eq!(metrics.worker_panics.load(ord), 0, "poison must not look like a panic");
+}
+
+/// End to end over TCP with connection hardening on: scripted panics
+/// behind a live socket, a client that disconnects mid-request, and the
+/// stats surface reporting the carnage — while the server keeps
+/// answering.
+#[test]
+fn tcp_chaos_survives_panics_and_disconnects() {
+    let metrics = Arc::new(Metrics::default());
+    let running = Arc::new(AtomicBool::new(true));
+    let conn = ConnConfig {
+        read_timeout: Some(Duration::from_millis(200)),
+        write_timeout: Some(Duration::from_secs(5)),
+        max_line_bytes: 1 << 16,
+        idle_timeout: Some(Duration::from_secs(30)),
+    };
+    // ordinals 6 apart: exactly two panics land inside the 6-request
+    // workload below, each in its own request
+    let addr = serve_continuous_with(
+        || {
+            let plan = FaultPlan {
+                panic_at_step: [2u64, 8].into_iter().collect(),
+                ..FaultPlan::none()
+            };
+            Ok(ChaosEngine::new(ScriptGen::new(1), plan))
+        },
+        "127.0.0.1:0",
+        64,
+        SchedulerConfig { slots: 1, ..SchedulerConfig::default() },
+        1,
+        metrics.clone(),
+        running.clone(),
+        conn,
+        8,
+    )
+    .unwrap();
+
+    let mut stream = loop {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut clean = 0usize;
+    let mut errored = 0usize;
+    for k in 1..=6u32 {
+        writeln!(stream, "{{\"prompt\": [{k}], \"max_tokens\": 3}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        if line.contains("\"error\"") {
+            assert!(line.contains("panicked"), "request {k}: unexpected error line {line}");
+            errored += 1;
+        } else {
+            let j = db_llm::util::Json::parse(line.trim()).unwrap();
+            assert_eq!(j.usize_list("tokens").unwrap(), vec![k as usize; 3]);
+            clean += 1;
+        }
+    }
+    assert_eq!(errored, 2, "exactly the two scripted panics reach the wire");
+    assert_eq!(clean, 4);
+
+    // a client that sends a request and vanishes must not hurt anyone
+    {
+        let mut ghost = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(ghost, "{{\"prompt\": [7], \"max_tokens\": 3}}").unwrap();
+        // dropped here: the reply write fails server-side, harmlessly
+    }
+
+    // still serving on a fresh connection after panics + disconnect
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, "{{\"prompt\": [9], \"max_tokens\": 3}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = db_llm::util::Json::parse(line.trim()).unwrap();
+    assert_eq!(j.usize_list("tokens").unwrap(), vec![9usize; 3]);
+
+    // the supervision counters are on the live stats surface
+    writeln!(stream, "{{\"cmd\": \"stats\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"worker_panics\":2"), "stats surface missing panics: {line}");
+    assert!(line.contains("\"respawns\":2"), "stats surface missing respawns: {line}");
+
+    running.store(false, Ordering::Relaxed);
+    let ord = Ordering::Relaxed;
+    assert_eq!(metrics.worker_panics.load(ord), 2);
+    assert_eq!(metrics.respawns.load(ord), 2);
+    assert_eq!(metrics.quarantined_slots.load(ord), 2);
+}
