@@ -14,7 +14,15 @@
 //! `step_slots_atomic() == false`, which forces the scheduler onto its
 //! row-by-row stepping path — exactly one [`SlotEngine::step_slot`]
 //! ordinal per advanced row, so a plan names individual row-steps, not
-//! whole fused batches.  Counters live behind an `Arc` so a test can
+//! whole fused batches.  For the same reason it pins
+//! [`SlotEngine::speculate_k`] to 0: a speculative tick emits a
+//! *variable* number of tokens per row (accepted drafts + bonus), so
+//! letting a wrapped [`crate::infer::SpecDecoder`] speculate would make
+//! step ordinals depend on acceptance luck and seeded replays would
+//! stop being 1:1 with row-steps.  Speculation off is pure policy, not
+//! semantics — greedy speculative and plain streams are bit-identical —
+//! so chaos soaks exercise the identical token streams either way.
+//! Counters live behind an `Arc` so a test can
 //! keep observing them after the engine moves into a worker thread,
 //! and they accumulate across supervisor respawns (the engine survives
 //! inside the scheduler core).
@@ -180,6 +188,20 @@ impl<E: SlotEngine> SlotEngine for ChaosEngine<E> {
     // fault ordinals map 1:1 onto advanced rows — deterministic
     // regardless of how requests pack into ticks
 
+    /// Chaos gates speculation off entirely (even when the wrapped
+    /// engine is a speculative one): a speculative tick advances a row
+    /// by `accepted + 1` tokens in a single engine call, which would
+    /// decouple step ordinals from row-steps and make seeded fault
+    /// replays depend on draft-acceptance luck.  With `k == 0` the
+    /// scheduler never calls `step_slots_speculative`, every advanced
+    /// row is exactly one `step_slot` ordinal, and — because greedy
+    /// speculative output is bit-identical to plain decode — the soak
+    /// still observes the same token streams a speculative run would
+    /// produce.
+    fn speculate_k(&self) -> usize {
+        0
+    }
+
     fn reset_slot(&mut self, slot: usize) {
         self.inner.reset_slot(slot)
     }
@@ -281,6 +303,34 @@ mod tests {
         }));
         assert!(caught.is_err(), "ordinal 1 must panic");
         assert_eq!(ctr.injected_panics.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn speculation_is_gated_off_even_when_inner_speculates() {
+        /// Claims to draft 3 tokens per tick; the wrapper must hide it.
+        struct Spec;
+        impl SlotEngine for Spec {
+            fn slots(&self) -> usize {
+                1
+            }
+            fn prefill_slot(&mut self, _s: usize, _p: &[u32]) -> Result<Vec<f32>> {
+                Ok(vec![1.0, 0.0])
+            }
+            fn step_slot(&mut self, _s: usize, _t: u32) -> Result<Vec<f32>> {
+                Ok(vec![0.0, 1.0])
+            }
+            fn reset_slot(&mut self, _s: usize) {}
+            fn speculate_k(&self) -> usize {
+                3
+            }
+        }
+        let e = ChaosEngine::new(Spec, FaultPlan::none());
+        assert_eq!(e.speculate_k(), 0, "chaos must pin speculation off");
+        assert!(e.spec_counters().is_none(), "no speculative surface through chaos");
+        assert!(
+            !e.step_slots_atomic(),
+            "chaos must keep the per-row path so ordinals stay 1:1 with row-steps"
+        );
     }
 
     #[test]

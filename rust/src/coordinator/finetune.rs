@@ -53,6 +53,21 @@ impl Default for DadConfig {
     }
 }
 
+/// Deviation weight from Eq. 10 — the factor that scales each
+/// position's soft cross-entropy inside ℓ_DAD:
+/// `(Hᵗ + ε)^γ · (Hˢ + ε)^(1−γ)` with ε = 1e-6.
+///
+/// The fused `dad_step_<size>` executable computes this inside the XLA
+/// loss (see `python/compile/model.py::dad_losses`); this pure mirror
+/// exists so the Rust layer can assert the semantics — ambiguous
+/// positions (high entropy) are up-weighted, confident ones damped, and
+/// γ interpolates between teacher- and student-ambiguity — without a
+/// device round trip.
+pub fn deviation_weight(teacher_entropy: f64, student_entropy: f64, gamma: f64) -> f64 {
+    const EPS: f64 = 1e-6;
+    (teacher_entropy + EPS).powf(gamma) * (student_entropy + EPS).powf(1.0 - gamma)
+}
+
 /// AdamW state over the flat α vector.
 struct AdamW {
     m: Vec<f32>,
@@ -342,5 +357,114 @@ mod tests {
         assert!((c.gamma - 0.1).abs() < 1e-12);
         assert!((c.lambda - 0.1).abs() < 1e-12);
         assert_eq!(c.epochs, 1);
+    }
+
+    #[test]
+    fn deviation_weight_monotone_in_ambiguity() {
+        // Eq. 10: more ambiguous samples (higher entropy on either
+        // side) must always be weighted harder, for any γ in (0, 1)
+        for &gamma in &[0.1, 0.5, 0.9] {
+            let mut last = 0.0;
+            for i in 1..=8 {
+                let h = f64::from(i) * 0.5;
+                let w = deviation_weight(h, 1.0, gamma);
+                assert!(w > last, "teacher ambiguity must up-weight (γ={gamma}, H={h})");
+                last = w;
+            }
+            last = 0.0;
+            for i in 1..=8 {
+                let h = f64::from(i) * 0.5;
+                let w = deviation_weight(1.0, h, gamma);
+                assert!(w > last, "student ambiguity must up-weight (γ={gamma}, H={h})");
+                last = w;
+            }
+        }
+        // γ interpolates: γ=1 tracks the teacher entropy alone, γ=0
+        // the student's (up to ε)
+        assert!((deviation_weight(2.0, 7.0, 1.0) - 2.0).abs() < 1e-4);
+        assert!((deviation_weight(7.0, 3.0, 0.0) - 3.0).abs() < 1e-4);
+        // fully confident positions are damped to (almost) nothing
+        assert!(deviation_weight(0.0, 0.0, 0.5) < 1e-5);
+    }
+
+    /// A trainer with no XLA manifest behind it — enough structure for
+    /// the pure bookkeeping paths (`loss_trend`, `apply`).
+    fn scripted_trainer() -> DadTrainer {
+        DadTrainer {
+            config: DadConfig::default(),
+            size: "s".to_string(),
+            alpha_names: Vec::new(),
+            plane_names: Vec::new(),
+            frozen_names: Vec::new(),
+            alphas: BTreeMap::new(),
+            history: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn loss_trend_reports_scripted_direction() {
+        let mut t = scripted_trainer();
+        assert_eq!(t.loss_trend(), None, "no steps recorded yet");
+        for (i, &total) in [4.0f64, 3.1, 2.6, 2.5].iter().enumerate() {
+            t.history.push(StepLog { step: i, total, ce: total * 0.9, dad: total });
+        }
+        let (first, last) = t.loss_trend().expect("history recorded");
+        assert!((first - 4.0).abs() < 1e-12 && (last - 2.5).abs() < 1e-12);
+        assert!(first > last, "scripted losses decrease; the trend must agree");
+    }
+
+    #[test]
+    fn apply_round_trips_trained_scales() {
+        let cfg = crate::model::ModelConfig {
+            name: "tiny".to_string(),
+            d_model: 64,
+            n_layers: 1,
+            n_heads: 4,
+            d_ff: 192,
+            vocab: 96,
+            seq_len: 32,
+            rope_theta: 10_000.0,
+            rmsnorm_eps: 1e-5,
+        };
+        let w = Weights::synthetic(&cfg, 7);
+        let lin = "layers.0.wq".to_string();
+        let layer = FdbLinear::from_weights(w.mat(&lin), 64);
+        let (g, o) = (layer.a1.rows, layer.a1.cols);
+        let (orig_a1, orig_a2) = (layer.a1.data.clone(), layer.a2.data.clone());
+        let mut fdb = BTreeMap::new();
+        fdb.insert(lin.clone(), layer);
+
+        let mut t = scripted_trainer();
+        t.config.resplit = false;
+        t.alpha_names = vec![format!("{lin}.a1"), format!("{lin}.a2")];
+
+        // identity round trip: applying a layer's own scales back with
+        // resplit off must leave every field untouched
+        t.alphas.insert(format!("{lin}.a1"), (orig_a1.clone(), vec![g as i64, o as i64]));
+        t.alphas.insert(format!("{lin}.a2"), (orig_a2.clone(), vec![g as i64, o as i64]));
+        let b1_before = fdb[&lin].b1.unpack().data.clone();
+        t.apply(&mut fdb, &w);
+        assert_eq!(fdb[&lin].a1.data, orig_a1, "identity apply must not move α₁");
+        assert_eq!(fdb[&lin].a2.data, orig_a2, "identity apply must not move α₂");
+        assert_eq!(fdb[&lin].b1.unpack().data, b1_before, "resplit=false freezes planes");
+
+        // trained scales land verbatim, in [g, out] shape
+        let a1: Vec<f32> = (0..g * o).map(|i| 0.01 + i as f32 * 1e-3).collect();
+        let a2: Vec<f32> = (0..g * o).map(|i| 0.005 + i as f32 * 5e-4).collect();
+        t.alphas.insert(format!("{lin}.a1"), (a1.clone(), vec![g as i64, o as i64]));
+        t.alphas.insert(format!("{lin}.a2"), (a2.clone(), vec![g as i64, o as i64]));
+        t.apply(&mut fdb, &w);
+        assert_eq!(fdb[&lin].a1.data, a1, "resplit=false writes α₁ back verbatim");
+        assert_eq!(fdb[&lin].a2.data, a2, "resplit=false writes α₂ back verbatim");
+        assert_eq!((fdb[&lin].a1.rows, fdb[&lin].a1.cols), (g, o), "shape preserved");
+
+        // with resplit on, the planes are re-derived around the new
+        // level centers — shapes survive and scales stay finite
+        t.config.resplit = true;
+        t.apply(&mut fdb, &w);
+        let l = &fdb[&lin];
+        assert_eq!((l.din, l.dout), (64, 64));
+        assert_eq!((l.a1.rows, l.a1.cols), (g, o));
+        assert!(l.a1.data.iter().chain(&l.a2.data).all(|x| x.is_finite()));
     }
 }

@@ -292,6 +292,29 @@ pub struct Metrics {
     /// requests shed by the deadline-aware overload policy before
     /// queueing (each reply carried a `retry_after_ms` hint)
     pub shed_requests: AtomicU64,
+    /// draft tokens the speculative student proposed (k per eligible
+    /// slot per speculative tick)
+    pub spec_drafted: AtomicU64,
+    /// draft tokens the teacher verify pass accepted — each one is a
+    /// dense teacher forward the plain path would have paid, so this
+    /// *is* the teacher-forwards-saved figure
+    pub spec_accepted: AtomicU64,
+    /// draft tokens the verify pass rejected (their KV rows were
+    /// rolled back); `spec_drafted == spec_accepted + spec_rejected`
+    pub spec_rejected: AtomicU64,
+    /// bonus/correction tokens emitted from the verify row after the
+    /// accepted prefix (one per verified group — speculative progress
+    /// is never slower than one token per tick)
+    pub spec_bonus: AtomicU64,
+    /// batched teacher verify passes run (one per tick with ≥ 1
+    /// drafting slot)
+    pub spec_verify_passes: AtomicU64,
+    /// KV cache positions discarded by accept-prefix rollback
+    /// (block-table truncation — zero row copies)
+    pub spec_rolled_back_rows: AtomicU64,
+    /// speculative-path rows that decoded plain because the slot's
+    /// chronology crossed the window gate (`T + k + 1 > window`)
+    pub spec_fallback_rows: AtomicU64,
     /// end-to-end request latency (receipt → reply rendered), µs
     pub latency: Histogram,
     /// time-to-first-token: queue wait + prefill (the first token is
@@ -352,6 +375,13 @@ impl Default for Metrics {
             oversize_lines: AtomicU64::new(0),
             conn_reaped: AtomicU64::new(0),
             shed_requests: AtomicU64::new(0),
+            spec_drafted: AtomicU64::new(0),
+            spec_accepted: AtomicU64::new(0),
+            spec_rejected: AtomicU64::new(0),
+            spec_bonus: AtomicU64::new(0),
+            spec_verify_passes: AtomicU64::new(0),
+            spec_rolled_back_rows: AtomicU64::new(0),
+            spec_fallback_rows: AtomicU64::new(0),
             latency: Histogram::default(),
             ttft: Histogram::default(),
             itl: Histogram::default(),
@@ -422,6 +452,21 @@ impl Metrics {
         hit as f64 / (hit + miss) as f64
     }
 
+    /// Fraction of speculative draft tokens the teacher accepted
+    /// (`accepted / drafted`; 0 before any draft).  The speedup lever:
+    /// each speculative tick emits `rate·k + 1` tokens for one batched
+    /// teacher pass, so a rate near 1 means the student (the 2-bit FDB
+    /// model) is a faithful stand-in and dense forwards drop ≈ `k/(k+1)`;
+    /// a rate near 0 means speculation is pure overhead — lower `k` or
+    /// improve the student (e.g. DAD fine-tuning).
+    pub fn spec_accept_rate(&self) -> f64 {
+        let drafted = self.spec_drafted.load(Ordering::Relaxed);
+        if drafted == 0 {
+            return 0.0;
+        }
+        self.spec_accepted.load(Ordering::Relaxed) as f64 / drafted as f64
+    }
+
     /// One-line human-readable dump of every counter plus per-phase
     /// p50/p95/p99 (the `[metrics]` line `db-llm serve` prints every
     /// `--metrics-interval-ms`).
@@ -438,6 +483,8 @@ impl Metrics {
              saved_steps={} stalled={} slot_occ={:.2} refills={} timeouts={} \
              fused_rows={} decode_batch={:.2} prefix_hit={} prefix_miss={} \
              prefix_hit_rate={:.2} prefix_evict={} prefix_poisoned={} \
+             spec_drafted={} spec_accepted={} spec_accept_rate={:.2} \
+             spec_bonus={} spec_fallback={} spec_rolled_back={} \
              panics={} respawns={} quarantined={} queue_poisoned={} \
              oversize={} reaped={} shed={} \
              p50={}us p95={}us p99={}us \
@@ -466,6 +513,12 @@ impl Metrics {
             self.prefix_hit_rate(),
             self.prefix_evictions.load(Ordering::Relaxed),
             self.prefix_lock_poisoned.load(Ordering::Relaxed),
+            self.spec_drafted.load(Ordering::Relaxed),
+            self.spec_accepted.load(Ordering::Relaxed),
+            self.spec_accept_rate(),
+            self.spec_bonus.load(Ordering::Relaxed),
+            self.spec_fallback_rows.load(Ordering::Relaxed),
+            self.spec_rolled_back_rows.load(Ordering::Relaxed),
             self.worker_panics.load(Ordering::Relaxed),
             self.respawns.load(Ordering::Relaxed),
             self.quarantined_slots.load(Ordering::Relaxed),
@@ -536,6 +589,13 @@ impl Metrics {
                     ("prefix_miss_tokens", c(&self.prefix_miss_tokens)),
                     ("prefix_evictions", c(&self.prefix_evictions)),
                     ("prefix_lock_poisoned", c(&self.prefix_lock_poisoned)),
+                    ("spec_drafted", c(&self.spec_drafted)),
+                    ("spec_accepted", c(&self.spec_accepted)),
+                    ("spec_rejected", c(&self.spec_rejected)),
+                    ("spec_bonus", c(&self.spec_bonus)),
+                    ("spec_verify_passes", c(&self.spec_verify_passes)),
+                    ("spec_rolled_back_rows", c(&self.spec_rolled_back_rows)),
+                    ("spec_fallback_rows", c(&self.spec_fallback_rows)),
                     ("trace_dropped", c(&self.trace_dropped)),
                     ("worker_panics", c(&self.worker_panics)),
                     ("respawns", c(&self.respawns)),
@@ -552,6 +612,7 @@ impl Metrics {
                     ("queue_depth", c(&self.queue_depth)),
                     ("slot_occ", Json::num(self.slot_occupancy())),
                     ("prefix_hit_rate", Json::num(self.prefix_hit_rate())),
+                    ("spec_accept_rate", Json::num(self.spec_accept_rate())),
                     ("mean_decode_batch", Json::num(self.mean_decode_batch())),
                     ("mean_batch_occupancy", Json::num(self.mean_batch_occupancy())),
                 ]),
@@ -613,6 +674,13 @@ impl Metrics {
             ("prefix_miss_tokens", l(&self.prefix_miss_tokens)),
             ("prefix_evictions", l(&self.prefix_evictions)),
             ("prefix_lock_poisoned", l(&self.prefix_lock_poisoned)),
+            ("spec_drafted", l(&self.spec_drafted)),
+            ("spec_accepted", l(&self.spec_accepted)),
+            ("spec_rejected", l(&self.spec_rejected)),
+            ("spec_bonus", l(&self.spec_bonus)),
+            ("spec_verify_passes", l(&self.spec_verify_passes)),
+            ("spec_rolled_back_rows", l(&self.spec_rolled_back_rows)),
+            ("spec_fallback_rows", l(&self.spec_fallback_rows)),
             ("trace_dropped", l(&self.trace_dropped)),
             ("profiled_ticks", l(&self.profiled_ticks)),
             ("sched_admit_ns", l(&self.sched_admit_ns)),
@@ -638,6 +706,7 @@ impl Metrics {
         prom_gauge(&mut out, "queue_depth", l(&self.queue_depth) as f64);
         prom_gauge(&mut out, "slot_occ", self.slot_occupancy());
         prom_gauge(&mut out, "prefix_hit_rate", self.prefix_hit_rate());
+        prom_gauge(&mut out, "spec_accept_rate", self.spec_accept_rate());
         prom_gauge(&mut out, "mean_decode_batch", self.mean_decode_batch());
         prom_gauge(&mut out, "mean_batch_occupancy", self.mean_batch_occupancy());
         prom_summary(&mut out, "latency_us", &self.latency);
@@ -834,6 +903,39 @@ mod tests {
         let json = m.to_json().to_string();
         assert!(json.contains("\"worker_panics\":3"), "{json}");
         assert!(json.contains("\"shed_requests\":7"), "{json}");
+    }
+
+    #[test]
+    fn speculative_counters_surface() {
+        let m = Metrics::default();
+        assert_eq!(m.spec_accept_rate(), 0.0, "no drafts -> 0, not NaN");
+        // 20 drafts: 15 accepted, 5 rejected, 6 verify passes each
+        // emitting a bonus row, 2 window-gated fallbacks, 5 rolled-back
+        // teacher rows
+        m.spec_drafted.fetch_add(20, Ordering::Relaxed);
+        m.spec_accepted.fetch_add(15, Ordering::Relaxed);
+        m.spec_rejected.fetch_add(5, Ordering::Relaxed);
+        m.spec_bonus.fetch_add(6, Ordering::Relaxed);
+        m.spec_verify_passes.fetch_add(6, Ordering::Relaxed);
+        m.spec_rolled_back_rows.fetch_add(5, Ordering::Relaxed);
+        m.spec_fallback_rows.fetch_add(2, Ordering::Relaxed);
+        assert!((m.spec_accept_rate() - 0.75).abs() < 1e-12);
+        let s = m.snapshot();
+        assert!(s.contains("spec_drafted=20"), "{s}");
+        assert!(s.contains("spec_accepted=15"), "{s}");
+        assert!(s.contains("spec_accept_rate=0.75"), "{s}");
+        assert!(s.contains("spec_bonus=6"), "{s}");
+        assert!(s.contains("spec_fallback=2"), "{s}");
+        assert!(s.contains("spec_rolled_back=5"), "{s}");
+        let json = m.to_json().to_string();
+        assert!(json.contains("\"spec_drafted\":20"), "{json}");
+        assert!(json.contains("\"spec_verify_passes\":6"), "{json}");
+        assert!(json.contains("\"spec_accept_rate\":0.75"), "{json}");
+        let prom = m.to_prometheus();
+        assert!(prom.contains("dbllm_spec_drafted_total 20"), "{prom}");
+        assert!(prom.contains("dbllm_spec_accepted_total 15"), "{prom}");
+        assert!(prom.contains("# TYPE dbllm_spec_accept_rate gauge"), "{prom}");
+        assert!(prom.contains("dbllm_spec_accept_rate 0.75"), "{prom}");
     }
 
     #[test]

@@ -250,6 +250,100 @@ pub trait SlotEngine {
     fn phase_timers(&self) -> Option<EngineTimers> {
         None
     }
+
+    /// Draft length `k` for engines that decode speculatively
+    /// (`infer::SpecDecoder`), `0` — the default — for everything else.
+    /// When positive, the scheduler routes each tick's greedy
+    /// speculation-opted rows through
+    /// [`step_slots_speculative`](Self::step_slots_speculative) (which
+    /// may emit up to `k + 1` tokens per row per tick) and the
+    /// remaining rows through the plain [`step_slots`](Self::step_slots)
+    /// path.
+    fn speculate_k(&self) -> usize {
+        0
+    }
+
+    /// Advance several distinct slots one *speculative* tick: for each
+    /// `(slot, token)` entry the engine may draft up to
+    /// [`speculate_k`](Self::speculate_k) tokens on its cheap student
+    /// model, verify them in one batched teacher pass, and return the
+    /// accepted prefix — one [`SpecRows`] group per entry, in order,
+    /// each carrying `accepted + 1` teacher logits rows (the `+ 1` is
+    /// the bonus/correction row after the accepted prefix).  Every
+    /// returned row must be bit-identical to what the plain teacher
+    /// path would have produced, so greedy speculative streams match
+    /// teacher-only streams exactly.
+    ///
+    /// The same atomicity contract as [`step_slots`](Self::step_slots)
+    /// applies when [`step_slots_atomic`](Self::step_slots_atomic)
+    /// holds: an `Err` means no slot advanced, and the scheduler
+    /// retries row by row through the plain path.  The default wraps
+    /// `step_slots` — one teacher row per slot, nothing drafted — so
+    /// non-speculative engines never see this path misbehave.
+    fn step_slots_speculative(&mut self, steps: &[(usize, u32)]) -> Result<Vec<SpecRows>> {
+        Ok(self
+            .step_slots(steps)?
+            .into_iter()
+            .map(|row| SpecRows { rows: vec![row], drafted: 0, accepted: 0 })
+            .collect())
+    }
+
+    /// Cumulative speculative-decode counters, or `None` when the
+    /// engine never speculates (the default).  The scheduler snapshots
+    /// these into [`SchedStats`] every tick; the serving loop flushes
+    /// deltas into the shared [`Metrics`].
+    fn spec_counters(&self) -> Option<SpecCounters> {
+        None
+    }
+}
+
+/// One slot's result from a speculative tick (see
+/// [`SlotEngine::step_slots_speculative`]): the accepted-prefix logits
+/// rows plus this tick's draft/accept tally for span accounting.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpecRows {
+    /// teacher logits rows to emit, in order — `accepted + 1` rows on a
+    /// speculative tick (accepted drafts, then the bonus/correction
+    /// row), exactly one row when nothing was drafted.  Each row is
+    /// bit-identical to the plain teacher path's row for the same fed
+    /// token.
+    pub rows: Vec<Vec<f32>>,
+    /// draft tokens proposed for this slot this tick (0 = plain row)
+    pub drafted: u32,
+    /// drafts accepted by the teacher verify pass (`≤ drafted`)
+    pub accepted: u32,
+}
+
+/// Cumulative speculative-decode counters one engine accumulated (see
+/// [`SlotEngine::spec_counters`]).  The deterministic work model the
+/// bench asserts: `drafted == accepted + rejected`, every verified
+/// group emits `accepted + 1` tokens (so `bonus` counts groups), and
+/// each accepted draft is one teacher forward the plain path would
+/// have run separately — `accepted` IS the teacher-forwards-saved
+/// figure.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecCounters {
+    /// draft tokens proposed by the student model
+    pub drafted: u64,
+    /// drafts accepted by the teacher verify pass
+    pub accepted: u64,
+    /// drafts rejected (their KV rolled back): `drafted - accepted`
+    pub rejected: u64,
+    /// bonus/correction tokens emitted from the verify row after the
+    /// accepted prefix (one per verified group — every speculative
+    /// tick emits at least this token, so decode always progresses)
+    pub bonus: u64,
+    /// batched teacher verify passes run (each one forward covering
+    /// every speculating slot's `k + 1` rows)
+    pub verify_passes: u64,
+    /// cache positions truncated by accept-prefix rollback (teacher
+    /// rejects plus discarded student draft rows; block-table edits,
+    /// never row copies)
+    pub rolled_back_rows: u64,
+    /// speculation-opted rows that decoded plain because their slot
+    /// could no longer fit `k + 1` positions before the window slides
+    /// (speculation is permanently off for such a slot)
+    pub fallback_rows: u64,
 }
 
 /// Cumulative prefix-cache counters one engine accumulated (see
@@ -445,6 +539,21 @@ pub struct SchedStats {
     pub engine_step_sampled: u64,
     /// snapshot of [`EngineTimers::step_ns`]
     pub engine_step_ns: u64,
+    /// snapshot of [`SpecCounters::drafted`] (0 without speculation)
+    pub spec_drafted: u64,
+    /// snapshot of [`SpecCounters::accepted`] — dense teacher forwards
+    /// the speculative path saved
+    pub spec_accepted: u64,
+    /// snapshot of [`SpecCounters::rejected`]
+    pub spec_rejected: u64,
+    /// snapshot of [`SpecCounters::bonus`]
+    pub spec_bonus: u64,
+    /// snapshot of [`SpecCounters::verify_passes`]
+    pub spec_verify_passes: u64,
+    /// snapshot of [`SpecCounters::rolled_back_rows`]
+    pub spec_rolled_back_rows: u64,
+    /// snapshot of [`SpecCounters::fallback_rows`]
+    pub spec_fallback_rows: u64,
     /// trace + span ring entries overwritten before being read
     pub trace_dropped: u64,
 }
@@ -502,6 +611,10 @@ struct Active {
     prefix_miss: u32,
     /// clock stamp of the last accepted token (ITL numerator)
     last_token_at_us: u64,
+    /// draft tokens the speculative student proposed for this request
+    drafted: u32,
+    /// draft tokens the teacher verify pass accepted
+    accepted: u32,
 }
 
 /// The continuous-batching core: a fixed slot set over a [`SlotEngine`]
@@ -527,6 +640,9 @@ pub struct Scheduler<E: SlotEngine, C: Clock> {
     /// per-tick step list, reused across ticks so the steady-state
     /// decode loop stops allocating once it has grown to the slot count
     steps_buf: Vec<(usize, u32)>,
+    /// per-tick speculative row list (greedy rows routed through
+    /// [`SlotEngine::step_slots_speculative`]), reused like `steps_buf`
+    spec_buf: Vec<(usize, u32)>,
 }
 
 impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
@@ -548,6 +664,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             spans: TraceRing::new(trace_cap),
             tick_seq: 0,
             steps_buf: Vec::with_capacity(slots),
+            spec_buf: Vec::with_capacity(slots),
         }
     }
 
@@ -733,6 +850,17 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             self.stats.engine_step_sampled = t.step_sampled;
             self.stats.engine_step_ns = t.step_ns;
         }
+        // speculative counters accumulate inside the engine too:
+        // same assignment-of-monotonic-totals snapshot
+        if let Some(c) = self.engine.spec_counters() {
+            self.stats.spec_drafted = c.drafted;
+            self.stats.spec_accepted = c.accepted;
+            self.stats.spec_rejected = c.rejected;
+            self.stats.spec_bonus = c.bonus;
+            self.stats.spec_verify_passes = c.verify_passes;
+            self.stats.spec_rolled_back_rows = c.rolled_back_rows;
+            self.stats.spec_fallback_rows = c.fallback_rows;
+        }
         self.stats.trace_dropped = self.trace.dropped() + self.spans.dropped();
         // tidy:no-alloc(end)
         #[cfg(debug_assertions)]
@@ -768,6 +896,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                 assert_eq!(a.out.len(), 1, "fresh slot must hold exactly its prefill token");
             }
             assert!(a.out.len() <= a.params.max_tokens, "row decoded past its budget");
+            assert!(a.accepted <= a.drafted, "row accepted more drafts than were proposed");
             seen.push(a.id);
         }
         for q in &self.queue {
@@ -791,6 +920,15 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
         assert!(
             self.steps_buf.len() <= slots,
             "step scratch holds more rows than slots exist"
+        );
+        assert!(
+            self.spec_buf.len() <= slots,
+            "speculative scratch holds more rows than slots exist"
+        );
+        assert_eq!(
+            s.spec_drafted,
+            s.spec_accepted + s.spec_rejected,
+            "every drafted token is accepted or rejected"
         );
         let h = &self.hists;
         assert_eq!(h.ttft_us.count, s.admissions, "one TTFT sample per admission");
@@ -864,6 +1002,8 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                 prefix_hit_tokens: a.prefix_hit,
                 prefix_miss_tokens: a.prefix_miss,
                 decoded: a.out.len() as u32,
+                drafted: a.drafted,
+                accepted: a.accepted,
                 decode_us: now_us.saturating_sub(a.admitted_at_us),
                 reason: "supervisor",
             });
@@ -882,6 +1022,8 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                 prefix_hit_tokens: 0,
                 prefix_miss_tokens: 0,
                 decoded: 0,
+                drafted: 0,
+                accepted: 0,
                 decode_us: 0,
                 reason: "supervisor",
             });
@@ -894,6 +1036,7 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
         self.stats = SchedStats::default();
         self.hists = SchedHists::default();
         self.steps_buf.clear();
+        self.spec_buf.clear();
         if let Some(p) = self.engine.prefix_counters() {
             self.stats.prefix_hit_tokens = p.hit_tokens;
             self.stats.prefix_miss_tokens = p.miss_tokens;
@@ -905,6 +1048,15 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             self.stats.engine_prefill_ns = t.prefill_ns;
             self.stats.engine_step_sampled = t.step_sampled;
             self.stats.engine_step_ns = t.step_ns;
+        }
+        if let Some(c) = self.engine.spec_counters() {
+            self.stats.spec_drafted = c.drafted;
+            self.stats.spec_accepted = c.accepted;
+            self.stats.spec_rejected = c.rejected;
+            self.stats.spec_bonus = c.bonus;
+            self.stats.spec_verify_passes = c.verify_passes;
+            self.stats.spec_rolled_back_rows = c.rolled_back_rows;
+            self.stats.spec_fallback_rows = c.fallback_rows;
         }
         self.stats.trace_dropped = self.trace.dropped() + self.spans.dropped();
         #[cfg(debug_assertions)]
@@ -938,6 +1090,8 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                     prefix_hit_tokens: 0,
                     prefix_miss_tokens: 0,
                     decoded: 0,
+                    drafted: 0,
+                    accepted: 0,
                     decode_us: 0,
                     reason: "expired",
                 });
@@ -1060,6 +1214,8 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                             prefix_miss: (prefix_after.miss_tokens - prefix_before.miss_tokens)
                                 as u32,
                             last_token_at_us: now_us,
+                            drafted: 0,
+                            accepted: 0,
                         });
                         break;
                     }
@@ -1091,29 +1247,54 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
     /// tick's token (from the prefill logits) — they only run the
     /// finish check, keeping the invariant of exactly one token per
     /// active slot per tick.
+    ///
+    /// Speculative engines ([`SlotEngine::speculate_k`] > 0) get a
+    /// second phase: greedy rows that opted in
+    /// (`DecodeParams::speculate`, temperature ≤ 0) are routed through
+    /// one [`SlotEngine::step_slots_speculative`] call and may emit
+    /// *several* tokens this tick (accepted drafts + the bonus row) —
+    /// sampled rows stay on the plain path, because a draft/verify
+    /// split cannot replay their RNG stream bit-exactly.  Every
+    /// emitted token counts as a stepped row (one ITL sample each), so
+    /// the occupancy and latency invariants hold unchanged; a
+    /// mid-group budget/stop exit always coincides with the finish
+    /// check below, which resets the slot and with it the engine's
+    /// overextended cache.
     fn step_active(&mut self, done: &mut Vec<Completion>) {
         // tidy:no-alloc(start): per-tick decode hot loop — the step
-        // list reuses one scratch buffer across ticks; only the error
+        // lists reuse scratch buffers across ticks; only the error
         // paths (annotated per line) may allocate.
         self.steps_buf.clear();
+        self.spec_buf.clear();
+        let speculating = self.engine.speculate_k() > 0;
         for (slot, a) in self.active.iter().enumerate() {
             match a {
-                Some(a) if !a.fresh => self.steps_buf.push((slot, a.last)),
+                Some(a) if !a.fresh => {
+                    if speculating && a.params.temperature <= 0.0 && a.params.speculate {
+                        self.spec_buf.push((slot, a.last));
+                    } else {
+                        self.steps_buf.push((slot, a.last));
+                    }
+                }
                 _ => {}
             }
         }
 
         let mut failures: Vec<(usize, String)> = Vec::new();
+        // rows that actually advanced this tick (accounted only
+        // after the engine calls resolve — a failed fused call must
+        // not masquerade as fused throughput in the metrics)
+        let mut advanced = 0u64;
+        let mut fused = 0u64;
+        // one clock read per tick: every token accepted this tick
+        // shares the same inter-token-latency endpoint
+        let now_us = if self.steps_buf.is_empty() && self.spec_buf.is_empty() {
+            0
+        } else {
+            self.clock.now_us()
+        };
         if !self.steps_buf.is_empty() {
             let m = self.steps_buf.len();
-            // one clock read per tick: every row accepted this tick
-            // shares the same inter-token-latency endpoint
-            let now_us = self.clock.now_us();
-            // rows that actually advanced this tick (accounted only
-            // after the engine calls resolve — a failed fused call must
-            // not masquerade as fused throughput in the metrics)
-            let mut advanced = 0u64;
-            let mut fused = 0u64;
             let mut batch_failed = false;
             if self.engine.step_slots_atomic() {
                 match self.engine.step_slots(&self.steps_buf) {
@@ -1158,11 +1339,75 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
                     }
                 }
             }
-            if advanced > 0 {
-                self.stats.step_ticks += 1;
-                self.stats.stepped_rows += advanced;
-                self.stats.fused_rows += fused;
+        }
+        if !self.spec_buf.is_empty() {
+            let m = self.spec_buf.len();
+            match self.engine.step_slots_speculative(&self.spec_buf) {
+                Ok(groups) if groups.len() == m => {
+                    for (i, g) in groups.iter().enumerate() {
+                        let slot = self.spec_buf[i].0;
+                        debug_assert!(g.accepted <= g.drafted, "accepted beyond drafted");
+                        debug_assert_eq!(
+                            g.rows.len() as u64,
+                            g.accepted as u64 + 1,
+                            "a verified group holds its accepted rows plus the bonus row"
+                        );
+                        {
+                            let a =
+                                self.active[slot].as_mut().expect("stepped slot emptied mid-tick");
+                            a.drafted += g.drafted;
+                            a.accepted += g.accepted;
+                        }
+                        for row in &g.rows {
+                            // the first row can never trip these (a
+                            // finished slot was reaped last tick); a
+                            // later exit leaves the engine cache
+                            // overextended, which the finish check
+                            // below clears via reset_slot
+                            let a =
+                                self.active[slot].as_ref().expect("stepped slot emptied mid-tick");
+                            if a.out.len() >= a.params.max_tokens
+                                || a.params.stop.is_some_and(|s| a.last == s)
+                            {
+                                break;
+                            }
+                            self.accept_token(slot, row, now_us);
+                            advanced += 1;
+                        }
+                    }
+                }
+                Ok(groups) => {
+                    let msg = format!( // tidy:allow(no-alloc): error path
+                        "engine returned {} speculative groups for {} stepped slots",
+                        groups.len(),
+                        m
+                    );
+                    for &(slot, _) in &self.spec_buf {
+                        failures.push((slot, msg.clone())); // tidy:allow(no-alloc): error path
+                    }
+                }
+                // the speculative call validates up front and is
+                // atomic on failure: nothing advanced, so each row is
+                // retried on the plain (teacher-only) path to isolate
+                // the failing request
+                Err(_) => {
+                    for i in 0..m {
+                        let (slot, last) = self.spec_buf[i];
+                        match self.engine.step_slot(slot, last) {
+                            Ok(logits) => {
+                                self.accept_token(slot, &logits, now_us);
+                                advanced += 1;
+                            }
+                            Err(e) => failures.push((slot, format!("{e:#}"))), // tidy:allow(no-alloc): error path
+                        }
+                    }
+                }
             }
+        }
+        if advanced > 0 {
+            self.stats.step_ticks += 1;
+            self.stats.stepped_rows += advanced;
+            self.stats.fused_rows += fused;
         }
         // tidy:no-alloc(end)
         for (slot, msg) in failures {
@@ -1243,6 +1488,8 @@ impl<E: SlotEngine, C: Clock> Scheduler<E, C> {
             prefix_hit_tokens: a.prefix_hit,
             prefix_miss_tokens: a.prefix_miss,
             decoded: a.out.len() as u32,
+            drafted: a.drafted,
+            accepted: a.accepted,
             decode_us: self.clock.now_us().saturating_sub(a.admitted_at_us),
             reason: label,
         });
@@ -1431,6 +1678,19 @@ fn flush_sched_metrics<E: SlotEngine, C: Clock>(
     metrics
         .engine_step_ns
         .fetch_add(s.engine_step_ns - last.engine_step_ns, Ordering::Relaxed);
+    metrics.spec_drafted.fetch_add(s.spec_drafted - last.spec_drafted, Ordering::Relaxed);
+    metrics.spec_accepted.fetch_add(s.spec_accepted - last.spec_accepted, Ordering::Relaxed);
+    metrics.spec_rejected.fetch_add(s.spec_rejected - last.spec_rejected, Ordering::Relaxed);
+    metrics.spec_bonus.fetch_add(s.spec_bonus - last.spec_bonus, Ordering::Relaxed);
+    metrics
+        .spec_verify_passes
+        .fetch_add(s.spec_verify_passes - last.spec_verify_passes, Ordering::Relaxed);
+    metrics
+        .spec_rolled_back_rows
+        .fetch_add(s.spec_rolled_back_rows - last.spec_rolled_back_rows, Ordering::Relaxed);
+    metrics
+        .spec_fallback_rows
+        .fetch_add(s.spec_fallback_rows - last.spec_fallback_rows, Ordering::Relaxed);
     *last = s;
     // same delta-flush pattern for the phase histograms: only buckets
     // touched this tick pay an atomic add

@@ -92,12 +92,18 @@ pub struct DecodeParams {
     pub temperature: f32,
     /// optional stop token: emitted, then the row is finished
     pub stop: Option<u32>,
+    /// opt-in to the speculative decode path (`--speculate-k`); only
+    /// effective for greedy rows on a speculative engine — the output
+    /// stream is bit-identical either way, this knob only trades draft
+    /// work for fewer dense teacher forwards.  Wire requests may opt
+    /// out per request with `"speculate": false` (default true).
+    pub speculate: bool,
 }
 
 impl DecodeParams {
     /// Greedy decoding for exactly `max_tokens` tokens, no stop token.
     pub fn greedy(max_tokens: usize) -> DecodeParams {
-        DecodeParams { max_tokens, temperature: 0.0, stop: None }
+        DecodeParams { max_tokens, temperature: 0.0, stop: None, speculate: true }
     }
 }
 
@@ -496,7 +502,14 @@ pub fn parse_request(line: &str) -> Result<(Vec<u32>, DecodeParams, Option<u64>)
         Some(v) => Some(v.as_usize()? as u64),
         None => None,
     };
-    Ok((prompt, DecodeParams { max_tokens, temperature, stop }, timeout_ms))
+    // speculation is an opt-out: it never changes the decoded stream
+    // (greedy speculative == greedy teacher-only, bitwise), so the only
+    // reason to turn it off per request is benchmarking the plain path
+    let speculate = match j.opt("speculate") {
+        Some(v) => v.as_bool().context("speculate must be a boolean")?,
+        None => true,
+    };
+    Ok((prompt, DecodeParams { max_tokens, temperature, stop, speculate }, timeout_ms))
 }
 
 /// Render one response (or error) line.
@@ -1067,6 +1080,7 @@ mod tests {
         assert_eq!(d.max_tokens, 8);
         assert_eq!(d.temperature, 0.0);
         assert_eq!(d.stop, None);
+        assert!(d.speculate, "speculation is opt-out: absent means on");
         assert_eq!(to, None);
         let (_, d2, to2) = parse_request(
             r#"{"prompt": [1], "max_tokens": 1, "temperature": 0.7, "stop": 2, "timeout_ms": 250}"#,
@@ -1080,6 +1094,18 @@ mod tests {
             parse_request(r#"{"prompt": [1], "max_tokens": 1, "timeout_ms": 0}"#).unwrap();
         assert_eq!(to3, Some(0));
         assert!(parse_request(r#"{"prompt": [1], "max_tokens": 1, "timeout_ms": -5}"#).is_err());
+    }
+
+    #[test]
+    fn parse_speculate_opt_out() {
+        let (_, d, _) =
+            parse_request(r#"{"prompt": [1], "max_tokens": 4, "speculate": false}"#).unwrap();
+        assert!(!d.speculate);
+        let (_, d, _) =
+            parse_request(r#"{"prompt": [1], "max_tokens": 4, "speculate": true}"#).unwrap();
+        assert!(d.speculate);
+        // a present-but-bad flag is a client error, not a default
+        assert!(parse_request(r#"{"prompt": [1], "max_tokens": 4, "speculate": 1}"#).is_err());
     }
 
     #[test]
@@ -1455,7 +1481,7 @@ mod tests {
         let prompts = vec![vec![5u32], vec![6, 7], vec![1, 2, 3]];
         let params = vec![
             DecodeParams::greedy(2),
-            DecodeParams { max_tokens: 5, temperature: 0.001, stop: None },
+            DecodeParams { max_tokens: 5, temperature: 0.001, stop: None, speculate: true },
             DecodeParams::greedy(3),
         ];
         let g = decode_batch(row_peaked_step(b, t, vocab), b, t, vocab, &prompts, &params, &mut rng)
@@ -1477,8 +1503,8 @@ mod tests {
         // both rows would run 10 steps, but their peaked tokens are
         // also their stop tokens: the loop exits after a single step
         let params = vec![
-            DecodeParams { max_tokens: 10, temperature: 0.0, stop: Some(1) },
-            DecodeParams { max_tokens: 10, temperature: 0.0, stop: Some(2) },
+            DecodeParams { max_tokens: 10, temperature: 0.0, stop: Some(1), speculate: true },
+            DecodeParams { max_tokens: 10, temperature: 0.0, stop: Some(2), speculate: true },
         ];
         let g = decode_batch(row_peaked_step(b, t, vocab), b, t, vocab, &prompts, &params, &mut rng)
             .unwrap();

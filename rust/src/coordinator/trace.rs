@@ -109,6 +109,12 @@ pub struct RequestSpan {
     pub prefix_miss_tokens: u32,
     /// Tokens decoded into the reply.
     pub decoded: u32,
+    /// Draft tokens the speculative student proposed for this request
+    /// (0 for plain rows or non-speculative engines).
+    pub drafted: u32,
+    /// Draft tokens the teacher verify pass accepted — each one is a
+    /// dense teacher forward this request did not pay.
+    pub accepted: u32,
     /// Slot admission → finish, µs (covers prefill + every decode
     /// tick); 0 for requests that expired in queue.
     pub decode_us: u64,

@@ -667,7 +667,7 @@ mod tests {
         let stopped = e
             .generate(
                 &prompts,
-                &[DecodeParams { max_tokens: 4, temperature: 0.0, stop: Some(a[0]) }],
+                &[DecodeParams { max_tokens: 4, temperature: 0.0, stop: Some(a[0]), speculate: true }],
             )
             .unwrap();
         assert_eq!(stopped.outputs[0], vec![a[0]]);

@@ -593,6 +593,84 @@ impl KvCache {
         pos - self.base
     }
 
+    /// Roll back the chronology to `new_next_pos`, discarding every
+    /// position at or beyond it — the speculative-decode rejection
+    /// path.  Whole tail blocks past the new end are popped (a handle
+    /// drop retiring the block, **no row copies**); a partially
+    /// surviving tail block has its fill count shrunk in place.  The
+    /// discarded rows' storage is not zeroed: like recycled blocks,
+    /// rows are always rewritten by `advance` + `write` before they can
+    /// be read again.
+    ///
+    /// Only *resident* positions can be discarded
+    /// (`next_pos - new_next_pos ≤ len`): positions already evicted by
+    /// the sliding window cannot be resurrected.  The speculative
+    /// decoder guarantees this by never drafting once a slot's window
+    /// could slide.  `base` never changes — rollback never slides the
+    /// window forward.
+    ///
+    /// Returns the number of positions discarded.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use db_llm::infer::KvCache;
+    ///
+    /// let mut cache = KvCache::new(1, 8, 2);
+    /// for t in 0..5u32 {
+    ///     let slot = cache.advance();
+    ///     let row = [t as f32, 0.0];
+    ///     cache.write(0, slot, &row, &row);
+    /// }
+    /// // reject the last two speculative positions
+    /// assert_eq!(cache.truncate_to(3), 2);
+    /// assert_eq!(cache.len(), 3);
+    /// assert_eq!(cache.next_pos(), 3);
+    /// assert_eq!(cache.k_row(0, 2), &[2.0, 0.0]); // survivors untouched
+    /// ```
+    pub fn truncate_to(&mut self, new_next_pos: usize) -> usize {
+        assert!(
+            new_next_pos <= self.next_pos,
+            "truncate_to({new_next_pos}) cannot extend the chronology ({})",
+            self.next_pos
+        );
+        let dropped = self.next_pos - new_next_pos;
+        if dropped == 0 {
+            return 0;
+        }
+        assert!(
+            dropped <= self.len,
+            "rollback of {dropped} positions past the {} resident would resurrect evicted rows",
+            self.len
+        );
+        // `new_next_pos ≥ oldest resident ≥ base`, so this never
+        // underflows
+        let target = new_next_pos - self.base;
+        let mut covered = self.next_pos - self.base;
+        while covered > target {
+            let tail_len = self.blocks.back().expect("coverage implies a tail block").len;
+            if covered - tail_len >= target {
+                // the whole tail block is rejected: drop the handle
+                self.blocks.pop_back();
+                covered -= tail_len;
+            } else {
+                // the tail block partially survives: shrink its fill
+                // count in place (copy-on-write first if pinned)
+                let keep = tail_len - (covered - target);
+                self.ensure_tail_writable();
+                let tail = self.blocks.back_mut().expect("tail block exists");
+                let tail = Arc::get_mut(tail).expect("tail uniquely owned after copy-on-write");
+                tail.len = keep;
+                covered = target;
+            }
+        }
+        self.len -= dropped;
+        self.next_pos = new_next_pos;
+        #[cfg(debug_assertions)]
+        self.assert_invariants();
+        dropped
+    }
+
     /// Audit the block-table/window bookkeeping.  Debug builds run this
     /// after every mutating call; test suites call it directly.  Panics
     /// on the first violation:
@@ -781,9 +859,12 @@ impl KvCache {
 
 /// Batched append across independent caches: reserve the next table row
 /// in each listed cache (exactly one [`KvCache::advance`] per row).
-/// `slots[i]` names the cache row `i` appends to — slots must be
-/// distinct — and the reserved row index per cache lands in `ring`
-/// (cleared first), to be passed to [`write_rows`] for every layer.
+/// `slots[i]` names the cache row `i` appends to, and the reserved row
+/// index per cache lands in `ring` (cleared first), to be passed to
+/// [`write_rows`] for every layer.  A cache index may repeat — the
+/// speculative verify pass appends a run of draft positions to one
+/// cache — in which case its rows are reserved in listed order
+/// (advances are sequential, so repeats are well-defined).
 pub fn advance_rows(caches: &mut [KvCache], slots: &[usize], ring: &mut Vec<usize>) {
     ring.clear();
     for &slot in slots {
@@ -1070,6 +1151,165 @@ mod tests {
         // once the head released, blocks lose their absolute labels
         assert!(c.share_block(0).is_none(), "slid cache must not publish");
         c.assert_invariants();
+    }
+
+    #[test]
+    fn truncate_shrinks_partial_tail_in_place() {
+        // bt=4, 5 appends → blocks [4][1]; truncating to 3 pops the
+        // 1-row tail block and shrinks the full block to 3 rows
+        let pool = Arc::new(KvPool::new(4, 1, 1, KvPool::UNBOUNDED));
+        let mut c = KvCache::new_in_pool(&pool, 16);
+        for t in 0..5u32 {
+            let s = c.advance();
+            c.write(0, s, &[t as f32], &[t as f32]);
+        }
+        assert_eq!(c.truncate_to(3), 2);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.next_pos(), 3);
+        for i in 0..3 {
+            assert_eq!(c.k_row(0, i), &[i as f32], "survivors untouched");
+        }
+        let s = pool.stats();
+        assert_eq!(s.retired, 1, "the fully-rejected tail block is retired");
+        assert_eq!(s.cow_copies, 0, "rollback of a private tail never copies");
+        assert_eq!(s.copied_rows, 0, "rollback is a bookkeeping edit, not a row copy");
+        c.assert_invariants();
+    }
+
+    #[test]
+    fn truncate_then_append_matches_never_overextended() {
+        // speculative shape: overextend with rejected drafts, roll
+        // back, append the real tokens — rows must be byte-identical
+        // to a cache that never held the rejects, across a block
+        // boundary (bt=4, rollback from 6 to 3)
+        let build = || {
+            let pool = Arc::new(KvPool::new(4, 2, 2, KvPool::UNBOUNDED));
+            let mut c = KvCache::new_in_pool(&pool, 16);
+            for t in 0..3u32 {
+                let s = c.advance();
+                for l in 0..2 {
+                    let row = [t as f32, l as f32];
+                    c.write(l, s, &row, &row);
+                }
+            }
+            c
+        };
+        let mut spec = build();
+        for t in 3..6u32 {
+            let s = spec.advance();
+            for l in 0..2 {
+                let junk = [99.0 + t as f32, 99.0];
+                spec.write(l, s, &junk, &junk);
+            }
+        }
+        assert_eq!(spec.truncate_to(3), 3);
+        let mut plain = build();
+        for c in [&mut spec, &mut plain] {
+            for t in 3..7u32 {
+                let s = c.advance();
+                for l in 0..2 {
+                    let row = [t as f32 * 2.0, l as f32];
+                    c.write(l, s, &row, &row);
+                }
+            }
+        }
+        assert_eq!(spec.len(), plain.len());
+        assert_eq!(spec.next_pos(), plain.next_pos());
+        for l in 0..2 {
+            for i in 0..plain.len() {
+                assert_eq!(spec.k_row(l, i), plain.k_row(l, i), "layer {l} row {i}");
+                assert_eq!(spec.v_row(l, i), plain.v_row(l, i), "layer {l} row {i}");
+            }
+        }
+        spec.assert_invariants();
+    }
+
+    #[test]
+    fn truncate_to_current_pos_is_noop() {
+        let mut c = KvCache::new(1, 4, 1);
+        for _ in 0..3 {
+            let s = c.advance();
+            c.write(0, s, &[1.0], &[1.0]);
+        }
+        assert_eq!(c.truncate_to(3), 0);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.next_pos(), 3);
+    }
+
+    #[test]
+    fn truncate_to_zero_releases_every_block() {
+        let pool = Arc::new(KvPool::new(2, 1, 1, KvPool::UNBOUNDED));
+        let mut c = KvCache::new_in_pool(&pool, 8);
+        for _ in 0..5 {
+            let s = c.advance();
+            c.write(0, s, &[1.0], &[1.0]);
+        }
+        assert_eq!(c.truncate_to(0), 5);
+        assert!(c.is_empty());
+        assert_eq!(c.next_pos(), 0);
+        assert_eq!(pool.stats().live_blocks, 0, "no leaked blocks after full rollback");
+        c.assert_invariants();
+    }
+
+    #[test]
+    fn truncate_copies_on_write_when_tail_is_pinned() {
+        // a pinned tail must not see its fill count shrink: rollback
+        // clones it first, and the snapshot keeps its rows
+        let pool = Arc::new(KvPool::new(4, 1, 1, KvPool::UNBOUNDED));
+        let mut c = KvCache::new_in_pool(&pool, 8);
+        for t in 0..3u32 {
+            let s = c.advance();
+            c.write(0, s, &[t as f32], &[t as f32]);
+        }
+        let pinned = c.share_tail_for_audit().expect("tail exists");
+        assert_eq!(c.truncate_to(1), 2);
+        assert_eq!(pinned.len(), 3, "audit pin keeps its snapshot");
+        assert_eq!(c.len(), 1);
+        assert_eq!(pool.stats().cow_copies, 1, "pinned tail cloned before the shrink");
+        c.assert_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "resurrect evicted rows")]
+    fn truncate_past_resident_window_panics() {
+        // window 3 over 5 appends: oldest resident is position 2;
+        // rolling back to 1 would need evicted rows back
+        let mut c = KvCache::new(1, 3, 1);
+        for _ in 0..5 {
+            let s = c.advance();
+            c.write(0, s, &[1.0], &[1.0]);
+        }
+        let _ = c.truncate_to(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot extend the chronology")]
+    fn truncate_forward_panics() {
+        let mut c = KvCache::new(1, 4, 1);
+        let s = c.advance();
+        c.write(0, s, &[1.0], &[1.0]);
+        let _ = c.truncate_to(2);
+    }
+
+    #[test]
+    fn advance_rows_allows_repeated_cache_indices() {
+        // the speculative verify pass appends a run of positions to one
+        // cache in a single batched call: repeats advance sequentially
+        let mut caches = vec![KvCache::new(1, 8, 1), KvCache::new(1, 8, 1)];
+        let mut ring = Vec::new();
+        let slots = [0usize, 0, 1, 0];
+        advance_rows(&mut caches, &slots, &mut ring);
+        assert_eq!(ring, vec![0, 1, 0, 2], "repeats reserve consecutive rows");
+        let k = Matrix::from_vec(4, 1, vec![10.0, 11.0, 20.0, 12.0]);
+        let v = Matrix::from_vec(4, 1, vec![-10.0, -11.0, -20.0, -12.0]);
+        write_rows(&mut caches, &slots, &ring, 0, &k, &v);
+        assert_eq!(caches[0].len(), 3);
+        assert_eq!(caches[1].len(), 1);
+        for (i, expect) in [10.0f32, 11.0, 12.0].iter().enumerate() {
+            assert_eq!(caches[0].k_row(0, i), &[*expect]);
+            assert_eq!(caches[0].v_row(0, i), &[-*expect]);
+        }
+        assert_eq!(caches[1].k_row(0, 0), &[20.0]);
     }
 
     #[test]

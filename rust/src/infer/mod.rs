@@ -23,6 +23,12 @@
 //!   `step_slots`) that the continuous batching scheduler drives:
 //!   prefill a freed slot mid-flight while the other slots keep
 //!   decoding, then advance all of them together;
+//! - [`spec::SpecDecoder`] — speculative decoding over both halves of
+//!   the DB-LLM pair: the FDB student drafts `k` tokens per slot, the
+//!   dense teacher verifies them in one fused `step_rows` pass, and
+//!   greedy accept-longest-prefix with paged KV rollback
+//!   ([`kv::KvCache::truncate_to`]) keeps the emitted stream
+//!   bit-identical to teacher-only decode;
 //! - [`prefix::PrefixCache`] — cross-request prefix sharing: prefilled
 //!   K/V blocks keyed by token-prefix hash chains, ref-counted, LRU
 //!   under a byte budget, shared across every scheduler worker so an
@@ -35,9 +41,11 @@
 pub mod engine;
 pub mod kv;
 pub mod prefix;
+pub mod spec;
 pub mod step;
 
 pub use engine::NativeEngine;
 pub use kv::{DEFAULT_BLOCK_TOKENS, KvBlock, KvCache, KvPool, KvPoolBlock, KvPoolStats};
 pub use prefix::{PrefixCache, PrefixCacheStats};
+pub use spec::SpecDecoder;
 pub use step::{IncrementalForward, LinearOp};

@@ -1,0 +1,713 @@
+//! `SpecDecoder` — speculative decoding over the native backend: a
+//! cheap dual-binarized (FDB) **student** drafts `k` tokens per slot
+//! per tick, the dense **teacher** verifies the whole run in ONE
+//! batched forward through the fused [`IncrementalForward::step_rows`]
+//! path, and greedy accept-longest-prefix keeps the emitted stream
+//! **bit-identical** to teacher-only decode (`tests/spec_decode.rs`
+//! pins this).  DB-LLM's accuracy story becomes a latency story: the
+//! student burns the cheap 2-bit kernel, the teacher amortizes one
+//! weight traversal over `k + 1` positions instead of one per token,
+//! and every accepted draft is a dense forward the plain path would
+//! have paid.
+//!
+//! # Lifecycle per speculative tick (one slot)
+//!
+//! With the teacher cache at `T` positions and `last` the token the
+//! scheduler is about to feed:
+//!
+//! 1. **draft** — the student catches up on any teacher tokens it has
+//!    not cached (`ctx[S..T]`, one batched
+//!    [`IncrementalForward::prefill_suffix`] call that also feeds
+//!    `last`), then drafts `d₁ … d_k` greedily with `k - 1` single
+//!    [`IncrementalForward::step`]s;
+//! 2. **verify** — the teacher feeds `[last, d₁, …, d_k]` as `k + 1`
+//!    rows of one fused `step_rows` call (repeated cache index:
+//!    causal visibility per row), producing logits `L₀ … L_k` that are
+//!    each bit-identical to what sequential teacher steps would yield;
+//! 3. **accept** — the accepted prefix length `a` is the longest run
+//!    with `argmax(L_{i-1}) == d_i`; rows `L₀ … L_a` go back to the
+//!    scheduler, which emits `d₁ … d_a` plus the bonus/correction
+//!    token `argmax(L_a)` — always ≥ 1 token of progress;
+//! 4. **rollback** — rejected draft positions are discarded by
+//!    [`KvCache::truncate_to`]: block-table truncation on the paged
+//!    pool (handles dropped, fill counts shrunk), **zero row copies**.
+//!
+//! # Window gate
+//!
+//! Speculation requires `T + k + 1 ≤ window`: a batched verify must
+//! not slide the window mid-run (an eviction between two rows of the
+//! same cache is sequential-only behaviour), and rollback must never
+//! need evicted rows back.  Once a slot's chronology crosses the gate
+//! it decodes plain for the rest of the request (counted in
+//! [`SpecCounters::fallback_rows`]) — exactly the teacher-only path,
+//! so the stream is unaffected.
+//!
+//! # Scope
+//!
+//! The decoder intentionally has **no prefix-cache integration**: a
+//! shared-prefix splice would have to be mirrored into the student
+//! cache to keep draft positions aligned, and the interaction with
+//! rollback is not worth the coupling yet (`--prefix-cache-mb` is
+//! rejected alongside `--speculate-k` at the CLI).  Only greedy rows
+//! speculate — sampled rows cannot replay the teacher's RNG stream
+//! through a draft/verify split — which the scheduler enforces by
+//! routing rows by `DecodeParams` (`temperature ≤ 0` and
+//! `speculate`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::scheduler::{EngineTimers, SlotEngine, SpecCounters, SpecRows};
+use crate::coordinator::serve::argmax;
+use crate::model::Weights;
+use crate::quant::FdbLinear;
+use crate::runtime::session::recent_window;
+
+use super::kv::{KvCache, KvPool, DEFAULT_BLOCK_TOKENS};
+use super::step::IncrementalForward;
+
+/// Sample one speculative/fused step in this many for the engine-side
+/// phase timer (mirrors `NativeEngine`'s sampling: prefills are always
+/// timed, steps 1-in-N).
+const SPEC_PROFILE_EVERY: u64 = 64;
+
+/// Speculative decode engine: dense teacher + FDB student over one
+/// shared KV block pool, one teacher cache and one student cache per
+/// slot.  Implements [`SlotEngine`], so it drops into the continuous
+/// scheduler (EDF admission, deadlines, chaos supervision, worker
+/// respawn) wherever `NativeEngine` does.
+pub struct SpecDecoder {
+    /// the dense (exact) model whose stream is the contract
+    teacher: IncrementalForward,
+    /// the cheap draft model (FDB-compiled linears)
+    student: IncrementalForward,
+    /// draft length per speculative tick (≥ 1)
+    k: usize,
+    /// sliding attention window (shared by both cache sets)
+    window: usize,
+    /// shared block allocator both cache sets draw from
+    pool: Arc<KvPool>,
+    /// operator byte budget (`None` = unbounded), kept for pool rebuilds
+    pool_budget_bytes: Option<usize>,
+    teacher_caches: Vec<KvCache>,
+    student_caches: Vec<KvCache>,
+    /// per-slot token history: `ctx[slot][p]` is the token whose K/V
+    /// sits at teacher position `p`.  Tracked only while the slot can
+    /// still speculate (length stays equal to the teacher chronology
+    /// and below the window); the student catch-up feeds from it.
+    ctx: Vec<Vec<u32>>,
+    counters: SpecCounters,
+    timers: EngineTimers,
+    step_seq: u64,
+    /// flattened verify rows, reused across ticks
+    verify_buf: Vec<(usize, u32)>,
+    /// student catch-up suffix, reused across ticks
+    suffix_buf: Vec<u32>,
+}
+
+/// One slot's span inside the flattened verify batch.
+struct SpecGroup {
+    /// slot this group advances
+    slot: usize,
+    /// first row index in `verify_buf`
+    start: usize,
+    /// teacher chronology before the verify pass
+    base_pos: usize,
+    /// drafts in this group (0 = plain single-row fallback)
+    drafted: usize,
+}
+
+impl SpecDecoder {
+    /// Build from a dense teacher weight set and a student weight set
+    /// whose linears named in `student_fdb` run on the compiled sparse
+    /// kernel.  Both models must share geometry (they are the same
+    /// architecture at different precisions — the DB-LLM setup).
+    /// `window` is the sliding attention window and `k` the draft
+    /// length per speculative tick.
+    pub fn new(
+        teacher: Weights,
+        student: Weights,
+        student_fdb: &BTreeMap<String, FdbLinear>,
+        window: usize,
+        k: usize,
+    ) -> SpecDecoder {
+        assert!(k >= 1, "draft length k must be >= 1 (use NativeEngine when not speculating)");
+        let tc = &teacher.config;
+        let sc = &student.config;
+        assert_eq!(
+            (tc.d_model, tc.n_layers, tc.n_heads, tc.d_ff, tc.vocab),
+            (sc.d_model, sc.n_layers, sc.n_heads, sc.d_ff, sc.vocab),
+            "teacher and student geometry must match"
+        );
+        let n_layers = tc.n_layers;
+        let d = tc.d_model;
+        let wide = d.max(tc.d_ff);
+        let window = window.max(1);
+        // both prefills and the batched verify run on this thread:
+        // warm the per-thread scratch like `NativeEngine::new` does
+        crate::quant::kernel::warm_thread_scratch(window, wide, wide);
+        let teacher = IncrementalForward::new(teacher, &BTreeMap::new());
+        let student = IncrementalForward::new(student, student_fdb);
+        let pool = Arc::new(KvPool::new(DEFAULT_BLOCK_TOKENS, n_layers, d, KvPool::UNBOUNDED));
+        let mut dec = SpecDecoder {
+            teacher,
+            student,
+            k,
+            window,
+            pool,
+            pool_budget_bytes: None,
+            teacher_caches: Vec::new(),
+            student_caches: Vec::new(),
+            ctx: Vec::new(),
+            counters: SpecCounters::default(),
+            timers: EngineTimers::default(),
+            step_seq: 0,
+            verify_buf: Vec::new(),
+            suffix_buf: Vec::new(),
+        };
+        dec.rebuild_slots(1);
+        dec
+    }
+
+    /// Soft block budget for the shared pool: the operator's byte
+    /// budget in blocks, floored so a single request can always hold a
+    /// full teacher window *and* a full student window plus draft
+    /// headroom — the budget bounds concurrency, never a lone request.
+    fn budget_blocks(&self) -> usize {
+        match self.pool_budget_bytes {
+            None => KvPool::UNBOUNDED,
+            Some(bytes) => {
+                let bt = self.pool.block_tokens();
+                let block_bytes = 2 * self.pool.n_layers() * bt * self.pool.width() * 4;
+                let floor = 2 * (self.window.div_ceil(bt) + 2);
+                (bytes / block_bytes.max(1)).max(floor)
+            }
+        }
+    }
+
+    /// Rebuild the pool and both cache sets for `slots` decode slots.
+    /// Slot state is dropped; call before serving, not mid-request.
+    fn rebuild_slots(&mut self, slots: usize) {
+        let slots = slots.max(1);
+        self.pool = Arc::new(KvPool::new(
+            self.pool.block_tokens(),
+            self.pool.n_layers(),
+            self.pool.width(),
+            self.budget_blocks(),
+        ));
+        self.teacher_caches =
+            (0..slots).map(|_| KvCache::new_in_pool(&self.pool, self.window)).collect();
+        self.student_caches =
+            (0..slots).map(|_| KvCache::new_in_pool(&self.pool, self.window)).collect();
+        self.ctx = (0..slots).map(|_| Vec::new()).collect();
+        // the verify pass batches up to k + 1 rows per slot; the
+        // student catch-up is a suffix prefill of up to `window` rows
+        self.teacher.reserve_rows(slots * (self.k + 1), self.window);
+        self.student.reserve_rows(self.window.max(slots), self.window);
+        self.verify_buf = Vec::with_capacity(slots * (self.k + 1));
+    }
+
+    /// Resize to `slots` independent decode slots for the continuous
+    /// scheduler.  Slot state is dropped; call before serving.
+    pub fn with_slots(mut self, slots: usize) -> SpecDecoder {
+        self.rebuild_slots(slots);
+        self
+    }
+
+    /// Cap the shared KV pool at (roughly) `bytes` of block storage —
+    /// the same *soft* admission budget as
+    /// `NativeEngine::with_kv_pool_bytes`, except a speculative
+    /// admission reserves teacher + student blocks.  Zero means
+    /// unbounded.  Slot state is dropped; call before serving.
+    pub fn with_kv_pool_bytes(mut self, bytes: usize) -> SpecDecoder {
+        self.pool_budget_bytes = if bytes == 0 { None } else { Some(bytes) };
+        let slots = self.teacher_caches.len();
+        self.rebuild_slots(slots);
+        self
+    }
+
+    /// The shared block pool (stats surface for benches and tests).
+    pub fn kv_pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    /// Draft length per speculative tick.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Cumulative speculative-decode counters.
+    pub fn counters(&self) -> SpecCounters {
+        self.counters
+    }
+
+    /// Number of FDB-compiled linears in the *student* (diagnostics /
+    /// startup log; the teacher is dense by construction).
+    pub fn n_fdb_ops(&self) -> usize {
+        self.student.n_fdb_ops()
+    }
+
+    /// Audit every slot's teacher/student block tables, their
+    /// alignment (the student never runs ahead of the teacher beyond
+    /// its drafts, and both stay unslid while speculation is on), and
+    /// the shared pool's accounting.
+    pub fn assert_invariants(&self) {
+        assert_eq!(self.teacher_caches.len(), self.student_caches.len(), "cache sets disagree");
+        assert_eq!(self.ctx.len(), self.teacher_caches.len(), "ctx table out of step");
+        for (slot, (t, s)) in self.teacher_caches.iter().zip(&self.student_caches).enumerate() {
+            t.assert_invariants();
+            s.assert_invariants();
+            let ctx = &self.ctx[slot];
+            if ctx.len() == t.next_pos() {
+                // the slot is still speculation-capable: the student
+                // holds a prefix of the teacher's chronology (it may
+                // lag by exactly one position after a fully-accepted
+                // run) and neither cache has slid
+                assert!(
+                    s.next_pos() <= t.next_pos(),
+                    "slot {slot}: student ran ahead of the teacher"
+                );
+                assert_eq!(t.next_pos(), t.len(), "slot {slot}: teacher slid while tracked");
+                assert_eq!(s.next_pos(), s.len(), "slot {slot}: student slid while tracked");
+            }
+        }
+        self.pool.assert_invariants();
+    }
+
+    /// True while `slot` can still take a speculative tick: `k + 1`
+    /// verify positions must fit before the teacher window slides, and
+    /// the token history must still mirror the teacher chronology.
+    fn slot_can_speculate(&self, slot: usize) -> bool {
+        let t = &self.teacher_caches[slot];
+        t.next_pos() + self.k + 1 <= self.window && self.ctx[slot].len() == t.next_pos()
+    }
+
+    /// Record a token fed to the teacher at the position it now
+    /// occupies.  Stops tracking (permanently, for this request) once
+    /// the history falls out of step with the chronology or would
+    /// cross the window — after that the slot decodes plain.
+    fn note_token(&mut self, slot: usize, token: u32) {
+        let ctx = &mut self.ctx[slot];
+        if ctx.len() + 1 == self.teacher_caches[slot].next_pos() && ctx.len() < self.window {
+            ctx.push(token);
+        }
+    }
+
+    /// Shared validation for the plain and speculative batched steps:
+    /// an `Err` here is the only failure path, so both calls are
+    /// atomic (nothing advanced on `Err`).
+    fn validate_steps(&self, steps: &[(usize, u32)]) -> Result<()> {
+        let vocab = self.teacher.vocab();
+        let mut seen = vec![false; self.teacher_caches.len()];
+        for &(slot, token) in steps {
+            anyhow::ensure!(slot < self.teacher_caches.len(), "slot {slot} out of range");
+            anyhow::ensure!(!seen[slot], "slot {slot} listed twice in one fused step");
+            seen[slot] = true;
+            anyhow::ensure!(!self.teacher_caches[slot].is_empty(), "step on a slot without prefill");
+            anyhow::ensure!((token as usize) < vocab, "token {token} out of vocab {vocab}");
+        }
+        Ok(())
+    }
+
+    /// The plain fused step body (teacher only), shared by
+    /// `step_slots` and the ineligible-slot fallback.
+    fn step_slots_inner(&mut self, steps: &[(usize, u32)]) -> Result<Vec<Vec<f32>>> {
+        self.validate_steps(steps)?;
+        let out = if steps.len() == 1 {
+            let (slot, token) = steps[0];
+            vec![self.teacher.step(&mut self.teacher_caches[slot], token)]
+        } else {
+            self.teacher.step_rows(&mut self.teacher_caches, steps)
+        };
+        for &(slot, token) in steps {
+            self.note_token(slot, token);
+        }
+        Ok(out)
+    }
+
+    /// The speculative tick body; `step_slots_speculative` wraps it
+    /// with the 1-in-N phase timer.
+    fn speculative_inner(&mut self, steps: &[(usize, u32)]) -> Result<Vec<SpecRows>> {
+        self.validate_steps(steps)?;
+        // ---- draft phase: per-slot student loops, flattened into one
+        // verify batch (plain rows for slots past the window gate ride
+        // along in the same batched teacher forward)
+        self.verify_buf.clear();
+        let mut groups: Vec<SpecGroup> = Vec::with_capacity(steps.len());
+        let mut any_drafted = false;
+        for &(slot, last) in steps {
+            let start = self.verify_buf.len();
+            let base_pos = self.teacher_caches[slot].next_pos();
+            if !self.slot_can_speculate(slot) {
+                self.counters.fallback_rows += 1;
+                self.verify_buf.push((slot, last));
+                groups.push(SpecGroup { slot, start, base_pos, drafted: 0 });
+                continue;
+            }
+            // student catch-up + first draft in one batched pass: feed
+            // the teacher tokens the student has not cached, then
+            // `last`; the returned logits row drafts d₁
+            let s_pos = self.student_caches[slot].next_pos();
+            debug_assert!(s_pos <= base_pos, "student ran ahead of the teacher");
+            self.suffix_buf.clear();
+            self.suffix_buf.extend_from_slice(&self.ctx[slot][s_pos..base_pos]);
+            self.suffix_buf.push(last);
+            let mut logits =
+                self.student.prefill_suffix(&mut self.student_caches[slot], &self.suffix_buf);
+            self.verify_buf.push((slot, last));
+            for i in 0..self.k {
+                let draft = argmax(&logits) as u32;
+                self.verify_buf.push((slot, draft));
+                if i + 1 < self.k {
+                    logits = self.student.step(&mut self.student_caches[slot], draft);
+                }
+            }
+            any_drafted = true;
+            groups.push(SpecGroup { slot, start, base_pos, drafted: self.k });
+        }
+
+        // ---- verify phase: ONE batched teacher forward over every
+        // slot's run (repeated cache indices; bit-identical rows)
+        let flat = self.teacher.step_rows(&mut self.teacher_caches, &self.verify_buf);
+        debug_assert_eq!(flat.len(), self.verify_buf.len(), "verify rows went missing");
+        if any_drafted {
+            self.counters.verify_passes += 1;
+        }
+
+        // ---- accept + rollback phase
+        let mut flat = flat.into_iter();
+        let mut out = Vec::with_capacity(steps.len());
+        for g in &groups {
+            if g.drafted == 0 {
+                let row = flat.next().expect("one verify row per plain group");
+                let (_, last) = self.verify_buf[g.start];
+                self.note_token(g.slot, last);
+                out.push(SpecRows { rows: vec![row], drafted: 0, accepted: 0 });
+                continue;
+            }
+            let mut rows: Vec<Vec<f32>> = flat.by_ref().take(g.drafted + 1).collect();
+            debug_assert_eq!(rows.len(), g.drafted + 1, "verify rows went missing");
+            // accept-longest-prefix: draft dᵢ₊₁ survives while it
+            // matches the teacher's greedy pick from row i
+            let mut accepted = 0usize;
+            while accepted < g.drafted {
+                let draft = self.verify_buf[g.start + 1 + accepted].1;
+                if argmax(&rows[accepted]) as u32 == draft {
+                    accepted += 1;
+                } else {
+                    break;
+                }
+            }
+            // rollback: the teacher keeps [last, d₁..d_a]; the student
+            // (at base + k after drafting) keeps the same prefix — or
+            // lags one position when every draft was accepted
+            let keep = g.base_pos + accepted + 1;
+            let mut rolled = self.teacher_caches[g.slot].truncate_to(keep);
+            if accepted < g.drafted {
+                rolled += self.student_caches[g.slot].truncate_to(keep);
+            }
+            // the emitted tokens extend the tracked history: last, then
+            // the accepted drafts (the bonus token is fed next tick)
+            let (_, last) = self.verify_buf[g.start];
+            self.ctx[g.slot].push(last);
+            for i in 0..accepted {
+                let draft = self.verify_buf[g.start + 1 + i].1;
+                self.ctx[g.slot].push(draft);
+            }
+            debug_assert_eq!(self.ctx[g.slot].len(), self.teacher_caches[g.slot].next_pos());
+            self.counters.drafted += g.drafted as u64;
+            self.counters.accepted += accepted as u64;
+            self.counters.rejected += (g.drafted - accepted) as u64;
+            self.counters.bonus += 1;
+            self.counters.rolled_back_rows += rolled as u64;
+            rows.truncate(accepted + 1);
+            out.push(SpecRows { rows, drafted: g.drafted as u32, accepted: accepted as u32 });
+        }
+        debug_assert!(flat.next().is_none(), "verify rows left over");
+        Ok(out)
+    }
+}
+
+impl SlotEngine for SpecDecoder {
+    fn slots(&self) -> usize {
+        self.teacher_caches.len()
+    }
+
+    /// Prefill both the teacher and the student cache with the prompt
+    /// (window-truncated the same way), seed the slot's token history,
+    /// and return the teacher's first-token logits — the stream
+    /// contract is the teacher's alone.
+    fn prefill_slot(&mut self, slot: usize, prompt: &[u32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(slot < self.teacher_caches.len(), "slot {slot} out of range");
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let vocab = self.teacher.vocab();
+        for &t in prompt {
+            anyhow::ensure!((t as usize) < vocab, "prompt token {t} out of vocab {vocab}");
+        }
+        let t0 = std::time::Instant::now();
+        self.teacher_caches[slot].clear();
+        self.student_caches[slot].clear();
+        let toks = recent_window(prompt, self.window);
+        self.ctx[slot].clear();
+        self.ctx[slot].extend_from_slice(toks);
+        let logits = self.teacher.prefill(&mut self.teacher_caches[slot], prompt);
+        self.student.prefill(&mut self.student_caches[slot], prompt);
+        self.timers.prefill_calls += 1;
+        self.timers.prefill_ns += t0.elapsed().as_nanos() as u64;
+        Ok(logits)
+    }
+
+    fn step_slot(&mut self, slot: usize, token: u32) -> Result<Vec<f32>> {
+        anyhow::ensure!(slot < self.teacher_caches.len(), "slot {slot} out of range");
+        anyhow::ensure!(!self.teacher_caches[slot].is_empty(), "step on a slot without prefill");
+        let vocab = self.teacher.vocab();
+        anyhow::ensure!((token as usize) < vocab, "token {token} out of vocab {vocab}");
+        let logits = self.teacher.step(&mut self.teacher_caches[slot], token);
+        self.note_token(slot, token);
+        Ok(logits)
+    }
+
+    /// Plain fused step for rows the scheduler keeps off the
+    /// speculative path (sampled rows, opted-out rows): teacher-only,
+    /// identical math to `NativeEngine`.
+    fn step_slots(&mut self, steps: &[(usize, u32)]) -> Result<Vec<Vec<f32>>> {
+        self.step_slots_inner(steps)
+    }
+
+    /// Both batched paths validate the whole batch up front and the
+    /// math after validation is infallible, so a failed call never
+    /// advances state — the scheduler may retry row by row.
+    fn step_slots_atomic(&self) -> bool {
+        true
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        if let Some(cache) = self.teacher_caches.get_mut(slot) {
+            cache.clear();
+        }
+        if let Some(cache) = self.student_caches.get_mut(slot) {
+            cache.clear();
+        }
+        if let Some(ctx) = self.ctx.get_mut(slot) {
+            ctx.clear();
+        }
+    }
+
+    /// Post-panic reclamation: `reset_slot` is total on any reachable
+    /// slot state (a half-drafted student cache and an overextended
+    /// teacher cache both clear block-by-block), so quarantine is a
+    /// plain reset — same argument as `NativeEngine`.
+    fn quarantine_slot(&mut self, slot: usize) {
+        self.reset_slot(slot);
+    }
+
+    /// Engine-wide repair after a panic: reset every slot and audit
+    /// the shared pool (a violated pool invariant panics, which the
+    /// supervisor treats as an unrecoverable engine).
+    fn recover(&mut self) -> Result<()> {
+        for slot in 0..self.teacher_caches.len() {
+            self.reset_slot(slot);
+        }
+        self.pool.assert_invariants();
+        Ok(())
+    }
+
+    /// Admission gate on the shared pool: a speculative admission
+    /// prefills the prompt into *both* cache sets, so it reserves
+    /// twice the prompt's blocks plus a block of decode/draft headroom
+    /// each.  Unbounded pools always admit.
+    fn can_admit(&self, prompt_tokens: usize) -> bool {
+        let need = 2 * (self.pool.blocks_for(prompt_tokens.min(self.window)) + 1);
+        self.pool.free_blocks() >= need
+    }
+
+    fn phase_timers(&self) -> Option<EngineTimers> {
+        Some(self.timers)
+    }
+
+    fn speculate_k(&self) -> usize {
+        self.k
+    }
+
+    /// The speculative tick: draft on the student, verify in one
+    /// batched teacher forward, accept the longest matching prefix,
+    /// roll rejected positions back.  1-in-N calls are wall-timed into
+    /// [`EngineTimers`]; the timer reads sit outside the decode math,
+    /// so sampled and unsampled ticks produce bit-identical logits.
+    fn step_slots_speculative(&mut self, steps: &[(usize, u32)]) -> Result<Vec<SpecRows>> {
+        let sampled = self.step_seq % SPEC_PROFILE_EVERY == 0;
+        self.step_seq += 1;
+        let t0 = if sampled { Some(std::time::Instant::now()) } else { None };
+        let out = self.speculative_inner(steps);
+        if let (Some(t0), Ok(_)) = (t0, &out) {
+            self.timers.step_sampled += 1;
+            self.timers.step_ns += t0.elapsed().as_nanos() as u64;
+        }
+        out
+    }
+
+    fn spec_counters(&self) -> Option<SpecCounters> {
+        Some(self.counters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 192,
+            vocab: 96,
+            seq_len: 32,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    /// Dense teacher + FDB student from the same synthetic seed — the
+    /// student is a *quantized* (lossy) view of the teacher, so drafts
+    /// genuinely disagree sometimes.
+    fn build(seed: u64, k: usize, slots: usize) -> SpecDecoder {
+        let cfg = tiny();
+        let teacher = Weights::synthetic(&cfg, seed);
+        let student = Weights::synthetic(&cfg, seed);
+        let mut fdb = BTreeMap::new();
+        for name in cfg.linear_names() {
+            fdb.insert(name.clone(), FdbLinear::from_weights(student.mat(&name), 64));
+        }
+        SpecDecoder::new(teacher, student, &fdb, cfg.seq_len, k).with_slots(slots)
+    }
+
+    fn teacher_only(seed: u64) -> crate::infer::NativeEngine {
+        let cfg = tiny();
+        crate::infer::NativeEngine::new(
+            Weights::synthetic(&cfg, seed),
+            &BTreeMap::new(),
+            cfg.seq_len,
+            42,
+        )
+        .with_slots(1)
+    }
+
+    /// The module-level smoke check (the full battery — staggered
+    /// prefills, refills, block-boundary rollback, scheduler
+    /// integration — lives in `tests/spec_decode.rs`): a greedy
+    /// speculative stream equals the teacher-only stream token for
+    /// token, and the counters satisfy the work model.
+    #[test]
+    fn speculative_stream_matches_teacher_only() {
+        for seed in [3u64, 7, 11] {
+            let mut reference = teacher_only(seed);
+            let prompt = vec![5u32, 9, 2, 14];
+            let budget = 12usize;
+            let mut expect = Vec::new();
+            let mut logits = reference.prefill_slot(0, &prompt).unwrap();
+            for _ in 0..budget {
+                let tok = argmax(&logits) as u32;
+                expect.push(tok);
+                logits = reference.step_slot(0, tok).unwrap();
+            }
+
+            let mut spec = build(seed, 3, 1);
+            let mut got = Vec::new();
+            let logits = spec.prefill_slot(0, &prompt).unwrap();
+            let mut last = argmax(&logits) as u32;
+            got.push(last);
+            while got.len() < budget {
+                let groups = spec.step_slots_speculative(&[(0, last)]).unwrap();
+                assert_eq!(groups.len(), 1);
+                let g = &groups[0];
+                assert!(g.accepted <= g.drafted, "accepted beyond k");
+                assert_eq!(g.rows.len() as u32, g.accepted + 1);
+                for row in &g.rows {
+                    if got.len() >= budget {
+                        break;
+                    }
+                    last = argmax(row) as u32;
+                    got.push(last);
+                }
+            }
+            assert_eq!(got, expect, "seed {seed}: speculative stream diverged");
+            let c = spec.counters();
+            assert_eq!(c.drafted, c.accepted + c.rejected, "seed {seed}: tally broken");
+            assert!(c.bonus > 0, "every verified group emits its bonus row");
+            spec.assert_invariants();
+        }
+    }
+
+    #[test]
+    fn rollback_leaks_no_blocks_and_copies_no_rows() {
+        let mut spec = build(5, 4, 2);
+        for slot in 0..2 {
+            let logits = spec.prefill_slot(slot, &[1, 2, 3]).unwrap();
+            let mut last = argmax(&logits) as u32;
+            for _ in 0..4 {
+                let groups = spec.step_slots_speculative(&[(slot, last)]).unwrap();
+                last = argmax(groups[0].rows.last().unwrap()) as u32;
+            }
+        }
+        let c = spec.counters();
+        assert!(c.drafted > 0, "speculation never engaged");
+        assert_eq!(spec.kv_pool().stats().copied_rows, 0, "rollback must not copy rows");
+        spec.assert_invariants();
+        spec.reset_slot(0);
+        spec.reset_slot(1);
+        assert_eq!(spec.kv_pool().stats().live_blocks, 0, "reset leaked pool blocks");
+    }
+
+    #[test]
+    fn window_gate_falls_back_to_plain_rows() {
+        // window 8, k 3: a 5-token prompt leaves no room for 4 verify
+        // positions, so the first speculative call must fall back
+        let cfg = tiny();
+        let teacher = Weights::synthetic(&cfg, 9);
+        let student = Weights::synthetic(&cfg, 9);
+        let fdb = BTreeMap::new();
+        let mut spec = SpecDecoder::new(teacher, student, &fdb, 8, 3).with_slots(1);
+        let logits = spec.prefill_slot(0, &[1, 2, 3, 4, 5]).unwrap();
+        let last = argmax(&logits) as u32;
+        let groups = spec.step_slots_speculative(&[(0, last)]).unwrap();
+        assert_eq!(groups[0].drafted, 0, "gated slot must not draft");
+        assert_eq!(groups[0].rows.len(), 1);
+        let c = spec.counters();
+        assert_eq!(c.fallback_rows, 1);
+        assert_eq!(c.drafted, 0);
+        // and the plain row equals the teacher-only step at the same window
+        let cfg2 = tiny();
+        let mut reference = crate::infer::NativeEngine::new(
+            Weights::synthetic(&cfg2, 9),
+            &BTreeMap::new(),
+            8,
+            42,
+        )
+        .with_slots(1);
+        let r = reference.prefill_slot(0, &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(argmax(&r) as u32, last);
+        let expect = reference.step_slot(0, last).unwrap();
+        assert_eq!(groups[0].rows[0], expect, "gated row diverged from teacher");
+    }
+
+    #[test]
+    fn validates_before_any_state_change() {
+        let mut spec = build(13, 2, 2);
+        spec.prefill_slot(0, &[1, 2]).unwrap();
+        assert!(spec.step_slots_speculative(&[(0, 3), (1, 4)]).is_err(), "slot 1 not prefilled");
+        assert!(spec.step_slots_speculative(&[(0, 3), (0, 4)]).is_err(), "duplicate slot");
+        assert!(spec.step_slots_speculative(&[(0, 9999)]).is_err(), "token out of vocab");
+        assert!(spec.step_slots_speculative(&[(2, 1)]).is_err(), "slot out of range");
+        // slot 0 must continue exactly where an undisturbed engine does
+        let mut clean = build(13, 2, 2);
+        clean.prefill_slot(0, &[1, 2]).unwrap();
+        let a = spec.step_slots_speculative(&[(0, 3)]).unwrap();
+        let b = clean.step_slots_speculative(&[(0, 3)]).unwrap();
+        assert_eq!(a, b, "failed speculative call advanced slot state");
+    }
+}

@@ -231,6 +231,11 @@ struct RowsScratch {
     slots: Vec<usize>,
     /// ring slot per row, reserved by `advance_rows`
     ring: Vec<usize>,
+    /// cached positions visible to each row's attention: for a row of a
+    /// repeated cache, later rows of the same cache are excluded (their
+    /// K/V is already written when attention runs, but a causal row
+    /// must not see them)
+    vis: Vec<usize>,
     scores: Vec<f64>,
 }
 
@@ -254,6 +259,7 @@ impl RowsScratch {
             sin: Vec::new(),
             slots: Vec::new(),
             ring: Vec::new(),
+            vis: Vec::new(),
             scores: Vec::new(),
         }
     }
@@ -355,6 +361,7 @@ impl IncrementalForward {
         s.sin.resize(m * half, 0.0);
         s.slots.reserve(m);
         s.ring.reserve(m);
+        s.vis.reserve(m);
         s.scores.reserve(window);
     }
 
@@ -560,23 +567,38 @@ impl IncrementalForward {
     }
 
     /// Fused multi-slot decode: advance `rows` — (cache index, token)
-    /// pairs over *distinct* caches — in ONE forward pass.  The active
-    /// rows' embeddings are gathered into an `[m, d_model]` batch and
-    /// each of the 7 per-layer linears plus the LM head runs once as a
-    /// batched product ([`LinearOp::matmul_rows`]: dense ikj / FDB CSC
-    /// with the batch innermost), amortizing every weight traversal
-    /// across the active slots; RoPE, K/V appends and attention stay
-    /// per-row against each row's own cache and absolute position.
-    /// Returns one next-token logits row per entry, in order.
+    /// pairs — in ONE forward pass.  The active rows' embeddings are
+    /// gathered into an `[m, d_model]` batch and each of the 7
+    /// per-layer linears plus the LM head runs once as a batched
+    /// product ([`LinearOp::matmul_rows`]: dense ikj / FDB CSC with the
+    /// batch innermost), amortizing every weight traversal across the
+    /// active slots; RoPE, K/V appends and attention stay per-row
+    /// against each row's own cache and absolute position.  Returns one
+    /// next-token logits row per entry, in order.
+    ///
+    /// A cache index may repeat — the speculative verify pass feeds a
+    /// run `[last, d₁, …, d_k]` of draft positions for one slot in a
+    /// single call.  Repeated rows are appended in listed order, each
+    /// row's RoPE position advancing past the same cache's earlier rows
+    /// in the batch, and each row's attention sees exactly the cached
+    /// prefix plus the batch rows *before* it (causal visibility; the
+    /// K/V of later rows is already written but masked out by the row's
+    /// visible-length bound).  A repeated cache must not slide its
+    /// window mid-batch (`len + run ≤ window`) — an eviction between
+    /// two rows of the same cache is sequential-only behaviour that a
+    /// batched pass cannot reproduce; the speculative decoder stops
+    /// drafting before any slot could slide.
     ///
     /// Equivalence: every per-element operation runs in the same order
-    /// as [`step`](Self::step), so fused and sequential decode agree
-    /// bit-for-bit (`tests/fused_decode.rs` pins this).
+    /// as [`step`](Self::step) — and for repeated indices, the same
+    /// order as [`prefill_suffix`](Self::prefill_suffix) over the run —
+    /// so fused, sequential, and speculative-verify decode agree
+    /// bit-for-bit (`tests/fused_decode.rs` and `tests/spec_decode.rs`
+    /// pin this).
     pub fn step_rows(&mut self, caches: &mut [KvCache], rows: &[(usize, u32)]) -> Vec<Vec<f32>> {
         // tidy:no-alloc(start): the fused decode hot path — buffers are
         // pre-sized by `reserve_rows` and reused across ticks; only the
-        // debug audit and the returned logits rows allocate (annotated
-        // per line).
+        // returned logits rows allocate (annotated per line).
         let m = rows.len();
         if m == 0 {
             return Vec::new();
@@ -587,14 +609,16 @@ impl IncrementalForward {
         let half = hd / 2;
         #[cfg(debug_assertions)]
         {
-            let mut seen = vec![false; caches.len()]; // tidy:allow(no-alloc): debug-only audit
             for &(slot, token) in rows {
                 debug_assert!(slot < caches.len(), "cache index {slot} out of range");
-                debug_assert!(!seen[slot], "cache index {slot} listed twice in one fused step");
-                seen[slot] = true;
                 debug_assert!((token as usize) < cfg.vocab, "token {token} out of vocab");
                 debug_assert_eq!(caches[slot].width, d, "cache width != d_model");
                 debug_assert!(!caches[slot].is_empty(), "step on a cache without prefill");
+                let run = rows.iter().filter(|&&(s2, _)| s2 == slot).count();
+                debug_assert!(
+                    run == 1 || caches[slot].len() + run <= caches[slot].window,
+                    "repeated cache {slot} would slide its window mid-batch"
+                );
             }
         }
 
@@ -602,12 +626,15 @@ impl IncrementalForward {
         s.ensure(m, d, half);
         s.slots.extend(rows.iter().map(|&(slot, _)| slot));
 
-        // per-row RoPE at each row's own absolute position, read before
-        // the rings advance (same order as `step`), and the embedding
-        // gather; then one batched chronology bump across the caches
+        // per-row RoPE at each row's own absolute position — the
+        // cache's next position plus how many earlier batch rows target
+        // the same cache — read before the rings advance (same order as
+        // `step`), and the embedding gather; then one batched
+        // chronology bump across the caches
         for (i, &(slot, token)) in rows.iter().enumerate() {
+            let prior = rows[..i].iter().filter(|&&(s2, _)| s2 == slot).count();
             rope_pos_into(
-                caches[slot].next_pos(),
+                caches[slot].next_pos() + prior,
                 hd,
                 cfg.rope_theta,
                 &mut s.cos[i * half..(i + 1) * half],
@@ -616,6 +643,14 @@ impl IncrementalForward {
             s.x.row_mut(i).copy_from_slice(self.tok_emb.row(token as usize));
         }
         advance_rows(caches, &s.slots, &mut s.ring);
+        // causal visibility per row: everything this cache holds after
+        // the batch advance, minus the same cache's later batch rows
+        // (identical to `cache.len()` when every index is distinct)
+        s.vis.clear();
+        for (i, &(slot, _)) in rows.iter().enumerate() {
+            let later = rows[i + 1..].iter().filter(|&&(s2, _)| s2 == slot).count();
+            s.vis.push(caches[slot].len() - later);
+        }
 
         for (l, layer) in self.layers.iter().enumerate() {
             // attention: batched projections, per-row rope/append/attend
@@ -632,7 +667,7 @@ impl IncrementalForward {
             write_rows(caches, &s.slots, &s.ring, l, &s.k, &s.v);
             for i in 0..m {
                 let cache = &caches[s.slots[i]];
-                let n = cache.len();
+                let n = s.vis[i];
                 attend_one(
                     s.q.row(i),
                     n,
@@ -784,6 +819,50 @@ mod tests {
             assert_eq!(a1, b[1], "row 1 diverged at round {round}");
             assert_eq!(sc[0].next_pos(), fc[0].next_pos());
             assert_eq!(sc[1].next_pos(), fc[1].next_pos());
+        }
+    }
+
+    /// The speculative-verify shape: one `step_rows` call with a
+    /// repeated cache index must be bit-identical to feeding the same
+    /// run through sequential `step` calls — logits and every cached
+    /// K/V row — including when the run is interleaved with other
+    /// slots' rows in the same batch.
+    #[test]
+    fn step_rows_repeated_cache_matches_sequential_steps_bitwise() {
+        let cfg = tiny();
+        let w = Weights::synthetic(&cfg, 37);
+        let mut fdb = BTreeMap::new();
+        for (i, name) in cfg.linear_names().iter().enumerate() {
+            if i % 2 == 0 {
+                fdb.insert(name.clone(), FdbLinear::from_weights(w.mat(name), 64));
+            }
+        }
+        let mut seq = IncrementalForward::new(w.clone(), &fdb);
+        let mut fus = IncrementalForward::new(w, &fdb);
+        fus.reserve_rows(5, cfg.seq_len);
+        let mk = || KvCache::new(cfg.n_layers, cfg.seq_len, cfg.d_model);
+        // staggered prefills so the runs start at different positions
+        let (mut sc, mut fc) = (vec![mk(), mk()], vec![mk(), mk()]);
+        seq.prefill(&mut sc[0], &[1, 2, 3]);
+        fus.prefill(&mut fc[0], &[1, 2, 3]);
+        seq.prefill(&mut sc[1], &[4, 5]);
+        fus.prefill(&mut fc[1], &[4, 5]);
+        // cache 0 repeated 3 times, cache 1 twice, interleaved
+        let rows = [(0usize, 7u32), (1, 11), (0, 8), (0, 9), (1, 12)];
+        let a: Vec<Vec<f32>> = rows.iter().map(|&(c, t)| seq.step(&mut sc[c], t)).collect();
+        let b = fus.step_rows(&mut fc, &rows);
+        assert_eq!(b.len(), rows.len());
+        for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(ra, rb, "row {i} diverged");
+        }
+        for c in 0..2 {
+            assert_eq!(sc[c].next_pos(), fc[c].next_pos());
+            for l in 0..cfg.n_layers {
+                for i in 0..sc[c].len() {
+                    assert_eq!(sc[c].k_row(l, i), fc[c].k_row(l, i), "K {c}/{l}/{i}");
+                    assert_eq!(sc[c].v_row(l, i), fc[c].v_row(l, i), "V {c}/{l}/{i}");
+                }
+            }
         }
     }
 

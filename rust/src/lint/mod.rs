@@ -611,6 +611,32 @@ fn bench_required_keys(bench: &str) -> Option<&'static [&'static str]> {
             "leaked_blocks",
             "note",
         ]),
+        "spec_decode" => Some(&[
+            "model",
+            "d_model",
+            "n_layers",
+            "window",
+            "slots",
+            "k",
+            "prompt_tokens",
+            "decode_tokens_per_slot",
+            "drafted",
+            "accepted",
+            "rejected",
+            "bonus_tokens",
+            "fallback_rows",
+            "rolled_back_rows",
+            "acceptance_rate",
+            "teacher_forwards_saved",
+            "verify_passes",
+            "ticks_speculative",
+            "ticks_teacher_only",
+            "tick_reduction",
+            "wall_ns_per_token_speculative",
+            "wall_ns_per_token_teacher_only",
+            "wall_speculative_speedup",
+            "note",
+        ]),
         _ => None,
     }
 }
@@ -1155,6 +1181,41 @@ mod tests {
         .unwrap();
         let v = rule_bench_schema(&dir);
         assert!(v.iter().any(|x| x.msg.contains("missing declared field `leaked_blocks`")), "{v:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "touches the real filesystem")]
+    fn bench_schema_knows_spec_decode() {
+        let dir = std::env::temp_dir().join(format!("tidy-spec-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // a complete spec_decode record passes
+        std::fs::write(
+            dir.join("BENCH_ok.json"),
+            "{\"bench\": \"spec_decode\", \"model\": \"bench\", \"d_model\": 128, \
+             \"n_layers\": 4, \"window\": 128, \"slots\": 4, \"k\": 3, \
+             \"prompt_tokens\": 8, \"decode_tokens_per_slot\": 16, \"drafted\": 60, \
+             \"accepted\": 56, \"rejected\": 4, \"bonus_tokens\": 20, \
+             \"fallback_rows\": 0, \"rolled_back_rows\": 4, \"acceptance_rate\": 0.93, \
+             \"teacher_forwards_saved\": 56, \"verify_passes\": 20, \
+             \"ticks_speculative\": 20, \"ticks_teacher_only\": 15, \
+             \"tick_reduction\": 0.0, \"wall_ns_per_token_speculative\": 1.0, \
+             \"wall_ns_per_token_teacher_only\": 1.0, \
+             \"wall_speculative_speedup\": 1.0, \"note\": \"n\"}",
+        )
+        .unwrap();
+        assert!(rule_bench_schema(&dir).is_empty(), "{:?}", rule_bench_schema(&dir));
+        // dropping the headline counter fails the gate
+        std::fs::write(
+            dir.join("BENCH_bad.json"),
+            "{\"bench\": \"spec_decode\", \"drafted\": 60, \"note\": \"n\"}",
+        )
+        .unwrap();
+        let v = rule_bench_schema(&dir);
+        assert!(
+            v.iter().any(|x| x.msg.contains("missing declared field `teacher_forwards_saved`")),
+            "{v:?}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

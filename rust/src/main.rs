@@ -11,6 +11,7 @@
 //!             [--linger-ms 20] [--queue-cap 1024] [--window T]
 //!             [--slots 4] [--timeout-ms N] [--no-refill]
 //!             [--prefix-cache-mb 64] [--kv-pool-mb 0]
+//!             [--speculate-k 0] [--draft dbllm]
 //!             [--metrics-interval-ms 10000]
 //!             [--read-timeout-ms N] [--idle-timeout-ms N]
 //!             [--max-line-bytes N] [--max-respawns N]
@@ -35,7 +36,7 @@ use db_llm::coordinator::scheduler::{
 };
 use db_llm::coordinator::serve::{serve_with, ConnConfig, Engine, EngineWorker};
 use db_llm::data::TokenStream;
-use db_llm::infer::{NativeEngine, PrefixCache};
+use db_llm::infer::{NativeEngine, PrefixCache, SpecDecoder};
 use db_llm::eval::ppl::perplexity;
 use db_llm::eval::tables::{self, Method, TableOpts};
 use db_llm::runtime::{Runtime, Session};
@@ -166,6 +167,7 @@ fn print_help() {
                     [--linger-ms N] [--queue-cap N] [--window T]\n\
                     [--slots N] [--timeout-ms N] [--no-refill]\n\
                     [--prefix-cache-mb N] [--kv-pool-mb N]\n\
+                    [--speculate-k N] [--draft M]\n\
                     [--metrics-interval-ms N]\n\
                     [--read-timeout-ms N] [--idle-timeout-ms N]\n\
                     [--max-line-bytes N] [--max-respawns N]\n\
@@ -341,6 +343,27 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     // count, and 0 leaves the pool unbounded
     let kv_pool_mb: usize =
         flags.get("kv-pool-mb").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    // speculative decoding: draft length per tick for the 2-bit FDB
+    // student (0 keeps the plain dense/FDB NativeEngine path)
+    let speculate_k: usize =
+        flags.get("speculate-k").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    // quantization method for the speculative draft student (the
+    // verifying teacher is always the dense fp16 model)
+    let draft_method = method_from_str(flags.get("draft").map(String::as_str).unwrap_or("dbllm"))?;
+    if speculate_k > 0 && flags.contains_key("prefix-cache-mb") && prefix_cache_mb > 0 {
+        bail!(
+            "--prefix-cache-mb cannot be combined with --speculate-k: the speculative \
+             decoder owns paired teacher+student KV caches and has no prefix-cache \
+             integration yet (drop one of the flags, or pass --prefix-cache-mb 0)"
+        );
+    }
+    if speculate_k == 0 && flags.contains_key("draft") {
+        eprintln!("warning: --draft has no effect without --speculate-k N (N >= 1)");
+    }
+    if speculate_k > 0 && flags.contains_key("method") {
+        eprintln!("warning: --method is ignored with --speculate-k (the verify engine is \
+                   always the dense teacher; pick the draft quantizer with --draft)");
+    }
     // periodic snapshot logger cadence; 0 disables the log line (the
     // wire-level {"cmd":"stats"} surface stays available either way)
     let metrics_interval_ms: u64 =
@@ -393,6 +416,11 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             eprintln!("warning: --max-respawns only applies to the supervised continuous \
                        scheduler (--backend native); the xla worker pool ignores it");
         }
+        if speculate_k > 0 {
+            eprintln!("warning: --speculate-k only applies to --backend native (the xla \
+                       executable recomputes the full window per step and has no \
+                       incremental KV path to draft against); ignored");
+        }
     } else if flags.contains_key("max-batch") || flags.contains_key("linger-ms") {
         eprintln!("warning: --max-batch/--linger-ms only apply to the static batcher \
                    (--backend xla); the continuous scheduler admits per slot (--slots) \
@@ -417,6 +445,54 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             m2,
             running.clone(),
             conn.clone(),
+        )?,
+        // speculative serving: a 2-bit FDB draft student proposes k
+        // tokens per tick and the dense teacher verifies them in one
+        // batched forward; greedy streams stay bit-identical to
+        // teacher-only decode while accepted drafts skip dense forwards
+        "native" if speculate_k > 0 => serve_continuous_with(
+            move || {
+                let mut rt = Runtime::open(&dir)?;
+                let dense = tables::make_student(&mut rt, &teacher, Method::Fp16, &opts, None)?;
+                let draft = tables::make_student(&mut rt, &teacher, draft_method, &opts, None)?;
+                let window = window_override.unwrap_or_else(|| rt.manifest.seq_len());
+                let engine = SpecDecoder::new(
+                    dense.weights,
+                    draft.weights,
+                    &draft.fdb_layers,
+                    window,
+                    speculate_k,
+                )
+                .with_slots(slots)
+                .with_kv_pool_bytes(kv_pool_mb << 20);
+                eprintln!(
+                    "speculative engine ready (window {window}, {slots} slots, k={speculate_k} \
+                     {} draft with {} FDB-compiled linears, KV pool {})",
+                    draft_method.label(),
+                    engine.n_fdb_ops(),
+                    if kv_pool_mb > 0 {
+                        format!("{kv_pool_mb} MiB soft budget")
+                    } else {
+                        "unbounded".to_string()
+                    },
+                );
+                Ok(engine)
+            },
+            &addr,
+            policy.queue_cap,
+            SchedulerConfig {
+                slots,
+                refill,
+                default_timeout_ms: timeout_ms,
+                seed: 42,
+                trace: true,
+                ..SchedulerConfig::default()
+            },
+            workers,
+            m2,
+            running.clone(),
+            conn.clone(),
+            max_respawns,
         )?,
         // the KV-cached incremental engine behind the iteration-level
         // continuous-batching scheduler: finished slots refill

@@ -37,6 +37,22 @@ use db_llm::model::{ModelConfig, Weights};
 
 const VOCAB: usize = 64;
 
+/// Flake-detector hook: when `DBLLM_TRANSCRIPT_DUMP` names a file,
+/// append every seeded transcript line to it.  CI runs the suite twice
+/// single-threaded and byte-diffs the two dumps, so any nondeterminism
+/// in the seeded soaks surfaces as a diff even when both runs pass.
+fn dump_transcript(tag: &str, lines: impl IntoIterator<Item = String>) {
+    let Ok(path) = std::env::var("DBLLM_TRANSCRIPT_DUMP") else { return };
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .expect("transcript dump file must be writable");
+    for l in lines {
+        writeln!(f, "{tag}: {l}").expect("transcript dump write");
+    }
+}
+
 /// Deterministic scripted engine: logits always peak at
 /// `prompt[0] % VOCAB`, so a greedy request for key `k` decodes exactly
 /// `[k; budget]`.  Output is a pure function of the prompt, which makes
@@ -148,6 +164,15 @@ fn run_soak(seed: u64) -> (Vec<(u32, Result<Vec<u32>, String>)>, u64, u64, u64) 
     queue.close();
     worker.join().expect("the supervised worker must never propagate a panic");
     let ord = Ordering::Relaxed;
+    dump_transcript(
+        &format!("chaos seed={seed}"),
+        transcript.iter().map(|(k, r)| format!("k={k} {r:?}")).chain(std::iter::once(format!(
+            "counters panics={} respawns={} quarantined={}",
+            metrics.worker_panics.load(ord),
+            metrics.respawns.load(ord),
+            metrics.quarantined_slots.load(ord),
+        ))),
+    );
     (
         transcript,
         metrics.worker_panics.load(ord),

@@ -114,7 +114,7 @@ fn native_engine_matches_full_recompute_greedy() {
     // and with a stop token cut from the reference stream
     let stop = reference.outputs[0][1];
     let stopping = vec![
-        DecodeParams { max_tokens: 5, temperature: 0.0, stop: Some(stop) },
+        DecodeParams { max_tokens: 5, temperature: 0.0, stop: Some(stop), speculate: true },
         DecodeParams::greedy(3),
     ];
     let mut rng = Pcg32::seeded(2);

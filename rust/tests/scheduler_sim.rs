@@ -91,6 +91,23 @@ impl SlotEngine for MockGen {
     }
 }
 
+/// Flake-detector hook: when `DBLLM_TRANSCRIPT_DUMP` names a file,
+/// append every seeded completion line to it.  CI runs the suite twice
+/// single-threaded and byte-diffs the two dumps, so any nondeterminism
+/// in the seeded simulations surfaces as a diff even when both runs
+/// pass.
+fn dump_transcript(tag: &str, lines: impl IntoIterator<Item = String>) {
+    let Ok(path) = std::env::var("DBLLM_TRANSCRIPT_DUMP") else { return };
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .expect("transcript dump file must be writable");
+    for l in lines {
+        writeln!(f, "{tag}: {l}").expect("transcript dump write");
+    }
+}
+
 fn greedy_stop(max_tokens: usize) -> DecodeParams {
     DecodeParams { stop: Some(EOS), ..DecodeParams::greedy(max_tokens) }
 }
@@ -233,6 +250,19 @@ fn seeded_random_sims_hold_invariants() {
             assert_eq!(c.reason, FinishReason::Done, "seed {seed}");
         }
         assert_eq!(core.stats.timeouts, 0, "seed {seed}");
+        dump_transcript(
+            &format!("sched_sim seed={seed}"),
+            completions
+                .iter()
+                .map(|c| format!("id={} reason={:?} tokens={:?}", c.id, c.reason, c.tokens))
+                .chain(std::iter::once(format!(
+                    "counters ticks={} admissions={} refills={} busy={}",
+                    core.stats.ticks,
+                    core.stats.admissions,
+                    core.stats.refills,
+                    core.stats.busy_slot_ticks,
+                ))),
+        );
     }
 }
 
